@@ -1,0 +1,88 @@
+"""AOT pipeline: lower the L2 slab-step graphs to HLO text artifacts.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 rust crate links) rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Python runs ONLY here (``make artifacts``); the rust binary is
+self-contained afterwards.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--widths 8,16,...]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import make_slab_step
+
+# Slab geometry. T is the fixed row count per slab execution; rust pads the
+# last tile of each bucket with mask=0 rows. Widths are the log2 buckets of
+# per-source eligible-destination counts (paper §6: ranges [2^{t-1}, 2^t)).
+DEFAULT_T = 1024
+DEFAULT_WIDTHS = (4, 8, 16, 32, 64, 128, 256, 512)
+KINDS = ("simplex", "box")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_slab(kind: str, t: int, w: int) -> str:
+    spec = jax.ShapeDtypeStruct((t, w), jnp.float32)
+    gspec = jax.ShapeDtypeStruct((1,), jnp.float32)
+    fn = make_slab_step(kind)
+    lowered = jax.jit(fn).lower(spec, spec, spec, gspec)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(kind: str, t: int, w: int) -> str:
+    return f"slab_{kind}_t{t}_w{w}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--rows", type=int, default=DEFAULT_T)
+    ap.add_argument(
+        "--widths",
+        default=",".join(str(w) for w in DEFAULT_WIDTHS),
+        help="comma-separated slab widths (log2 bucket upper bounds)",
+    )
+    args = ap.parse_args()
+
+    widths = [int(w) for w in args.widths.split(",")]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    # Full row-tile artifacts (the production family) plus single-row
+    # artifacts (rows=1) used by the projection-batching benchmark as the
+    # per-slice launch baseline (paper §6, experiment E9).
+    for rows in (args.rows, 1):
+        for kind in KINDS:
+            for w in widths:
+                name = artifact_name(kind, rows, w)
+                path = os.path.join(args.out_dir, name)
+                text = lower_slab(kind, rows, w)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest.append(f"{kind} {rows} {w} {name}")
+                print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""L2 — JAX dual-step graph wrapping the L1 Pallas slab kernel.
+
+One function per (kind, slab shape): ``slab_step`` computes the projected
+primal block rows plus the two scalar partials the leader needs to assemble
+the dual objective
+
+    g(λ) = cᵀx + γ/2 ‖x‖² + λᵀ(Ax − b)
+
+from per-worker contributions (paper §6, distributed iteration step 1).
+
+The gather of λ into per-edge ``u = (A^T λ)_edge`` and the scatter-add of
+``a ⊙ x`` into the gradient are deliberately NOT part of this graph: they
+are shape-dependent, memory-bound ops done by the rust coordinator, which
+keeps the AOT artifact family independent of problem size (DESIGN.md §2).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import slab as slab_kernels
+
+
+def slab_step(u, c, mask, gamma, kind="simplex"):
+    """Full slab dual step: project + reduce.
+
+    Args:
+      u:     [T, w] f32, pre-combined dual load per edge (Σ_k a_k λ_k).
+      c:     [T, w] f32, value coefficients (0 on padding).
+      mask:  [T, w] f32, 1 on real edges, 0 on padding.
+      gamma: [1] f32, ridge parameter (runtime input).
+
+    Returns (x, cx, xsq):
+      x   [T, w] projected primal rows,
+      cx  [1]    Σ c⊙x,
+      xsq [1]    Σ x².
+    """
+    x = slab_kernels.slab_project(u, c, mask, gamma, kind=kind)
+    cx = jnp.sum(c * mask * x).reshape(1)
+    xsq = jnp.sum(x * x).reshape(1)
+    return x, cx, xsq
+
+
+def make_slab_step(kind):
+    """Close over the static ``kind`` so jax.jit sees a pure tensor fn."""
+
+    def fn(u, c, mask, gamma):
+        return slab_step(u, c, mask, gamma, kind=kind)
+
+    fn.__name__ = f"slab_step_{kind}"
+    return fn

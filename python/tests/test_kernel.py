@@ -1,0 +1,136 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+hypothesis sweeps shapes, sparsity, gamma and value scales; every case
+asserts element-wise agreement with the pure-jnp reference plus the
+polytope invariants (feasibility, idempotence-by-construction).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.slab import slab_project
+from compile.model import slab_step
+
+RNG = np.random.default_rng(1234)
+
+
+def make_case(t, w, density, scale, seed):
+    rng = np.random.default_rng(seed)
+    u = (rng.normal(size=(t, w)) * scale).astype(np.float32)
+    c = (rng.normal(size=(t, w)) * scale).astype(np.float32)
+    mask = (rng.random((t, w)) < density).astype(np.float32)
+    return jnp.array(u * mask), jnp.array(c * mask), jnp.array(mask)
+
+
+@pytest.mark.parametrize("kind", ["simplex", "box"])
+@pytest.mark.parametrize("w", [4, 8, 32, 128])
+def test_kernel_matches_ref_basic(kind, w):
+    u, c, mask = make_case(64, w, 0.6, 1.0, 7)
+    gamma = jnp.array([0.05], dtype=jnp.float32)
+    x = slab_project(u, c, mask, gamma, kind=kind)
+    v = (-(u + c) / gamma[0]) * mask
+    xr = (
+        ref.project_simplex_ineq(v, mask)
+        if kind == "simplex"
+        else ref.project_box(v, mask)
+    )
+    # atol 1e-5: the kernel's bisection θ is f32-quantized vs the oracle's
+    # exact sort-threshold θ (see slab.py PERF note)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xr), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.sampled_from([8, 32, 256]),
+    w=st.sampled_from([4, 8, 16, 64]),
+    density=st.floats(0.05, 1.0),
+    scale=st.floats(0.01, 100.0),
+    gamma=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(["simplex", "box"]),
+)
+def test_kernel_matches_ref_hypothesis(t, w, density, scale, gamma, seed, kind):
+    u, c, mask = make_case(t, w, density, scale, seed)
+    g = jnp.array([gamma], dtype=jnp.float32)
+    x = np.asarray(slab_project(u, c, mask, g, kind=kind))
+    xr, cxr, xsqr = (np.asarray(a) for a in ref.slab_step_ref(u, c, mask, g, kind=kind))
+    # scale-aware tolerance: v entries are O(scale/gamma)
+    tol = max(1e-5, 1e-6 * scale / gamma)
+    np.testing.assert_allclose(x, xr, rtol=1e-4, atol=tol)
+
+    # polytope invariants
+    assert np.all(x >= -tol)
+    assert np.all(x * (1 - np.asarray(mask)) == 0), "padding must stay zero"
+    if kind == "simplex":
+        # capacity tolerance scales with lanes × θ-quantization (bisection
+        # resolves θ to max(v)·2⁻²⁸; the residual accumulates across a row)
+        assert np.all(x.sum(axis=1) <= 1 + w * tol + 1e-4)
+    else:
+        assert np.all(x <= 1 + tol)
+
+
+@pytest.mark.parametrize("kind", ["simplex", "box"])
+def test_projection_idempotent(kind):
+    """Projecting an already-feasible point is the identity."""
+    u, c, mask = make_case(32, 16, 0.5, 1.0, 11)
+    g = jnp.array([0.1], dtype=jnp.float32)
+    x1 = slab_project(u, c, mask, g, kind=kind)
+    # feed x1 back as the raw point: v = x1 requires u,c with -(u+c)/g = x1
+    u2 = -(x1 * g[0])
+    c2 = jnp.zeros_like(u2)
+    x2 = slab_project(u2, c2, mask, g, kind=kind)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-4, atol=1e-5)
+
+
+def test_simplex_projection_optimality():
+    """Π(v) must be closer to v than any other feasible point (random probes)."""
+    rng = np.random.default_rng(5)
+    v = jnp.array(rng.normal(size=(16, 8)).astype(np.float32) * 2)
+    mask = jnp.ones((16, 8), dtype=jnp.float32)
+    x = np.asarray(ref.project_simplex_ineq(v, mask))
+    vn = np.asarray(v)
+    d_star = ((x - vn) ** 2).sum(axis=1)
+    for _ in range(200):
+        y = rng.random((16, 8)).astype(np.float32)
+        y = y / np.maximum(y.sum(axis=1, keepdims=True), 1.0)  # feasible
+        d = ((y - vn) ** 2).sum(axis=1)
+        assert np.all(d_star <= d + 1e-5)
+
+
+def test_fully_padded_rows_are_zero():
+    t, w = 16, 8
+    u = jnp.zeros((t, w), dtype=jnp.float32)
+    c = -jnp.ones((t, w), dtype=jnp.float32)  # would push x > 0 if unmasked
+    mask = jnp.zeros((t, w), dtype=jnp.float32)
+    g = jnp.array([0.01], dtype=jnp.float32)
+    for kind in ("simplex", "box"):
+        x = np.asarray(slab_project(u, c, mask, g, kind=kind))
+        assert np.all(x == 0)
+
+
+def test_gamma_is_runtime_input():
+    """Same compiled fn, different gamma values → different (correct) x."""
+    u, c, mask = make_case(32, 8, 0.8, 1.0, 3)
+    for gv in (0.01, 0.16, 1.0):
+        g = jnp.array([gv], dtype=jnp.float32)
+        x = np.asarray(slab_project(u, c, mask, g, kind="box"))
+        v = np.asarray((-(u + c) / gv) * mask)
+        np.testing.assert_allclose(
+            x, np.clip(v, 0, 1) * np.asarray(mask), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_slab_step_partials():
+    """cx and xsq outputs equal the reductions of the x output."""
+    u, c, mask = make_case(64, 16, 0.5, 1.0, 9)
+    g = jnp.array([0.05], dtype=jnp.float32)
+    for kind in ("simplex", "box"):
+        x, cx, xsq = slab_step(u, c, mask, g, kind=kind)
+        xn = np.asarray(x)
+        np.testing.assert_allclose(
+            float(cx[0]), float((np.asarray(c) * np.asarray(mask) * xn).sum()), rtol=1e-4
+        )
+        np.testing.assert_allclose(float(xsq[0]), float((xn * xn).sum()), rtol=1e-4)

@@ -1,0 +1,95 @@
+"""L2 model tests: slab_step graph composition and end-to-end dual math.
+
+Beyond kernel-vs-ref (test_kernel.py), these tests exercise the *dual step*
+semantics the rust coordinator relies on: assembling g(λ) and ∇g(λ) from
+slab outputs must match a dense from-scratch computation of the paper's
+Eq. (2) on a tiny matching LP.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.model import slab_step, make_slab_step
+from compile.kernels.ref import project_simplex_ineq
+
+
+def dense_dual(A, b, c, lam, gamma):
+    """Direct dense computation of g(λ) and ∇g(λ) for a small LP with
+    per-source simplex blocks. A: [m, I, J] (diag coefficients per family),
+    c: [I, J], lam: [m, J]."""
+    m, I, J = A.shape
+    # u_ij = sum_k a_kij * lam_kj
+    u = np.einsum("kij,kj->ij", A, lam)
+    v = -(u + c) / gamma
+    x = np.asarray(
+        project_simplex_ineq(jnp.array(v, dtype=jnp.float32), jnp.ones((I, J), jnp.float32))
+    )
+    Ax = np.einsum("kij,ij->kj", A, x)
+    grad = Ax - b
+    g = (c * x).sum() + gamma / 2 * (x * x).sum() + (lam * grad).sum()
+    return g, grad, x
+
+
+def test_dual_step_matches_dense():
+    rng = np.random.default_rng(42)
+    m, I, J = 2, 24, 8
+    A = (rng.random((m, I, J)) * (rng.random((m, I, J)) < 0.6)).astype(np.float32)
+    c = -rng.random((I, J)).astype(np.float32)  # negative cost = value
+    b = rng.random((m, J)).astype(np.float32) * I * 0.1
+    lam = rng.random((m, J)).astype(np.float32)
+    gamma = 0.05
+
+    g_ref, grad_ref, x_ref = dense_dual(A, b, c, lam, gamma)
+
+    # slab path: each source is one row of width J (single bucket, no padding)
+    u = np.einsum("kij,kj->ij", A, lam).astype(np.float32)
+    mask = np.ones((I, J), dtype=np.float32)
+    x, cx, xsq = slab_step(
+        jnp.array(u), jnp.array(c), jnp.array(mask), jnp.array([gamma], jnp.float32)
+    )
+    x = np.asarray(x)
+    np.testing.assert_allclose(x, x_ref, rtol=1e-4, atol=1e-5)
+
+    Ax = np.einsum("kij,ij->kj", A, x)
+    grad = Ax - b
+    g = float(cx[0]) + gamma / 2 * float(xsq[0]) + (lam * grad).sum()
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4)
+
+
+def test_make_slab_step_kinds():
+    fns = {k: make_slab_step(k) for k in ("simplex", "box")}
+    rng = np.random.default_rng(0)
+    u = jnp.array(rng.normal(size=(8, 4)).astype(np.float32))
+    c = jnp.zeros((8, 4), jnp.float32)
+    mask = jnp.ones((8, 4), jnp.float32)
+    g = jnp.array([0.5], jnp.float32)
+    xs, _, _ = fns["simplex"](u, c, mask, g)
+    xb, _, _ = fns["box"](u, c, mask, g)
+    assert np.all(np.asarray(xs).sum(1) <= 1 + 1e-5)
+    assert np.all(np.asarray(xb) <= 1 + 1e-6)
+
+
+def test_gradient_is_danskin_derivative():
+    """∇g from the slab path must equal the numerical derivative of g(λ)
+    (Danskin's theorem) away from projection kinks."""
+    rng = np.random.default_rng(3)
+    m, I, J = 1, 16, 4
+    A = (rng.random((m, I, J)) + 0.5).astype(np.float32)
+    c = -rng.random((I, J)).astype(np.float32)
+    b = rng.random((m, J)).astype(np.float32)
+    lam = (rng.random((m, J)) + 0.1).astype(np.float32)
+    gamma = 0.2
+
+    g0, grad, _ = dense_dual(A, b, c, lam, gamma)
+    eps = 1e-3
+    for k in range(m):
+        for j in range(J):
+            lp = lam.copy()
+            lp[k, j] += eps
+            gp, _, _ = dense_dual(A, b, c, lp, gamma)
+            lm = lam.copy()
+            lm[k, j] -= eps
+            gm, _, _ = dense_dual(A, b, c, lm, gamma)
+            num = (gp - gm) / (2 * eps)
+            np.testing.assert_allclose(num, grad[k, j], rtol=5e-2, atol=5e-3)

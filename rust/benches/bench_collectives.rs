@@ -1,0 +1,82 @@
+//! Experiment E10 — the paper's §6 communication claim: per-iteration
+//! traffic is exactly 1 reduce + 2 broadcasts of |λ| floats (+2 scalars),
+//! independent of nnz and of the per-device column split.
+//!
+//! Sweeps nnz (at fixed dual dim) and workers, asserts byte counts, and
+//! prints the α-β model's estimated wire time on NVLink/Ethernet.
+//!
+//! Run: cargo bench --bench bench_collectives
+
+use std::sync::Arc;
+
+use dualip::distributed::{DistributedObjective, LinkModel};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::problem::ObjectiveFunction;
+use dualip::runtime::default_artifacts_dir;
+use dualip::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    let art = default_artifacts_dir();
+    let dests = 200usize;
+    let iters = 5usize;
+
+    let mut csv = CsvWriter::create(
+        "results/e10_collectives.csv",
+        &["nnz", "workers", "dual_dim", "bytes_per_iter", "expected"],
+    )?;
+
+    println!("E10 — per-iteration comm bytes (must depend ONLY on dual dim)");
+    println!("{:>10} {:>8} {:>9} {:>14} {:>14}", "nnz", "workers", "dual", "B/iter", "expected");
+    for &sources in &[2_000usize, 8_000, 32_000] {
+        for &workers in &[1usize, 2, 4] {
+            let lp = Arc::new(generate(&SyntheticConfig {
+                num_requests: sources,
+                num_resources: dests,
+                avg_nnz_per_row: 10.0,
+                seed: 1,
+                ..Default::default()
+            }));
+            let dual = lp.dual_dim();
+            let mut dist = DistributedObjective::new(lp.clone(), &art, workers)?;
+            let before = dist.comm();
+            let lam = vec![0.01f32; dual];
+            for _ in 0..iters {
+                let _ = dist.calculate(&lam, 0.01);
+            }
+            let after = dist.comm();
+            let bytes = (after.bcast_bytes + after.reduce_bytes)
+                - (before.bcast_bytes + before.reduce_bytes);
+            let per_iter = bytes as f64 / iters as f64;
+            // 2 bcasts (4·dual each) + 1 reduce (4·dual + 2×8)
+            let expected = (3 * 4 * dual + 16) as f64;
+            println!(
+                "{:>10} {:>8} {:>9} {:>14.0} {:>14.0}",
+                lp.nnz(),
+                workers,
+                dual,
+                per_iter,
+                expected
+            );
+            assert_eq!(per_iter, expected, "comm volume must be λ-sized only");
+            csv.row(&[
+                lp.nnz().to_string(),
+                workers.to_string(),
+                dual.to_string(),
+                format!("{per_iter:.0}"),
+                format!("{expected:.0}"),
+            ])?;
+        }
+    }
+    csv.flush()?;
+
+    println!("\nα-β wire-time estimates per iteration (3 ops of 4·|λ| bytes):");
+    for dual in [1_000usize, 10_000, 100_000] {
+        println!(
+            "  |λ|={dual:>7}: NVLink {:>8.1} µs   Ethernet {:>8.1} µs",
+            LinkModel::nvlink().iter_time(dual) * 1e6,
+            LinkModel::ethernet().iter_time(dual) * 1e6
+        );
+    }
+    println!("\nPASS: comm volume independent of nnz and workers; wrote results/e10_collectives.csv");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! §6 layout claim: the contiguous CSC/slab layout beats the Scala-style
+//! sequence-of-tuples object layout on the Ax / Aᵀλ hot loops ("pointer/
+//! boxing overhead, poorer cache locality … raise memory traffic and
+//! wall-time without adding information").
+//!
+//! Measures per-edge cost of gather (u = Aᵀλ) + scatter (grad += A·x) under
+//! both layouts at matched math.
+//!
+//! Run: cargo bench --bench bench_spmv
+
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::util::csv::CsvWriter;
+use dualip::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let sources = if fast { 100_000 } else { 500_000 };
+    let lp = generate(&SyntheticConfig {
+        num_requests: sources,
+        num_resources: 1000,
+        avg_nnz_per_row: 10.0,
+        seed: 5,
+        ..Default::default()
+    });
+    let nnz = lp.nnz();
+    let lam = vec![0.02f32; lp.dual_dim()];
+    let x: Vec<f32> = (0..nnz).map(|e| (e % 7) as f32 * 0.1).collect();
+    println!("spmv layouts — I={} nnz={nnz}", lp.num_sources());
+
+    // --- flat CSC-style (contiguous edge arrays) --------------------------
+    let mut u = vec![0.0f32; nnz];
+    let mut grad = vec![0.0f32; lp.dual_dim()];
+    let reps = 10;
+    // warm
+    lp.a.gather_dual(&lam, &mut u);
+    lp.a.scatter_ax(&x, &mut grad);
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        lp.a.gather_dual(&lam, &mut u);
+        lp.a.scatter_ax(&x, &mut grad);
+    }
+    let flat_ms = sw.elapsed_ms() / reps as f64;
+
+    // --- Scala-style tuple sequences (one boxed Vec per source) ----------
+    struct Tup {
+        dest: u32,
+        a: f32,
+        _cost: f32,
+    }
+    let blocks: Vec<Vec<Tup>> = (0..lp.num_sources())
+        .map(|i| {
+            (lp.a.src_ptr[i]..lp.a.src_ptr[i + 1])
+                .map(|e| Tup { dest: lp.a.dest_idx[e], a: lp.a.a[0][e], _cost: lp.cost[e] })
+                .collect()
+        })
+        .collect();
+    let mut u2 = vec![0.0f32; nnz];
+    let mut grad2 = vec![0.0f32; lp.dual_dim()];
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let mut e = 0usize;
+        for block in &blocks {
+            for t in block {
+                u2[e] = t.a * lam[t.dest as usize];
+                e += 1;
+            }
+        }
+        grad2.iter_mut().for_each(|g| *g = 0.0);
+        let mut e2 = 0usize;
+        for block in &blocks {
+            for t in block {
+                grad2[t.dest as usize] += t.a * x[e2];
+                e2 += 1;
+            }
+        }
+    }
+    let tuple_ms = sw.elapsed_ms() / reps as f64;
+
+    // numerics must agree
+    for (a, b) in u.iter().zip(&u2) {
+        assert!((a - b).abs() < 1e-5);
+    }
+
+    let per_edge_flat = flat_ms * 1e6 / nnz as f64;
+    let per_edge_tuple = tuple_ms * 1e6 / nnz as f64;
+    println!("flat CSC slab layout : {flat_ms:>8.2} ms/pass ({per_edge_flat:.2} ns/edge)");
+    println!("tuple-sequence layout: {tuple_ms:>8.2} ms/pass ({per_edge_tuple:.2} ns/edge)");
+    println!("layout speedup: {:.2}×", tuple_ms / flat_ms);
+
+    let mut csv = CsvWriter::create(
+        "results/e_spmv_layout.csv",
+        &["layout", "ms_per_pass", "ns_per_edge"],
+    )?;
+    csv.row(&["flat_csc".into(), format!("{flat_ms:.3}"), format!("{per_edge_flat:.3}")])?;
+    csv.row(&["tuple_seq".into(), format!("{tuple_ms:.3}"), format!("{per_edge_tuple:.3}")])?;
+    csv.flush()?;
+    println!("wrote results/e_spmv_layout.csv");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Minimal dependency-free argument parser: `--key value` pairs and
+//! `--flag` booleans after a positional subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.kv.insert(key, v);
+                }
+                _ => out.flags.push(key),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.kv.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse("solve --sources 1000 --workers 4 --precondition");
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.usize_or("sources", 0).unwrap(), 1000);
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 4);
+        assert!(a.flag("precondition"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.usize_or("iters", 200).unwrap(), 200);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse("solve --shift -3.5");
+        // "-3.5" doesn't start with "--" so it is a value
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse("solve --sources abc");
+        assert!(a.usize_or("sources", 0).is_err());
+    }
+}

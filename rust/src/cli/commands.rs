@@ -1,0 +1,469 @@
+//! CLI subcommands — each experiment driver (DESIGN.md §4 experiment
+//! index) emits the CSV series behind the paper's figures plus a console
+//! summary. Shared between `dualip` and the examples.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::args::Args;
+use crate::distributed::{solve_distributed, LinkModel};
+use crate::gen::{generate, workloads, SyntheticConfig};
+use crate::metrics::{comm_report, solve_report};
+use crate::problem::{check_primal, jacobi_row_normalize, MatchingLp, ObjectiveFunction};
+use crate::reference::CpuObjective;
+use crate::runtime::{default_artifacts_dir, HloObjective};
+use crate::solver::{Agd, GammaSchedule, Maximizer, SolveOptions, SolveResult};
+use crate::util::csv::CsvWriter;
+
+pub fn usage() -> &'static str {
+    "dualip — DuaLip-GPU reproduction (rust + JAX/Pallas AOT)\n\
+     \n\
+     USAGE: dualip <subcommand> [--flags]\n\
+     \n\
+     SUBCOMMANDS\n\
+       solve             solve a synthetic matching LP\n\
+         --sources N --dests N --nnz-per-row F --families N --seed S\n\
+         --backend cpu|hlo|dist   --workers N   --iters N\n\
+         --gamma F | --gamma-decay init,floor,factor,every\n\
+         --precondition --primal-scaling --csv PATH\n\
+       parity            E1/E2: baseline-vs-accelerated trajectories (Fig 1/2)\n\
+         --sources N --iters N --out-dir results/\n\
+       ablation-precond  E5: Jacobi preconditioning on/off (Fig 4)\n\
+         --sources N --iters N --ref-iters N --out-dir results/\n\
+       ablation-gamma    E6: γ continuation vs fixed (Fig 5)\n\
+         --sources N --iters N --ref-iters N --out-dir results/\n\
+       info              artifact + environment report\n\
+     \n\
+     Artifacts default to ./artifacts ($DUALIP_ARTIFACTS overrides)."
+}
+
+fn gamma_schedule(args: &Args) -> Result<GammaSchedule> {
+    if let Some(spec) = args.get("gamma-decay") {
+        let p: Vec<&str> = spec.split(',').collect();
+        if p.len() != 4 {
+            return Err(anyhow!("--gamma-decay wants init,floor,factor,every"));
+        }
+        Ok(GammaSchedule::Decay {
+            init: p[0].parse()?,
+            floor: p[1].parse()?,
+            factor: p[2].parse()?,
+            every: p[3].parse()?,
+        })
+    } else {
+        Ok(GammaSchedule::Fixed(args.f64_or("gamma", 0.01)? as f32))
+    }
+}
+
+fn solve_options(args: &Args) -> Result<SolveOptions> {
+    Ok(SolveOptions {
+        max_iters: args.usize_or("iters", 200)?,
+        max_step_size: args.f64_or("max-step", 1e-3)?,
+        initial_step_size: args.f64_or("init-step", 1e-5)?,
+        gamma: gamma_schedule(args)?,
+        record_every: args.usize_or("record-every", 1)?,
+        ..Default::default()
+    })
+}
+
+fn workload(args: &Args) -> Result<SyntheticConfig> {
+    Ok(SyntheticConfig {
+        num_requests: args.usize_or("sources", 50_000)?,
+        num_resources: args.usize_or("dests", 500)?,
+        avg_nnz_per_row: args.f64_or("nnz-per-row", 10.0)?,
+        num_families: args.usize_or("families", 1)?,
+        seed: args.u64_or("seed", 0)?,
+        ..SyntheticConfig::default_with(args.u64_or("seed", 0)?)
+    })
+}
+
+fn write_trajectory(path: &str, label: &str, r: &SolveResult) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &["label", "iter", "dual_obj", "grad_norm", "infeas", "gamma", "step", "wall_ms"],
+    )?;
+    for t in &r.trajectory {
+        w.row(&[
+            label.to_string(),
+            t.iter.to_string(),
+            format!("{:.9e}", t.dual_obj),
+            format!("{:.6e}", t.grad_norm),
+            format!("{:.6e}", t.infeas_pos_norm),
+            format!("{}", t.gamma),
+            format!("{:.6e}", t.step_size),
+            format!("{:.3}", t.wall_ms),
+        ])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// `dualip solve`
+pub fn cmd_solve(args: &Args) -> Result<()> {
+    let cfg = workload(args)?;
+    let opts = solve_options(args)?;
+    let backend = args.get_or("backend", "hlo").to_string();
+    let workers = args.usize_or("workers", 2)?;
+    let art = default_artifacts_dir();
+
+    eprintln!(
+        "generating I={} J={} ν={} m={} seed={}…",
+        cfg.num_requests, cfg.num_resources, cfg.avg_nnz_per_row, cfg.num_families, cfg.seed
+    );
+    let mut lp = generate(&cfg);
+    if args.flag("precondition") {
+        let s = jacobi_row_normalize(&mut lp);
+        eprintln!("jacobi row normalization applied ({} empty rows)", s.empty_rows);
+    }
+    if args.flag("primal-scaling") {
+        crate::problem::apply_primal_scaling(&mut lp);
+        eprintln!("primal scaling applied");
+    }
+    eprintln!("nnz={} dual_dim={}", lp.nnz(), lp.dual_dim());
+
+    let init = vec![0.0f32; lp.dual_dim()];
+    let mut agd = Agd::default();
+    let (label, result) = match backend.as_str() {
+        "cpu" => {
+            let mut obj = CpuObjective::new(&lp);
+            ("cpu", agd.maximize(&mut obj, &init, &opts))
+        }
+        "hlo" => {
+            let mut obj = HloObjective::new(&lp, &art)?;
+            obj.warmup()?;
+            let r = agd.maximize(&mut obj, &init, &opts);
+            eprintln!("phase timers: {}", obj.timers.report());
+            ("hlo", r)
+        }
+        "dist" => {
+            let lp_arc = Arc::new(lp);
+            let out = solve_distributed(lp_arc.clone(), &art, workers, &opts)?;
+            println!("{}", comm_report(&out.comm, out.result.iterations as u64));
+            println!(
+                "estimated NCCL wire time/iter: nvlink {:.1}µs, ethernet {:.1}µs",
+                LinkModel::nvlink().iter_time(lp_arc.dual_dim()) * 1e6,
+                LinkModel::ethernet().iter_time(lp_arc.dual_dim()) * 1e6,
+            );
+            println!("{}", solve_report("dist", &out.result));
+            if let Some(csv) = args.get("csv") {
+                write_trajectory(csv, "dist", &out.result)?;
+            }
+            return Ok(());
+        }
+        other => return Err(anyhow!("unknown backend {other:?} (cpu|hlo|dist)")),
+    };
+    println!("{}", solve_report(label, &result));
+    if let Some(csv) = args.get("csv") {
+        write_trajectory(csv, label, &result)?;
+    }
+    Ok(())
+}
+
+/// `dualip parity` — E1 (Fig 1) + E2 (Fig 2): run the baseline and the
+/// accelerated backends on the identical instance (same seed) and emit the
+/// dual-objective trajectories plus per-iteration relative error.
+pub fn cmd_parity(args: &Args) -> Result<()> {
+    let sources = args.usize_or("sources", 20_000)?;
+    let iters = args.usize_or("iters", 150)?;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+    let art = default_artifacts_dir();
+
+    let cfg = SyntheticConfig {
+        num_requests: sources,
+        ..workloads::parity_instance(args.u64_or("seed", 0)?)
+    };
+    // The paper's production stack conditions first (§5.1); parity compares
+    // implementations of the SAME conditioned pipeline.
+    let mut lp_raw = generate(&cfg);
+    jacobi_row_normalize(&mut lp_raw);
+    let lp = Arc::new(lp_raw);
+    let opts = SolveOptions {
+        max_iters: iters,
+        gamma: GammaSchedule::Fixed(0.01),
+        max_step_size: 1.0,
+        initial_step_size: 1e-4,
+        ..Default::default()
+    };
+    let init = vec![0.0f32; lp.dual_dim()];
+
+    eprintln!("parity: I={} nnz={} iters={iters}", lp.num_sources(), lp.nnz());
+    let mut agd = Agd::default();
+    let mut cpu = CpuObjective::new(&lp);
+    let r_cpu = agd.maximize(&mut cpu, &init, &opts);
+    eprintln!("{}", solve_report("baseline(cpu)", &r_cpu));
+
+    let mut runs = vec![("baseline_cpu".to_string(), r_cpu)];
+    {
+        let mut hlo = HloObjective::new(&lp, &art)?;
+        hlo.warmup()?;
+        let r = agd.maximize(&mut hlo, &init, &opts);
+        eprintln!("{}", solve_report("hlo-1dev", &r));
+        runs.push(("hlo_1dev".to_string(), r));
+    }
+    for workers in [2usize, 4] {
+        let out = solve_distributed(lp.clone(), &art, workers, &opts)?;
+        eprintln!("{}", solve_report(&format!("dist-{workers}dev"), &out.result));
+        runs.push((format!("dist_{workers}dev"), out.result));
+    }
+
+    // Fig 1: overlaid trajectories
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig1_parity.csv"),
+        &["impl", "iter", "dual_obj"],
+    )?;
+    for (label, r) in &runs {
+        for t in &r.trajectory {
+            w.row(&[label.clone(), t.iter.to_string(), format!("{:.9e}", t.dual_obj)])?;
+        }
+    }
+    w.flush()?;
+
+    // Fig 2: relative error vs the baseline trajectory
+    let base = &runs[0].1.trajectory;
+    let mut w2 = CsvWriter::create(
+        format!("{out_dir}/fig2_relerr.csv"),
+        &["impl", "iter", "rel_err"],
+    )?;
+    let mut max_tail_err = 0.0f64;
+    for (label, r) in runs.iter().skip(1) {
+        for (tb, tr) in base.iter().zip(&r.trajectory) {
+            let rel = (tb.dual_obj - tr.dual_obj).abs() / tb.dual_obj.abs().max(1e-30);
+            w2.row(&[label.clone(), tr.iter.to_string(), format!("{rel:.6e}")])?;
+            if tr.iter >= 100 {
+                max_tail_err = max_tail_err.max(rel);
+            }
+        }
+    }
+    w2.flush()?;
+    println!(
+        "parity: wrote {out_dir}/fig1_parity.csv, {out_dir}/fig2_relerr.csv; \
+         max rel err after iter 100 = {max_tail_err:.3e} (paper: < 1e-2)"
+    );
+    Ok(())
+}
+
+/// Long high-precision solve (HLO path) to estimate the converged dual
+/// optimum L̂ for the Fig 4/5 |L − L̂| series.
+fn reference_optimum(
+    lp: &MatchingLp,
+    gamma: f32,
+    iters: usize,
+    art: &std::path::Path,
+    precondition: bool,
+) -> Result<f64> {
+    // Work on a preconditioned copy for fast convergence; the optimum VALUE
+    // is invariant under row scaling (same perturbed primal).
+    let mut lp_ref = MatchingLp {
+        a: lp.a.clone(),
+        cost: lp.cost.clone(),
+        b: lp.b.clone(),
+        projection: crate::projection::ProjectionMap::Uniform(
+            crate::projection::ProjectionKind::Simplex,
+        ),
+        primal_scale: lp.primal_scale.clone(),
+        global_rows: lp.global_rows.clone(),
+    };
+    if precondition {
+        jacobi_row_normalize(&mut lp_ref);
+    }
+    let mut obj = HloObjective::new(&lp_ref, art)?;
+    obj.warmup()?;
+    let mut agd = Agd::default();
+    let opts = SolveOptions {
+        max_iters: iters,
+        gamma: GammaSchedule::Fixed(gamma),
+        max_step_size: if precondition { 1.0 } else { 1e-3 },
+        initial_step_size: 1e-5,
+        record_every: iters.max(1),
+        ..Default::default()
+    };
+    let r = agd.maximize(&mut obj, &vec![0.0; lp_ref.dual_dim()], &opts);
+    Ok(r.trajectory.iter().map(|t| t.dual_obj).fold(f64::NEG_INFINITY, f64::max))
+}
+
+/// `dualip ablation-precond` — E5 (Fig 4): log|L − L̂| with and without
+/// Jacobi row normalization at fixed γ.
+pub fn cmd_ablation_precond(args: &Args) -> Result<()> {
+    let sources = args.usize_or("sources", 50_000)?;
+    let iters = args.usize_or("iters", 300)?;
+    let ref_iters = args.usize_or("ref-iters", 2000)?;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+    let gamma = args.f64_or("gamma", 0.01)? as f32;
+    let art = default_artifacts_dir();
+
+    let cfg = SyntheticConfig {
+        num_requests: sources,
+        ..workloads::ablation_instance(args.u64_or("seed", 0)?)
+    };
+    let lp = generate(&cfg);
+    eprintln!("ablation-precond: I={} nnz={}", lp.num_sources(), lp.nnz());
+
+    let l_hat = reference_optimum(&lp, gamma, ref_iters, &art, true)?;
+    eprintln!("reference optimum L̂ = {l_hat:.9e}");
+
+    let mut runs = Vec::new();
+    for precondition in [false, true] {
+        let mut lp_run = MatchingLp {
+            a: lp.a.clone(),
+            cost: lp.cost.clone(),
+            b: lp.b.clone(),
+            projection: crate::projection::ProjectionMap::Uniform(
+                crate::projection::ProjectionKind::Simplex,
+            ),
+            primal_scale: None,
+            global_rows: Vec::new(),
+        };
+        // Preconditioning rescales the dual Hessian to ~unit diagonal, so
+        // the stable step cap is ~1/L(AAᵀ)≈1 instead of the paper's 1e-3.
+        let max_step = if precondition {
+            jacobi_row_normalize(&mut lp_run);
+            1.0
+        } else {
+            1e-3
+        };
+        let mut obj = HloObjective::new(&lp_run, &art)?;
+        obj.warmup()?;
+        let mut agd = Agd::default();
+        let opts = SolveOptions {
+            max_iters: iters,
+            gamma: GammaSchedule::Fixed(gamma),
+            max_step_size: max_step,
+            ..Default::default()
+        };
+        let r = agd.maximize(&mut obj, &vec![0.0; lp_run.dual_dim()], &opts);
+        let label = if precondition { "jacobi" } else { "none" };
+        eprintln!("{}", solve_report(label, &r));
+        runs.push((label.to_string(), r));
+    }
+
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig4_precond.csv"),
+        &["precond", "iter", "dual_obj", "log10_gap"],
+    )?;
+    for (label, r) in &runs {
+        for t in &r.trajectory {
+            let gap = (l_hat - t.dual_obj).abs().max(1e-300);
+            w.row(&[
+                label.clone(),
+                t.iter.to_string(),
+                format!("{:.9e}", t.dual_obj),
+                format!("{:.6}", gap.log10()),
+            ])?;
+        }
+    }
+    w.flush()?;
+
+    // headline: iterations to reach gap ≤ 1% of initial gap
+    let mut summary = Vec::new();
+    for (label, r) in &runs {
+        let g0 = (l_hat - r.trajectory[0].dual_obj).abs();
+        let hit = r
+            .trajectory
+            .iter()
+            .find(|t| (l_hat - t.dual_obj).abs() <= 0.01 * g0)
+            .map(|t| t.iter as i64)
+            .unwrap_or(-1);
+        summary.push(format!("{label}: iters-to-1%-gap = {hit}"));
+    }
+    println!("ablation-precond: wrote {out_dir}/fig4_precond.csv; {}", summary.join(", "));
+    Ok(())
+}
+
+/// `dualip ablation-gamma` — E6 (Fig 5): γ continuation (0.16→0.01 halved
+/// every 25) vs fixed levels.
+pub fn cmd_ablation_gamma(args: &Args) -> Result<()> {
+    let sources = args.usize_or("sources", 50_000)?;
+    let iters = args.usize_or("iters", 300)?;
+    let ref_iters = args.usize_or("ref-iters", 2000)?;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+    let art = default_artifacts_dir();
+
+    let cfg = SyntheticConfig {
+        num_requests: sources,
+        ..workloads::ablation_instance(args.u64_or("seed", 0)?)
+    };
+    // γ continuation is evaluated on the conditioned problem (the paper's
+    // standard stack, §5.1) so that schedule effects — not raw
+    // ill-conditioning — dominate the curves.
+    let mut lp = generate(&cfg);
+    jacobi_row_normalize(&mut lp);
+    eprintln!("ablation-gamma: I={} nnz={}", lp.num_sources(), lp.nnz());
+
+    // L̂ at the target (floor) regularization level 0.01.
+    let l_hat = reference_optimum(&lp, 0.01, ref_iters, &art, false)?;
+    eprintln!("reference optimum L̂(γ=0.01) = {l_hat:.9e}");
+
+    let schedules: Vec<(&str, GammaSchedule)> = vec![
+        ("fixed_0.01", GammaSchedule::Fixed(0.01)),
+        ("fixed_0.16", GammaSchedule::Fixed(0.16)),
+        ("decay_0.16_to_0.01", GammaSchedule::paper_fig5()),
+    ];
+
+    let mut w = CsvWriter::create(
+        format!("{out_dir}/fig5_gamma.csv"),
+        &["schedule", "iter", "gamma", "dual_obj", "log10_gap"],
+    )?;
+    let mut summaries = Vec::new();
+    for (label, sched) in schedules {
+        let mut obj = HloObjective::new(&lp, &art)?;
+        obj.warmup()?;
+        let mut agd = Agd::default();
+        let opts = SolveOptions {
+            max_iters: iters,
+            gamma: sched,
+            // conditioned Hessian ⇒ unit-scale cap; continuation rescales
+            // the cap with γ automatically (step_cap_scale)
+            max_step_size: 1.0,
+            initial_step_size: 1e-4,
+            ..Default::default()
+        };
+        let r = agd.maximize(&mut obj, &vec![0.0; lp.dual_dim()], &opts);
+        eprintln!("{}", solve_report(label, &r));
+        for t in &r.trajectory {
+            let gap = (l_hat - t.dual_obj).abs().max(1e-300);
+            w.row(&[
+                label.to_string(),
+                t.iter.to_string(),
+                format!("{}", t.gamma),
+                format!("{:.9e}", t.dual_obj),
+                format!("{:.6}", gap.log10()),
+            ])?;
+        }
+        let final_gap = (l_hat - r.trajectory.last().unwrap().dual_obj).abs();
+        summaries.push(format!("{label}: final |L−L̂| = {final_gap:.3e}"));
+    }
+    w.flush()?;
+    println!("ablation-gamma: wrote {out_dir}/fig5_gamma.csv; {}", summaries.join(", "));
+    Ok(())
+}
+
+/// `dualip info`
+pub fn cmd_info(_args: &Args) -> Result<()> {
+    let art = default_artifacts_dir();
+    println!("artifacts dir: {}", art.display());
+    match crate::runtime::Manifest::load(&art) {
+        Ok(m) => {
+            println!("  tile_rows = {}", m.tile_rows);
+            println!("  widths    = {:?}", m.widths);
+            println!("  artifacts = {}", m.entries.len());
+        }
+        Err(e) => println!("  (no artifacts: {e:#})"),
+    }
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+    println!("pjrt platform: {} ({} devices)", client.platform_name(), client.device_count());
+    println!("logical workers available: {}", std::thread::available_parallelism()?);
+    Ok(())
+}
+
+/// Solve + validate a primal — shared tail used by examples and `solve`.
+pub fn report_primal(lp: &MatchingLp, obj: &mut dyn ObjectiveFunction, lam: &[f32], gamma: f32) {
+    let x = obj.primal(lam, gamma);
+    let rep = check_primal(lp, &x, 1e-3);
+    println!(
+        "primal: cᵀx={:.6e} ‖(Ax−b)₊‖₂={:.3e} max simple viol={:.2e} active rows={:.1}%",
+        rep.objective,
+        rep.complex_infeas,
+        rep.simple_infeas_max,
+        rep.active_fraction * 100.0
+    );
+}

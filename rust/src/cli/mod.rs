@@ -1,0 +1,28 @@
+//! Launcher: argument parsing and the experiment subcommands.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::Result;
+
+/// Dispatch a parsed command line.
+pub fn run(args: Args) -> Result<()> {
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{}", commands::usage());
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "solve" => commands::cmd_solve(&args),
+        "parity" => commands::cmd_parity(&args),
+        "ablation-precond" => commands::cmd_ablation_precond(&args),
+        "ablation-gamma" => commands::cmd_ablation_gamma(&args),
+        "info" => commands::cmd_info(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            println!("{}", commands::usage());
+            std::process::exit(2);
+        }
+    }
+}

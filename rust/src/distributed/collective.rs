@@ -1,0 +1,159 @@
+//! Simulated collectives with byte/op accounting (DESIGN.md §5
+//! Substitutions: stands in for torch.distributed + NCCL).
+//!
+//! The paper's claim (§6) is *structural*: per iteration the pattern is one
+//! reduce (SUM, to rank 0) of the gradient (|λ| floats + 2 scalars) and two
+//! broadcasts of the (λ₁, λ₂) momentum pair — independent of nnz and the
+//! per-GPU column split. These collectives move the same logical payloads
+//! over channels and count every byte so the benches can assert the claim
+//! (experiment E10).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Byte/op counters shared between leader and workers.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    pub reduce_ops: AtomicU64,
+    pub reduce_bytes: AtomicU64,
+    pub bcast_ops: AtomicU64,
+    pub bcast_bytes: AtomicU64,
+    pub scatter_ops: AtomicU64,
+    pub scatter_bytes: AtomicU64,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CommSnapshot {
+    pub reduce_ops: u64,
+    pub reduce_bytes: u64,
+    pub bcast_ops: u64,
+    pub bcast_bytes: u64,
+    pub scatter_ops: u64,
+    pub scatter_bytes: u64,
+}
+
+impl CommStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Record one broadcast of `n_floats` (leader → all ranks). NCCL
+    /// broadcast moves ~n bytes per link regardless of fan-out; we count
+    /// the logical payload once, as the paper does ("each of size |λ|").
+    pub fn record_broadcast(&self, n_floats: usize) {
+        self.bcast_ops.fetch_add(1, Ordering::Relaxed);
+        self.bcast_bytes.fetch_add(4 * n_floats as u64, Ordering::Relaxed);
+    }
+
+    /// Record one SUM-reduce to rank 0 of `n_floats` plus `n_scalars` f64
+    /// side values (objective, regularization).
+    pub fn record_reduce(&self, n_floats: usize, n_scalars: usize) {
+        self.reduce_ops.fetch_add(1, Ordering::Relaxed);
+        self.reduce_bytes
+            .fetch_add(4 * n_floats as u64 + 8 * n_scalars as u64, Ordering::Relaxed);
+    }
+
+    /// Record the one-time data distribution (paper §6: rank 0 generates
+    /// and partitions on CPU, scatters column partitions).
+    pub fn record_scatter(&self, bytes: u64) {
+        self.scatter_ops.fetch_add(1, Ordering::Relaxed);
+        self.scatter_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CommSnapshot {
+        CommSnapshot {
+            reduce_ops: self.reduce_ops.load(Ordering::Relaxed),
+            reduce_bytes: self.reduce_bytes.load(Ordering::Relaxed),
+            bcast_ops: self.bcast_ops.load(Ordering::Relaxed),
+            bcast_bytes: self.bcast_bytes.load(Ordering::Relaxed),
+            scatter_ops: self.scatter_ops.load(Ordering::Relaxed),
+            scatter_bytes: self.scatter_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl CommSnapshot {
+    /// Steady-state bytes per iteration given the iteration count
+    /// (excludes the one-time scatter).
+    pub fn bytes_per_iter(&self, iters: u64) -> f64 {
+        if iters == 0 {
+            return 0.0;
+        }
+        (self.reduce_bytes + self.bcast_bytes) as f64 / iters as f64
+    }
+}
+
+/// α–β interconnect cost model for reporting estimated wire time of a
+/// collective on real hardware (bench E10's "what would NCCL move").
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// per-op latency, seconds (α)
+    pub alpha: f64,
+    /// seconds per byte (β = 1/bandwidth)
+    pub beta: f64,
+}
+
+impl LinkModel {
+    /// NVLink-class defaults: 10 µs latency, 200 GB/s effective.
+    pub fn nvlink() -> Self {
+        LinkModel { alpha: 10e-6, beta: 1.0 / 200e9 }
+    }
+
+    /// Datacenter Ethernet-class: 50 µs, 10 GB/s.
+    pub fn ethernet() -> Self {
+        LinkModel { alpha: 50e-6, beta: 1.0 / 10e9 }
+    }
+
+    /// Estimated seconds for one op of `bytes`.
+    pub fn op_time(&self, bytes: u64) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+
+    /// Estimated per-iteration wire time for the paper's pattern
+    /// (1 reduce + 2 broadcasts of |λ| floats).
+    pub fn iter_time(&self, dual_dim: usize) -> f64 {
+        3.0 * self.op_time(4 * dual_dim as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = CommStats::new();
+        s.record_broadcast(100);
+        s.record_broadcast(100);
+        s.record_reduce(100, 2);
+        let snap = s.snapshot();
+        assert_eq!(snap.bcast_ops, 2);
+        assert_eq!(snap.bcast_bytes, 800);
+        assert_eq!(snap.reduce_ops, 1);
+        assert_eq!(snap.reduce_bytes, 416);
+    }
+
+    #[test]
+    fn bytes_per_iter_excludes_scatter() {
+        let s = CommStats::new();
+        s.record_scatter(1_000_000);
+        for _ in 0..10 {
+            s.record_broadcast(50);
+            s.record_broadcast(50);
+            s.record_reduce(50, 2);
+        }
+        let snap = s.snapshot();
+        // per iter: 2*200 + 200+16 = 616
+        assert!((snap.bytes_per_iter(10) - 616.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_model_monotone_in_size() {
+        let m = LinkModel::nvlink();
+        assert!(m.op_time(1000) < m.op_time(1_000_000));
+        assert!(m.iter_time(10_000) > 0.0);
+        // ethernet slower than nvlink for same payload
+        assert!(LinkModel::ethernet().iter_time(10_000) > m.iter_time(10_000));
+    }
+}

@@ -1,0 +1,13 @@
+//! Distributed execution (paper §6 "Distributed GPU communication"):
+//! balanced column partitioning, worker threads as simulated devices, and
+//! λ-only collectives with full byte accounting.
+
+pub mod collective;
+pub mod coordinator;
+pub mod partition;
+pub mod worker;
+
+pub use collective::{CommSnapshot, CommStats, LinkModel};
+pub use coordinator::{solve_distributed, DistributedObjective, DistributedSolve};
+pub use partition::{balanced_partition, imbalance, shard_nnz};
+pub use worker::{WorkerPool, WorkerMsg};

@@ -1,0 +1,115 @@
+//! Balanced column (source) partitioning across devices (paper §6:
+//! "Columns of T (and c, consistently) are partitioned across devices in a
+//! balanced column split of the CSC-format matrices").
+//!
+//! Shards are contiguous source ranges balanced by nonzero count — source
+//! blocks are atomic (a block's simple constraint can't span devices).
+
+/// Partition sources [0, I) into `n` contiguous shards with approximately
+/// equal edge counts. Returns (lo, hi) pairs; every source appears in
+/// exactly one shard. Empty shards are allowed when n > I.
+pub fn balanced_partition(src_ptr: &[usize], n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 1);
+    let num_sources = src_ptr.len() - 1;
+    let total = *src_ptr.last().unwrap();
+    let mut shards = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    for r in 0..n {
+        let hi = if r + 1 == n {
+            num_sources // last shard takes the remainder
+        } else {
+            // greedy boundary: advance while cumulative edges stay within
+            // the ideal cumulative target for shards 0..=r
+            let target = ((r + 1) as f64 / n as f64 * total as f64).round() as usize;
+            let mut hi = lo;
+            while hi < num_sources && src_ptr[hi + 1] <= target {
+                hi += 1;
+            }
+            hi
+        };
+        shards.push((lo, hi));
+        lo = hi;
+    }
+    shards
+}
+
+/// Edge count of a shard.
+pub fn shard_nnz(src_ptr: &[usize], shard: (usize, usize)) -> usize {
+    src_ptr[shard.1] - src_ptr[shard.0]
+}
+
+/// Load imbalance: max shard nnz / mean shard nnz (1.0 = perfect).
+pub fn imbalance(src_ptr: &[usize], shards: &[(usize, usize)]) -> f64 {
+    let nz: Vec<usize> = shards.iter().map(|&s| shard_nnz(src_ptr, s)).collect();
+    let max = *nz.iter().max().unwrap_or(&0) as f64;
+    let mean = nz.iter().sum::<usize>() as f64 / nz.len().max(1) as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ptr_from_degrees(deg: &[usize]) -> Vec<usize> {
+        let mut p = vec![0];
+        for &d in deg {
+            p.push(p.last().unwrap() + d);
+        }
+        p
+    }
+
+    #[test]
+    fn covers_all_sources_disjointly() {
+        let p = ptr_from_degrees(&[3, 1, 4, 1, 5, 9, 2, 6, 5, 3]);
+        for n in 1..=6 {
+            let shards = balanced_partition(&p, n);
+            assert_eq!(shards.len(), n);
+            assert_eq!(shards[0].0, 0);
+            assert_eq!(shards.last().unwrap().1, 10);
+            for w in shards.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gaps/overlap at {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_degrees_split_evenly() {
+        let p = ptr_from_degrees(&[5; 100]);
+        let shards = balanced_partition(&p, 4);
+        for &(lo, hi) in &shards {
+            assert_eq!(hi - lo, 25);
+        }
+        assert!((imbalance(&p, &shards) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skewed_degrees_still_balanced_by_nnz() {
+        // One huge source then many small: nnz balance ≠ source balance.
+        let mut deg = vec![1000usize];
+        deg.extend(vec![10usize; 300]);
+        let p = ptr_from_degrees(&deg);
+        let shards = balanced_partition(&p, 4);
+        let imb = imbalance(&p, &shards);
+        assert!(imb < 1.35, "imbalance {imb}");
+    }
+
+    #[test]
+    fn more_workers_than_sources() {
+        let p = ptr_from_degrees(&[2, 2]);
+        let shards = balanced_partition(&p, 5);
+        assert_eq!(shards.len(), 5);
+        assert_eq!(shards.last().unwrap().1, 2);
+        let covered: usize = shards.iter().map(|&(l, h)| h - l).sum();
+        assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let p = ptr_from_degrees(&[1, 2, 3]);
+        assert_eq!(balanced_partition(&p, 1), vec![(0, 3)]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Worker pool: one OS thread per simulated device, each owning a column
+//! (source-range) shard and its own PJRT engine + compiled executables —
+//! the stand-in for the paper's one-process-per-GPU torch.distributed
+//! setup (DESIGN.md §5).
+//!
+//! Protocol per iteration (paper §6):
+//!   leader --2 broadcasts (λ₁, λ₂)--> workers
+//!   workers: local gather → slab kernels → scatter (no cross-device deps)
+//!   workers --reduce SUM (grad, 2 scalars)--> leader
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::collective::CommStats;
+use super::partition::balanced_partition;
+use crate::problem::MatchingLp;
+use crate::runtime::HloObjective;
+
+/// Leader → worker commands. `momentum` is the second broadcast payload of
+/// the paper's protocol (the λ₁ iterate of the momentum pair); workers use
+/// `query` (= λ₂, the extrapolated point) for the gradient.
+pub enum Cmd {
+    Eval { query: Arc<Vec<f32>>, momentum: Arc<Vec<f32>>, gamma: f32 },
+    Primal { query: Arc<Vec<f32>>, gamma: f32 },
+    Shutdown,
+}
+
+/// Worker → leader messages. `compute_ms` is the worker-local **thread CPU
+/// time** of the shard evaluation (CLOCK_THREAD_CPUTIME_ID) — immune to
+/// time-slicing with sibling workers on this single-core testbed, so the
+/// leader can model true-parallel iteration time as max_r(compute_ms) plus
+/// the interconnect model (DESIGN.md §5 Substitutions).
+pub enum WorkerMsg {
+    Ready { rank: usize, buckets: usize, rows: usize, real_edges: usize, padded_edges: usize },
+    Grad { rank: usize, ax: Vec<f32>, cx: f64, xsq: f64, compute_ms: f64 },
+    Primal { rank: usize, x: Vec<f32> },
+    Error { rank: usize, message: String },
+}
+
+/// Per-thread CPU time in milliseconds (contention-immune; used for the
+/// modeled-parallel device time).
+fn thread_cpu_time_ms() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as f64 * 1e3 + ts.tv_nsec as f64 / 1e6
+}
+
+pub struct WorkerPool {
+    cmd_txs: Vec<Sender<Cmd>>,
+    msg_rx: Receiver<WorkerMsg>,
+    handles: Vec<JoinHandle<()>>,
+    pub stats: Arc<CommStats>,
+    pub shards: Vec<(usize, usize)>,
+    /// Per-eval modeled parallel compute time: max over workers of the
+    /// shard-local wall time (what N real devices would take).
+    pub iter_compute_max_ms: Vec<f64>,
+    /// Per-eval sum over workers (the serialized single-core cost).
+    pub iter_compute_sum_ms: Vec<f64>,
+    dual_dim: usize,
+    nnz: usize,
+}
+
+fn worker_main(
+    rank: usize,
+    lp: Arc<MatchingLp>,
+    artifacts: PathBuf,
+    shard: (usize, usize),
+    cmd_rx: Receiver<Cmd>,
+    msg_tx: Sender<WorkerMsg>,
+) {
+    let mut obj = match HloObjective::new_shard(&lp, &artifacts, shard.0, shard.1)
+        .and_then(|mut o| o.warmup().map(|_| o))
+    {
+        Ok(o) => o,
+        Err(e) => {
+            let _ = msg_tx.send(WorkerMsg::Error { rank, message: format!("{e:#}") });
+            return;
+        }
+    };
+    let _ = msg_tx.send(WorkerMsg::Ready {
+        rank,
+        buckets: obj.layout().num_launches(),
+        rows: obj.layout().total_rows(),
+        real_edges: obj.layout().total_real_edges(),
+        padded_edges: obj.layout().total_padded_edges(),
+    });
+    let dual_dim = lp.dual_dim();
+    for cmd in cmd_rx {
+        match cmd {
+            Cmd::Eval { query, momentum, gamma } => {
+                let _ = &momentum; // momentum pair received (traffic parity)
+                let mut ax = vec![0.0f32; dual_dim];
+                let t0 = thread_cpu_time_ms();
+                match obj.eval_shard(&query, gamma, &mut ax, None) {
+                    Ok((cx, xsq)) => {
+                        let compute_ms = thread_cpu_time_ms() - t0;
+                        let _ = msg_tx.send(WorkerMsg::Grad { rank, ax, cx, xsq, compute_ms });
+                    }
+                    Err(e) => {
+                        let _ = msg_tx.send(WorkerMsg::Error { rank, message: format!("{e:#}") });
+                        return;
+                    }
+                }
+            }
+            Cmd::Primal { query, gamma } => {
+                let mut ax = vec![0.0f32; dual_dim];
+                let mut x = vec![0.0f32; lp.nnz()];
+                match obj.eval_shard(&query, gamma, &mut ax, Some(&mut x)) {
+                    Ok(_) => {
+                        let _ = msg_tx.send(WorkerMsg::Primal { rank, x });
+                    }
+                    Err(e) => {
+                        let _ = msg_tx.send(WorkerMsg::Error { rank, message: format!("{e:#}") });
+                        return;
+                    }
+                }
+            }
+            Cmd::Shutdown => return,
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `num_workers` device threads over a balanced column split,
+    /// blocking until every worker has built + compiled its shard.
+    pub fn spawn(
+        lp: Arc<MatchingLp>,
+        artifacts: impl Into<PathBuf>,
+        num_workers: usize,
+    ) -> Result<WorkerPool> {
+        assert!(num_workers >= 1);
+        let artifacts = artifacts.into();
+        let shards = balanced_partition(&lp.a.src_ptr, num_workers);
+        let stats = CommStats::new();
+        let (msg_tx, msg_rx) = channel::<WorkerMsg>();
+        let mut cmd_txs = Vec::with_capacity(num_workers);
+        let mut handles = Vec::with_capacity(num_workers);
+
+        for (rank, &shard) in shards.iter().enumerate() {
+            let (tx, rx) = channel::<Cmd>();
+            cmd_txs.push(tx);
+            let lp2 = lp.clone();
+            let art = artifacts.clone();
+            let mtx = msg_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dualip-worker-{rank}"))
+                    .spawn(move || worker_main(rank, lp2, art, shard, rx, mtx))?,
+            );
+            // one-time data distribution accounting (edges × (idx + cost +
+            // m coefficient planes) + shared b broadcast)
+            let edges = lp.a.src_ptr[shard.1] - lp.a.src_ptr[shard.0];
+            stats.record_scatter((edges * (4 + 4 + 4 * lp.num_families())) as u64);
+        }
+        stats.record_broadcast(lp.dual_dim()); // b broadcast (once)
+
+        // wait for readiness
+        let mut ready = 0usize;
+        while ready < num_workers {
+            match msg_rx.recv().map_err(|_| anyhow!("worker channel closed during spawn"))? {
+                WorkerMsg::Ready { .. } => ready += 1,
+                WorkerMsg::Error { rank, message } => {
+                    return Err(anyhow!("worker {rank} failed to start: {message}"));
+                }
+                _ => return Err(anyhow!("unexpected message during spawn")),
+            }
+        }
+
+        Ok(WorkerPool {
+            cmd_txs,
+            msg_rx,
+            handles,
+            stats,
+            shards,
+            iter_compute_max_ms: Vec::new(),
+            iter_compute_sum_ms: Vec::new(),
+            dual_dim: lp.dual_dim(),
+            nnz: lp.nnz(),
+        })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.cmd_txs.len()
+    }
+
+    /// One distributed dual evaluation: 2 broadcasts + compute + 1 reduce.
+    /// Returns (Σ_r A_r x_r, Σ cx, Σ xsq) — b is NOT subtracted (leader's
+    /// job, it owns b).
+    pub fn eval(&mut self, query: &[f32], momentum: &[f32], gamma: f32) -> Result<(Vec<f32>, f64, f64)> {
+        let q = Arc::new(query.to_vec());
+        let mo = Arc::new(momentum.to_vec());
+        self.stats.record_broadcast(q.len());
+        self.stats.record_broadcast(mo.len());
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::Eval { query: q.clone(), momentum: mo.clone(), gamma })
+                .map_err(|_| anyhow!("worker died"))?;
+        }
+        // Collect per-rank, then reduce in RANK order: a fixed reduction
+        // order keeps the f32 sum — and therefore the whole AGD trajectory
+        // — bit-deterministic regardless of thread scheduling (NCCL's tree
+        // reduction is likewise order-fixed).
+        let mut parts: Vec<Option<(Vec<f32>, f64, f64, f64)>> = (0..self.num_workers()).map(|_| None).collect();
+        for _ in 0..self.num_workers() {
+            match self.msg_rx.recv().map_err(|_| anyhow!("worker channel closed"))? {
+                WorkerMsg::Grad { rank, ax: g, cx: c, xsq: s, compute_ms } => {
+                    parts[rank] = Some((g, c, s, compute_ms));
+                }
+                WorkerMsg::Error { rank, message } => {
+                    return Err(anyhow!("worker {rank} failed: {message}"));
+                }
+                _ => return Err(anyhow!("unexpected worker message")),
+            }
+        }
+        let mut ax = vec![0.0f32; self.dual_dim];
+        let (mut cx, mut xsq) = (0.0f64, 0.0f64);
+        let (mut t_max, mut t_sum) = (0.0f64, 0.0f64);
+        for part in parts.into_iter() {
+            let (g, c, s, compute_ms) = part.expect("missing rank result");
+            crate::util::mathvec::add_assign(&mut ax, &g);
+            cx += c;
+            xsq += s;
+            t_max = t_max.max(compute_ms);
+            t_sum += compute_ms;
+        }
+        self.stats.record_reduce(self.dual_dim, 2);
+        self.iter_compute_max_ms.push(t_max);
+        self.iter_compute_sum_ms.push(t_sum);
+        Ok((ax, cx, xsq))
+    }
+
+    /// Recover the full per-edge primal (merges shard contributions).
+    pub fn primal(&mut self, query: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        let q = Arc::new(query.to_vec());
+        self.stats.record_broadcast(q.len());
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::Primal { query: q.clone(), gamma })
+                .map_err(|_| anyhow!("worker died"))?;
+        }
+        // shards write disjoint edges, so arrival order is immaterial here
+        let mut x = vec![0.0f32; self.nnz];
+        for _ in 0..self.num_workers() {
+            match self.msg_rx.recv().map_err(|_| anyhow!("worker channel closed"))? {
+                WorkerMsg::Primal { x: xs, .. } => {
+                    crate::util::mathvec::add_assign(&mut x, &xs);
+                }
+                WorkerMsg::Error { rank, message } => {
+                    return Err(anyhow!("worker {rank} failed: {message}"));
+                }
+                _ => return Err(anyhow!("unexpected worker message")),
+            }
+        }
+        Ok(x)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Synthetic workload generation (paper Appendix B) and named workload
+//! presets used by the experiment drivers.
+
+pub mod synthetic;
+pub mod workloads;
+
+pub use synthetic::{generate, SyntheticConfig};

@@ -1,0 +1,306 @@
+//! Appendix-B synthetic matching LP generator — implemented exactly as the
+//! paper describes:
+//!
+//! 1. Per resource j draw a lognormal "breadth", normalize to probabilities
+//!    p_j, sample K_j ~ Poisson(p_j · I · ν) truncated at I (ν = target
+//!    average nonzeros per row), and pick K_j distinct requests → edges.
+//! 2. Per edge: value c_ij = min(v_j · u_i · ε_ij, c_max) from a
+//!    resource-scale v_j, request-responsiveness u_i, and multiplicative
+//!    noise ε_ij; constraint coefficient a_ij = s_j · c_ij with lognormal
+//!    per-resource scale s_j.
+//! 3. RHS: greedy load ℓ_j = Σ over requests of their max incident a_ij
+//!    assigned to the argmax resource; b_j = ρ_j (ℓ_j + ε), ρ_j ~ U[0.5, 1]
+//!    — so some constraints bind and others stay slack.
+//!
+//! Values are generated as *positive* and signs flipped to match the
+//! minimization convention (paper: "signs adjusted").
+
+use crate::problem::MatchingLp;
+use crate::projection::ProjectionKind;
+use crate::sparse::slabs::MAX_WIDTH;
+use crate::sparse::BlockedMatrix;
+use crate::util::rng::Rng;
+
+/// Generator parameters (defaults follow Appendix B / §7's workloads).
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    /// I — number of requests (sources).
+    pub num_requests: usize,
+    /// J — number of resources (destinations).
+    pub num_resources: usize,
+    /// ν — target average nonzeros per constraint row; paper's "sparsity"
+    /// is ν/I (e.g. 0.001 with I=25M → ν = 25k; scaled runs keep ν/I).
+    pub avg_nnz_per_row: f64,
+    /// Lognormal σ of resource breadth.
+    pub breadth_sigma: f64,
+    /// Lognormal σ of the per-resource value scale v_j.
+    pub value_sigma: f64,
+    /// Lognormal σ of request responsiveness u_i.
+    pub responsiveness_sigma: f64,
+    /// Lognormal σ of edge noise ε_ij.
+    pub noise_sigma: f64,
+    /// Lognormal σ of the constraint scale s_j.
+    pub constraint_scale_sigma: f64,
+    /// Value cap c_max.
+    pub c_max: f64,
+    /// Small additive slack ε in b_j = ρ_j(ℓ_j + ε).
+    pub rhs_eps: f64,
+    /// Number of matching constraint families m (paper Def. 1). Families
+    /// beyond the first reuse the same eligibility pattern with fresh
+    /// per-resource scales, as in a_kij = s_jk · c_ij.
+    pub num_families: usize,
+    /// Simple-constraint polytope per source.
+    pub kind: ProjectionKind,
+    pub seed: u64,
+}
+
+impl SyntheticConfig {
+    /// Paper §7 Table-2 shape at a scale factor: J=10k, sparsity 1e-3.
+    /// `scale=1.0` ⇒ 25M sources (paper row 1); we typically run 0.01.
+    pub fn table2(sources: usize, seed: u64) -> Self {
+        SyntheticConfig {
+            num_requests: sources,
+            num_resources: 10_000.min(sources / 10).max(16),
+            avg_nnz_per_row: 0.001 * sources as f64,
+            ..SyntheticConfig::default_with(seed)
+        }
+    }
+
+    pub fn default_with(seed: u64) -> Self {
+        SyntheticConfig {
+            num_requests: 10_000,
+            num_resources: 500,
+            avg_nnz_per_row: 10.0,
+            breadth_sigma: 1.0,
+            value_sigma: 0.6,
+            responsiveness_sigma: 0.5,
+            noise_sigma: 0.3,
+            constraint_scale_sigma: 1.0,
+            c_max: 10.0,
+            rhs_eps: 1e-3,
+            num_families: 1,
+            kind: ProjectionKind::Simplex,
+            seed,
+        }
+    }
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        Self::default_with(0)
+    }
+}
+
+/// Generate a matching LP per Appendix B.
+pub fn generate(cfg: &SyntheticConfig) -> MatchingLp {
+    let (i_n, j_n) = (cfg.num_requests, cfg.num_resources);
+    assert!(i_n > 0 && j_n > 0);
+    let mut rng = Rng::new(cfg.seed);
+
+    // --- 1. bipartite graph ----------------------------------------------
+    // breadth → probabilities
+    let breadth: Vec<f64> = (0..j_n).map(|_| rng.lognormal(0.0, cfg.breadth_sigma)).collect();
+    let total_breadth: f64 = breadth.iter().sum();
+    // per-resource request lists (edges grouped by resource first)
+    let mut incident: Vec<Vec<u32>> = Vec::with_capacity(j_n);
+    for j in 0..j_n {
+        let p = breadth[j] / total_breadth;
+        // E[K_j] = p_j · I · ν ... with Σ_j E[K_j] = I·ν ⇒ ν = avg edges per
+        // *source*; paper says "per row" (constraint rows are resources in
+        // the single-family matching form) — we follow Σ nnz ≈ I·ν.
+        let mean = p * i_n as f64 * cfg.avg_nnz_per_row;
+        let k = (rng.poisson(mean) as usize).min(i_n);
+        incident.push(rng.sample_distinct(i_n, k));
+    }
+
+    // --- 2. values and coefficients --------------------------------------
+    let u: Vec<f64> = (0..i_n).map(|_| rng.lognormal(0.0, cfg.responsiveness_sigma)).collect();
+    let vj: Vec<f64> = (0..j_n).map(|_| rng.lognormal(0.0, cfg.value_sigma)).collect();
+    // per-family constraint scales s_jk
+    let s: Vec<Vec<f64>> = (0..cfg.num_families)
+        .map(|_| (0..j_n).map(|_| rng.lognormal(0.0, cfg.constraint_scale_sigma)).collect())
+        .collect();
+
+    // Regroup edges by source (the blocked layout) while drawing values.
+    // First count degrees; drop duplicate (i,j) pairs (sample_distinct makes
+    // them distinct within a resource already).
+    let mut degree = vec![0u32; i_n];
+    for js in incident.iter() {
+        for &i in js {
+            degree[i as usize] += 1;
+        }
+    }
+    // Cap degrees at MAX_WIDTH for non-separable polytopes by dropping
+    // excess edges (rare under the paper's sparsity; counted below).
+    let cap = if cfg.kind == ProjectionKind::Simplex { MAX_WIDTH as u32 } else { u32::MAX };
+
+    let mut src_ptr = vec![0usize; i_n + 1];
+    for i in 0..i_n {
+        src_ptr[i + 1] = src_ptr[i] + degree[i].min(cap) as usize;
+    }
+    let nnz = src_ptr[i_n];
+    let mut dest_idx = vec![0u32; nnz];
+    let mut cost = vec![0.0f32; nnz];
+    let mut a: Vec<Vec<f32>> = vec![vec![0.0f32; nnz]; cfg.num_families];
+    let mut fill = vec![0u32; i_n];
+    let mut dropped = 0usize;
+    for (j, js) in incident.iter().enumerate() {
+        for &i in js {
+            let iu = i as usize;
+            if fill[iu] >= degree[iu].min(cap) {
+                dropped += 1;
+                continue;
+            }
+            let e = src_ptr[iu] + fill[iu] as usize;
+            fill[iu] += 1;
+            dest_idx[e] = j as u32;
+            let eps = rng.lognormal(0.0, cfg.noise_sigma);
+            let c = (vj[j] * u[iu] * eps).min(cfg.c_max);
+            cost[e] = -(c as f32); // minimization convention: value → -cost
+            for (k, ak) in a.iter_mut().enumerate() {
+                ak[e] = (s[k][j] * c) as f32;
+            }
+        }
+    }
+    let _ = dropped;
+
+    let matrix = BlockedMatrix {
+        num_sources: i_n,
+        num_dests: j_n,
+        num_families: cfg.num_families,
+        src_ptr,
+        dest_idx,
+        a,
+    };
+
+    // --- 3. right-hand side ----------------------------------------------
+    // Greedy load: each request sends its largest family-0 coefficient to
+    // that argmax resource (per-request simplex: at most one unit).
+    let mut load = vec![0.0f64; j_n];
+    for i in 0..i_n {
+        let (e0, e1) = (matrix.src_ptr[i], matrix.src_ptr[i + 1]);
+        if e0 == e1 {
+            continue;
+        }
+        let mut best_e = e0;
+        for e in e0 + 1..e1 {
+            if matrix.a[0][e] > matrix.a[0][best_e] {
+                best_e = e;
+            }
+        }
+        load[matrix.dest_idx[best_e] as usize] += matrix.a[0][best_e] as f64;
+    }
+    let mut b = Vec::with_capacity(cfg.num_families * j_n);
+    for k in 0..cfg.num_families {
+        for j in 0..j_n {
+            let rho = rng.uniform_range(0.5, 1.0);
+            // family k scales with its own s_jk relative to family 0
+            let scale = if k == 0 { 1.0 } else { s[k][j] / s[0][j].max(1e-12) };
+            b.push((rho * (load[j] * scale + cfg.rhs_eps)) as f32);
+        }
+    }
+
+    let lp = MatchingLp::new_uniform(matrix, cost, b, cfg.kind);
+    debug_assert!(lp.validate().is_ok());
+    lp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_valid_lp() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 2000,
+            num_resources: 100,
+            avg_nnz_per_row: 8.0,
+            ..Default::default()
+        });
+        lp.validate().unwrap();
+        assert_eq!(lp.num_sources(), 2000);
+        assert_eq!(lp.num_dests(), 100);
+        assert!(lp.nnz() > 0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = SyntheticConfig { num_requests: 500, num_resources: 50, seed: 7, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.a.dest_idx, b.a.dest_idx);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.b, b.b);
+        let c = generate(&SyntheticConfig { seed: 8, ..cfg });
+        assert_ne!(a.a.dest_idx, c.a.dest_idx);
+    }
+
+    #[test]
+    fn target_density_roughly_met() {
+        let cfg = SyntheticConfig {
+            num_requests: 20_000,
+            num_resources: 200,
+            avg_nnz_per_row: 6.0,
+            ..Default::default()
+        };
+        let lp = generate(&cfg);
+        let avg = lp.nnz() as f64 / cfg.num_requests as f64;
+        assert!(
+            (avg - 6.0).abs() / 6.0 < 0.35,
+            "avg degree {avg} too far from target 6"
+        );
+    }
+
+    #[test]
+    fn costs_negative_and_capped() {
+        let lp = generate(&SyntheticConfig::default());
+        assert!(lp.cost.iter().all(|&c| c <= 0.0));
+        assert!(lp.cost.iter().all(|&c| c >= -10.0 - 1e-5));
+        // a coefficients positive wherever cost nonzero
+        for (e, &c) in lp.cost.iter().enumerate() {
+            if c < 0.0 {
+                assert!(lp.a.a[0][e] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rhs_makes_some_constraints_bindable() {
+        // greedy load vs rhs: b_j < ℓ_j for at least a decent fraction
+        // (ρ_j < 1), so the LP is not trivially unconstrained.
+        let lp = generate(&SyntheticConfig {
+            num_requests: 5000,
+            num_resources: 100,
+            avg_nnz_per_row: 10.0,
+            ..Default::default()
+        });
+        let nonzero_b = lp.b.iter().filter(|&&b| b > 0.0).count();
+        assert!(nonzero_b > 50, "most resources should have positive capacity");
+    }
+
+    #[test]
+    fn multi_family_shapes() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 1000,
+            num_resources: 64,
+            num_families: 3,
+            ..Default::default()
+        });
+        lp.validate().unwrap();
+        assert_eq!(lp.num_families(), 3);
+        assert_eq!(lp.dual_dim(), 3 * 64);
+        assert_eq!(lp.b.len(), 3 * 64);
+    }
+
+    #[test]
+    fn degrees_capped_for_simplex() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 200,
+            num_resources: 1200,
+            avg_nnz_per_row: 700.0, // would exceed MAX_WIDTH without cap
+            kind: ProjectionKind::Simplex,
+            ..Default::default()
+        });
+        assert!(lp.a.max_degree() <= MAX_WIDTH);
+    }
+}

@@ -1,0 +1,87 @@
+//! Named workload presets mapping the paper's experiment settings (§7,
+//! Appendix B) to concrete generator configs at this testbed's scale.
+//!
+//! Paper scale: 25M–100M sources, J = 10 000, sparsity 0.001, on A100s.
+//! CPU-PJRT scale: divide sources by SCALE_DIV (default 100), keep J
+//! proportionally sized and preserve ν/I (density), so bucket
+//! distributions, padding factors and comm/compute ratios stay
+//! representative (DESIGN.md §5 Substitutions).
+
+use super::synthetic::SyntheticConfig;
+use crate::projection::ProjectionKind;
+
+/// Source-count divisor vs. the paper's instances.
+pub const SCALE_DIV: usize = 100;
+
+/// Table 2 rows: paper sources ∈ {25M, 50M, 75M, 100M}, J = 10k,
+/// sparsity = 0.001 (⇒ ν = 10 per source at J = 10k).
+pub fn table2_row(paper_sources_m: usize, seed: u64) -> SyntheticConfig {
+    let sources = paper_sources_m * 1_000_000 / SCALE_DIV;
+    SyntheticConfig {
+        num_requests: sources,
+        num_resources: 10_000 / SCALE_DIV.min(10), // keep J = 1000 at /100
+        avg_nnz_per_row: 10.0,                     // = J · 0.001 at paper scale
+        num_families: 1,
+        kind: ProjectionKind::Simplex,
+        seed,
+        ..SyntheticConfig::default_with(seed)
+    }
+}
+
+/// Fig 4/5 ablation instance: paper 25M sources, 10k dests, 0.1% sparsity.
+pub fn ablation_instance(seed: u64) -> SyntheticConfig {
+    SyntheticConfig {
+        num_requests: 250_000,
+        num_resources: 1_000,
+        avg_nnz_per_row: 10.0,
+        num_families: 1,
+        kind: ProjectionKind::Simplex,
+        seed,
+        ..SyntheticConfig::default_with(seed)
+    }
+}
+
+/// Parity (Fig 1/2) instance: small enough that the reference path is fast,
+/// structured like the production workloads.
+pub fn parity_instance(seed: u64) -> SyntheticConfig {
+    SyntheticConfig {
+        num_requests: 50_000,
+        num_resources: 500,
+        avg_nnz_per_row: 10.0,
+        num_families: 1,
+        kind: ProjectionKind::Simplex,
+        seed,
+        ..SyntheticConfig::default_with(seed)
+    }
+}
+
+/// Quick smoke workload for examples/tests.
+pub fn smoke(seed: u64) -> SyntheticConfig {
+    SyntheticConfig {
+        num_requests: 2_000,
+        num_resources: 100,
+        avg_nnz_per_row: 8.0,
+        seed,
+        ..SyntheticConfig::default_with(seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_scaling() {
+        let c = table2_row(25, 0);
+        assert_eq!(c.num_requests, 250_000);
+        assert_eq!(c.num_resources, 1000);
+        let c100 = table2_row(100, 0);
+        assert_eq!(c100.num_requests, 1_000_000);
+    }
+
+    #[test]
+    fn presets_generate() {
+        let lp = crate::gen::generate(&smoke(1));
+        lp.validate().unwrap();
+    }
+}

@@ -1,0 +1,28 @@
+//! # dualip — DuaLip-GPU reproduction
+//!
+//! Extreme-scale ridge-regularized dual-ascent LP solver for matching
+//! problems (DuaLip-GPU Technical Report, LinkedIn 2026), rebuilt on the
+//! three-layer rust + JAX/Pallas architecture:
+//!
+//! - **L3 (this crate)**: coordinator — problem model, AGD optimizer with
+//!   γ-continuation, Jacobi/primal conditioning, sharded workers and
+//!   λ-only collectives, diagnostics, CLI.
+//! - **L2/L1 (python/compile, build-time only)**: the batched slab dual
+//!   step (scale → blockwise projection → reduce) as a Pallas kernel inside
+//!   a JAX graph, AOT-lowered to HLO text artifacts.
+//! - **runtime**: loads the artifacts through PJRT (`xla` crate) and runs
+//!   them from the solve hot path — Python is never on the request path.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod cli;
+pub mod distributed;
+pub mod gen;
+pub mod metrics;
+pub mod problem;
+pub mod runtime;
+pub mod projection;
+pub mod reference;
+pub mod solver;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,6 @@
+//! `dualip` — leader entrypoint. See `dualip --help`.
+
+fn main() -> anyhow::Result<()> {
+    let args = dualip::cli::Args::parse(std::env::args().skip(1))?;
+    dualip::cli::run(args)
+}

@@ -1,0 +1,100 @@
+//! Diagnostics & reporting: solve summaries, simple sample statistics for
+//! the bench harnesses, and human-readable reports (the "structured
+//! diagnostics" hooks of paper §4).
+
+use crate::distributed::CommSnapshot;
+use crate::solver::SolveResult;
+
+/// Sample statistics for bench timing series.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p95: f64,
+    pub stddev: f64,
+}
+
+/// Compute stats over a sample (NaNs rejected by assertion).
+pub fn stats(samples: &[f64]) -> Stats {
+    assert!(!samples.is_empty());
+    assert!(samples.iter().all(|v| v.is_finite()));
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    let mean = s.iter().sum::<f64>() / n as f64;
+    let var = s.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    let q = |p: f64| -> f64 {
+        let idx = (p * (n - 1) as f64).round() as usize;
+        s[idx.min(n - 1)]
+    };
+    Stats {
+        n,
+        mean,
+        median: q(0.5),
+        min: s[0],
+        max: s[n - 1],
+        p95: q(0.95),
+        stddev: var.sqrt(),
+    }
+}
+
+/// One-paragraph human-readable solve report.
+pub fn solve_report(label: &str, r: &SolveResult) -> String {
+    let last = r.trajectory.last();
+    format!(
+        "[{label}] iters={} wall={:.1}ms stop={:?} γ_final={} g={:.6e} ‖∇g‖={:.3e} ‖(Ax−b)₊‖={:.3e} cᵀx={:.6e}",
+        r.iterations,
+        r.total_wall_ms,
+        r.stop_reason,
+        r.final_gamma,
+        last.map_or(f64::NAN, |t| t.dual_obj),
+        last.map_or(f64::NAN, |t| t.grad_norm),
+        last.map_or(f64::NAN, |t| t.infeas_pos_norm),
+        last.map_or(f64::NAN, |t| t.cx),
+    )
+}
+
+/// Communication report (per-iteration steady state).
+pub fn comm_report(c: &CommSnapshot, iters: u64) -> String {
+    format!(
+        "comm: {} bcasts ({} B), {} reduces ({} B), one-time scatter {} B; {:.1} B/iter steady-state",
+        c.bcast_ops,
+        c.bcast_bytes,
+        c.reduce_ops,
+        c.reduce_bytes,
+        c.scatter_bytes,
+        c.bytes_per_iter(iters),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_single_sample() {
+        let s = stats(&[7.5]);
+        assert_eq!(s.mean, 7.5);
+        assert_eq!(s.p95, 7.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stats_rejects_empty() {
+        stats(&[]);
+    }
+}

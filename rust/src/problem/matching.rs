@@ -1,0 +1,211 @@
+//! The matching LP instance type (paper §3.2, Definition 1).
+//!
+//! min cᵀx  s.t.  A x ≤ b (m matching constraint families, dualized),
+//!                x_i ∈ C_i (per-source simple polytope, projected).
+//!
+//! Variables exist only on eligible (source, destination) edges; `A` is the
+//! blocked matching matrix, `c` lives on the same edge set, and `b` has one
+//! entry per (family, destination).
+
+use crate::projection::{ProjectionKind, ProjectionMap};
+use crate::sparse::BlockedMatrix;
+
+/// An arbitrary extra linear constraint row `Σ_e coeffs[e]·x[e] ≤ rhs`
+/// outside the matching-family structure — e.g. the paper's §4 global count
+/// constraint Σ_ij x_ij ≤ M. `Ax` and `Aᵀλ` for such a row are trivial, and
+/// because gather/scatter live in the coordinator (not the kernels), adding
+/// one requires no solver or artifact change — the extensibility claim the
+/// Scala stack failed (experiment E11).
+#[derive(Clone, Debug)]
+pub struct GlobalRow {
+    /// Dense per-edge coefficients (len = nnz; use 0 for uninvolved edges).
+    pub coeffs: Vec<f32>,
+    pub rhs: f32,
+}
+
+pub struct MatchingLp {
+    /// The complex-constraint matrix A (Definition 1).
+    pub a: BlockedMatrix,
+    /// Objective coefficients per edge (minimization convention — negative
+    /// entries are "value").
+    pub cost: Vec<f32>,
+    /// Right-hand side per dual row (k*J + j). len = mJ.
+    pub b: Vec<f32>,
+    /// Simple-constraint polytope per source block (paper Table 1's
+    /// ProjectionMap role).
+    pub projection: ProjectionMap,
+    /// Optional per-source primal scale factors v_i (paper §5.1 "Primal
+    /// scaling"): the ridge term becomes γ/2 Σ_i v_i²‖x_i‖². None = all 1.
+    pub primal_scale: Option<Vec<f32>>,
+    /// Extra constraint rows appended after the mJ matching rows; dual rows
+    /// mJ..mJ+G.
+    pub global_rows: Vec<GlobalRow>,
+}
+
+impl MatchingLp {
+    pub fn num_sources(&self) -> usize {
+        self.a.num_sources
+    }
+
+    pub fn num_dests(&self) -> usize {
+        self.a.num_dests
+    }
+
+    pub fn num_families(&self) -> usize {
+        self.a.num_families
+    }
+
+    /// Total dual dimension: mJ matching rows + G global rows.
+    pub fn dual_dim(&self) -> usize {
+        self.a.dual_dim() + self.global_rows.len()
+    }
+
+    /// Dual dimension of the matching block only (mJ).
+    pub fn matching_dual_dim(&self) -> usize {
+        self.a.dual_dim()
+    }
+
+    /// Full rhs vector over all dual rows (matching b then global rhs).
+    pub fn full_b(&self) -> Vec<f32> {
+        let mut b = self.b.clone();
+        b.extend(self.global_rows.iter().map(|g| g.rhs));
+        b
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
+    /// Uniform-kind convenience constructor.
+    pub fn new_uniform(
+        a: BlockedMatrix,
+        cost: Vec<f32>,
+        b: Vec<f32>,
+        kind: ProjectionKind,
+    ) -> Self {
+        assert_eq!(cost.len(), a.nnz());
+        assert_eq!(b.len(), a.dual_dim());
+        MatchingLp {
+            a,
+            cost,
+            b,
+            projection: ProjectionMap::Uniform(kind),
+            primal_scale: None,
+            global_rows: Vec::new(),
+        }
+    }
+
+    /// Append a global constraint row (paper §4's Σ_ij x_ij ≤ M example:
+    /// `coeffs = vec![1.0; nnz]`, `rhs = M`).
+    pub fn push_global_row(&mut self, coeffs: Vec<f32>, rhs: f32) {
+        assert_eq!(coeffs.len(), self.a.nnz());
+        self.global_rows.push(GlobalRow { coeffs, rhs });
+    }
+
+    /// Effective ridge multiplier for source i: γ_i = γ · v_i².
+    #[inline]
+    pub fn gamma_scale(&self, i: usize) -> f32 {
+        match &self.primal_scale {
+            Some(v) => v[i] * v[i],
+            None => 1.0,
+        }
+    }
+
+    /// Structural sanity checks.
+    pub fn validate(&self) -> Result<(), String> {
+        self.a.validate()?;
+        if self.cost.len() != self.a.nnz() {
+            return Err("cost length != nnz".into());
+        }
+        if self.b.len() != self.a.dual_dim() {
+            return Err("b length != mJ".into());
+        }
+        if let Some(v) = &self.primal_scale {
+            if v.len() != self.a.num_sources {
+                return Err("primal_scale length != I".into());
+            }
+            if v.iter().any(|&x| !(x > 0.0) || !x.is_finite()) {
+                return Err("primal_scale must be positive finite".into());
+            }
+        }
+        for (r, g) in self.global_rows.iter().enumerate() {
+            if g.coeffs.len() != self.a.nnz() {
+                return Err(format!("global row {r} coeffs length != nnz"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Append one extra constraint family with the given per-edge
+    /// coefficients and per-destination rhs — the paper's extensibility
+    /// story (§4: a global count constraint Σx ≤ m is "trivial to compute
+    /// Ax and Aᵀλ for" yet required extensive changes in the Scala stack;
+    /// here it is purely local composition).
+    pub fn push_family(&mut self, coeffs: Vec<f32>, rhs: Vec<f32>) {
+        assert_eq!(coeffs.len(), self.a.nnz());
+        assert_eq!(rhs.len(), self.a.num_dests);
+        self.a.a.push(coeffs);
+        self.a.num_families += 1;
+        self.b.extend(rhs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MatchingLp {
+        let a = BlockedMatrix {
+            num_sources: 2,
+            num_dests: 3,
+            num_families: 1,
+            src_ptr: vec![0, 2, 4],
+            dest_idx: vec![0, 1, 1, 2],
+            a: vec![vec![1.0, 2.0, 3.0, 4.0]],
+        };
+        MatchingLp::new_uniform(
+            a,
+            vec![-1.0, -2.0, -3.0, -4.0],
+            vec![1.0, 1.0, 1.0],
+            ProjectionKind::Simplex,
+        )
+    }
+
+    #[test]
+    fn dims() {
+        let lp = tiny();
+        assert_eq!(lp.num_sources(), 2);
+        assert_eq!(lp.dual_dim(), 3);
+        assert_eq!(lp.nnz(), 4);
+        lp.validate().unwrap();
+    }
+
+    #[test]
+    fn push_family_extends_dual() {
+        let mut lp = tiny();
+        // global count constraint: coefficient 1 on every edge
+        lp.push_family(vec![1.0; 4], vec![0.5, 0.5, 0.5]);
+        assert_eq!(lp.num_families(), 2);
+        assert_eq!(lp.dual_dim(), 6);
+        lp.validate().unwrap();
+    }
+
+    #[test]
+    fn gamma_scale_defaults_to_one() {
+        let mut lp = tiny();
+        assert_eq!(lp.gamma_scale(0), 1.0);
+        lp.primal_scale = Some(vec![2.0, 0.5]);
+        assert_eq!(lp.gamma_scale(0), 4.0);
+        assert_eq!(lp.gamma_scale(1), 0.25);
+        lp.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_scale() {
+        let mut lp = tiny();
+        lp.primal_scale = Some(vec![1.0, 0.0]);
+        assert!(lp.validate().is_err());
+        lp.primal_scale = Some(vec![1.0]);
+        assert!(lp.validate().is_err());
+    }
+}

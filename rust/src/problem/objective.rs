@@ -1,0 +1,71 @@
+//! The `ObjectiveFunction` contract (paper Table 1): everything the
+//! Maximizer needs from a problem is `calculate(λ, γ) → ObjectiveResult`.
+//!
+//! Implementations in this repo:
+//! - `reference::CpuObjective` — single-threaded per-edge loop (the
+//!   Scala-equivalent baseline),
+//! - `runtime::HloObjective` — batched slab kernels through PJRT,
+//! - `distributed::DistributedObjective` — sharded workers + collectives.
+
+/// Result of one dual evaluation at (λ, γ).
+#[derive(Clone, Debug)]
+pub struct ObjectiveResult {
+    /// ∇g(λ) = A x*γ(λ) − b. len = mJ.
+    pub grad: Vec<f32>,
+    /// g(λ) = cᵀx + γ/2 Σ v_i²‖x_i‖² + λᵀ(Ax − b).
+    pub dual_obj: f64,
+    /// cᵀx — primal objective of the current (infeasible-in-A) primal.
+    pub cx: f64,
+    /// Σ_i v_i² ‖x_i‖² — ridge penalty without the γ/2 factor.
+    pub xsq_weighted: f64,
+    /// ‖(Ax − b)₊‖₂ — the Lemma A.1 primal infeasibility measure.
+    pub infeas_pos_norm: f64,
+}
+
+impl ObjectiveResult {
+    /// Assemble dual_obj and infeasibility from the parts every backend
+    /// produces (grad must already be Ax − b).
+    pub fn assemble(grad: Vec<f32>, cx: f64, xsq_weighted: f64, lam: &[f32], gamma: f32) -> Self {
+        let lam_ax_b = crate::util::mathvec::dot(lam, &grad);
+        let infeas = crate::util::mathvec::pos_norm2(&grad);
+        ObjectiveResult {
+            dual_obj: cx + 0.5 * gamma as f64 * xsq_weighted + lam_ax_b,
+            grad,
+            cx,
+            xsq_weighted,
+            infeas_pos_norm: infeas,
+        }
+    }
+}
+
+/// Paper Table 1, row "ObjectiveFunction": single required method.
+pub trait ObjectiveFunction {
+    /// Dual dimension mJ.
+    fn dual_dim(&self) -> usize;
+
+    /// Evaluate g(λ) and ∇g(λ) at ridge parameter γ.
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult;
+
+    /// Recover the full per-edge primal x*γ(λ) (used by validation,
+    /// rounding and the E2E drivers; not on the iteration hot path).
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32>;
+
+    /// Backend label for diagnostics.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_math() {
+        let grad = vec![1.0, -2.0];
+        let lam = vec![0.5, 1.0];
+        let r = ObjectiveResult::assemble(grad, 3.0, 4.0, &lam, 0.5);
+        // dual = cx + γ/2 xsq + λ·grad = 3 + 1 + (0.5 - 2.0) = 2.5
+        assert!((r.dual_obj - 2.5).abs() < 1e-12);
+        // infeas = ‖(1, 0)₊‖ = 1
+        assert!((r.infeas_pos_norm - 1.0).abs() < 1e-12);
+    }
+}

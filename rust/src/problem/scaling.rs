@@ -1,0 +1,201 @@
+//! Conditioning transforms (paper §5.1).
+//!
+//! **Jacobi row normalization**: A' = D A, b' = D b with
+//! D = diag(‖A_r*‖₂⁻¹) — exactly Jacobi preconditioning of the dual
+//! Hessian −∇²g = AAᵀ/γ. Feasible set preserved; duals map λ = D λ'.
+//!
+//! **Primal scaling**: per-source scale v_i turns the ridge into
+//! γ/2 Σ v_i²‖x_i‖² (equivalently rescales primal coordinates). With a
+//! uniform v per block, the block subproblem stays a Euclidean projection
+//! with effective ridge γ·v_i², so the kernels are unchanged.
+
+use super::matching::MatchingLp;
+
+/// Report of a Jacobi row-normalization application.
+#[derive(Clone, Debug)]
+pub struct RowScaling {
+    /// d[r] = 1/‖A_r*‖₂ (1.0 for empty rows). λ_original = d ⊙ λ_scaled.
+    pub d: Vec<f32>,
+    /// Number of empty (all-zero) rows left unscaled.
+    pub empty_rows: usize,
+}
+
+/// Apply Jacobi row normalization in place (paper §5.1). Returns the
+/// scaling so callers can map duals back to the original system.
+pub fn jacobi_row_normalize(lp: &mut MatchingLp) -> RowScaling {
+    let mut norms = lp.a.row_sq_norms();
+    norms.extend(lp.global_rows.iter().map(|g| {
+        g.coeffs.iter().map(|&c| c as f64 * c as f64).sum::<f64>()
+    }));
+    let mut empty = 0usize;
+    let d: Vec<f32> = norms
+        .iter()
+        .map(|&n| {
+            if n > 0.0 {
+                (1.0 / n.sqrt()) as f32
+            } else {
+                empty += 1;
+                1.0
+            }
+        })
+        .collect();
+    let mj = lp.matching_dual_dim();
+    lp.a.scale_rows(&d[..mj]);
+    for (bi, di) in lp.b.iter_mut().zip(&d[..mj]) {
+        *bi *= di;
+    }
+    for (r, g) in lp.global_rows.iter_mut().enumerate() {
+        let dr = d[mj + r];
+        for c in g.coeffs.iter_mut() {
+            *c *= dr;
+        }
+        g.rhs *= dr;
+    }
+    RowScaling { d, empty_rows: empty }
+}
+
+/// Map a dual vector of the row-normalized system back to the original
+/// system: λ = D λ'.
+pub fn unscale_dual(scaling: &RowScaling, lam_scaled: &[f32]) -> Vec<f32> {
+    lam_scaled.iter().zip(&scaling.d).map(|(l, d)| l * d).collect()
+}
+
+/// Choose per-source primal scales from the column geometry: v_i = the
+/// root-mean-square magnitude of A's columns in block i (falling back to
+/// 1.0 for empty blocks), normalized to geometric mean 1 so the global γ
+/// keeps its meaning. (Paper: "choosing v according to typical magnitudes
+/// of the primal coordinates or the column norms of A".)
+pub fn primal_scales_from_columns(lp: &MatchingLp) -> Vec<f32> {
+    let m = &lp.a;
+    let mut v = vec![1.0f32; m.num_sources];
+    let mut log_sum = 0.0f64;
+    let mut nz_blocks = 0usize;
+    for i in 0..m.num_sources {
+        let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
+        if e0 == e1 {
+            continue;
+        }
+        let mut sq = 0.0f64;
+        for e in e0..e1 {
+            for ak in &m.a {
+                sq += (ak[e] as f64) * (ak[e] as f64);
+            }
+        }
+        let rms = (sq / (e1 - e0) as f64).sqrt();
+        if rms > 0.0 {
+            v[i] = rms as f32;
+            log_sum += rms.ln();
+            nz_blocks += 1;
+        }
+    }
+    if nz_blocks > 0 {
+        let gm = (log_sum / nz_blocks as f64).exp() as f32;
+        for x in v.iter_mut() {
+            *x /= gm;
+        }
+    }
+    v
+}
+
+/// Install column-derived primal scaling on the problem.
+pub fn apply_primal_scaling(lp: &mut MatchingLp) {
+    let v = primal_scales_from_columns(lp);
+    lp.primal_scale = Some(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::ProjectionKind;
+    use crate::sparse::BlockedMatrix;
+
+    fn lp() -> MatchingLp {
+        let a = BlockedMatrix {
+            num_sources: 3,
+            num_dests: 2,
+            num_families: 1,
+            src_ptr: vec![0, 2, 3, 5],
+            dest_idx: vec![0, 1, 0, 0, 1],
+            a: vec![vec![3.0, 1.0, 4.0, 0.5, 8.0]],
+        };
+        MatchingLp::new_uniform(
+            a,
+            vec![-1.0; 5],
+            vec![2.0, 4.0],
+            ProjectionKind::Simplex,
+        )
+    }
+
+    #[test]
+    fn rows_normalized_to_unit() {
+        let mut p = lp();
+        let s = jacobi_row_normalize(&mut p);
+        assert_eq!(s.empty_rows, 0);
+        for n in p.a.row_sq_norms() {
+            assert!((n - 1.0).abs() < 1e-6);
+        }
+        // b scaled consistently: b'[0] = 2 / sqrt(9+16+0.25)
+        let expect = 2.0 / (9.0f32 + 16.0 + 0.25).sqrt();
+        assert!((p.b[0] - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn feasible_set_preserved() {
+        // For any x, Ax ≤ b  ⟺  A'x ≤ b' (d > 0).
+        let mut p = lp();
+        let orig = (p.a.clone(), p.b.clone());
+        let _ = jacobi_row_normalize(&mut p);
+        let x = vec![0.1, 0.4, 0.2, 0.05, 0.3];
+        let mut ax0 = vec![0.0; 2];
+        orig.0.scatter_ax(&x, &mut ax0);
+        let slack0: Vec<f32> = ax0.iter().zip(&orig.1).map(|(a, b)| b - a).collect();
+        let mut ax1 = vec![0.0; 2];
+        p.a.scatter_ax(&x, &mut ax1);
+        let slack1: Vec<f32> = ax1.iter().zip(&p.b).map(|(a, b)| b - a).collect();
+        for (s0, s1) in slack0.iter().zip(&slack1) {
+            assert_eq!(s0.signum(), s1.signum(), "feasibility flipped");
+        }
+    }
+
+    #[test]
+    fn empty_rows_left_alone() {
+        let mut p = lp();
+        p.b = vec![2.0, 4.0, 1.0, 1.0];
+        p.a.num_families = 2;
+        p.a.a.push(vec![0.0; 5]); // family 2 entirely zero
+        let s = jacobi_row_normalize(&mut p);
+        assert_eq!(s.empty_rows, 2);
+        assert_eq!(&s.d[2..4], &[1.0, 1.0]);
+        assert_eq!(&p.b[2..4], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn unscale_dual_roundtrip() {
+        let mut p = lp();
+        let s = jacobi_row_normalize(&mut p);
+        let lam_scaled = vec![0.7, 0.2];
+        let lam = unscale_dual(&s, &lam_scaled);
+        for ((l, ls), d) in lam.iter().zip(&lam_scaled).zip(&s.d) {
+            assert_eq!(*l, ls * d);
+        }
+    }
+
+    #[test]
+    fn primal_scales_geometric_mean_one() {
+        let p = lp();
+        let v = primal_scales_from_columns(&p);
+        assert_eq!(v.len(), 3);
+        let gm: f64 = v.iter().map(|&x| (x as f64).ln()).sum::<f64>() / 3.0;
+        assert!(gm.abs() < 1e-5, "geometric mean must be ~1, got e^{gm}");
+        // block with the large 8.0 coefficient gets the largest scale
+        assert!(v[2] > v[1] && v[2] > v[0]);
+    }
+
+    #[test]
+    fn apply_primal_scaling_installs_valid_scales() {
+        let mut p = lp();
+        apply_primal_scaling(&mut p);
+        p.validate().unwrap();
+        assert!(p.gamma_scale(2) > p.gamma_scale(1));
+    }
+}

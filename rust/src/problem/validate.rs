@@ -1,0 +1,132 @@
+//! Primal solution validation and reporting: feasibility w.r.t. both
+//! constraint classes, objective value, and the quantities EXPERIMENTS.md
+//! reports for the E2E drivers.
+
+use super::matching::MatchingLp;
+use crate::projection::ProjectionKind;
+
+/// Summary of a primal candidate x (per-edge).
+#[derive(Clone, Debug)]
+pub struct PrimalReport {
+    /// cᵀx.
+    pub objective: f64,
+    /// ‖(Ax − b)₊‖₂ — complex-constraint violation.
+    pub complex_infeas: f64,
+    /// max over complex rows of (Ax − b)₊.
+    pub complex_infeas_max: f64,
+    /// Max violation of the simple constraints across blocks.
+    pub simple_infeas_max: f64,
+    /// Fraction of complex constraints that are (nearly) tight.
+    pub active_fraction: f64,
+}
+
+/// Evaluate a per-edge primal vector against the LP.
+pub fn check_primal(lp: &MatchingLp, x: &[f32], tol: f32) -> PrimalReport {
+    assert_eq!(x.len(), lp.nnz());
+    let mut ax = vec![0.0f32; lp.dual_dim()];
+    lp.a.scatter_ax(x, &mut ax[..lp.matching_dual_dim()]);
+    let mj = lp.matching_dual_dim();
+    for (r, g) in lp.global_rows.iter().enumerate() {
+        ax[mj + r] = g.coeffs.iter().zip(x).map(|(c, xe)| c * xe).sum();
+    }
+    let b = lp.full_b();
+
+    let mut sq = 0.0f64;
+    let mut mx = 0.0f64;
+    let mut active = 0usize;
+    for (r, (&axr, &br)) in ax.iter().zip(&b).enumerate() {
+        let _ = r;
+        let viol = (axr - br).max(0.0) as f64;
+        sq += viol * viol;
+        mx = mx.max(viol);
+        if (axr - br).abs() <= tol * br.abs().max(1.0) {
+            active += 1;
+        }
+    }
+
+    let mut simple_mx = 0.0f64;
+    for i in 0..lp.num_sources() {
+        let (e0, e1) = (lp.a.src_ptr[i], lp.a.src_ptr[i + 1]);
+        let block = &x[e0..e1];
+        let v = match lp.projection.kind_of(i) {
+            ProjectionKind::Simplex => {
+                let s: f64 = block.iter().map(|&v| v as f64).sum();
+                let neg: f64 = block.iter().map(|&v| (-v).max(0.0) as f64).fold(0.0, f64::max);
+                (s - 1.0).max(0.0).max(neg)
+            }
+            ProjectionKind::Box => block
+                .iter()
+                .map(|&v| ((v as f64) - 1.0).max(0.0).max((-v).max(0.0) as f64))
+                .fold(0.0, f64::max),
+        };
+        simple_mx = simple_mx.max(v);
+    }
+
+    let objective = lp
+        .cost
+        .iter()
+        .zip(x)
+        .map(|(c, xe)| *c as f64 * *xe as f64)
+        .sum();
+
+    PrimalReport {
+        objective,
+        complex_infeas: sq.sqrt(),
+        complex_infeas_max: mx,
+        simple_infeas_max: simple_mx,
+        active_fraction: active as f64 / lp.dual_dim().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::BlockedMatrix;
+
+    fn lp() -> MatchingLp {
+        let a = BlockedMatrix {
+            num_sources: 2,
+            num_dests: 2,
+            num_families: 1,
+            src_ptr: vec![0, 2, 4],
+            dest_idx: vec![0, 1, 0, 1],
+            a: vec![vec![1.0; 4]],
+        };
+        MatchingLp::new_uniform(
+            a,
+            vec![-1.0, -2.0, -3.0, -4.0],
+            vec![1.0, 1.0],
+            ProjectionKind::Simplex,
+        )
+    }
+
+    #[test]
+    fn feasible_point_clean_report() {
+        let p = lp();
+        let x = vec![0.5, 0.5, 0.5, 0.5];
+        let r = check_primal(&p, &x, 1e-6);
+        assert_eq!(r.complex_infeas, 0.0);
+        assert_eq!(r.simple_infeas_max, 0.0);
+        assert!((r.objective - (-0.5 - 1.0 - 1.5 - 2.0)).abs() < 1e-9);
+        assert_eq!(r.active_fraction, 1.0); // both rows exactly tight
+    }
+
+    #[test]
+    fn detects_complex_violation() {
+        let p = lp();
+        let x = vec![1.0, 0.0, 1.0, 0.0]; // Ax = (2, 0), b = (1, 1)
+        let r = check_primal(&p, &x, 1e-6);
+        assert!((r.complex_infeas - 1.0).abs() < 1e-6);
+        assert!((r.complex_infeas_max - 1.0).abs() < 1e-6);
+        // simple: block sums are 1 → fine
+        assert_eq!(r.simple_infeas_max, 0.0);
+    }
+
+    #[test]
+    fn detects_simple_violation() {
+        let p = lp();
+        let x = vec![0.9, 0.9, -0.1, 0.0];
+        let r = check_primal(&p, &x, 1e-6);
+        assert!(r.simple_infeas_max >= 0.8 - 1e-6); // sum 1.8 > 1
+    }
+}

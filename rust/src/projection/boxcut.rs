@@ -1,0 +1,122 @@
+//! Box-cut projection: Π onto {0 ≤ x ≤ 1, Σx ≤ r} — the "box-cut"
+//! polytope of [6] (per-user capacity with per-item caps).
+//!
+//! Solved by bisection on the Lagrange multiplier μ of the cut constraint:
+//! x(μ) = clamp(v − μ, 0, 1) is monotone nonincreasing in μ, so the μ* with
+//! Σ x(μ*) = r (when the clamp alone exceeds r) is found to tolerance in
+//! ~60 iterations.
+
+/// In-place projection of `v` onto {0 ≤ x ≤ 1, Σx ≤ r}.
+pub fn project_box_cut(v: &mut [f32], r: f32) {
+    debug_assert!(r >= 0.0);
+    let clamped_sum: f64 = v.iter().map(|&x| x.clamp(0.0, 1.0) as f64).sum();
+    if clamped_sum <= r as f64 {
+        for x in v.iter_mut() {
+            *x = x.clamp(0.0, 1.0);
+        }
+        return;
+    }
+    let mut lo = 0.0f64;
+    let mut hi = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if hi <= 0.0 {
+        // everything clamps to 0; Σ=0 ≤ r
+        for x in v.iter_mut() {
+            *x = 0.0;
+        }
+        return;
+    }
+    for _ in 0..64 {
+        let mu = 0.5 * (lo + hi);
+        let s: f64 = v.iter().map(|&x| ((x as f64) - mu).clamp(0.0, 1.0)).sum();
+        if s > r as f64 {
+            lo = mu;
+        } else {
+            hi = mu;
+        }
+    }
+    let mu = 0.5 * (lo + hi);
+    for x in v.iter_mut() {
+        *x = ((*x as f64) - mu).clamp(0.0, 1.0) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum(v: &[f32]) -> f64 {
+        v.iter().map(|&x| x as f64).sum()
+    }
+
+    #[test]
+    fn feasible_point_only_clamped() {
+        let mut v = vec![0.2, 0.3, -0.5];
+        project_box_cut(&mut v, 2.0);
+        assert_eq!(v, vec![0.2, 0.3, 0.0]);
+    }
+
+    #[test]
+    fn cut_binds() {
+        let mut v = vec![0.9, 0.9, 0.9];
+        project_box_cut(&mut v, 1.5);
+        assert!((sum(&v) - 1.5).abs() < 1e-4, "sum={}", sum(&v));
+        // symmetric input → symmetric output
+        assert!((v[0] - v[1]).abs() < 1e-5 && (v[1] - v[2]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn box_binds_before_cut() {
+        let mut v = vec![5.0, -5.0];
+        project_box_cut(&mut v, 1.0);
+        assert!((v[0] - 1.0).abs() < 1e-5);
+        assert_eq!(v[1], 0.0);
+    }
+
+    #[test]
+    fn all_negative() {
+        let mut v = vec![-1.0, -2.0];
+        project_box_cut(&mut v, 1.0);
+        assert_eq!(v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn reduces_to_simplex_when_r1_and_small_entries() {
+        // With entries ≤ 1 post-shift, box-cut(r=1) == simplex-ineq.
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..100 {
+            let n = 2 + rng.below(6);
+            let v: Vec<f32> = (0..n).map(|_| (rng.uniform() * 0.8) as f32).collect();
+            let mut a = v.clone();
+            let mut b = v.clone();
+            project_box_cut(&mut a, 1.0);
+            crate::projection::project_simplex_ineq(&mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-4, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimality_vs_random_feasible_points() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..30 {
+            let n = 3 + rng.below(5);
+            let r = 1.0 + rng.uniform() as f32;
+            let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let mut p = v.clone();
+            project_box_cut(&mut p, r);
+            assert!(sum(&p) <= r as f64 + 1e-4);
+            assert!(p.iter().all(|&x| (-1e-6..=1.0 + 1e-6).contains(&x)));
+            let d_star: f64 = v.iter().zip(&p).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            for _ in 0..40 {
+                let mut y: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+                let s: f64 = y.iter().sum();
+                if s > r as f64 {
+                    y.iter_mut().for_each(|x| *x *= r as f64 / s);
+                }
+                let d: f64 = v.iter().zip(&y).map(|(a, b)| (*a as f64 - b).powi(2)).sum();
+                assert!(d_star <= d + 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Unit-box projection [0, 1]^n — the "box" simple constraint of [6].
+
+/// In-place projection onto [0, 1]^n.
+pub fn project_unit_box(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        *x = x.clamp(0.0, 1.0);
+    }
+}
+
+/// In-place projection onto a general box [lo, hi]^n.
+pub fn project_box(v: &mut [f32], lo: f32, hi: f32) {
+    debug_assert!(lo <= hi);
+    for x in v.iter_mut() {
+        *x = x.clamp(lo, hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_both_sides() {
+        let mut v = vec![-1.0, 0.5, 2.0];
+        project_unit_box(&mut v);
+        assert_eq!(v, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn general_box() {
+        let mut v = vec![-1.0, 0.5, 2.0];
+        project_box(&mut v, 0.25, 0.75);
+        assert_eq!(v, vec![0.25, 0.5, 0.75]);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut v = vec![-3.0, 0.1, 7.0];
+        project_unit_box(&mut v);
+        let once = v.clone();
+        project_unit_box(&mut v);
+        assert_eq!(v, once);
+    }
+}

@@ -1,0 +1,114 @@
+//! Blockwise projection operators onto the "simple constraint" polytopes
+//! (paper §3.2 and Table 1's `ProjectionMap` role).
+//!
+//! Every operator projects one source's variable block in place. These CPU
+//! implementations back the reference ("Scala-equivalent") objective, the
+//! primal rounding/validation path, and the oracles the property tests
+//! compare the Pallas kernels against. The accelerated path runs the same
+//! math inside the AOT slab kernels (python/compile/kernels/slab.py).
+
+mod boxcut;
+mod boxp;
+mod simplex;
+
+pub use boxcut::project_box_cut;
+pub use boxp::{project_box, project_unit_box};
+pub use simplex::{project_simplex_eq, project_simplex_ineq};
+
+/// Projection kinds available to slab buckets (must stay in sync with the
+/// AOT artifact family in python/compile/aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ProjectionKind {
+    /// {x ≥ 0, Σx ≤ 1} — per-source impression capacity (paper Eq. 4–5).
+    Simplex,
+    /// [0, 1]^w unit box.
+    Box,
+}
+
+impl ProjectionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProjectionKind::Simplex => "simplex",
+            ProjectionKind::Box => "box",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "simplex" => Some(ProjectionKind::Simplex),
+            "box" => Some(ProjectionKind::Box),
+            _ => None,
+        }
+    }
+
+    /// Apply this projection to one block in place.
+    pub fn apply(self, v: &mut [f32]) {
+        match self {
+            ProjectionKind::Simplex => project_simplex_ineq(v),
+            ProjectionKind::Box => project_unit_box(v),
+        }
+    }
+
+    /// Whether the polytope is separable per coordinate (allows slab rows
+    /// to be split when a block exceeds the maximum slab width).
+    pub fn separable(self) -> bool {
+        matches!(self, ProjectionKind::Box)
+    }
+}
+
+/// The `ProjectionMap` of paper Table 1: maps a block id to its projection
+/// operator. A uniform map is one allocation; heterogeneous maps are a
+/// closure over per-block metadata.
+pub enum ProjectionMap {
+    Uniform(ProjectionKind),
+    PerBlock(Box<dyn Fn(usize) -> ProjectionKind + Send + Sync>),
+}
+
+impl ProjectionMap {
+    pub fn kind_of(&self, block: usize) -> ProjectionKind {
+        match self {
+            ProjectionMap::Uniform(k) => *k,
+            ProjectionMap::PerBlock(f) => f(block),
+        }
+    }
+
+    /// `project(block_id, v)` — the single required method (paper Table 1).
+    pub fn project(&self, block: usize, v: &mut [f32]) {
+        self.kind_of(block).apply(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [ProjectionKind::Simplex, ProjectionKind::Box] {
+            assert_eq!(ProjectionKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ProjectionKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn uniform_map_projects() {
+        let m = ProjectionMap::Uniform(ProjectionKind::Box);
+        let mut v = vec![-0.5, 0.5, 2.0];
+        m.project(0, &mut v);
+        assert_eq!(v, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn per_block_map_dispatches() {
+        let m = ProjectionMap::PerBlock(Box::new(|i| {
+            if i == 0 { ProjectionKind::Box } else { ProjectionKind::Simplex }
+        }));
+        let mut v = vec![2.0, 2.0];
+        m.project(0, &mut v);
+        assert_eq!(v, vec![1.0, 1.0]); // box clamp
+        let mut w = vec![2.0, 2.0];
+        m.project(1, &mut w);
+        let s: f32 = w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6); // simplex cap
+    }
+}

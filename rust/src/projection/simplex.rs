@@ -1,0 +1,165 @@
+//! Projection onto the simplex polytopes.
+//!
+//! `project_simplex_ineq`: Π onto {x ≥ 0, Σx ≤ 1} — if the nonnegative
+//! clamp already satisfies the capacity the clamp is the projection,
+//! otherwise project onto the equality simplex.
+//!
+//! `project_simplex_eq`: Π onto {x ≥ 0, Σx = r} via the sort-threshold
+//! method (Held/Wolfe/Crowder; Michelot): with v sorted descending, find
+//! ρ = max{k : v_(k) > (Σ_{l≤k} v_(l) − r)/k}, θ = (Σ_{l≤ρ} v_(l) − r)/ρ,
+//! x = max(v − θ, 0). O(n log n).
+
+/// In-place projection onto {x ≥ 0, Σ x = r}.
+pub fn project_simplex_eq(v: &mut [f32], r: f32) {
+    debug_assert!(r >= 0.0);
+    let n = v.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 {
+        v[0] = r;
+        return;
+    }
+    let mut sorted: Vec<f32> = v.to_vec();
+    sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cumsum = 0.0f64;
+    let mut theta = 0.0f64;
+    let mut rho = 0usize;
+    for (k, &val) in sorted.iter().enumerate() {
+        cumsum += val as f64;
+        let t = (cumsum - r as f64) / (k + 1) as f64;
+        if (val as f64) > t {
+            theta = t;
+            rho = k + 1;
+        }
+    }
+    debug_assert!(rho >= 1);
+    for x in v.iter_mut() {
+        *x = (*x as f64 - theta).max(0.0) as f32;
+    }
+}
+
+/// In-place projection onto {x ≥ 0, Σ x ≤ 1} (paper Eq. 4–5).
+pub fn project_simplex_ineq(v: &mut [f32]) {
+    let mut s = 0.0f64;
+    for x in v.iter_mut() {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+        s += *x as f64;
+    }
+    if s <= 1.0 {
+        return; // clamp is already the projection
+    }
+    project_simplex_eq(v, 1.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum(v: &[f32]) -> f64 {
+        v.iter().map(|&x| x as f64).sum()
+    }
+
+    #[test]
+    fn inside_point_unchanged() {
+        let mut v = vec![0.2, 0.3, 0.1];
+        let orig = v.clone();
+        project_simplex_ineq(&mut v);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn negative_clamped_when_feasible() {
+        let mut v = vec![-0.5, 0.3, 0.2];
+        project_simplex_ineq(&mut v);
+        assert_eq!(v, vec![0.0, 0.3, 0.2]);
+    }
+
+    #[test]
+    fn oversum_projects_to_boundary() {
+        let mut v = vec![1.0, 1.0];
+        project_simplex_ineq(&mut v);
+        assert!((sum(&v) - 1.0).abs() < 1e-6);
+        assert!((v[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eq_projection_known_case() {
+        // Π_{Σ=1}([0.5, 0.5, 1.5]) : θ = (2.5-1)/3 = 0.5 → [0,0,1]
+        let mut v = vec![0.5, 0.5, 1.5];
+        project_simplex_eq(&mut v, 1.0);
+        assert!((v[0] - 0.0).abs() < 1e-6);
+        assert!((v[1] - 0.0).abs() < 1e-6);
+        assert!((v[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eq_projection_radius_r() {
+        let mut v = vec![3.0, 1.0];
+        project_simplex_eq(&mut v, 2.0);
+        assert!((sum(&v) - 2.0).abs() < 1e-6);
+        assert!((v[0] - 2.0).abs() < 1e-6);
+        assert!((v[1] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_element() {
+        let mut v = vec![5.0];
+        project_simplex_ineq(&mut v);
+        assert_eq!(v, vec![1.0]);
+        let mut w = vec![-3.0];
+        project_simplex_ineq(&mut w);
+        assert_eq!(w, vec![0.0]);
+    }
+
+    #[test]
+    fn empty_block_noop() {
+        let mut v: Vec<f32> = vec![];
+        project_simplex_ineq(&mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let mut v = vec![2.0, -1.0, 0.7, 0.4];
+        project_simplex_ineq(&mut v);
+        let once = v.clone();
+        project_simplex_ineq(&mut v);
+        for (a, b) in v.iter().zip(&once) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn optimality_vs_random_feasible_points() {
+        // Π(v) minimizes ‖x−v‖ over the polytope: check against probes.
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..50 {
+            let n = 2 + rng.below(8);
+            let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let mut p = v.clone();
+            project_simplex_ineq(&mut p);
+            let d_star: f64 = v
+                .iter()
+                .zip(&p)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            for _ in 0..50 {
+                // random feasible y
+                let mut y: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+                let s: f64 = y.iter().sum();
+                if s > 1.0 {
+                    y.iter_mut().for_each(|x| *x /= s);
+                }
+                let d: f64 = v
+                    .iter()
+                    .zip(&y)
+                    .map(|(a, b)| (*a as f64 - b).powi(2))
+                    .sum();
+                assert!(d_star <= d + 1e-6, "probe beat projection");
+            }
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! The "Scala DuaLip"-equivalent CPU baseline (paper §7's comparator).
+//!
+//! Faithful to the prior system's *semantics and layout*, not its JVM:
+//! the Scala stack stored each source's data as a sequence of tuples
+//! (destination, coefficient, cost) behind an object per source — we mirror
+//! that with a per-source `Vec` of tuple structs (one heap allocation per
+//! source, array-of-structs traversal, per-slice projection calls), which
+//! reproduces the pointer/locality behaviour §6 contrasts against the CSC
+//! slab layout. The math is identical to the accelerated path:
+//!
+//!   x_i = Π_C(−(A_iᵀλ + c_i) / (γ v_i²)),  ∇g = Σ_i A_i x_i − b.
+//!
+//! Rust-vs-JVM constant factors are noted in EXPERIMENTS.md; Table-2/Fig-3
+//! comparisons report the *shape* (batched sharded vs unbatched serial).
+
+use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+
+/// One eligible edge in the tuple-sequence layout.
+#[derive(Clone, Copy, Debug)]
+struct EdgeTuple {
+    dest: u32,
+    /// a coefficient per family is boxed separately (like the Scala
+    /// object model's nested collections) — index into `fam` planes.
+    edge: u32,
+    cost: f32,
+}
+
+/// Per-source record, mirroring the Scala per-block object.
+struct SourceBlock {
+    tuples: Vec<EdgeTuple>,
+    gamma_scale: f32,
+}
+
+pub struct CpuObjective<'a> {
+    lp: &'a MatchingLp,
+    blocks: Vec<SourceBlock>,
+    /// scratch: per-block projection input (reused across blocks)
+    scratch: Vec<f32>,
+}
+
+impl<'a> CpuObjective<'a> {
+    pub fn new(lp: &'a MatchingLp) -> Self {
+        let mut blocks = Vec::with_capacity(lp.num_sources());
+        for i in 0..lp.num_sources() {
+            let (e0, e1) = (lp.a.src_ptr[i], lp.a.src_ptr[i + 1]);
+            let tuples = (e0..e1)
+                .map(|e| EdgeTuple {
+                    dest: lp.a.dest_idx[e],
+                    edge: e as u32,
+                    cost: lp.cost[e],
+                })
+                .collect();
+            blocks.push(SourceBlock { tuples, gamma_scale: lp.gamma_scale(i) });
+        }
+        CpuObjective { lp, blocks, scratch: Vec::new() }
+    }
+
+    /// Compute x for one block into `self.scratch`.
+    fn block_primal(&mut self, i: usize, lam: &[f32], gamma: f32) {
+        let jj = self.lp.num_dests();
+        let m = self.lp.num_families();
+        let mj = self.lp.matching_dual_dim();
+        let block = &self.blocks[i];
+        let g_eff = gamma * block.gamma_scale;
+        self.scratch.clear();
+        for t in &block.tuples {
+            // u = Σ_k a_k λ_k[j] + Σ_r coeffs_r λ_{mJ+r}
+            let mut u = 0.0f32;
+            for k in 0..m {
+                u += self.lp.a.a[k][t.edge as usize] * lam[k * jj + t.dest as usize];
+            }
+            for (r, g) in self.lp.global_rows.iter().enumerate() {
+                u += g.coeffs[t.edge as usize] * lam[mj + r];
+            }
+            self.scratch.push(-(u + t.cost) / g_eff);
+        }
+        self.lp.projection.project(i, &mut self.scratch);
+    }
+}
+
+impl ObjectiveFunction for CpuObjective<'_> {
+    fn dual_dim(&self) -> usize {
+        self.lp.dual_dim()
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        assert_eq!(lam.len(), self.lp.dual_dim());
+        let jj = self.lp.num_dests();
+        let m = self.lp.num_families();
+        let mut ax = vec![0.0f32; self.lp.dual_dim()];
+        let mut cx = 0.0f64;
+        let mut xsq_w = 0.0f64;
+
+        let mj = self.lp.matching_dual_dim();
+        for i in 0..self.lp.num_sources() {
+            self.block_primal(i, lam, gamma);
+            let block = &self.blocks[i];
+            for (t, &x) in block.tuples.iter().zip(self.scratch.iter()) {
+                if x == 0.0 {
+                    continue;
+                }
+                cx += t.cost as f64 * x as f64;
+                xsq_w += block.gamma_scale as f64 * (x as f64) * (x as f64);
+                for k in 0..m {
+                    ax[k * jj + t.dest as usize] +=
+                        self.lp.a.a[k][t.edge as usize] * x;
+                }
+                for (r, g) in self.lp.global_rows.iter().enumerate() {
+                    ax[mj + r] += g.coeffs[t.edge as usize] * x;
+                }
+            }
+        }
+
+        // grad = Ax − b (matching rows then global rows)
+        for (g, b) in ax.iter_mut().zip(self.lp.full_b()) {
+            *g -= b;
+        }
+        ObjectiveResult::assemble(ax, cx, xsq_w, lam, gamma)
+    }
+
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
+        let mut x = vec![0.0f32; self.lp.nnz()];
+        for i in 0..self.lp.num_sources() {
+            self.block_primal(i, lam, gamma);
+            let e0 = self.lp.a.src_ptr[i];
+            x[e0..e0 + self.scratch.len()].copy_from_slice(&self.scratch);
+        }
+        x
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu-reference"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::ProjectionKind;
+    use crate::sparse::BlockedMatrix;
+
+    fn tiny_lp() -> MatchingLp {
+        let a = BlockedMatrix {
+            num_sources: 2,
+            num_dests: 2,
+            num_families: 1,
+            src_ptr: vec![0, 2, 4],
+            dest_idx: vec![0, 1, 0, 1],
+            a: vec![vec![1.0, 1.0, 1.0, 1.0]],
+        };
+        MatchingLp::new_uniform(
+            a,
+            vec![-2.0, -1.0, -1.0, -2.0],
+            vec![0.6, 0.6],
+            ProjectionKind::Simplex,
+        )
+    }
+
+    #[test]
+    fn gradient_matches_hand_computation() {
+        let lp = tiny_lp();
+        let mut obj = CpuObjective::new(&lp);
+        let gamma = 1.0;
+        // λ = 0: v_i = -c/γ = (2,1) and (1,2); Σ>1 ⇒ project onto simplex:
+        // Π([2,1]) = [1,0] (θ=1); Π([1,2]) = [0,1].
+        let res = obj.calculate(&[0.0, 0.0], gamma);
+        // Ax = (1, 1); grad = Ax - b = (0.4, 0.4)
+        assert!((res.grad[0] - 0.4).abs() < 1e-6, "{:?}", res.grad);
+        assert!((res.grad[1] - 0.4).abs() < 1e-6);
+        // cx = -2 + -2 = -4; xsq = 2
+        assert!((res.cx - (-4.0)).abs() < 1e-6);
+        assert!((res.xsq_weighted - 2.0).abs() < 1e-6);
+        // g = cx + γ/2 xsq + λ·grad = -4 + 1 + 0 = -3
+        assert!((res.dual_obj - (-3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_is_numerical_derivative() {
+        // Danskin check on a random instance.
+        let lp = crate::gen::generate(&crate::gen::SyntheticConfig {
+            num_requests: 40,
+            num_resources: 8,
+            avg_nnz_per_row: 4.0,
+            seed: 3,
+            ..Default::default()
+        });
+        let mut obj = CpuObjective::new(&lp);
+        let gamma = 0.3;
+        let mut rng = crate::util::rng::Rng::new(1);
+        let lam: Vec<f32> = (0..lp.dual_dim()).map(|_| rng.uniform() as f32 * 0.2).collect();
+        let res = obj.calculate(&lam, gamma);
+        let eps = 1e-3f32;
+        for r in 0..lp.dual_dim() {
+            let mut lp_ = lam.clone();
+            lp_[r] += eps;
+            let gp = obj.calculate(&lp_, gamma).dual_obj;
+            let mut lm = lam.clone();
+            lm[r] -= eps;
+            let gm = obj.calculate(&lm, gamma).dual_obj;
+            let num = (gp - gm) / (2.0 * eps as f64);
+            assert!(
+                (num - res.grad[r] as f64).abs() < 5e-2 * (1.0 + num.abs()),
+                "row {r}: numerical {num} vs analytic {}",
+                res.grad[r]
+            );
+        }
+    }
+
+    #[test]
+    fn primal_scaling_changes_effective_gamma() {
+        let mut lp = tiny_lp();
+        lp.primal_scale = Some(vec![1.0, 2.0]); // block 1 gets γ·4
+        let mut obj = CpuObjective::new(&lp);
+        let x = obj.primal(&[0.0, 0.0], 1.0);
+        // block 0 unchanged: Π([2,1]) = [1,0]
+        assert!((x[0] - 1.0).abs() < 1e-6 && x[1].abs() < 1e-6);
+        // block 1: v = (1,2)/4 = (0.25, 0.5), Σ=0.75 ≤ 1 ⇒ x = v
+        assert!((x[2] - 0.25).abs() < 1e-6 && (x[3] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn primal_consistent_with_calculate() {
+        let lp = crate::gen::generate(&crate::gen::SyntheticConfig {
+            num_requests: 100,
+            num_resources: 16,
+            seed: 5,
+            ..Default::default()
+        });
+        let mut obj = CpuObjective::new(&lp);
+        let lam = vec![0.05f32; lp.dual_dim()];
+        let res = obj.calculate(&lam, 0.1);
+        let x = obj.primal(&lam, 0.1);
+        let mut ax = vec![0.0f32; lp.dual_dim()];
+        lp.a.scatter_ax(&x, &mut ax);
+        for (r, (axr, br)) in ax.iter().zip(&lp.b).enumerate() {
+            assert!(
+                ((axr - br) - res.grad[r]).abs() < 1e-4,
+                "row {r}"
+            );
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Reference ("Scala-equivalent") CPU backend: the baseline the paper's
+//! experiments compare against, plus high-precision reference solves used
+//! to compute L̂ for the Fig-4/5 convergence plots.
+
+pub mod cpu_objective;
+
+pub use cpu_objective::CpuObjective;

@@ -1,0 +1,437 @@
+//! `ObjectiveFunction` backed by the AOT slab kernels through PJRT — the
+//! accelerated path of the paper (§6), for one shard (a contiguous source
+//! range) of a matching LP.
+//!
+//! Per iteration and bucket the shard runs:
+//!   1. **gather** (rust): per-edge u = Σ_k a_k·λ_k[j], divided by the
+//!      per-source γ-scale when primal scaling is on;
+//!   2. **kernel** (PJRT/HLO, fused Pallas slab): x = Π_C(−(u+c)/γ) plus
+//!      the Σc⊙x and Σx² partials;
+//!   3. **scatter** (rust): grad_k[j] += a_k·x.
+//!
+//! c and mask literals per (bucket, tile) are built once and reused across
+//! iterations; only the u literal is rebuilt per step. The final partial
+//! tile is zero-padded (mask 0 rows produce x = 0 exactly).
+
+use anyhow::Result;
+
+use super::pjrt::Engine;
+use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+use crate::sparse::slabs::SlabLayout;
+use crate::util::timer::PhaseTimers;
+
+struct TileCache {
+    c: xla::Literal,
+    mask: xla::Literal,
+    /// rows covered by this tile (≤ tile_rows; tail tile may be partial)
+    rows: usize,
+}
+
+pub struct HloObjective<'a> {
+    lp: &'a MatchingLp,
+    layout: SlabLayout,
+    engine: Engine,
+    /// (src_lo, src_hi) shard bounds.
+    shard: (usize, usize),
+    /// cached per-(bucket, tile) literals
+    tiles: Vec<Vec<TileCache>>,
+    /// per-bucket per-row 1/(v_i²) gather scale (None when no scaling)
+    row_gscale: Option<Vec<Vec<f32>>>,
+    pub timers: PhaseTimers,
+}
+
+impl<'a> HloObjective<'a> {
+    /// Build for the full problem.
+    pub fn new(lp: &'a MatchingLp, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::new_shard(lp, artifacts_dir, 0, lp.num_sources())
+    }
+
+    /// Build for sources [src_lo, src_hi).
+    pub fn new_shard(
+        lp: &'a MatchingLp,
+        artifacts_dir: impl AsRef<std::path::Path>,
+        src_lo: usize,
+        src_hi: usize,
+    ) -> Result<Self> {
+        let engine = Engine::new(artifacts_dir)?;
+        let kind_of = |i: usize| lp.projection.kind_of(i);
+        let layout = SlabLayout::build(&lp.a, &lp.cost, src_lo, src_hi, &kind_of)
+            .map_err(anyhow::Error::msg)?;
+
+        let t = engine.tile_rows();
+        let mut tiles = Vec::with_capacity(layout.buckets.len());
+        for bk in &layout.buckets {
+            let w = bk.width;
+            let mut bucket_tiles = Vec::new();
+            let mut r0 = 0usize;
+            while r0 < bk.rows() {
+                let rows = (bk.rows() - r0).min(t);
+                let mut c = vec![0.0f32; t * w];
+                let mut mask = vec![0.0f32; t * w];
+                c[..rows * w].copy_from_slice(&bk.cost[r0 * w..(r0 + rows) * w]);
+                mask[..rows * w].copy_from_slice(&bk.mask[r0 * w..(r0 + rows) * w]);
+                bucket_tiles.push(TileCache {
+                    c: engine.literal_2d(&c, w)?,
+                    mask: engine.literal_2d(&mask, w)?,
+                    rows,
+                });
+                r0 += rows;
+            }
+            tiles.push(bucket_tiles);
+        }
+
+        // Per-row gather scale for primal scaling: divide (u + c) by v_i².
+        // c is pre-divided into the cached literal? NO — c literals hold the
+        // raw costs; instead both u and c must be scaled, so when scaling is
+        // active we fold c into u on the rust side (u' = (u + c)/v² − c·0)
+        // and pass a zeroed-c literal. To keep one code path we instead
+        // store per-row scale and fold (u + c)/v² − c into u:
+        //   kernel computes −(u' + c)/γ with u' = (u + c)/v² − c
+        // which equals −(u + c)/(γ v²). cx/xsq partials are then recomputed
+        // on the rust side during scatter (kernel partials use raw c).
+        let row_gscale = if lp.primal_scale.is_some() {
+            let mut per_bucket = Vec::with_capacity(layout.buckets.len());
+            for bk in &layout.buckets {
+                let scales: Vec<f32> =
+                    bk.sources.iter().map(|&s| 1.0 / lp.gamma_scale(s as usize)).collect();
+                per_bucket.push(scales);
+            }
+            Some(per_bucket)
+        } else {
+            None
+        };
+
+        Ok(HloObjective {
+            lp,
+            layout,
+            engine,
+            shard: (src_lo, src_hi),
+            tiles,
+            row_gscale,
+            timers: PhaseTimers::new(),
+        })
+    }
+
+    pub fn shard(&self) -> (usize, usize) {
+        self.shard
+    }
+
+    pub fn layout(&self) -> &SlabLayout {
+        &self.layout
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Pre-compile every executable this layout needs.
+    pub fn warmup(&mut self) -> Result<()> {
+        let kinds: Vec<_> = {
+            let mut ks: Vec<_> = self.layout.buckets.iter().map(|b| b.kind).collect();
+            ks.sort();
+            ks.dedup();
+            ks
+        };
+        self.engine.warmup(&kinds)
+    }
+
+    /// Evaluate the shard's contribution: grad += A_shard x − 0 (b is NOT
+    /// subtracted here — the leader owns b), returning (cx, xsq_weighted)
+    /// partials. `x_out` optionally receives the per-edge primal (global
+    /// edge indexing via bucket bookkeeping).
+    pub fn eval_shard(
+        &mut self,
+        lam: &[f32],
+        gamma: f32,
+        grad: &mut [f32],
+        mut x_out: Option<&mut Vec<f32>>,
+    ) -> Result<(f64, f64)> {
+        let jj = self.lp.num_dests();
+        let m = self.lp.num_families();
+        let t = self.engine.tile_rows();
+        let mut cx_total = 0.0f64;
+        let mut xsq_total = 0.0f64;
+        let scaled = self.row_gscale.is_some();
+
+        let mut u = vec![0.0f32; 0];
+        for (bi, bk) in self.layout.buckets.iter().enumerate() {
+            let w = bk.width;
+            u.resize(t * w, 0.0);
+            for (ti, tile) in self.tiles[bi].iter().enumerate() {
+                let r0 = ti * t;
+                let rows = tile.rows;
+                let base = r0 * w;
+                let n = rows * w;
+
+                // --- gather ---------------------------------------------
+                self.timers.time("gather", || {
+                    u[..t * w].iter_mut().for_each(|v| *v = 0.0);
+                    for k in 0..m {
+                        let ak = &bk.a[k][base..base + n];
+                        let lk = &lam[k * jj..(k + 1) * jj];
+                        let di = &bk.dest_idx[base..base + n];
+                        for e in 0..n {
+                            u[e] += ak[e] * lk[di[e] as usize];
+                        }
+                    }
+                    if !self.lp.global_rows.is_empty() {
+                        let eids = &bk.edge_id[base..base + n];
+                        let mj = self.lp.matching_dual_dim();
+                        for (r, g) in self.lp.global_rows.iter().enumerate() {
+                            let lr = lam[mj + r];
+                            if lr == 0.0 {
+                                continue;
+                            }
+                            for e in 0..n {
+                                if eids[e] != u32::MAX {
+                                    u[e] += g.coeffs[eids[e] as usize] * lr;
+                                }
+                            }
+                        }
+                    }
+                    if let Some(gs) = &self.row_gscale {
+                        // u' = (u + c)/v² − c  (see constructor comment)
+                        let cvals = &bk.cost[base..base + n];
+                        for r in 0..rows {
+                            let s = gs[bi][r0 + r];
+                            if (s - 1.0).abs() < 1e-12 {
+                                continue;
+                            }
+                            for e in r * w..(r + 1) * w {
+                                u[e] = (u[e] + cvals[e]) * s - cvals[e];
+                            }
+                        }
+                    }
+                });
+
+                // --- kernel ---------------------------------------------
+                let ul = self.engine.literal_2d(&u, w)?;
+                let out = self.timers.time("kernel", || {
+                    self.engine.run_slab(bk.kind, w, &ul, &tile.c, &tile.mask, gamma)
+                })?;
+
+                // --- scatter --------------------------------------------
+                self.timers.time("scatter", || {
+                    let x = &out.x[..n];
+                    for k in 0..m {
+                        let ak = &bk.a[k][base..base + n];
+                        let di = &bk.dest_idx[base..base + n];
+                        let gk = &mut grad[k * jj..(k + 1) * jj];
+                        for e in 0..n {
+                            gk[di[e] as usize] += ak[e] * x[e];
+                        }
+                    }
+                    if !self.lp.global_rows.is_empty() {
+                        let eids = &bk.edge_id[base..base + n];
+                        let mj = self.lp.matching_dual_dim();
+                        for (r, g) in self.lp.global_rows.iter().enumerate() {
+                            let mut acc = 0.0f32;
+                            for e in 0..n {
+                                if eids[e] != u32::MAX {
+                                    acc += g.coeffs[eids[e] as usize] * x[e];
+                                }
+                            }
+                            grad[mj + r] += acc;
+                        }
+                    }
+                    if scaled {
+                        // recompute partials with true c and weight v_i²
+                        let cvals = &bk.cost[base..base + n];
+                        for r in 0..rows {
+                            let src = bk.sources[r0 + r] as usize;
+                            let vsq = self.lp.gamma_scale(src) as f64;
+                            for e in r * w..(r + 1) * w {
+                                let xe = x[e] as f64;
+                                cx_total += cvals[e] as f64 * xe;
+                                xsq_total += vsq * xe * xe;
+                            }
+                        }
+                    } else {
+                        cx_total += out.cx;
+                        xsq_total += out.xsq;
+                    }
+                    if let Some(xo) = x_out.as_deref_mut() {
+                        // write per-edge primal back via the edge_id plane
+                        let eids = &bk.edge_id[base..base + n];
+                        for e in 0..n {
+                            if eids[e] != u32::MAX {
+                                xo[eids[e] as usize] = x[e];
+                            }
+                        }
+                    }
+                });
+            }
+        }
+        Ok((cx_total, xsq_total))
+    }
+}
+
+impl ObjectiveFunction for HloObjective<'_> {
+    fn dual_dim(&self) -> usize {
+        self.lp.dual_dim()
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        let mut grad = vec![0.0f32; self.lp.dual_dim()];
+        let (cx, xsq) = self
+            .eval_shard(lam, gamma, &mut grad, None)
+            .expect("slab execution failed");
+        for (g, b) in grad.iter_mut().zip(self.lp.full_b()) {
+            *g -= b;
+        }
+        ObjectiveResult::assemble(grad, cx, xsq, lam, gamma)
+    }
+
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
+        let mut grad = vec![0.0f32; self.lp.dual_dim()];
+        let mut x = vec![0.0f32; self.lp.nnz()];
+        self.eval_shard(lam, gamma, &mut grad, Some(&mut x))
+            .expect("slab execution failed");
+        x
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo-slab"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::reference::CpuObjective;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn matches_cpu_reference_on_synthetic() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let lp = generate(&SyntheticConfig {
+            num_requests: 300,
+            num_resources: 40,
+            avg_nnz_per_row: 6.0,
+            seed: 11,
+            ..Default::default()
+        });
+        let mut hlo = HloObjective::new(&lp, artifacts_dir()).unwrap();
+        let mut cpu = CpuObjective::new(&lp);
+        let mut rng = crate::util::rng::Rng::new(2);
+        for gamma in [0.01f32, 0.16] {
+            let lam: Vec<f32> =
+                (0..lp.dual_dim()).map(|_| rng.uniform() as f32 * 0.1).collect();
+            let rh = hlo.calculate(&lam, gamma);
+            let rc = cpu.calculate(&lam, gamma);
+            assert!(
+                (rh.dual_obj - rc.dual_obj).abs() / rc.dual_obj.abs().max(1.0) < 1e-4,
+                "dual {} vs {}",
+                rh.dual_obj,
+                rc.dual_obj
+            );
+            // tolerance: kernel θ is bisection-quantized (f32) vs the CPU
+            // oracle's exact sort threshold; errors scale with |v|≈|c|/γ
+            let gtol = 2e-3 + 5e-5 * (1.0 / gamma as f64);
+            for (a, b) in rh.grad.iter().zip(&rc.grad) {
+                assert!(((a - b).abs() as f64) < gtol * (1.0 + a.abs() as f64), "{a} vs {b}");
+            }
+            assert!((rh.cx - rc.cx).abs() / rc.cx.abs().max(1.0) < 1e-4);
+            assert!((rh.xsq_weighted - rc.xsq_weighted).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn shards_sum_to_full_gradient() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let lp = generate(&SyntheticConfig {
+            num_requests: 200,
+            num_resources: 32,
+            seed: 4,
+            ..Default::default()
+        });
+        let lam = vec![0.05f32; lp.dual_dim()];
+        let gamma = 0.05;
+        let mut full = HloObjective::new(&lp, artifacts_dir()).unwrap();
+        let rf = full.calculate(&lam, gamma);
+
+        let mut grad = vec![0.0f32; lp.dual_dim()];
+        let (mut cx, mut xsq) = (0.0, 0.0);
+        for (lo, hi) in [(0, 70), (70, 140), (140, 200)] {
+            let mut sh = HloObjective::new_shard(&lp, artifacts_dir(), lo, hi).unwrap();
+            let (c, s) = sh.eval_shard(&lam, gamma, &mut grad, None).unwrap();
+            cx += c;
+            xsq += s;
+        }
+        for (g, b) in grad.iter_mut().zip(&lp.b) {
+            *g -= b;
+        }
+        for (a, b) in rf.grad.iter().zip(&grad) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert!((rf.cx - cx).abs() < 1e-6 * cx.abs().max(1.0) + 1e-6);
+        assert!((rf.xsq_weighted - xsq).abs() < 1e-4);
+    }
+
+    #[test]
+    fn primal_scaling_matches_cpu() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut lp = generate(&SyntheticConfig {
+            num_requests: 150,
+            num_resources: 24,
+            seed: 6,
+            ..Default::default()
+        });
+        crate::problem::apply_primal_scaling(&mut lp);
+        let mut hlo = HloObjective::new(&lp, artifacts_dir()).unwrap();
+        let mut cpu = CpuObjective::new(&lp);
+        let lam = vec![0.02f32; lp.dual_dim()];
+        let rh = hlo.calculate(&lam, 0.08);
+        let rc = cpu.calculate(&lam, 0.08);
+        assert!(
+            (rh.dual_obj - rc.dual_obj).abs() / rc.dual_obj.abs().max(1.0) < 1e-4,
+            "{} vs {}",
+            rh.dual_obj,
+            rc.dual_obj
+        );
+        for (a, b) in rh.grad.iter().zip(&rc.grad) {
+            assert!((a - b).abs() < 2e-3);
+        }
+        assert!((rh.xsq_weighted - rc.xsq_weighted).abs() / rc.xsq_weighted.max(1.0) < 1e-3);
+    }
+
+    #[test]
+    fn primal_recovery_matches_cpu() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let lp = generate(&SyntheticConfig {
+            num_requests: 120,
+            num_resources: 20,
+            seed: 9,
+            ..Default::default()
+        });
+        let lam = vec![0.01f32; lp.dual_dim()];
+        let mut hlo = HloObjective::new(&lp, artifacts_dir()).unwrap();
+        let mut cpu = CpuObjective::new(&lp);
+        let xh = hlo.primal(&lam, 0.05);
+        let xc = cpu.primal(&lam, 0.05);
+        assert_eq!(xh.len(), xc.len());
+        for (a, b) in xh.iter().zip(&xc) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Runtime layer: PJRT engine for the AOT HLO artifacts and the
+//! slab-kernel-backed `ObjectiveFunction` (the paper's GPU execution path,
+//! §6). Python is build-time only; this module is all that touches XLA at
+//! solve time.
+
+pub mod hlo_objective;
+pub mod pjrt;
+
+pub use hlo_objective::HloObjective;
+pub use pjrt::{Engine, Manifest};
+
+/// Default artifacts directory: `$DUALIP_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    match std::env::var_os("DUALIP_ARTIFACTS") {
+        Some(d) => d.into(),
+        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    }
+}

@@ -1,0 +1,280 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the CPU PJRT client, and runs
+//! slab dual steps from the solve hot path.
+//!
+//! One `Engine` per logical device (worker thread); executables are cached
+//! per (kind, rows, width). Interchange is HLO *text* — see DESIGN.md §2
+//! and /opt/xla-example/README.md for why serialized protos are rejected.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::projection::ProjectionKind;
+
+/// Slab artifact geometry parsed from `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// (kind, rows, width) → file name.
+    pub entries: HashMap<(ProjectionKind, usize, usize), String>,
+    /// Fixed row count per slab execution (all current artifacts share it).
+    pub tile_rows: usize,
+    /// Available widths, ascending.
+    pub widths: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut entries = HashMap::new();
+        let mut tile_rows = 0usize;
+        let mut widths = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 4 {
+                continue;
+            }
+            let kind = ProjectionKind::parse(f[0])
+                .ok_or_else(|| anyhow!("unknown projection kind {:?} in manifest", f[0]))?;
+            let rows: usize = f[1].parse()?;
+            let width: usize = f[2].parse()?;
+            entries.insert((kind, rows, width), f[3].to_string());
+            tile_rows = tile_rows.max(rows);
+            widths.insert(width);
+        }
+        if entries.is_empty() {
+            return Err(anyhow!("empty manifest at {path:?}"));
+        }
+        Ok(Manifest { entries, tile_rows, widths: widths.into_iter().collect() })
+    }
+}
+
+/// Result of one slab execution.
+pub struct SlabOutput {
+    /// Projected primal rows, flattened [rows × width].
+    pub x: Vec<f32>,
+    /// Σ c⊙x over the slab.
+    pub cx: f64,
+    /// Σ x² over the slab.
+    pub xsq: f64,
+}
+
+/// Per-device PJRT engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<(ProjectionKind, usize, usize), xla::PjRtLoadedExecutable>,
+    /// executions performed (diagnostics)
+    pub launches: u64,
+}
+
+impl Engine {
+    /// Create an engine over the artifact directory (must contain
+    /// manifest.txt; see `make artifacts`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, dir, exes: HashMap::new(), launches: 0 })
+    }
+
+    pub fn tile_rows(&self) -> usize {
+        self.manifest.tile_rows
+    }
+
+    /// Smallest artifact width ≥ `w`, if any.
+    pub fn width_for(&self, w: usize) -> Option<usize> {
+        self.manifest.widths.iter().copied().find(|&aw| aw >= w)
+    }
+
+    pub fn max_width(&self) -> usize {
+        *self.manifest.widths.last().unwrap()
+    }
+
+    /// Lazily load + compile the executable for (kind, rows, width).
+    fn executable_rows(
+        &mut self,
+        kind: ProjectionKind,
+        rows: usize,
+        width: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(&(kind, rows, width)) {
+            let name = self
+                .manifest
+                .entries
+                .get(&(kind, rows, width))
+                .ok_or_else(|| anyhow!("no artifact for kind={} rows={rows} w={width}", kind.name()))?;
+            let path = self.dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            self.exes.insert((kind, rows, width), exe);
+        }
+        Ok(&self.exes[&(kind, rows, width)])
+    }
+
+    /// Pre-compile all artifacts of the given kinds (avoids first-iteration
+    /// compile latency skewing benchmarks).
+    pub fn warmup(&mut self, kinds: &[ProjectionKind]) -> Result<()> {
+        let rows = self.manifest.tile_rows;
+        for &kind in kinds {
+            for w in self.manifest.widths.clone() {
+                self.executable_rows(kind, rows, w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a [rows × width] f32 literal from a flat slice.
+    pub fn literal_2d(&self, data: &[f32], width: usize) -> Result<xla::Literal> {
+        let rows = data.len() / width;
+        debug_assert_eq!(rows * width, data.len());
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, width as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// Execute one slab dual step. `u`, plus cached `c` and `mask`
+    /// literals, must all be [tile_rows × width].
+    pub fn run_slab(
+        &mut self,
+        kind: ProjectionKind,
+        width: usize,
+        u: &xla::Literal,
+        c: &xla::Literal,
+        mask: &xla::Literal,
+        gamma: f32,
+    ) -> Result<SlabOutput> {
+        self.run_slab_rows(kind, self.manifest.tile_rows, width, u, c, mask, gamma)
+    }
+
+    /// Execute one slab dual step against a specific row-count artifact
+    /// (rows=1 artifacts back the per-slice launch baseline of E9).
+    pub fn run_slab_rows(
+        &mut self,
+        kind: ProjectionKind,
+        rows: usize,
+        width: usize,
+        u: &xla::Literal,
+        c: &xla::Literal,
+        mask: &xla::Literal,
+        gamma: f32,
+    ) -> Result<SlabOutput> {
+        let g = xla::Literal::vec1(&[gamma]);
+        let exe = self.executable_rows(kind, rows, width)?;
+        let bufs = exe
+            .execute::<&xla::Literal>(&[u, c, mask, &g])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        self.launches += 1;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (x_lit, cx_lit, xsq_lit) = out.to_tuple3().map_err(|e| anyhow!("tuple3: {e:?}"))?;
+        let x = x_lit.to_vec::<f32>().map_err(|e| anyhow!("x to_vec: {e:?}"))?;
+        let cx = cx_lit.to_vec::<f32>().map_err(|e| anyhow!("cx: {e:?}"))?[0] as f64;
+        let xsq = xsq_lit.to_vec::<f32>().map_err(|e| anyhow!("xsq: {e:?}"))?[0] as f64;
+        Ok(SlabOutput { x, cx, xsq })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.tile_rows, 1024);
+        assert!(m.widths.contains(&4));
+        assert!(m.widths.contains(&512));
+    }
+
+    #[test]
+    fn box_slab_roundtrip() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::new(artifacts_dir()).unwrap();
+        let t = e.tile_rows();
+        let w = 4;
+        let n = t * w;
+        // v = -(u+c)/γ: choose u=-γ·target, c=0, mask=1 → x = clip(target,0,1)
+        let gamma = 0.5f32;
+        let target: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.3 - 0.6).collect();
+        let u: Vec<f32> = target.iter().map(|&t| -gamma * t).collect();
+        let ul = e.literal_2d(&u, w).unwrap();
+        let cl = e.literal_2d(&vec![0.0; n], w).unwrap();
+        let ml = e.literal_2d(&vec![1.0; n], w).unwrap();
+        let out = e.run_slab(ProjectionKind::Box, w, &ul, &cl, &ml, gamma).unwrap();
+        for (x, t) in out.x.iter().zip(&target) {
+            assert!((x - t.clamp(0.0, 1.0)).abs() < 1e-5, "{x} vs {t}");
+        }
+        assert!(out.cx.abs() < 1e-6);
+        let xsq_ref: f64 = target.iter().map(|&t| (t.clamp(0.0, 1.0) as f64).powi(2)).sum();
+        assert!((out.xsq - xsq_ref).abs() / xsq_ref.max(1.0) < 1e-4);
+    }
+
+    #[test]
+    fn simplex_slab_respects_capacity() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::new(artifacts_dir()).unwrap();
+        let t = e.tile_rows();
+        let w = 8;
+        let n = t * w;
+        let gamma = 0.1f32;
+        // big negative costs → unconstrained x would be large positive
+        let c = vec![-1.0f32; n];
+        let u = vec![0.0f32; n];
+        let ul = e.literal_2d(&u, w).unwrap();
+        let cl = e.literal_2d(&c, w).unwrap();
+        let ml = e.literal_2d(&vec![1.0; n], w).unwrap();
+        let out = e.run_slab(ProjectionKind::Simplex, w, &ul, &cl, &ml, gamma).unwrap();
+        for row in out.x.chunks(w) {
+            let s: f64 = row.iter().map(|&x| x as f64).sum();
+            assert!(s <= 1.0 + 1e-4, "row sum {s}");
+            // symmetric input → uniform row
+            for &x in row {
+                assert!((x - 1.0 / w as f32).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn width_selection() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let e = Engine::new(artifacts_dir()).unwrap();
+        assert_eq!(e.width_for(3), Some(4));
+        assert_eq!(e.width_for(4), Some(4));
+        assert_eq!(e.width_for(5), Some(8));
+        assert_eq!(e.width_for(513), None);
+    }
+}

@@ -1,0 +1,105 @@
+//! γ-continuation schedule (paper §5.1 "Regularization decay").
+//!
+//! γ starts moderately large for stable, fast early progress and decays on
+//! a pre-specified schedule toward a floor; the AGD max step size is scaled
+//! proportionally at each decay to maintain stability across transition
+//! points (the gradient Lipschitz constant is ‖A‖²/γ).
+
+/// Ridge-parameter schedule.
+#[derive(Clone, Debug)]
+pub enum GammaSchedule {
+    /// Constant γ.
+    Fixed(f32),
+    /// γ_0 · factor^⌊t/every⌋, floored. Paper Fig 5: init 0.16, floor 0.01,
+    /// factor 0.5, every 25.
+    Decay { init: f32, floor: f32, factor: f32, every: usize },
+}
+
+impl GammaSchedule {
+    /// Paper Fig-5 continuation setting.
+    pub fn paper_fig5() -> Self {
+        GammaSchedule::Decay { init: 0.16, floor: 0.01, factor: 0.5, every: 25 }
+    }
+
+    /// γ at iteration t (0-based).
+    pub fn gamma_at(&self, t: usize) -> f32 {
+        match *self {
+            GammaSchedule::Fixed(g) => g,
+            GammaSchedule::Decay { init, floor, factor, every } => {
+                let steps = t / every.max(1);
+                let g = init * factor.powi(steps as i32);
+                g.max(floor)
+            }
+        }
+    }
+
+    /// Step-size cap multiplier at iteration t relative to t=0: η_max is
+    /// scaled proportionally with γ (paper §5.1).
+    pub fn step_cap_scale(&self, t: usize) -> f32 {
+        self.gamma_at(t) / self.gamma_at(0)
+    }
+
+    /// Whether iteration t is a decay transition point.
+    pub fn decays_at(&self, t: usize) -> bool {
+        match *self {
+            GammaSchedule::Fixed(_) => false,
+            GammaSchedule::Decay { .. } => {
+                t > 0 && self.gamma_at(t) != self.gamma_at(t - 1)
+            }
+        }
+    }
+
+    pub fn final_gamma(&self) -> f32 {
+        match *self {
+            GammaSchedule::Fixed(g) => g,
+            GammaSchedule::Decay { floor, .. } => floor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = GammaSchedule::Fixed(0.01);
+        assert_eq!(s.gamma_at(0), 0.01);
+        assert_eq!(s.gamma_at(1000), 0.01);
+        assert!(!s.decays_at(25));
+        assert_eq!(s.step_cap_scale(500), 1.0);
+    }
+
+    #[test]
+    fn paper_schedule_halves_every_25() {
+        let s = GammaSchedule::paper_fig5();
+        assert_eq!(s.gamma_at(0), 0.16);
+        assert_eq!(s.gamma_at(24), 0.16);
+        assert_eq!(s.gamma_at(25), 0.08);
+        assert_eq!(s.gamma_at(50), 0.04);
+        assert_eq!(s.gamma_at(75), 0.02);
+        assert_eq!(s.gamma_at(100), 0.01);
+        // floored afterwards
+        assert_eq!(s.gamma_at(125), 0.01);
+        assert_eq!(s.gamma_at(10_000), 0.01);
+    }
+
+    #[test]
+    fn decay_points_flagged() {
+        let s = GammaSchedule::paper_fig5();
+        assert!(!s.decays_at(0));
+        assert!(!s.decays_at(24));
+        assert!(s.decays_at(25));
+        assert!(!s.decays_at(26));
+        assert!(s.decays_at(100));
+        assert!(!s.decays_at(125)); // already at floor
+    }
+
+    #[test]
+    fn step_cap_tracks_gamma() {
+        let s = GammaSchedule::paper_fig5();
+        assert_eq!(s.step_cap_scale(0), 1.0);
+        assert_eq!(s.step_cap_scale(25), 0.5);
+        assert_eq!(s.step_cap_scale(200), 0.01 / 0.16);
+    }
+}

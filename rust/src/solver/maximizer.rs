@@ -1,0 +1,137 @@
+//! The `Maximizer` contract (paper Table 1) and the shared solve loop:
+//! trajectory recording, γ-continuation, stopping, and diagnostics are
+//! identical across optimizers — an optimizer only supplies its update
+//! rule.
+
+use super::continuation::GammaSchedule;
+use super::stopping::{StopReason, StoppingCriteria};
+use crate::problem::{ObjectiveFunction, ObjectiveResult};
+use crate::util::timer::Stopwatch;
+
+/// One recorded iteration (feeds Fig 1/2/4/5-style CSV series).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    pub dual_obj: f64,
+    pub grad_norm: f64,
+    pub infeas_pos_norm: f64,
+    pub cx: f64,
+    pub gamma: f32,
+    pub step_size: f64,
+    pub wall_ms: f64,
+}
+
+/// Full solve outcome.
+#[derive(Debug)]
+pub struct SolveResult {
+    /// Final dual iterate λ (in the solved — possibly row-scaled — system).
+    pub lam: Vec<f32>,
+    pub final_obj: ObjectiveResult,
+    pub trajectory: Vec<IterRecord>,
+    pub stop_reason: StopReason,
+    pub iterations: usize,
+    pub total_wall_ms: f64,
+    pub final_gamma: f32,
+}
+
+/// Algorithm settings shared by the maximizers (paper Appendix B values).
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    pub max_iters: usize,
+    /// Maximum allowable step size (paper: 1e-3). Scaled with γ decay.
+    pub max_step_size: f64,
+    /// Initial step size before curvature information exists (paper: 1e-5).
+    pub initial_step_size: f64,
+    pub gamma: GammaSchedule,
+    pub stopping: StoppingCriteria,
+    /// Record every k-th iteration (1 = all).
+    pub record_every: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            max_iters: 200,
+            max_step_size: 1e-3,
+            initial_step_size: 1e-5,
+            gamma: GammaSchedule::Fixed(0.01),
+            stopping: StoppingCriteria::default(),
+            record_every: 1,
+        }
+    }
+}
+
+/// Paper Table 1, row "Maximizer": single required method.
+pub trait Maximizer {
+    fn maximize(
+        &mut self,
+        obj: &mut dyn ObjectiveFunction,
+        initial_value: &[f32],
+        opts: &SolveOptions,
+    ) -> SolveResult;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Drive the shared solve loop given an optimizer-specific step closure.
+///
+/// `step(t, gamma, eta_cap) -> (ObjectiveResult, step_used)` must evaluate
+/// the objective at its query point and advance its internal iterates.
+pub(crate) fn run_loop(
+    dual_dim: usize,
+    opts: &SolveOptions,
+    mut step: impl FnMut(usize, f32, f64) -> (ObjectiveResult, f64),
+    final_lam: impl FnOnce() -> Vec<f32>,
+) -> SolveResult {
+    let sw = Stopwatch::start();
+    let mut trajectory = Vec::new();
+    let mut stop_reason = StopReason::MaxIters;
+    let mut last: Option<ObjectiveResult> = None;
+    let mut iters = 0usize;
+
+    for t in 0..opts.max_iters {
+        let gamma = opts.gamma.gamma_at(t);
+        let eta_cap = opts.max_step_size * opts.gamma.step_cap_scale(t) as f64;
+        let (res, eta_used) = step(t, gamma, eta_cap);
+        iters = t + 1;
+
+        let grad_norm = crate::util::mathvec::norm2(&res.grad);
+        if t % opts.record_every == 0 || t + 1 == opts.max_iters {
+            trajectory.push(IterRecord {
+                iter: t,
+                dual_obj: res.dual_obj,
+                grad_norm,
+                infeas_pos_norm: res.infeas_pos_norm,
+                cx: res.cx,
+                gamma,
+                step_size: eta_used,
+                wall_ms: sw.elapsed_ms(),
+            });
+        }
+
+        let prev_obj = last.as_ref().map(|r| r.dual_obj);
+        last = Some(res);
+        if let Some(reason) = opts.stopping.check(t, grad_norm, prev_obj, last.as_ref().unwrap().dual_obj)
+        {
+            stop_reason = reason;
+            break;
+        }
+    }
+
+    let final_obj = last.unwrap_or_else(|| ObjectiveResult {
+        grad: vec![0.0; dual_dim],
+        dual_obj: f64::NEG_INFINITY,
+        cx: 0.0,
+        xsq_weighted: 0.0,
+        infeas_pos_norm: 0.0,
+    });
+    SolveResult {
+        lam: final_lam(),
+        final_obj,
+        trajectory,
+        stop_reason,
+        iterations: iters,
+        total_wall_ms: sw.elapsed_ms(),
+        final_gamma: opts.gamma.gamma_at(iters.saturating_sub(1)),
+    }
+}

@@ -1,0 +1,15 @@
+//! Optimization stack (paper §5): the `Maximizer` contract, Nesterov AGD
+//! with adaptive Lipschitz step sizing (the production optimizer), a plain
+//! PGD baseline, γ-continuation, and stopping criteria.
+
+pub mod agd;
+pub mod continuation;
+pub mod maximizer;
+pub mod pgd;
+pub mod stopping;
+
+pub use agd::Agd;
+pub use continuation::GammaSchedule;
+pub use maximizer::{IterRecord, Maximizer, SolveOptions, SolveResult};
+pub use pgd::Pgd;
+pub use stopping::{StopReason, StoppingCriteria};

@@ -1,0 +1,322 @@
+//! Blocked matching constraint matrix (paper Definition 1).
+//!
+//! `A ∈ R^{mJ × IJ}` is, per constraint family k, a horizontal concatenation
+//! of diagonal J×J blocks across sources i. Only eligible (i,j) pairs carry
+//! variables, so we store the matrix as per-source edge lists — the CSC
+//! "columns ordered by source, variables of a source contiguous" layout of
+//! §6 — with one value plane per family (all families share the eligibility
+//! pattern, as in the Appendix-B construction a_kij = s_jk · c_ij).
+//!
+//! Dual/row index convention: row (k, j) ↦ k*J + j.
+
+#[derive(Clone, Debug)]
+pub struct BlockedMatrix {
+    /// I — number of sources (variable blocks).
+    pub num_sources: usize,
+    /// J — number of destinations.
+    pub num_dests: usize,
+    /// m — number of matching constraint families.
+    pub num_families: usize,
+    /// Per-source edge ranges: edges of source i live in
+    /// `src_ptr[i]..src_ptr[i+1]`. len = I+1.
+    pub src_ptr: Vec<usize>,
+    /// Destination of each edge. len = nnz.
+    pub dest_idx: Vec<u32>,
+    /// Family coefficient planes: `a[k][e]` = a_{k, i(e), j(e)}. m × nnz.
+    pub a: Vec<Vec<f32>>,
+}
+
+impl BlockedMatrix {
+    pub fn nnz(&self) -> usize {
+        self.dest_idx.len()
+    }
+
+    /// Dual dimension mJ.
+    pub fn dual_dim(&self) -> usize {
+        self.num_families * self.num_dests
+    }
+
+    /// Degree (number of eligible destinations) of source i.
+    pub fn degree(&self, i: usize) -> usize {
+        self.src_ptr[i + 1] - self.src_ptr[i]
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_sources).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// u = (Aᵀ λ) restricted to edges: u[e] = Σ_k a_k[e] · λ[k*J + j(e)].
+    pub fn gather_dual(&self, lam: &[f32], u: &mut [f32]) {
+        assert_eq!(lam.len(), self.dual_dim());
+        assert_eq!(u.len(), self.nnz());
+        let j_of = &self.dest_idx;
+        match self.num_families {
+            1 => {
+                let a0 = &self.a[0];
+                for e in 0..u.len() {
+                    u[e] = a0[e] * lam[j_of[e] as usize];
+                }
+            }
+            _ => {
+                let jj = self.num_dests;
+                u.iter_mut().for_each(|v| *v = 0.0);
+                for (k, ak) in self.a.iter().enumerate() {
+                    let lk = &lam[k * jj..(k + 1) * jj];
+                    for e in 0..ak.len() {
+                        u[e] += ak[e] * lk[j_of[e] as usize];
+                    }
+                }
+            }
+        }
+    }
+
+    /// out += A x  where x is per-edge: out[k*J + j] += Σ_e a_k[e] x[e].
+    pub fn scatter_ax(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), self.nnz());
+        assert_eq!(out.len(), self.dual_dim());
+        let jj = self.num_dests;
+        for (k, ak) in self.a.iter().enumerate() {
+            let ok = &mut out[k * jj..(k + 1) * jj];
+            for e in 0..ak.len() {
+                ok[self.dest_idx[e] as usize] += ak[e] * x[e];
+            }
+        }
+    }
+
+    /// Squared norm of each constraint row (k,j): Σ_e over edges with
+    /// j(e)=j of a_k[e]² — i.e. diag(AAᵀ). Used for Jacobi normalization.
+    pub fn row_sq_norms(&self) -> Vec<f64> {
+        let mut n = vec![0.0f64; self.dual_dim()];
+        let jj = self.num_dests;
+        for (k, ak) in self.a.iter().enumerate() {
+            for e in 0..ak.len() {
+                let r = k * jj + self.dest_idx[e] as usize;
+                n[r] += ak[e] as f64 * ak[e] as f64;
+            }
+        }
+        n
+    }
+
+    /// Scale rows: a_k[e] ← a_k[e] · d[k*J + j(e)]  (A ← diag(d) A).
+    pub fn scale_rows(&mut self, d: &[f32]) {
+        assert_eq!(d.len(), self.dual_dim());
+        let jj = self.num_dests;
+        for (k, ak) in self.a.iter_mut().enumerate() {
+            for e in 0..ak.len() {
+                ak[e] *= d[k * jj + self.dest_idx[e] as usize];
+            }
+        }
+    }
+
+    /// Upper bound on ‖A‖₂² via ‖A‖₁·‖A‖_∞ (Holder); cheap and good enough
+    /// for the Lipschitz constant L = ‖A‖₂²/γ in Lemma A.1 checks.
+    pub fn op_norm_sq_upper(&self) -> f64 {
+        let jj = self.num_dests;
+        // ‖A‖_∞ = max row abs sum; ‖A‖₁ = max col abs sum.
+        let mut row_abs = vec![0.0f64; self.dual_dim()];
+        let mut col_max = 0.0f64;
+        for i in 0..self.num_sources {
+            for e in self.src_ptr[i]..self.src_ptr[i + 1] {
+                let mut col_sum = 0.0f64;
+                for (k, ak) in self.a.iter().enumerate() {
+                    let v = ak[e].abs() as f64;
+                    row_abs[k * jj + self.dest_idx[e] as usize] += v;
+                    col_sum += v;
+                }
+                col_max = col_max.max(col_sum);
+            }
+        }
+        let row_max = row_abs.iter().cloned().fold(0.0, f64::max);
+        row_max * col_max
+    }
+
+    /// Materialize as generic CSC over (rows = mJ, cols = edges) — for
+    /// conditioning experiments and tests.
+    pub fn to_csc(&self) -> super::csc::Csc {
+        let mut coo = super::coo::Coo::with_capacity(
+            self.dual_dim(),
+            self.nnz(),
+            self.nnz() * self.num_families,
+        );
+        let jj = self.num_dests;
+        for (k, ak) in self.a.iter().enumerate() {
+            for e in 0..ak.len() {
+                if ak[e] != 0.0 {
+                    coo.push(k * jj + self.dest_idx[e] as usize, e, ak[e]);
+                }
+            }
+        }
+        super::csc::Csc::from_coo(&coo)
+    }
+
+    /// Validity checks: monotone src_ptr covering nnz, dest indices in
+    /// range, consistent plane lengths, no duplicate dest within a source.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.src_ptr.len() != self.num_sources + 1 {
+            return Err("src_ptr length".into());
+        }
+        if self.src_ptr[0] != 0 || *self.src_ptr.last().unwrap() != self.nnz() {
+            return Err("src_ptr bounds".into());
+        }
+        if self.a.len() != self.num_families {
+            return Err("family plane count".into());
+        }
+        for ak in &self.a {
+            if ak.len() != self.nnz() {
+                return Err("plane length".into());
+            }
+        }
+        let mut seen = vec![u32::MAX; self.num_dests];
+        for i in 0..self.num_sources {
+            if self.src_ptr[i] > self.src_ptr[i + 1] {
+                return Err(format!("src_ptr not monotone at {i}"));
+            }
+            for e in self.src_ptr[i]..self.src_ptr[i + 1] {
+                let j = self.dest_idx[e] as usize;
+                if j >= self.num_dests {
+                    return Err(format!("dest {j} out of range"));
+                }
+                if seen[j] == i as u32 {
+                    return Err(format!("duplicate dest {j} in source {i}"));
+                }
+                seen[j] = i as u32;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 3 sources, 4 dests, 2 families.
+    fn sample() -> BlockedMatrix {
+        BlockedMatrix {
+            num_sources: 3,
+            num_dests: 4,
+            num_families: 2,
+            src_ptr: vec![0, 2, 3, 5],
+            dest_idx: vec![0, 2, 1, 2, 3],
+            a: vec![
+                vec![1.0, 2.0, 3.0, 4.0, 5.0],
+                vec![0.5, 0.5, 0.5, 0.5, 0.5],
+            ],
+        }
+    }
+
+    #[test]
+    fn validates() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn detects_duplicate_dest() {
+        let mut m = sample();
+        m.dest_idx = vec![0, 0, 1, 2, 3];
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn gather_matches_manual() {
+        let m = sample();
+        // lam[k*4+j]
+        let lam: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let mut u = vec![0.0; 5];
+        m.gather_dual(&lam, &mut u);
+        // edge0: src0,d0: 1.0*lam[0] + 0.5*lam[4] = 0 + 2 = 2
+        assert_eq!(u[0], 1.0 * 0.0 + 0.5 * 4.0);
+        // edge4: src2,d3: 5*3 + 0.5*7 = 18.5
+        assert_eq!(u[4], 5.0 * 3.0 + 0.5 * 7.0);
+    }
+
+    #[test]
+    fn gather_single_family_fast_path() {
+        let mut m = sample();
+        m.num_families = 1;
+        m.a.truncate(1);
+        let lam: Vec<f32> = (0..4).map(|v| v as f32 + 1.0).collect();
+        let mut u = vec![0.0; 5];
+        m.gather_dual(&lam, &mut u);
+        assert_eq!(u, vec![1.0, 6.0, 6.0, 12.0, 20.0]);
+    }
+
+    #[test]
+    fn scatter_matches_manual() {
+        let m = sample();
+        let x = vec![1.0, 1.0, 2.0, 1.0, 3.0];
+        let mut out = vec![0.0; 8];
+        m.scatter_ax(&x, &mut out);
+        // family0: d0: 1*1=1; d1: 3*2=6; d2: 2*1+4*1=6; d3: 5*3=15
+        assert_eq!(&out[0..4], &[1.0, 6.0, 6.0, 15.0]);
+        // family1: all 0.5: d0:0.5, d1:1.0, d2:0.5+0.5=1.0, d3:1.5
+        assert_eq!(&out[4..8], &[0.5, 1.0, 1.0, 1.5]);
+    }
+
+    #[test]
+    fn gather_scatter_adjoint() {
+        // <A x, λ> == <x, Aᵀ λ> — the fundamental adjoint identity.
+        let m = sample();
+        let x = vec![0.3, -0.2, 0.7, 1.1, -0.4];
+        let lam: Vec<f32> = (0..8).map(|v| (v as f32) * 0.13 - 0.4).collect();
+        let mut ax = vec![0.0; 8];
+        m.scatter_ax(&x, &mut ax);
+        let mut atl = vec![0.0; 5];
+        m.gather_dual(&lam, &mut atl);
+        let lhs: f64 = ax.iter().zip(&lam).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let rhs: f64 = atl.iter().zip(&x).map(|(a, b)| *a as f64 * *b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-5, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn row_norms_and_scaling() {
+        let mut m = sample();
+        let n = m.row_sq_norms();
+        assert_eq!(n[0], 1.0); // family0, d0: 1²
+        assert_eq!(n[2], 4.0 + 16.0); // family0, d2: 2² + 4²
+        let d: Vec<f32> = n
+            .iter()
+            .map(|&v| if v > 0.0 { 1.0 / (v as f32).sqrt() } else { 1.0 })
+            .collect();
+        m.scale_rows(&d);
+        for v in m.row_sq_norms() {
+            if v > 0.0 {
+                assert!((v - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn csc_roundtrip_spmv_agrees() {
+        let m = sample();
+        let csc = m.to_csc();
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut ax1 = vec![0.0; 8];
+        m.scatter_ax(&x, &mut ax1);
+        let mut ax2 = vec![0.0; 8];
+        csc.spmv(&x, &mut ax2);
+        for (a, b) in ax1.iter().zip(&ax2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn op_norm_upper_dominates_true_norm() {
+        let m = sample();
+        // crude power iteration on AAᵀ via csc
+        let csc = m.to_csc();
+        let mut v = vec![1.0f32; 8];
+        let mut tmp = vec![0.0f32; 5];
+        for _ in 0..50 {
+            csc.spmv_t(&v, &mut tmp);
+            csc.spmv(&tmp, &mut v);
+            let n = crate::util::mathvec::norm2(&v) as f32;
+            v.iter_mut().for_each(|x| *x /= n);
+        }
+        csc.spmv_t(&v, &mut tmp);
+        let mut av = vec![0.0f32; 8];
+        csc.spmv(&tmp, &mut av);
+        let sigma_sq = crate::util::mathvec::dot(&v, &av);
+        assert!(m.op_norm_sq_upper() >= sigma_sq - 1e-4);
+    }
+}

@@ -1,0 +1,65 @@
+//! Triplet (COO) builder — the mutable staging format the generator and
+//! tests use before converting to CSC / blocked layouts.
+
+/// Coordinate-format sparse matrix builder.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(nnz),
+            cols: Vec::with_capacity(nnz),
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.nrows && c < self.ncols, "({r},{c}) out of bounds");
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Dense materialization (row-major) — tests only.
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for k in 0..self.nnz() {
+            d[self.rows[k] as usize][self.cols[k] as usize] += self.vals[k];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_dense() {
+        let mut m = Coo::new(2, 3);
+        m.push(0, 1, 2.0);
+        m.push(1, 2, 3.0);
+        m.push(0, 1, 1.0); // duplicate accumulates in dense
+        assert_eq!(m.nnz(), 3);
+        let d = m.to_dense();
+        assert_eq!(d[0], vec![0.0, 3.0, 0.0]);
+        assert_eq!(d[1], vec![0.0, 0.0, 3.0]);
+    }
+}

@@ -1,0 +1,239 @@
+//! Compressed Sparse Column matrix.
+//!
+//! The paper (§6) stores constraint matrices in CSC with columns ordered so
+//! each source's variables are contiguous. This generic CSC type backs the
+//! row-normalization statistics (row norms need a full pass), the Lemma-5.1
+//! conditioning tests, and small dense comparisons; the solve hot path uses
+//! the specialized `BlockedMatrix` instead.
+
+use super::coo::Coo;
+
+#[derive(Clone, Debug)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// column pointers, len ncols+1
+    pub col_ptr: Vec<usize>,
+    /// row indices per nonzero, len nnz
+    pub row_idx: Vec<u32>,
+    /// values, len nnz
+    pub vals: Vec<f32>,
+}
+
+impl Csc {
+    /// Build from COO (duplicates summed, rows sorted within columns).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let nnz = coo.nnz();
+        // counting sort by column
+        let mut counts = vec![0usize; coo.ncols + 1];
+        for &c in &coo.cols {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..coo.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let col_start = counts.clone();
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0.0f32; nnz];
+        let mut next = col_start.clone();
+        for k in 0..nnz {
+            let c = coo.cols[k] as usize;
+            let p = next[c];
+            row_idx[p] = coo.rows[k];
+            vals[p] = coo.vals[k];
+            next[c] += 1;
+        }
+        // sort within each column by row, summing duplicates
+        let mut out_ptr = vec![0usize; coo.ncols + 1];
+        let mut out_rows = Vec::with_capacity(nnz);
+        let mut out_vals = Vec::with_capacity(nnz);
+        let mut scratch: Vec<(u32, f32)> = Vec::new();
+        for c in 0..coo.ncols {
+            scratch.clear();
+            scratch.extend(
+                row_idx[col_start[c]..col_start[c + 1]]
+                    .iter()
+                    .copied()
+                    .zip(vals[col_start[c]..col_start[c + 1]].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (r, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == r {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                out_rows.push(r);
+                out_vals.push(v);
+                i = j;
+            }
+            out_ptr[c + 1] = out_rows.len();
+        }
+        Csc {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            col_ptr: out_ptr,
+            row_idx: out_rows,
+            vals: out_vals,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// y = A x  (y: nrows, x: ncols).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for c in 0..self.ncols {
+            let xc = x[c];
+            if xc == 0.0 {
+                continue;
+            }
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                y[self.row_idx[k] as usize] += self.vals[k] * xc;
+            }
+        }
+    }
+
+    /// y = Aᵀ x  (y: ncols, x: nrows).
+    pub fn spmv_t(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        for c in 0..self.ncols {
+            let mut acc = 0.0f32;
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                acc += self.vals[k] * x[self.row_idx[k] as usize];
+            }
+            y[c] = acc;
+        }
+    }
+
+    /// Squared Euclidean norm of each row: diag(AAᵀ).
+    pub fn row_sq_norms(&self) -> Vec<f64> {
+        let mut n = vec![0.0f64; self.nrows];
+        for k in 0..self.nnz() {
+            n[self.row_idx[k] as usize] += (self.vals[k] as f64) * (self.vals[k] as f64);
+        }
+        n
+    }
+
+    /// Squared Euclidean norm of each column.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        let mut n = vec![0.0f64; self.ncols];
+        for c in 0..self.ncols {
+            for k in self.col_ptr[c]..self.col_ptr[c + 1] {
+                n[c] += (self.vals[k] as f64) * (self.vals[k] as f64);
+            }
+        }
+        n
+    }
+
+    /// Scale every row r by d[r] (in place): A ← diag(d) A.
+    pub fn scale_rows(&mut self, d: &[f32]) {
+        assert_eq!(d.len(), self.nrows);
+        for k in 0..self.vals.len() {
+            self.vals[k] *= d[self.row_idx[k] as usize];
+        }
+    }
+
+    /// Dense AAᵀ (tests / conditioning experiments only — O(nrows²)).
+    pub fn aat_dense(&self) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![0.0f64; self.nrows]; self.nrows];
+        for c in 0..self.ncols {
+            let lo = self.col_ptr[c];
+            let hi = self.col_ptr[c + 1];
+            for p in lo..hi {
+                for q in lo..hi {
+                    m[self.row_idx[p] as usize][self.row_idx[q] as usize] +=
+                        self.vals[p] as f64 * self.vals[q] as f64;
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csc {
+        // [[1, 0, 2],
+        //  [0, 3, 4]]
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 3.0);
+        coo.push(0, 2, 2.0);
+        coo.push(1, 2, 4.0);
+        Csc::from_coo(&coo)
+    }
+
+    #[test]
+    fn from_coo_structure() {
+        let a = sample();
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.col_ptr, vec![0, 1, 2, 4]);
+        assert_eq!(a.row_idx, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn duplicates_sum() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        let a = Csc::from_coo(&coo);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.vals, vec![3.0]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = sample();
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![0.0; 2];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, vec![1.0 + 6.0, 6.0 + 12.0]);
+    }
+
+    #[test]
+    fn spmv_t_matches_dense() {
+        let a = sample();
+        let x = vec![1.0, 2.0];
+        let mut y = vec![0.0; 3];
+        a.spmv_t(&x, &mut y);
+        assert_eq!(y, vec![1.0, 6.0, 2.0 + 8.0]);
+    }
+
+    #[test]
+    fn row_and_col_norms() {
+        let a = sample();
+        assert_eq!(a.row_sq_norms(), vec![5.0, 25.0]);
+        assert_eq!(a.col_sq_norms(), vec![1.0, 9.0, 20.0]);
+    }
+
+    #[test]
+    fn scale_rows_changes_norms() {
+        let mut a = sample();
+        let d: Vec<f32> = a.row_sq_norms().iter().map(|&n| 1.0 / (n as f32).sqrt()).collect();
+        a.scale_rows(&d);
+        let n = a.row_sq_norms();
+        for v in n {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn aat_dense_symmetry() {
+        let a = sample();
+        let m = a.aat_dense();
+        assert_eq!(m[0][0], 5.0);
+        assert_eq!(m[1][1], 25.0);
+        assert_eq!(m[0][1], m[1][0]);
+        assert_eq!(m[0][1], 8.0); // 2*4 from shared col 2
+    }
+}

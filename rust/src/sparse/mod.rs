@@ -1,0 +1,13 @@
+//! Sparse substrates: generic COO/CSC, the matching-structured blocked
+//! matrix (paper Definition 1), and the log₂-bucketed padded slab layout
+//! the batched projection kernels execute on (paper §6).
+
+pub mod blocked;
+pub mod coo;
+pub mod csc;
+pub mod slabs;
+
+pub use blocked::BlockedMatrix;
+pub use coo::Coo;
+pub use csc::Csc;
+pub use slabs::{Bucket, SlabLayout};

@@ -1,0 +1,323 @@
+//! Log₂-bucketed padded slab layout (paper §6 "Batched projection
+//! operator").
+//!
+//! Sources are grouped by slice length (degree) into geometric buckets
+//! `[2^{t-1}, 2^t)`; each bucket's slices are gathered into a dense slab
+//! padded to the bucket's upper bound. One batched kernel launch per bucket
+//! replaces one launch per source, while geometric bucketing bounds padding
+//! waste below 2× — the number of launches is `1 + ⌊log₂ s_max⌋`.
+//!
+//! The slab row order remembers its source ids so the coordinator can
+//! gather λ into per-edge `u` and scatter-add `a ⊙ x` back into the dual
+//! gradient.
+
+use super::blocked::BlockedMatrix;
+use crate::projection::ProjectionKind;
+
+/// Minimum slab width (tiny rows are padded up to this).
+pub const MIN_WIDTH: usize = 4;
+/// Maximum slab width supported by the AOT artifact family.
+pub const MAX_WIDTH: usize = 512;
+
+/// One log₂ bucket: a dense `[rows × width]` slab of edges.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    /// Projection kind for every row in this bucket.
+    pub kind: ProjectionKind,
+    /// Padded width (power of two in [MIN_WIDTH, MAX_WIDTH]).
+    pub width: usize,
+    /// Source id of each row.
+    pub sources: Vec<u32>,
+    /// Flattened [rows × width] destination index (0 on padding).
+    pub dest_idx: Vec<u32>,
+    /// Flattened [rows × width] global edge index (u32::MAX on padding) —
+    /// lets the coordinator apply global constraint rows and recover the
+    /// per-edge primal without re-deriving chunk offsets.
+    pub edge_id: Vec<u32>,
+    /// Flattened [rows × width] cost coefficients (0 on padding).
+    pub cost: Vec<f32>,
+    /// Per-family flattened [rows × width] constraint coefficients.
+    pub a: Vec<Vec<f32>>,
+    /// Flattened [rows × width] validity mask (1 real, 0 padding).
+    pub mask: Vec<f32>,
+}
+
+impl Bucket {
+    pub fn rows(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn real_edges(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    pub fn padded_edges(&self) -> usize {
+        self.dest_idx.len()
+    }
+}
+
+/// The full bucketed layout of one (shard of a) matching LP.
+#[derive(Clone, Debug)]
+pub struct SlabLayout {
+    pub buckets: Vec<Bucket>,
+    pub num_families: usize,
+    pub num_dests: usize,
+}
+
+/// Round degree up to the bucket width: next power of two, clamped to
+/// [MIN_WIDTH, MAX_WIDTH].
+pub fn bucket_width(degree: usize) -> usize {
+    degree.next_power_of_two().clamp(MIN_WIDTH, MAX_WIDTH)
+}
+
+impl SlabLayout {
+    /// Build the layout for sources `[src_lo, src_hi)` of `m` with costs
+    /// `cost` (per edge, global indexing) and per-source projection kinds
+    /// given by `kind_of` (the ProjectionMap of paper Table 1).
+    ///
+    /// Sources whose degree exceeds MAX_WIDTH are rejected for
+    /// non-separable polytopes (simplex) — the row-wise projection needs
+    /// the whole block in one row — and split across rows for separable
+    /// ones (box).
+    pub fn build(
+        m: &BlockedMatrix,
+        cost: &[f32],
+        src_lo: usize,
+        src_hi: usize,
+        kind_of: &dyn Fn(usize) -> ProjectionKind,
+    ) -> Result<SlabLayout, String> {
+        assert!(src_lo <= src_hi && src_hi <= m.num_sources);
+        assert_eq!(cost.len(), m.nnz());
+
+        // Pass 1: count rows per (kind, width) bucket.
+        use std::collections::BTreeMap;
+        let mut groups: BTreeMap<(ProjectionKind, usize), Vec<u32>> = BTreeMap::new();
+        for i in src_lo..src_hi {
+            let deg = m.degree(i);
+            if deg == 0 {
+                continue; // isolated source: no variables
+            }
+            let kind = kind_of(i);
+            if deg > MAX_WIDTH {
+                if kind == ProjectionKind::Simplex {
+                    return Err(format!(
+                        "source {i} degree {deg} exceeds MAX_WIDTH {MAX_WIDTH} \
+                         for non-separable simplex projection"
+                    ));
+                }
+                // separable: split into MAX_WIDTH chunks (handled in pass 2
+                // by pushing the same source several times)
+                let chunks = deg.div_ceil(MAX_WIDTH);
+                groups
+                    .entry((kind, MAX_WIDTH))
+                    .or_default()
+                    .extend(std::iter::repeat(i as u32).take(chunks));
+            } else {
+                groups.entry((kind, bucket_width(deg))).or_default().push(i as u32);
+            }
+        }
+
+        // Pass 2: fill slabs.
+        let mut buckets = Vec::with_capacity(groups.len());
+        for ((kind, width), sources) in groups {
+            let rows = sources.len();
+            let n = rows * width;
+            let mut bk = Bucket {
+                kind,
+                width,
+                sources: Vec::with_capacity(rows),
+                dest_idx: vec![0u32; n],
+                edge_id: vec![u32::MAX; n],
+                cost: vec![0.0f32; n],
+                a: vec![vec![0.0f32; n]; m.num_families],
+                mask: vec![0.0f32; n],
+            };
+            let mut row = 0usize;
+            let mut cursor: Option<(u32, usize)> = None; // (source, next edge offset) for splits
+            for &src in &sources {
+                let i = src as usize;
+                let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
+                let start = match cursor {
+                    Some((s, off)) if s == src => e0 + off,
+                    _ => e0,
+                };
+                let take = (e1 - start).min(width);
+                let base = row * width;
+                for (col, e) in (start..start + take).enumerate() {
+                    bk.dest_idx[base + col] = m.dest_idx[e];
+                    bk.edge_id[base + col] = e as u32;
+                    bk.cost[base + col] = cost[e];
+                    for k in 0..m.num_families {
+                        bk.a[k][base + col] = m.a[k][e];
+                    }
+                    bk.mask[base + col] = 1.0;
+                }
+                bk.sources.push(src);
+                cursor = if start + take < e1 {
+                    Some((src, start + take - e0))
+                } else {
+                    None
+                };
+                row += 1;
+            }
+            buckets.push(bk);
+        }
+        Ok(SlabLayout {
+            buckets,
+            num_families: m.num_families,
+            num_dests: m.num_dests,
+        })
+    }
+
+    pub fn total_rows(&self) -> usize {
+        self.buckets.iter().map(|b| b.rows()).sum()
+    }
+
+    pub fn total_real_edges(&self) -> usize {
+        self.buckets.iter().map(|b| b.real_edges()).sum()
+    }
+
+    pub fn total_padded_edges(&self) -> usize {
+        self.buckets.iter().map(|b| b.padded_edges()).sum()
+    }
+
+    /// Padding overhead factor (paper: < 2 within each bucket).
+    pub fn padding_factor(&self) -> f64 {
+        self.total_padded_edges() as f64 / self.total_real_edges().max(1) as f64
+    }
+
+    /// Number of kernel launches per iteration under this layout
+    /// (paper: 1 + ⌊log₂ s_max⌋ per kind).
+    pub fn num_launches(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix(degrees: &[usize], num_dests: usize) -> (BlockedMatrix, Vec<f32>) {
+        let mut src_ptr = vec![0usize];
+        let mut dest_idx = Vec::new();
+        for &d in degrees {
+            for j in 0..d {
+                dest_idx.push((j % num_dests) as u32);
+            }
+            src_ptr.push(dest_idx.len());
+        }
+        let nnz = dest_idx.len();
+        let a = vec![(0..nnz).map(|e| 1.0 + e as f32 * 0.1).collect()];
+        let cost = (0..nnz).map(|e| -(e as f32) * 0.01 - 0.1).collect();
+        (
+            BlockedMatrix {
+                num_sources: degrees.len(),
+                num_dests,
+                num_families: 1,
+                src_ptr,
+                dest_idx,
+                a,
+            },
+            cost,
+        )
+    }
+
+    #[test]
+    fn bucket_width_pow2() {
+        assert_eq!(bucket_width(1), MIN_WIDTH);
+        assert_eq!(bucket_width(4), 4);
+        assert_eq!(bucket_width(5), 8);
+        assert_eq!(bucket_width(8), 8);
+        assert_eq!(bucket_width(9), 16);
+        assert_eq!(bucket_width(4000), MAX_WIDTH);
+    }
+
+    #[test]
+    fn builds_buckets_by_log2_degree() {
+        let (m, cost) = matrix(&[3, 4, 5, 9, 17, 2], 32);
+        let l = SlabLayout::build(&m, &cost, 0, 6, &|_| ProjectionKind::Simplex).unwrap();
+        let widths: Vec<usize> = l.buckets.iter().map(|b| b.width).collect();
+        assert_eq!(widths, vec![4, 8, 16, 32]);
+        // w=4 bucket has sources 0 (deg3), 1 (deg4), 5 (deg2)
+        assert_eq!(l.buckets[0].sources, vec![0, 1, 5]);
+        assert_eq!(l.total_rows(), 6);
+        assert_eq!(l.total_real_edges(), 3 + 4 + 5 + 9 + 17 + 2);
+    }
+
+    #[test]
+    fn padding_factor_below_two() {
+        let degrees: Vec<usize> = (1..200).collect();
+        let (m, cost) = matrix(&degrees, 256);
+        let l = SlabLayout::build(&m, &cost, 0, degrees.len(), &|_| ProjectionKind::Box).unwrap();
+        assert!(l.padding_factor() < 2.3, "factor={}", l.padding_factor());
+        // and launches bounded by kinds × widths
+        assert!(l.num_launches() <= 1 + (256f64).log2() as usize);
+    }
+
+    #[test]
+    fn slab_contents_match_matrix() {
+        let (m, cost) = matrix(&[3, 4], 8);
+        let l = SlabLayout::build(&m, &cost, 0, 2, &|_| ProjectionKind::Simplex).unwrap();
+        let b = &l.buckets[0];
+        assert_eq!(b.width, 4);
+        assert_eq!(b.rows(), 2);
+        // row 0 = source 0 (deg 3): 3 real + 1 pad
+        assert_eq!(&b.mask[0..4], &[1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(b.dest_idx[0..3], m.dest_idx[0..3]);
+        assert_eq!(b.cost[0..3], cost[0..3]);
+        assert_eq!(b.a[0][0..3], m.a[0][0..3]);
+        // padding carries zeros
+        assert_eq!(b.cost[3], 0.0);
+        assert_eq!(b.a[0][3], 0.0);
+    }
+
+    #[test]
+    fn shard_ranges_partition_edges() {
+        let (m, cost) = matrix(&[3, 4, 5, 9, 17, 2], 32);
+        let full = SlabLayout::build(&m, &cost, 0, 6, &|_| ProjectionKind::Box).unwrap();
+        let a = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Box).unwrap();
+        let b = SlabLayout::build(&m, &cost, 3, 6, &|_| ProjectionKind::Box).unwrap();
+        assert_eq!(
+            full.total_real_edges(),
+            a.total_real_edges() + b.total_real_edges()
+        );
+    }
+
+    #[test]
+    fn simplex_rejects_overwide_source() {
+        let (m, cost) = matrix(&[MAX_WIDTH + 1], MAX_WIDTH + 2);
+        let err = SlabLayout::build(&m, &cost, 0, 1, &|_| ProjectionKind::Simplex);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn box_splits_overwide_source() {
+        let deg = MAX_WIDTH + 10;
+        let (m, cost) = matrix(&[deg], MAX_WIDTH + 16);
+        let l = SlabLayout::build(&m, &cost, 0, 1, &|_| ProjectionKind::Box).unwrap();
+        assert_eq!(l.total_real_edges(), deg);
+        assert_eq!(l.total_rows(), 2); // split into two rows
+        assert_eq!(l.buckets[0].sources, vec![0, 0]);
+    }
+
+    #[test]
+    fn mixed_projection_kinds_bucket_separately() {
+        let (m, cost) = matrix(&[3, 3, 3, 3], 8);
+        let l = SlabLayout::build(&m, &cost, 0, 4, &|i| {
+            if i % 2 == 0 { ProjectionKind::Simplex } else { ProjectionKind::Box }
+        })
+        .unwrap();
+        assert_eq!(l.num_launches(), 2);
+        let kinds: Vec<_> = l.buckets.iter().map(|b| b.kind).collect();
+        assert!(kinds.contains(&ProjectionKind::Simplex));
+        assert!(kinds.contains(&ProjectionKind::Box));
+    }
+
+    #[test]
+    fn zero_degree_sources_skipped() {
+        let (m, cost) = matrix(&[0, 3, 0], 8);
+        let l = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        assert_eq!(l.total_rows(), 1);
+        assert_eq!(l.buckets[0].sources, vec![1]);
+    }
+}

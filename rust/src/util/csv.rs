@@ -1,0 +1,68 @@
+//! Minimal CSV emission for figure/table data (`results/*.csv`).
+//! No quoting subtleties needed: all emitted fields are numbers or plain
+//! identifiers.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent dirs) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    /// Write one row of stringified fields.
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
+        writeln!(self.w, "{}", fields.join(","))
+    }
+
+    /// Convenience: row of f64s, formatted with enough digits.
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let s: Vec<String> = fields.iter().map(|v| format!("{v:.9e}")).collect();
+        self.row(&s)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Format a mixed row: helper macro-free builder.
+pub fn fields(items: &[&dyn std::fmt::Display]) -> Vec<String> {
+    items.iter().map(|v| v.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("dualip_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "value"]).unwrap();
+            w.row(&fields(&[&1, &2.5])).unwrap();
+            w.row_f64(&[2.0, 3.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "iter,value");
+        assert_eq!(lines.next().unwrap(), "1,2.5");
+        assert!(lines.next().unwrap().starts_with("2.0"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared utilities: seeded RNG + distributions, dense vector kernels,
+//! phase timers, CSV emission.
+
+pub mod csv;
+pub mod mathvec;
+pub mod rng;
+pub mod timer;

