@@ -1,0 +1,37 @@
+//! Experiment E12 — serving-side warm-start claim: on a stream of
+//! same-pattern instances with perturbed `c`/`b`, a warm-started re-solve
+//! reaches the matched stopping criterion (objective stall at the floor γ)
+//! in measurably fewer AGD iterations than a cold solve. Since first-order
+//! LP wall-clock is iteration-bound, iteration savings are the serving
+//! win; the batch scheduler additionally overlaps jobs across the pool.
+//!
+//! Emits machine-readable `results/BENCH_engine_warmstart.json` (cold vs
+//! warm iterations and wall-ms per job + aggregate speedup) so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Run: cargo bench --bench bench_engine_warmstart
+//!      [DUALIP_BENCH_FAST=1 for CI size]
+
+use dualip::cli::{commands, Args};
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let (sources, dests, jobs) = if fast { (5_000, 100, 8) } else { (50_000, 500, 16) };
+    let argv = [
+        "engine-batch".to_string(),
+        "--sources".into(),
+        sources.to_string(),
+        "--dests".into(),
+        dests.to_string(),
+        "--jobs".into(),
+        jobs.to_string(),
+        "--threads".into(),
+        "8".into(),
+        "--perturb".into(),
+        "0.05".into(),
+        "--seed".into(),
+        "0".into(),
+    ];
+    let args = Args::parse(argv.into_iter())?;
+    commands::cmd_engine_batch(&args)
+}

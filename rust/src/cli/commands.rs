@@ -33,6 +33,11 @@ pub fn usage() -> &'static str {
          --sources N --iters N --ref-iters N --out-dir results/\n\
        ablation-gamma    E6: γ continuation vs fixed (Fig 5)\n\
          --sources N --iters N --ref-iters N --out-dir results/\n\
+       engine-batch      E12: warm-started repeated-solve engine on a\n\
+                         perturbation stream (cold vs warm, matched stop)\n\
+         --sources N --dests N --nnz-per-row F --seed S\n\
+         --jobs N --threads N --perturb F --warm-tail N\n\
+         --iters N --stall-tol F --out-dir results/\n\
        info              artifact + environment report\n\
      \n\
      Artifacts default to ./artifacts ($DUALIP_ARTIFACTS overrides)."
@@ -434,6 +439,157 @@ pub fn cmd_ablation_gamma(args: &Args) -> Result<()> {
     }
     w.flush()?;
     println!("ablation-gamma: wrote {out_dir}/fig5_gamma.csv; {}", summaries.join(", "));
+    Ok(())
+}
+
+/// `dualip engine-batch` — E12: the serving-side repeated-solve pattern.
+///
+/// Generates a base instance, conditions it (§5.1), derives a stream of
+/// same-pattern instances with perturbed `c`/`b` (the production refresh
+/// pattern), and solves the stream twice under a **matched stopping
+/// criterion** (objective stall at the floor γ):
+///
+/// - **cold**: every instance from λ = 0 with the full γ-continuation;
+/// - **warm**: through a `SolveEngine` primed on the base solve — each
+///   re-solve starts from the cached dual with a short γ tail, batched
+///   across the thread pool.
+///
+/// Reports iterations-to-stop and wall-clock per job for both, and writes
+/// `BENCH_engine_warmstart.json` for cross-PR perf tracking.
+pub fn cmd_engine_batch(args: &Args) -> Result<()> {
+    use crate::engine::{EngineConfig, SolveEngine, SolveJob};
+    use crate::gen::workloads::{perturbation_sequence, PerturbSpec};
+    use crate::metrics::{batch_report, engine_report, BenchJson, JsonValue};
+    use crate::solver::StoppingCriteria;
+
+    let cfg = workload(args)?;
+    let jobs = args.usize_or("jobs", 12)?;
+    let threads = args.usize_or("threads", 8)?;
+    let warm_tail = args.usize_or("warm-tail", 5)?;
+    let perturb = args.f64_or("perturb", 0.05)?;
+    let stall_tol = args.f64_or("stall-tol", 1e-7)?;
+    let max_iters = args.usize_or("iters", 2_000)?;
+    let out_dir = args.get_or("out-dir", "results").to_string();
+
+    eprintln!(
+        "engine-batch: I={} J={} ν={} seed={} jobs={jobs} threads={threads} perturb={perturb}",
+        cfg.num_requests, cfg.num_resources, cfg.avg_nnz_per_row, cfg.seed
+    );
+    let mut base = generate(&cfg);
+    jacobi_row_normalize(&mut base);
+    let base_nnz = base.nnz();
+
+    // Matched stopping criterion for BOTH paths: objective stall at the
+    // floor γ (raw ‖∇g‖ does not vanish at a constrained optimum, so a
+    // gradient tolerance is not reachable on matching LPs).
+    let opts = SolveOptions {
+        max_iters,
+        max_step_size: 1.0, // conditioned Hessian ⇒ unit-scale cap
+        initial_step_size: 1e-4,
+        gamma: GammaSchedule::paper_fig5(),
+        stopping: StoppingCriteria {
+            stall_tol: Some(stall_tol),
+            stall_patience: 10,
+            ..Default::default()
+        },
+        record_every: 1_000,
+    };
+    let spec = PerturbSpec { c_rel: perturb, b_rel: perturb };
+    let seq_seed = cfg.seed.wrapping_add(1);
+
+    // --- cold baseline: every instance from scratch ----------------------
+    let cold_engine = SolveEngine::new(EngineConfig {
+        opts: opts.clone(),
+        warm_tail,
+        threads: 1,
+        cache_capacity: 0, // disables warm starting
+    });
+    let cold_results: Vec<_> = perturbation_sequence(&base, &spec, jobs, seq_seed)
+        .into_iter()
+        .enumerate()
+        .map(|(k, lp)| cold_engine.submit(SolveJob::new(k as u64, lp)))
+        .collect();
+
+    // --- warm engine: primed once, then the stream as one batch ----------
+    let warm_engine = SolveEngine::new(EngineConfig {
+        opts: opts.clone(),
+        warm_tail,
+        threads,
+        cache_capacity: 16,
+    });
+    let warm_jobs: Vec<SolveJob> = perturbation_sequence(&base, &spec, jobs, seq_seed)
+        .into_iter()
+        .enumerate()
+        .map(|(k, lp)| SolveJob::new(k as u64, lp))
+        .collect();
+    let primer = warm_engine.submit(SolveJob::new(u64::MAX, base));
+    eprintln!(
+        "primed cache from base solve: {} iters, stop {:?}",
+        primer.iterations, primer.stop_reason
+    );
+    let (warm_results, breport) = warm_engine.solve_batch(warm_jobs);
+
+    // --- report ----------------------------------------------------------
+    let mut bench = BenchJson::new("engine_warmstart");
+    bench
+        .meta("sources", JsonValue::UInt(cfg.num_requests as u64))
+        .meta("dests", JsonValue::UInt(cfg.num_resources as u64))
+        .meta("nnz", JsonValue::UInt(base_nnz as u64))
+        .meta("jobs", JsonValue::UInt(jobs as u64))
+        .meta("threads", JsonValue::UInt(threads as u64))
+        .meta("perturb", JsonValue::Num(perturb))
+        .meta("stall_tol", JsonValue::Num(stall_tol))
+        .meta("warm_tail", JsonValue::UInt(warm_tail as u64))
+        .meta("seed", JsonValue::UInt(cfg.seed));
+
+    println!(
+        "{:>4} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "job", "cold iter", "warm iter", "cold ms", "warm ms", "Δobj rel"
+    );
+    let (mut cold_iter_sum, mut warm_iter_sum) = (0u64, 0u64);
+    let (mut cold_ms_sum, mut warm_ms_sum) = (0.0f64, 0.0f64);
+    for (c, w) in cold_results.iter().zip(&warm_results) {
+        let rel = (c.dual_obj - w.dual_obj).abs() / c.dual_obj.abs().max(1.0);
+        println!(
+            "{:>4} {:>10} {:>10} {:>12.1} {:>12.1} {:>10.2e}",
+            c.id, c.iterations, w.iterations, c.wall_ms, w.wall_ms, rel
+        );
+        bench.row(&[
+            ("job", JsonValue::UInt(c.id)),
+            ("cold_iters", JsonValue::UInt(c.iterations as u64)),
+            ("warm_iters", JsonValue::UInt(w.iterations as u64)),
+            ("cold_wall_ms", JsonValue::Num(c.wall_ms)),
+            ("warm_wall_ms", JsonValue::Num(w.wall_ms)),
+            ("cold_obj", JsonValue::Num(c.dual_obj)),
+            ("warm_obj", JsonValue::Num(w.dual_obj)),
+            ("obj_rel_diff", JsonValue::Num(rel)),
+            ("cold_stop", JsonValue::Str(format!("{:?}", c.stop_reason))),
+            ("warm_stop", JsonValue::Str(format!("{:?}", w.stop_reason))),
+        ]);
+        cold_iter_sum += c.iterations as u64;
+        warm_iter_sum += w.iterations as u64;
+        cold_ms_sum += c.wall_ms;
+        warm_ms_sum += w.wall_ms;
+    }
+    let n = cold_results.len().max(1) as f64;
+    let iter_speedup = cold_iter_sum as f64 / warm_iter_sum.max(1) as f64;
+    bench
+        .meta("mean_cold_iters", JsonValue::Num(cold_iter_sum as f64 / n))
+        .meta("mean_warm_iters", JsonValue::Num(warm_iter_sum as f64 / n))
+        .meta("iter_speedup", JsonValue::Num(iter_speedup));
+    let path = bench.write(&out_dir)?;
+
+    println!(
+        "mean iters: cold {:.1} vs warm {:.1} ({iter_speedup:.2}x fewer); \
+         mean wall: cold {:.1}ms vs warm {:.1}ms",
+        cold_iter_sum as f64 / n,
+        warm_iter_sum as f64 / n,
+        cold_ms_sum / n,
+        warm_ms_sum / n,
+    );
+    println!("{}", engine_report(&warm_engine.stats()));
+    println!("{}", batch_report(&breport));
+    println!("wrote {}", path.display());
     Ok(())
 }
 

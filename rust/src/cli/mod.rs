@@ -18,6 +18,7 @@ pub fn run(args: Args) -> Result<()> {
         "parity" => commands::cmd_parity(&args),
         "ablation-precond" => commands::cmd_ablation_precond(&args),
         "ablation-gamma" => commands::cmd_ablation_gamma(&args),
+        "engine-batch" => commands::cmd_engine_batch(&args),
         "info" => commands::cmd_info(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n");

@@ -1,0 +1,180 @@
+//! Structural fingerprint of a `MatchingLp` (DESIGN.md §3).
+//!
+//! Production traffic re-solves *perturbed* instances: the eligibility
+//! graph (which (source, destination) pairs carry variables) changes
+//! slowly, while objective coefficients `c` and budgets `b` refresh every
+//! cycle. The fingerprint captures exactly the slow part — dimensions,
+//! family count, global-row count, and a hash of the sparsity pattern
+//! (`src_ptr` + `dest_idx`) — and deliberately ignores the numeric planes,
+//! so a (same-pattern, new-`c`/`b`) instance maps to the same key and the
+//! warm-start cache recognizes it as a re-solve.
+
+use std::fmt;
+
+use crate::problem::MatchingLp;
+
+/// 64-bit FNV-1a over a little-endian byte stream — dependency-free,
+/// deterministic across runs and platforms (same requirement as the
+/// workload RNG: identical instances must key identically everywhere).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv64 {
+        Fnv64(Self::OFFSET)
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Structural identity of a matching LP. Two instances with equal
+/// fingerprints share dims and the exact `A` sparsity pattern; their
+/// dual spaces are therefore identical and a final λ of one is a valid
+/// (and, under small `c`/`b` perturbation, near-optimal) start for the
+/// other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint {
+    pub num_sources: usize,
+    pub num_dests: usize,
+    pub num_families: usize,
+    pub num_global_rows: usize,
+    pub nnz: usize,
+    /// FNV-1a over (src_ptr, dest_idx).
+    pub pattern_hash: u64,
+}
+
+impl Fingerprint {
+    pub fn of(lp: &MatchingLp) -> Fingerprint {
+        let mut h = Fnv64::new();
+        for &p in &lp.a.src_ptr {
+            h.write_u64(p as u64);
+        }
+        for &j in &lp.a.dest_idx {
+            h.write_u32(j);
+        }
+        Fingerprint {
+            num_sources: lp.num_sources(),
+            num_dests: lp.num_dests(),
+            num_families: lp.num_families(),
+            num_global_rows: lp.global_rows.len(),
+            nnz: lp.nnz(),
+            pattern_hash: h.finish(),
+        }
+    }
+
+    /// Dual dimension implied by the fingerprint (mJ + G) — used to reject
+    /// stale cache entries whose λ no longer matches.
+    pub fn dual_dim(&self) -> usize {
+        self.num_families * self.num_dests + self.num_global_rows
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{} m={} g={} nnz={} #{:016x}",
+            self.num_sources,
+            self.num_dests,
+            self.num_families,
+            self.num_global_rows,
+            self.nnz,
+            self.pattern_hash
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, workloads, SyntheticConfig};
+
+    fn small(seed: u64) -> MatchingLp {
+        generate(&SyntheticConfig {
+            num_requests: 300,
+            num_resources: 24,
+            avg_nnz_per_row: 5.0,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn identical_instances_share_fingerprint() {
+        let a = Fingerprint::of(&small(3));
+        let b = Fingerprint::of(&small(3));
+        assert_eq!(a, b);
+        assert_eq!(a.dual_dim(), 24);
+    }
+
+    #[test]
+    fn perturbed_cost_and_rhs_keep_fingerprint() {
+        let base = small(4);
+        let spec = workloads::PerturbSpec::default();
+        let re = workloads::perturb_instance(&base, &spec, 99);
+        assert_ne!(base.cost, re.cost);
+        assert_eq!(Fingerprint::of(&base), Fingerprint::of(&re));
+    }
+
+    #[test]
+    fn different_pattern_changes_hash() {
+        let a = Fingerprint::of(&small(5));
+        let b = Fingerprint::of(&small(6));
+        assert_ne!(a, b, "different seeds draw different graphs");
+    }
+
+    #[test]
+    fn global_rows_count_into_identity() {
+        let mut lp = small(7);
+        let a = Fingerprint::of(&lp);
+        lp.push_global_row(vec![1.0; lp.nnz()], 10.0);
+        let b = Fingerprint::of(&lp);
+        assert_ne!(a, b);
+        assert_eq!(b.dual_dim(), a.dual_dim() + 1);
+    }
+
+    #[test]
+    fn fnv_is_order_sensitive() {
+        let mut h1 = Fnv64::new();
+        h1.write_u32(1);
+        h1.write_u32(2);
+        let mut h2 = Fnv64::new();
+        h2.write_u32(2);
+        h2.write_u32(1);
+        assert_ne!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let s = format!("{}", Fingerprint::of(&small(8)));
+        assert!(s.contains("300x24"));
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,34 @@
+//! Serving layer (DESIGN.md §3): a persistent multi-problem solve engine
+//! for the production pattern the paper opens with — LPs that "must be
+//! solved repeatedly at massive scale" as ranking/allocation inputs refresh
+//! under traffic.
+//!
+//! The seed stack solved one cold instance per process. This layer sits
+//! above `solver/` and `problem/` and adds what repeated solving needs:
+//!
+//! - [`fingerprint`] — a structural fingerprint of a `MatchingLp` (dims,
+//!   family count, sparsity-pattern hash) so instances that share an `A`
+//!   pattern but carry perturbed `c`/`b` are recognized as re-solves;
+//! - [`warmstart`] — a dual warm-start cache mapping fingerprint → final
+//!   (λ, γ), so a re-solve starts AGD from the cached dual with a short
+//!   γ-continuation tail instead of from zero. First-order LP solvers are
+//!   iteration-count bound (D-PDLP, cuPDLP.jl report the same), which is
+//!   exactly what dual warm-starting attacks;
+//! - [`scheduler`] — a bounded-concurrency batch scheduler running N
+//!   independent jobs across a thread pool, deterministically (batch
+//!   results are bit-identical to sequential execution);
+//! - [`session`] — the [`SolveEngine`] API: `submit`, `solve_batch`,
+//!   `stats`.
+//!
+//! Driven end-to-end by the `engine-batch` CLI subcommand and the
+//! `bench_engine_warmstart` bench (experiment E12).
+
+pub mod fingerprint;
+pub mod scheduler;
+pub mod session;
+pub mod warmstart;
+
+pub use fingerprint::Fingerprint;
+pub use scheduler::{BatchReport, Scheduler};
+pub use session::{EngineConfig, EngineStats, JobResult, SolveEngine, SolveJob};
+pub use warmstart::{warm_options, WarmStart, WarmStartCache};

@@ -1,0 +1,378 @@
+//! The `SolveEngine` API (DESIGN.md §3): a persistent engine that accepts
+//! solve jobs, recognizes structural re-solves via fingerprints, starts
+//! them from cached duals, and runs batches across a bounded thread pool.
+//!
+//! Semantics chosen for serving determinism:
+//!
+//! - `submit` — solve one job now: cache lookup → solve → cache update.
+//! - `solve_batch` — resolve every job's warm start against the cache
+//!   state **at batch entry**, run the jobs through the scheduler, then
+//!   apply cache updates in job order. Lookup-then-update at batch
+//!   granularity makes the batch bit-identical to running the same jobs
+//!   through a 1-thread scheduler — no dependence on completion order.
+//!
+//! Jobs are solved on the CPU reference backend (`CpuObjective`): it is
+//! always available, deterministic, and exercises the identical math as
+//! the accelerated backends (the `Maximizer`/`ObjectiveFunction` contract
+//! is backend-agnostic, so swapping in slab/PJRT objectives is a local
+//! change once artifacts exist).
+
+use std::sync::Mutex;
+
+use super::fingerprint::Fingerprint;
+use super::scheduler::{BatchReport, Scheduler};
+use super::warmstart::{warm_options, WarmStart, WarmStartCache};
+use crate::problem::MatchingLp;
+use crate::reference::CpuObjective;
+use crate::solver::{Agd, Maximizer, SolveOptions, StopReason};
+
+/// One unit of work: an instance plus an optional per-job options override
+/// (defaults to the engine's cold-solve template).
+pub struct SolveJob {
+    /// Caller-chosen id, echoed in the result.
+    pub id: u64,
+    pub lp: MatchingLp,
+    pub opts: Option<SolveOptions>,
+}
+
+impl SolveJob {
+    pub fn new(id: u64, lp: MatchingLp) -> SolveJob {
+        SolveJob { id, lp, opts: None }
+    }
+}
+
+/// Outcome of one engine solve.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub fingerprint: Fingerprint,
+    /// Whether the solve started from a cached dual.
+    pub warm: bool,
+    pub iterations: usize,
+    pub stop_reason: StopReason,
+    pub dual_obj: f64,
+    pub cx: f64,
+    pub infeas_pos_norm: f64,
+    pub final_gamma: f32,
+    pub wall_ms: f64,
+    /// Final dual iterate (feeds the cache and downstream primal recovery).
+    pub lam: Vec<f32>,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Cold-solve options template (schedule, caps, stopping).
+    pub opts: SolveOptions,
+    /// Warm-start γ-tail length (iterations per halving; see
+    /// `warmstart::warm_options`). 0 = restart directly at the floor γ.
+    pub warm_tail: usize,
+    /// Thread-pool width for `solve_batch`.
+    pub threads: usize,
+    /// Warm-start cache capacity (distinct fingerprints); 0 disables
+    /// warm starting entirely (cold-baseline engine).
+    pub cache_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            opts: SolveOptions::default(),
+            warm_tail: 5,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            cache_capacity: 64,
+        }
+    }
+}
+
+/// Aggregate engine counters (snapshot via `SolveEngine::stats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub submitted: u64,
+    pub cold_solves: u64,
+    pub warm_solves: u64,
+    pub cold_iters: u64,
+    pub warm_iters: u64,
+    pub total_wall_ms: f64,
+    pub batches: u64,
+    pub peak_in_flight: usize,
+}
+
+impl EngineStats {
+    pub fn mean_cold_iters(&self) -> f64 {
+        if self.cold_solves == 0 {
+            return f64::NAN;
+        }
+        self.cold_iters as f64 / self.cold_solves as f64
+    }
+
+    pub fn mean_warm_iters(&self) -> f64 {
+        if self.warm_solves == 0 {
+            return f64::NAN;
+        }
+        self.warm_iters as f64 / self.warm_solves as f64
+    }
+}
+
+/// Persistent multi-problem solve engine.
+pub struct SolveEngine {
+    cfg: EngineConfig,
+    cache: Mutex<WarmStartCache>,
+    stats: Mutex<EngineStats>,
+}
+
+impl SolveEngine {
+    pub fn new(cfg: EngineConfig) -> SolveEngine {
+        assert!(cfg.threads >= 1, "engine needs at least one thread");
+        let cache = WarmStartCache::new(cfg.cache_capacity);
+        SolveEngine {
+            cfg,
+            cache: Mutex::new(cache),
+            stats: Mutex::new(EngineStats::default()),
+        }
+    }
+
+    /// The cold-solve options for a job: the job override or the engine
+    /// template, with `min_iters` pushed past the continuation descent so
+    /// the stopping criterion is only evaluated at the floor γ — the
+    /// "matched stopping criterion" warm and cold runs share.
+    fn cold_options(&self, job: &SolveJob) -> SolveOptions {
+        let mut opts = job.opts.clone().unwrap_or_else(|| self.cfg.opts.clone());
+        opts.stopping.min_iters = opts
+            .stopping
+            .min_iters
+            .max(opts.gamma.iters_to_floor() + 1);
+        opts
+    }
+
+    /// Solve one resolved job. Pure function of its inputs — the scheduler
+    /// fans this out without affecting values. `fp` is the job's
+    /// fingerprint, computed once at resolution time (hashing the full
+    /// sparsity pattern is not free on serving-sized instances).
+    fn solve_resolved(
+        job: &SolveJob,
+        fp: Fingerprint,
+        cold: &SolveOptions,
+        warm: Option<&WarmStart>,
+        tail: usize,
+    ) -> JobResult {
+        let (init, opts, is_warm) = match warm {
+            Some(ws) => (ws.lam.clone(), warm_options(cold, tail), true),
+            None => (vec![0.0f32; job.lp.dual_dim()], cold.clone(), false),
+        };
+        let mut obj = CpuObjective::new(&job.lp);
+        let mut agd = Agd::default();
+        let r = agd.maximize(&mut obj, &init, &opts);
+        JobResult {
+            id: job.id,
+            fingerprint: fp,
+            warm: is_warm,
+            iterations: r.iterations,
+            stop_reason: r.stop_reason,
+            dual_obj: r.final_obj.dual_obj,
+            cx: r.final_obj.cx,
+            infeas_pos_norm: r.final_obj.infeas_pos_norm,
+            final_gamma: r.final_gamma,
+            wall_ms: r.total_wall_ms,
+            lam: r.lam,
+        }
+    }
+
+    fn record(&self, r: &JobResult) {
+        let mut s = self.stats.lock().unwrap();
+        s.submitted += 1;
+        s.total_wall_ms += r.wall_ms;
+        if r.warm {
+            s.warm_solves += 1;
+            s.warm_iters += r.iterations as u64;
+        } else {
+            s.cold_solves += 1;
+            s.cold_iters += r.iterations as u64;
+        }
+    }
+
+    /// Solve one job immediately (lookup → solve → cache update).
+    pub fn submit(&self, job: SolveJob) -> JobResult {
+        let fp = Fingerprint::of(&job.lp);
+        let warm = self.cache.lock().unwrap().lookup(&fp);
+        let cold = self.cold_options(&job);
+        let r = Self::solve_resolved(&job, fp, &cold, warm.as_ref(), self.cfg.warm_tail);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(fp, r.lam.clone(), r.final_gamma);
+        self.record(&r);
+        r
+    }
+
+    /// Solve a batch across the thread pool. Warm starts resolve against
+    /// the cache snapshot at entry; updates apply in job order afterwards,
+    /// so results are independent of scheduling (see module docs).
+    pub fn solve_batch(&self, jobs: Vec<SolveJob>) -> (Vec<JobResult>, BatchReport) {
+        let tail = self.cfg.warm_tail;
+        let resolved: Vec<(SolveJob, Fingerprint, SolveOptions, Option<WarmStart>)> = {
+            let mut cache = self.cache.lock().unwrap();
+            jobs.into_iter()
+                .map(|job| {
+                    let fp = Fingerprint::of(&job.lp);
+                    let warm = cache.lookup(&fp);
+                    let cold = self.cold_options(&job);
+                    (job, fp, cold, warm)
+                })
+                .collect()
+        };
+
+        let sched = Scheduler::new(self.cfg.threads);
+        let (results, report) = sched.run(resolved.len(), |i| {
+            let (job, fp, cold, warm) = &resolved[i];
+            Self::solve_resolved(job, *fp, cold, warm.as_ref(), tail)
+        });
+
+        {
+            let mut cache = self.cache.lock().unwrap();
+            for r in &results {
+                cache.insert(r.fingerprint, r.lam.clone(), r.final_gamma);
+            }
+        }
+        for r in &results {
+            self.record(r);
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.batches += 1;
+            s.peak_in_flight = s.peak_in_flight.max(report.peak_in_flight);
+        }
+        (results, report)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// (hits, misses) of the warm-start cache.
+    pub fn cache_counters(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::problem::jacobi_row_normalize;
+    use crate::solver::{GammaSchedule, StoppingCriteria};
+
+    fn instance(seed: u64) -> MatchingLp {
+        let mut lp = generate(&SyntheticConfig {
+            num_requests: 400,
+            num_resources: 32,
+            avg_nnz_per_row: 5.0,
+            seed,
+            ..Default::default()
+        });
+        jacobi_row_normalize(&mut lp);
+        lp
+    }
+
+    fn test_config(threads: usize) -> EngineConfig {
+        // Matched stopping: objective stall at the floor γ. (The RAW
+        // gradient norm does not vanish at a constrained optimum — slack
+        // rows keep λ = 0 against a negative gradient — so grad_norm_tol
+        // is not a reachable criterion for matching LPs.)
+        EngineConfig {
+            opts: SolveOptions {
+                max_iters: 1500,
+                max_step_size: 1.0,
+                initial_step_size: 1e-4,
+                gamma: GammaSchedule::Decay {
+                    init: 0.08,
+                    floor: 0.02,
+                    factor: 0.5,
+                    every: 10,
+                },
+                stopping: StoppingCriteria {
+                    stall_tol: Some(1e-6),
+                    stall_patience: 10,
+                    ..Default::default()
+                },
+                record_every: 50,
+            },
+            warm_tail: 4,
+            threads,
+            cache_capacity: 8,
+        }
+    }
+
+    #[test]
+    fn submit_cold_then_warm_on_same_pattern() {
+        let engine = SolveEngine::new(test_config(1));
+        let a = engine.submit(SolveJob::new(0, instance(1)));
+        assert!(!a.warm);
+        // same seed → same instance → same fingerprint → warm
+        let b = engine.submit(SolveJob::new(1, instance(1)));
+        assert!(b.warm);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        let s = engine.stats();
+        assert_eq!((s.cold_solves, s.warm_solves), (1, 1));
+        assert_eq!(engine.cache_counters(), (1, 1));
+        // warm restart of the SAME instance finishes almost immediately
+        assert!(
+            b.iterations < a.iterations,
+            "warm {} vs cold {}",
+            b.iterations,
+            a.iterations
+        );
+    }
+
+    #[test]
+    fn distinct_patterns_do_not_cross_warm() {
+        let engine = SolveEngine::new(test_config(1));
+        let a = engine.submit(SolveJob::new(0, instance(1)));
+        let b = engine.submit(SolveJob::new(1, instance(2)));
+        assert!(!a.warm && !b.warm);
+        assert_eq!(engine.cache_len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_engine_always_cold() {
+        let mut cfg = test_config(1);
+        cfg.cache_capacity = 0;
+        let engine = SolveEngine::new(cfg);
+        let _ = engine.submit(SolveJob::new(0, instance(1)));
+        let b = engine.submit(SolveJob::new(1, instance(1)));
+        assert!(!b.warm);
+        assert_eq!(engine.stats().cold_solves, 2);
+    }
+
+    #[test]
+    fn batch_snapshot_semantics_and_stats() {
+        let engine = SolveEngine::new(test_config(4));
+        // prime the cache with the pattern
+        let primer = engine.submit(SolveJob::new(0, instance(3)));
+        assert!(!primer.warm);
+        let jobs: Vec<SolveJob> =
+            (0..6).map(|k| SolveJob::new(10 + k, instance(3))).collect();
+        let (results, report) = engine.solve_batch(jobs);
+        assert_eq!(results.len(), 6);
+        assert!(results.iter().all(|r| r.warm), "all jobs share the primed pattern");
+        // ids echoed in order
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (10..16).collect::<Vec<u64>>());
+        assert_eq!(report.jobs, 6);
+        let s = engine.stats();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.submitted, 7);
+    }
+}

@@ -1,0 +1,250 @@
+//! Dual warm-start cache (DESIGN.md §3).
+//!
+//! First-order LP solve time is dominated by iteration count, not
+//! per-iteration cost — so the serving win for re-solves is to start the
+//! dual ascent from the previous instance's final λ instead of zero. The
+//! cache maps a structural [`Fingerprint`] to the latest final (λ, γ) with
+//! LRU eviction, and [`warm_options`] derives the re-solve options: the
+//! full γ-continuation schedule is replaced by a **short tail** (a couple
+//! of halvings into the same floor), because the cached λ is already a
+//! near-optimal dual for the floor-γ problem and only needs a brief
+//! re-smoothing window to absorb the `c`/`b` perturbation.
+
+use std::collections::HashMap;
+
+use super::fingerprint::Fingerprint;
+use crate::solver::{GammaSchedule, SolveOptions};
+
+/// Cached dual state from a completed solve.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Final dual iterate λ (in the solved system's row scaling).
+    pub lam: Vec<f32>,
+    /// γ the cached λ was optimized at (the producing schedule's floor).
+    pub gamma: f32,
+    /// How many solves have refreshed this entry.
+    pub refreshes: u64,
+}
+
+/// Fingerprint → warm-start map with LRU eviction and hit accounting.
+pub struct WarmStartCache {
+    entries: HashMap<Fingerprint, (WarmStart, u64)>,
+    capacity: usize,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl WarmStartCache {
+    /// `capacity` 0 disables warm starting (every lookup misses) — the
+    /// engine's cold-baseline mode.
+    pub fn new(capacity: usize) -> WarmStartCache {
+        WarmStartCache {
+            entries: HashMap::new(),
+            capacity,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a warm start, bumping LRU recency and hit counters. Entries
+    /// whose λ length no longer matches the fingerprint's dual dimension
+    /// are treated as misses (defensive; cannot happen through `insert`).
+    pub fn lookup(&mut self, fp: &Fingerprint) -> Option<WarmStart> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.entries.get_mut(fp) {
+            Some((ws, last_used)) if ws.lam.len() == fp.dual_dim() => {
+                *last_used = tick;
+                self.hits += 1;
+                Some(ws.clone())
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-mutating peek (no LRU/counter effects).
+    pub fn peek(&self, fp: &Fingerprint) -> Option<&WarmStart> {
+        self.entries.get(fp).map(|(ws, _)| ws)
+    }
+
+    /// Insert or refresh the entry for `fp`, evicting the least recently
+    /// used entry when at capacity. No-op when capacity is 0.
+    pub fn insert(&mut self, fp: Fingerprint, lam: Vec<f32>, gamma: f32) {
+        if self.capacity == 0 {
+            return;
+        }
+        debug_assert_eq!(lam.len(), fp.dual_dim());
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((ws, last_used)) = self.entries.get_mut(&fp) {
+            ws.lam = lam;
+            ws.gamma = gamma;
+            ws.refreshes += 1;
+            *last_used = tick;
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            if let Some(oldest) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| *k)
+            {
+                self.entries.remove(&oldest);
+            }
+        }
+        self.entries
+            .insert(fp, (WarmStart { lam, gamma, refreshes: 1 }, tick));
+    }
+}
+
+/// Derive warm-start solve options from the cold-solve template.
+///
+/// - γ: a short continuation tail `2·floor → floor` (one halving after
+///   `tail` iterations) instead of the cold schedule's full descent; with
+///   `tail == 0`, fixed at the floor.
+/// - step cap: the cold run ends with cap `max_step_size · floor/γ₀`
+///   (continuation rescales the cap with γ); the warm run starts from
+///   an already-converged dual, so it gets that *end-state* cap. The
+///   tail's own `step_cap_scale` then halves it once more at the
+///   transition, staying on the stable side.
+/// - stopping: same criteria, but `min_iters` is **replaced** by the
+///   tail-based gate (`tail + 1`) so the matched criterion is evaluated
+///   as soon as the tail reaches the floor γ. The cold path's own
+///   `min_iters` is an artifact of the cold schedule's descent length
+///   (the engine bumps it to `iters_to_floor + 1`); inheriting it would
+///   floor every warm solve at the cold descent length and erase the
+///   warm-start win.
+pub fn warm_options(cold: &SolveOptions, tail: usize) -> SolveOptions {
+    let floor = cold.gamma.final_gamma();
+    let g0 = cold.gamma.gamma_at(0);
+    let end_cap_scale = if g0 > 0.0 { (floor / g0) as f64 } else { 1.0 };
+    let gamma = if tail == 0 {
+        GammaSchedule::Fixed(floor)
+    } else {
+        GammaSchedule::Decay {
+            init: floor * 2.0,
+            floor,
+            factor: 0.5,
+            every: tail,
+        }
+    };
+    let mut stopping = cold.stopping.clone();
+    stopping.min_iters = gamma.iters_to_floor() + 1;
+    SolveOptions {
+        max_iters: cold.max_iters,
+        max_step_size: cold.max_step_size * end_cap_scale.min(1.0),
+        initial_step_size: cold.initial_step_size,
+        gamma,
+        stopping,
+        record_every: cold.record_every,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::StoppingCriteria;
+
+    fn fp(n: usize) -> Fingerprint {
+        Fingerprint {
+            num_sources: n,
+            num_dests: 4,
+            num_families: 1,
+            num_global_rows: 0,
+            nnz: 4 * n,
+            pattern_hash: n as u64,
+        }
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = WarmStartCache::new(4);
+        assert!(c.lookup(&fp(1)).is_none());
+        c.insert(fp(1), vec![0.5; 4], 0.01);
+        let ws = c.lookup(&fp(1)).expect("hit");
+        assert_eq!(ws.lam, vec![0.5; 4]);
+        assert_eq!(ws.gamma, 0.01);
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn refresh_updates_in_place() {
+        let mut c = WarmStartCache::new(2);
+        c.insert(fp(1), vec![0.1; 4], 0.04);
+        c.insert(fp(1), vec![0.2; 4], 0.01);
+        assert_eq!(c.len(), 1);
+        let ws = c.peek(&fp(1)).unwrap();
+        assert_eq!(ws.lam, vec![0.2; 4]);
+        assert_eq!(ws.refreshes, 2);
+    }
+
+    #[test]
+    fn lru_eviction_spares_recently_used() {
+        let mut c = WarmStartCache::new(2);
+        c.insert(fp(1), vec![0.0; 4], 0.01);
+        c.insert(fp(2), vec![0.0; 4], 0.01);
+        let _ = c.lookup(&fp(1)); // 1 newer than 2
+        c.insert(fp(3), vec![0.0; 4], 0.01); // evicts 2
+        assert!(c.peek(&fp(1)).is_some());
+        assert!(c.peek(&fp(2)).is_none());
+        assert!(c.peek(&fp(3)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_cache() {
+        let mut c = WarmStartCache::new(0);
+        c.insert(fp(1), vec![0.0; 4], 0.01);
+        assert!(c.is_empty());
+        assert!(c.lookup(&fp(1)).is_none());
+    }
+
+    #[test]
+    fn warm_options_short_tail_and_scaled_cap() {
+        let cold = SolveOptions {
+            max_iters: 500,
+            max_step_size: 1.0,
+            initial_step_size: 1e-4,
+            gamma: GammaSchedule::paper_fig5(), // 0.16 → 0.01
+            stopping: StoppingCriteria {
+                grad_norm_tol: Some(1e-3),
+                ..Default::default()
+            },
+            record_every: 1,
+        };
+        let warm = warm_options(&cold, 5);
+        // tail: 0.02 → 0.01 after 5 iterations
+        assert_eq!(warm.gamma.gamma_at(0), 0.02);
+        assert_eq!(warm.gamma.gamma_at(5), 0.01);
+        assert_eq!(warm.gamma.final_gamma(), 0.01);
+        // cap matches the cold run's end-state cap (1.0 · 0.01/0.16,
+        // computed in f32 like the schedule itself)
+        let expect = (0.01f32 / 0.16f32) as f64;
+        assert!((warm.max_step_size - expect).abs() < 1e-12);
+        // criterion only evaluated at the floor — and the tail gate
+        // REPLACES the cold min_iters (a cold-descent artifact) rather
+        // than maxing with it, or every warm solve would be floored at
+        // the cold schedule's length
+        assert_eq!(warm.stopping.min_iters, 6);
+        let mut bumped = cold.clone();
+        bumped.stopping.min_iters = 101; // what the engine's cold path sets
+        assert_eq!(warm_options(&bumped, 5).stopping.min_iters, 6);
+        assert_eq!(warm.stopping.grad_norm_tol, Some(1e-3));
+        // tail 0 → fixed floor
+        let warm0 = warm_options(&cold, 0);
+        assert!(matches!(warm0.gamma, GammaSchedule::Fixed(f) if f == 0.01));
+    }
+}

@@ -132,7 +132,7 @@ pub fn generate(cfg: &SyntheticConfig) -> MatchingLp {
     }
     // Cap degrees at MAX_WIDTH for non-separable polytopes by dropping
     // excess edges (rare under the paper's sparsity; counted below).
-    let cap = if cfg.kind == ProjectionKind::Simplex { MAX_WIDTH as u32 } else { u32::MAX };
+    let cap = if cfg.kind.separable() { u32::MAX } else { MAX_WIDTH as u32 };
 
     let mut src_ptr = vec![0usize; i_n + 1];
     for i in 0..i_n {

@@ -8,7 +8,9 @@
 //! representative (DESIGN.md §5 Substitutions).
 
 use super::synthetic::SyntheticConfig;
-use crate::projection::ProjectionKind;
+use crate::problem::MatchingLp;
+use crate::projection::{ProjectionKind, ProjectionMap};
+use crate::util::rng::Rng;
 
 /// Source-count divisor vs. the paper's instances.
 pub const SCALE_DIV: usize = 100;
@@ -66,6 +68,82 @@ pub fn smoke(seed: u64) -> SyntheticConfig {
     }
 }
 
+/// Relative perturbation magnitudes for a production re-solve stream: the
+/// eligibility graph (A's pattern AND coefficients) is held fixed while
+/// objective coefficients and budgets drift — the refresh pattern the
+/// paper's "solved repeatedly at massive scale" serving setting produces
+/// (bids/value models re-scored, budgets re-paced between solves).
+#[derive(Clone, Copy, Debug)]
+pub struct PerturbSpec {
+    /// Std-dev of the multiplicative cost noise: c ← c·(1 + c_rel·N(0,1)).
+    pub c_rel: f64,
+    /// Std-dev of the multiplicative rhs noise: b ← b·max(0, 1 + b_rel·N).
+    pub b_rel: f64,
+}
+
+impl Default for PerturbSpec {
+    fn default() -> Self {
+        PerturbSpec { c_rel: 0.05, b_rel: 0.05 }
+    }
+}
+
+/// A same-pattern instance with perturbed `c`/`b`. The constraint matrix is
+/// cloned verbatim, so `engine::Fingerprint` recognizes the result as a
+/// re-solve of `base`. Deterministic per (base, spec, seed).
+pub fn perturb_instance(base: &MatchingLp, spec: &PerturbSpec, seed: u64) -> MatchingLp {
+    let mut rng = Rng::new(seed ^ 0xA5A5_5A5A_C3C3_3C3C);
+    let cost: Vec<f32> = base
+        .cost
+        .iter()
+        .map(|&c| (c as f64 * (1.0 + spec.c_rel * rng.normal())) as f32)
+        .collect();
+    let b: Vec<f32> = base
+        .b
+        .iter()
+        .map(|&v| (v as f64 * (1.0 + spec.b_rel * rng.normal()).max(0.0)) as f32)
+        .collect();
+    let global_rows = base
+        .global_rows
+        .iter()
+        .map(|g| {
+            let mut g2 = g.clone();
+            g2.rhs = (g.rhs as f64 * (1.0 + spec.b_rel * rng.normal()).max(0.0)) as f32;
+            g2
+        })
+        .collect();
+    // ProjectionMap is not Clone (PerBlock holds a closure); rebuild an
+    // equivalent map by materializing the per-block kinds.
+    let projection = match &base.projection {
+        ProjectionMap::Uniform(k) => ProjectionMap::Uniform(*k),
+        ProjectionMap::PerBlock(_) => {
+            let kinds: Vec<ProjectionKind> =
+                (0..base.num_sources()).map(|i| base.projection.kind_of(i)).collect();
+            ProjectionMap::PerBlock(Box::new(move |i| kinds[i]))
+        }
+    };
+    MatchingLp {
+        a: base.a.clone(),
+        cost,
+        b,
+        projection,
+        primal_scale: base.primal_scale.clone(),
+        global_rows,
+    }
+}
+
+/// A length-`n` re-solve stream off a base instance; element k is
+/// `perturb_instance(base, spec, seed + k)`.
+pub fn perturbation_sequence(
+    base: &MatchingLp,
+    spec: &PerturbSpec,
+    n: usize,
+    seed: u64,
+) -> Vec<MatchingLp> {
+    (0..n)
+        .map(|k| perturb_instance(base, spec, seed.wrapping_add(k as u64)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +161,55 @@ mod tests {
     fn presets_generate() {
         let lp = crate::gen::generate(&smoke(1));
         lp.validate().unwrap();
+    }
+
+    #[test]
+    fn perturbation_keeps_pattern_changes_values() {
+        let base = crate::gen::generate(&smoke(2));
+        let spec = PerturbSpec::default();
+        let p = perturb_instance(&base, &spec, 7);
+        p.validate().unwrap();
+        // identical structure
+        assert_eq!(base.a.src_ptr, p.a.src_ptr);
+        assert_eq!(base.a.dest_idx, p.a.dest_idx);
+        assert_eq!(base.a.a, p.a.a);
+        // perturbed planes
+        assert_ne!(base.cost, p.cost);
+        assert_ne!(base.b, p.b);
+        // rhs stays nonnegative under clamped noise
+        assert!(p.b.iter().all(|&v| v >= 0.0));
+        // 5% relative noise stays small in aggregate
+        let rel: f64 = base
+            .cost
+            .iter()
+            .zip(&p.cost)
+            .map(|(a, b)| ((a - b).abs() as f64) / (a.abs() as f64).max(1e-9))
+            .sum::<f64>()
+            / base.cost.len() as f64;
+        assert!(rel < 0.2, "mean relative cost drift {rel}");
+    }
+
+    #[test]
+    fn perturbation_is_deterministic_per_seed() {
+        let base = crate::gen::generate(&smoke(3));
+        let spec = PerturbSpec::default();
+        let a = perturb_instance(&base, &spec, 11);
+        let b = perturb_instance(&base, &spec, 11);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.b, b.b);
+        let c = perturb_instance(&base, &spec, 12);
+        assert_ne!(a.cost, c.cost);
+    }
+
+    #[test]
+    fn sequence_elements_differ() {
+        let base = crate::gen::generate(&smoke(4));
+        let seq = perturbation_sequence(&base, &PerturbSpec::default(), 3, 100);
+        assert_eq!(seq.len(), 3);
+        assert_ne!(seq[0].cost, seq[1].cost);
+        assert_ne!(seq[1].cost, seq[2].cost);
+        for lp in &seq {
+            assert_eq!(lp.a.dest_idx, base.a.dest_idx);
+        }
     }
 }

@@ -6,7 +6,9 @@
 //!
 //! - **L3 (this crate)**: coordinator — problem model, AGD optimizer with
 //!   γ-continuation, Jacobi/primal conditioning, sharded workers and
-//!   λ-only collectives, diagnostics, CLI.
+//!   λ-only collectives, diagnostics, CLI; plus the serving layer
+//!   (`engine/`): fingerprinted warm-start cache and batch scheduler for
+//!   the production repeated-solve pattern.
 //! - **L2/L1 (python/compile, build-time only)**: the batched slab dual
 //!   step (scale → blockwise projection → reduce) as a Pallas kernel inside
 //!   a JAX graph, AOT-lowered to HLO text artifacts.
@@ -17,6 +19,7 @@
 
 pub mod cli;
 pub mod distributed;
+pub mod engine;
 pub mod gen;
 pub mod metrics;
 pub mod problem;

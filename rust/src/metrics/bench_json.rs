@@ -1,0 +1,166 @@
+//! Minimal machine-readable bench emission — no serde offline, so this is
+//! a small hand-rolled JSON writer for the flat shape the bench harnesses
+//! need:
+//!
+//! ```json
+//! {"bench": "engine_warmstart", "meta": {...}, "rows": [{...}, ...]}
+//! ```
+//!
+//! Emitted files are named `BENCH_<name>.json` so the PR driver can diff
+//! perf trajectories across commits. Values are numbers, strings or bools;
+//! non-finite floats serialize as `null` (valid JSON, unlike `NaN`).
+
+use std::io::Write;
+use std::path::Path;
+
+/// One JSON scalar.
+#[derive(Clone, Debug)]
+pub enum JsonValue {
+    Int(i64),
+    UInt(u64),
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match self {
+            JsonValue::Int(v) => v.to_string(),
+            JsonValue::UInt(v) => v.to_string(),
+            JsonValue::Num(v) => {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    "null".to_string()
+                }
+            }
+            JsonValue::Str(s) => escape(s),
+            JsonValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn object(fields: &[(&str, JsonValue)]) -> String {
+    let body: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("{}: {}", escape(k), v.render()))
+        .collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+/// Accumulates one bench document: metadata fields + a row list.
+pub struct BenchJson {
+    name: String,
+    meta: Vec<(String, JsonValue)>,
+    rows: Vec<String>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), meta: Vec::new(), rows: Vec::new() }
+    }
+
+    /// Attach a top-level metadata field (instance dims, config, …).
+    pub fn meta(&mut self, key: &str, value: JsonValue) -> &mut Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    /// Append one data row.
+    pub fn row(&mut self, fields: &[(&str, JsonValue)]) -> &mut Self {
+        self.rows.push(object(fields));
+        self
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render the full document.
+    pub fn render(&self) -> String {
+        let meta_fields: Vec<String> = self
+            .meta
+            .iter()
+            .map(|(k, v)| format!("{}: {}", escape(k), v.render()))
+            .collect();
+        format!(
+            "{{\"bench\": {}, \"meta\": {{{}}}, \"rows\": [\n  {}\n]}}\n",
+            escape(&self.name),
+            meta_fields.join(", "),
+            self.rows.join(",\n  "),
+        )
+    }
+
+    /// Write to `dir/BENCH_<name>.json` (creating `dir`), returning the
+    /// path written.
+    pub fn write(&self, dir: impl AsRef<Path>) -> std::io::Result<std::path::PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.render().as_bytes())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_shape() {
+        let mut b = BenchJson::new("engine_warmstart");
+        b.meta("sources", JsonValue::UInt(1000));
+        b.row(&[
+            ("job", JsonValue::Int(0)),
+            ("mode", JsonValue::Str("cold".into())),
+            ("iters", JsonValue::UInt(120)),
+            ("wall_ms", JsonValue::Num(12.5)),
+            ("warm", JsonValue::Bool(false)),
+        ]);
+        let s = b.render();
+        assert!(s.starts_with("{\"bench\": \"engine_warmstart\""));
+        assert!(s.contains("\"meta\": {\"sources\": 1000}"));
+        assert!(s.contains("\"mode\": \"cold\""));
+        assert!(s.contains("\"warm\": false"));
+        assert_eq!(b.num_rows(), 1);
+    }
+
+    #[test]
+    fn escapes_and_nonfinite() {
+        assert_eq!(JsonValue::Num(f64::NAN).render(), "null");
+        assert_eq!(JsonValue::Num(f64::INFINITY).render(), "null");
+        assert_eq!(escape("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("dualip_bench_json_test");
+        let mut b = BenchJson::new("t");
+        b.row(&[("x", JsonValue::Int(1))]);
+        let path = b.write(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_t.json");
+        assert!(text.contains("\"x\": 1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

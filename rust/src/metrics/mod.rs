@@ -1,8 +1,14 @@
 //! Diagnostics & reporting: solve summaries, simple sample statistics for
-//! the bench harnesses, and human-readable reports (the "structured
-//! diagnostics" hooks of paper §4).
+//! the bench harnesses, human-readable reports (the "structured
+//! diagnostics" hooks of paper §4), and machine-readable bench emission
+//! (`BENCH_*.json`) so the perf trajectory is trackable across PRs.
+
+pub mod bench_json;
+
+pub use bench_json::{BenchJson, JsonValue};
 
 use crate::distributed::CommSnapshot;
+use crate::engine::{BatchReport, EngineStats};
 use crate::solver::SolveResult;
 
 /// Sample statistics for bench timing series.
@@ -54,6 +60,35 @@ pub fn solve_report(label: &str, r: &SolveResult) -> String {
         last.map_or(f64::NAN, |t| t.grad_norm),
         last.map_or(f64::NAN, |t| t.infeas_pos_norm),
         last.map_or(f64::NAN, |t| t.cx),
+    )
+}
+
+/// One-paragraph engine report: warm/cold solve mix, mean iterations per
+/// class, cache efficiency, batch concurrency.
+pub fn engine_report(s: &EngineStats) -> String {
+    format!(
+        "engine: {} solves ({} cold / {} warm), mean iters cold={:.1} warm={:.1}, \
+         {:.1}ms total, {} batches (peak {} in flight)",
+        s.submitted,
+        s.cold_solves,
+        s.warm_solves,
+        s.mean_cold_iters(),
+        s.mean_warm_iters(),
+        s.total_wall_ms,
+        s.batches,
+        s.peak_in_flight,
+    )
+}
+
+/// One-line batch report (throughput over the batch wall-clock).
+pub fn batch_report(r: &BatchReport) -> String {
+    format!(
+        "batch: {} jobs on {} threads in {:.1}ms ({:.1} jobs/s, peak {} in flight)",
+        r.jobs,
+        r.threads,
+        r.wall_ms,
+        r.throughput(),
+        r.peak_in_flight,
     )
 }
 

@@ -58,6 +58,15 @@ pub fn check_primal(lp: &MatchingLp, x: &[f32], tol: f32) -> PrimalReport {
                 .iter()
                 .map(|&v| ((v as f64) - 1.0).max(0.0).max((-v).max(0.0) as f64))
                 .fold(0.0, f64::max),
+            k @ ProjectionKind::CappedSimplex { .. } => {
+                let (cap, total) = k.capped_params().unwrap();
+                let s: f64 = block.iter().map(|&v| v as f64).sum();
+                let coord: f64 = block
+                    .iter()
+                    .map(|&v| ((v as f64) - cap as f64).max(0.0).max((-v).max(0.0) as f64))
+                    .fold(0.0, f64::max);
+                (s - total as f64).max(0.0).max(coord)
+            }
         };
         simple_mx = simple_mx.max(v);
     }
@@ -128,5 +137,22 @@ mod tests {
         let x = vec![0.9, 0.9, -0.1, 0.0];
         let r = check_primal(&p, &x, 1e-6);
         assert!(r.simple_infeas_max >= 0.8 - 1e-6); // sum 1.8 > 1
+    }
+
+    #[test]
+    fn capped_simplex_violations_detected() {
+        let mut p = lp();
+        p.projection = crate::projection::ProjectionMap::Uniform(
+            ProjectionKind::capped_simplex(0.5, 0.8),
+        );
+        // feasible: within cap and cut
+        let ok = check_primal(&p, &[0.4, 0.4, 0.3, 0.5], 1e-6);
+        assert_eq!(ok.simple_infeas_max, 0.0);
+        // coordinate cap violated by 0.2
+        let r1 = check_primal(&p, &[0.7, 0.0, 0.0, 0.0], 1e-6);
+        assert!((r1.simple_infeas_max - 0.2).abs() < 1e-6);
+        // cut violated: block sum 0.5+0.45 = 0.95 > 0.8 by 0.15
+        let r2 = check_primal(&p, &[0.5, 0.45, 0.0, 0.0], 1e-6);
+        assert!((r2.simple_infeas_max - 0.15).abs() < 1e-6);
     }
 }

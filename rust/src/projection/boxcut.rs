@@ -1,25 +1,28 @@
-//! Box-cut projection: Π onto {0 ≤ x ≤ 1, Σx ≤ r} — the "box-cut"
-//! polytope of [6] (per-user capacity with per-item caps).
+//! Box-cut / capped-simplex projection: Π onto {0 ≤ x ≤ u, Σx ≤ s} — the
+//! "box-cut" polytope of [6] (per-user capacity with per-item caps);
+//! `u = 1` is the classic box-cut, general `u` the capped simplex.
 //!
 //! Solved by bisection on the Lagrange multiplier μ of the cut constraint:
-//! x(μ) = clamp(v − μ, 0, 1) is monotone nonincreasing in μ, so the μ* with
-//! Σ x(μ*) = r (when the clamp alone exceeds r) is found to tolerance in
+//! x(μ) = clamp(v − μ, 0, u) is monotone nonincreasing in μ, so the μ* with
+//! Σ x(μ*) = s (when the clamp alone exceeds s) is found to tolerance in
 //! ~60 iterations.
 
-/// In-place projection of `v` onto {0 ≤ x ≤ 1, Σx ≤ r}.
-pub fn project_box_cut(v: &mut [f32], r: f32) {
-    debug_assert!(r >= 0.0);
-    let clamped_sum: f64 = v.iter().map(|&x| x.clamp(0.0, 1.0) as f64).sum();
-    if clamped_sum <= r as f64 {
+/// In-place projection of `v` onto {0 ≤ x ≤ cap, Σx ≤ total}.
+pub fn project_capped_simplex(v: &mut [f32], cap: f32, total: f32) {
+    debug_assert!(cap > 0.0);
+    debug_assert!(total >= 0.0);
+    let cap = cap as f64;
+    let clamped_sum: f64 = v.iter().map(|&x| (x as f64).clamp(0.0, cap)).sum();
+    if clamped_sum <= total as f64 {
         for x in v.iter_mut() {
-            *x = x.clamp(0.0, 1.0);
+            *x = (*x as f64).clamp(0.0, cap) as f32;
         }
         return;
     }
     let mut lo = 0.0f64;
     let mut hi = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
     if hi <= 0.0 {
-        // everything clamps to 0; Σ=0 ≤ r
+        // everything clamps to 0; Σ=0 ≤ total
         for x in v.iter_mut() {
             *x = 0.0;
         }
@@ -27,8 +30,8 @@ pub fn project_box_cut(v: &mut [f32], r: f32) {
     }
     for _ in 0..64 {
         let mu = 0.5 * (lo + hi);
-        let s: f64 = v.iter().map(|&x| ((x as f64) - mu).clamp(0.0, 1.0)).sum();
-        if s > r as f64 {
+        let s: f64 = v.iter().map(|&x| ((x as f64) - mu).clamp(0.0, cap)).sum();
+        if s > total as f64 {
             lo = mu;
         } else {
             hi = mu;
@@ -36,8 +39,13 @@ pub fn project_box_cut(v: &mut [f32], r: f32) {
     }
     let mu = 0.5 * (lo + hi);
     for x in v.iter_mut() {
-        *x = ((*x as f64) - mu).clamp(0.0, 1.0) as f32;
+        *x = ((*x as f64) - mu).clamp(0.0, cap) as f32;
     }
+}
+
+/// In-place projection of `v` onto {0 ≤ x ≤ 1, Σx ≤ r}.
+pub fn project_box_cut(v: &mut [f32], r: f32) {
+    project_capped_simplex(v, 1.0, r)
 }
 
 #[cfg(test)]
@@ -93,6 +101,39 @@ mod tests {
             for (x, y) in a.iter().zip(&b) {
                 assert!((x - y).abs() < 1e-4, "{a:?} vs {b:?}");
             }
+        }
+    }
+
+    #[test]
+    fn capped_simplex_general_cap_binds() {
+        // cap 0.4, total 1.0: symmetric large input hits the cut at
+        // x_i = 1/3 each (below the cap), not 0.4.
+        let mut v = vec![5.0, 5.0, 5.0];
+        project_capped_simplex(&mut v, 0.4, 1.0);
+        assert!((sum(&v) - 1.0).abs() < 1e-4);
+        for &x in &v {
+            assert!((x - 1.0 / 3.0).abs() < 1e-4, "{v:?}");
+        }
+        // total 2.0: now the cap binds first (3 × 0.4 = 1.2 ≤ 2.0)
+        let mut w = vec![5.0, 5.0, 5.0];
+        project_capped_simplex(&mut w, 0.4, 2.0);
+        for &x in &w {
+            assert!((x - 0.4).abs() < 1e-5, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn capped_simplex_reduces_to_box_cut_at_cap_one() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        for _ in 0..50 {
+            let n = 2 + rng.below(6);
+            let r = 0.5 + rng.uniform() as f32 * 2.0;
+            let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 1.5) as f32).collect();
+            let mut a = v.clone();
+            let mut b = v.clone();
+            project_capped_simplex(&mut a, 1.0, r);
+            project_box_cut(&mut b, r);
+            assert_eq!(a, b);
         }
     }
 

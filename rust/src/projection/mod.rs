@@ -11,33 +11,88 @@ mod boxcut;
 mod boxp;
 mod simplex;
 
-pub use boxcut::project_box_cut;
+pub use boxcut::{project_box_cut, project_capped_simplex};
 pub use boxp::{project_box, project_unit_box};
 pub use simplex::{project_simplex_eq, project_simplex_ineq};
 
 /// Projection kinds available to slab buckets (must stay in sync with the
-/// AOT artifact family in python/compile/aot.py).
+/// AOT artifact family in python/compile/aot.py; `CappedSimplex` is
+/// CPU-reference-only until its slab kernel lands there).
+///
+/// Parameterized kinds store their f32 parameters as bit patterns so the
+/// enum stays `Copy + Eq + Ord + Hash` — it keys the bucket map in
+/// `sparse::slabs` and the artifact map in `runtime::pjrt`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum ProjectionKind {
     /// {x ≥ 0, Σx ≤ 1} — per-source impression capacity (paper Eq. 4–5).
     Simplex,
     /// [0, 1]^w unit box.
     Box,
+    /// {0 ≤ x ≤ u, Σx ≤ s} — per-edge caps plus a per-source total
+    /// capacity (the "box-cut" family of [6] with a general cap/total).
+    /// Construct via [`ProjectionKind::capped_simplex`].
+    CappedSimplex { cap_bits: u32, total_bits: u32 },
 }
 
 impl ProjectionKind {
+    /// {0 ≤ x ≤ cap, Σx ≤ total}. Both parameters must be positive finite.
+    pub fn capped_simplex(cap: f32, total: f32) -> Self {
+        assert!(cap > 0.0 && cap.is_finite(), "cap must be positive finite");
+        assert!(total > 0.0 && total.is_finite(), "total must be positive finite");
+        ProjectionKind::CappedSimplex {
+            cap_bits: cap.to_bits(),
+            total_bits: total.to_bits(),
+        }
+    }
+
+    /// (cap, total) of a `CappedSimplex`, None otherwise.
+    pub fn capped_params(self) -> Option<(f32, f32)> {
+        match self {
+            ProjectionKind::CappedSimplex { cap_bits, total_bits } => {
+                Some((f32::from_bits(cap_bits), f32::from_bits(total_bits)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Family name (parameter-free; see [`ProjectionKind::spec`] for the
+    /// round-trippable form).
     pub fn name(self) -> &'static str {
         match self {
             ProjectionKind::Simplex => "simplex",
             ProjectionKind::Box => "box",
+            ProjectionKind::CappedSimplex { .. } => "capped_simplex",
         }
     }
 
+    /// Full round-trippable spec string: `parse(k.spec()) == Some(k)`.
+    /// (f32 `Display` is the shortest exact representation in Rust, so the
+    /// parameter round-trip is lossless.)
+    pub fn spec(self) -> String {
+        match self.capped_params() {
+            Some((cap, total)) => format!("capped_simplex:{cap}:{total}"),
+            None => self.name().to_string(),
+        }
+    }
+
+    /// Parse a name or spec string. Bare `capped_simplex` gets the
+    /// (cap=1, total=1) defaults; `capped_simplex:<cap>:<total>` parses
+    /// explicit parameters.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
-            "simplex" => Some(ProjectionKind::Simplex),
-            "box" => Some(ProjectionKind::Box),
-            _ => None,
+            "simplex" => return Some(ProjectionKind::Simplex),
+            "box" => return Some(ProjectionKind::Box),
+            "capped_simplex" => return Some(ProjectionKind::capped_simplex(1.0, 1.0)),
+            _ => {}
+        }
+        let rest = s.strip_prefix("capped_simplex:")?;
+        let (cap_s, total_s) = rest.split_once(':')?;
+        let cap: f32 = cap_s.parse().ok()?;
+        let total: f32 = total_s.parse().ok()?;
+        if cap > 0.0 && cap.is_finite() && total > 0.0 && total.is_finite() {
+            Some(ProjectionKind::capped_simplex(cap, total))
+        } else {
+            None
         }
     }
 
@@ -46,11 +101,18 @@ impl ProjectionKind {
         match self {
             ProjectionKind::Simplex => project_simplex_ineq(v),
             ProjectionKind::Box => project_unit_box(v),
+            ProjectionKind::CappedSimplex { cap_bits, total_bits } => project_capped_simplex(
+                v,
+                f32::from_bits(cap_bits),
+                f32::from_bits(total_bits),
+            ),
         }
     }
 
     /// Whether the polytope is separable per coordinate (allows slab rows
-    /// to be split when a block exceeds the maximum slab width).
+    /// to be split when a block exceeds the maximum slab width). The sum
+    /// cut couples coordinates, so `CappedSimplex` is non-separable like
+    /// `Simplex`.
     pub fn separable(self) -> bool {
         matches!(self, ProjectionKind::Box)
     }
@@ -86,8 +148,41 @@ mod tests {
     fn kind_roundtrip() {
         for k in [ProjectionKind::Simplex, ProjectionKind::Box] {
             assert_eq!(ProjectionKind::parse(k.name()), Some(k));
+            assert_eq!(ProjectionKind::parse(&k.spec()), Some(k));
         }
         assert_eq!(ProjectionKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn capped_simplex_spec_roundtrip() {
+        for (cap, total) in [(1.0f32, 1.0f32), (0.5, 2.5), (0.3333333, 7.0), (1e-3, 1e3)] {
+            let k = ProjectionKind::capped_simplex(cap, total);
+            let spec = k.spec();
+            assert_eq!(ProjectionKind::parse(&spec), Some(k), "spec {spec}");
+            assert_eq!(k.name(), "capped_simplex");
+            assert_eq!(k.capped_params(), Some((cap, total)));
+        }
+        // bare family name gets defaults
+        assert_eq!(
+            ProjectionKind::parse("capped_simplex"),
+            Some(ProjectionKind::capped_simplex(1.0, 1.0))
+        );
+        // malformed / invalid parameters rejected
+        assert_eq!(ProjectionKind::parse("capped_simplex:1.0"), None);
+        assert_eq!(ProjectionKind::parse("capped_simplex:0:1"), None);
+        assert_eq!(ProjectionKind::parse("capped_simplex:1:-2"), None);
+        assert_eq!(ProjectionKind::parse("capped_simplex:a:b"), None);
+    }
+
+    #[test]
+    fn capped_simplex_applies_and_is_nonseparable() {
+        let k = ProjectionKind::capped_simplex(0.5, 1.0);
+        assert!(!k.separable());
+        let mut v = vec![2.0, 2.0, 2.0, -1.0];
+        k.apply(&mut v);
+        let s: f64 = v.iter().map(|&x| x as f64).sum();
+        assert!(s <= 1.0 + 1e-4, "sum {s}");
+        assert!(v.iter().all(|&x| (-1e-6..=0.5 + 1e-6).contains(&x)));
     }
 
     #[test]

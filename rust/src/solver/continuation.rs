@@ -55,6 +55,24 @@ impl GammaSchedule {
             GammaSchedule::Decay { floor, .. } => floor,
         }
     }
+
+    /// First iteration at which γ has reached its floor (0 for `Fixed`).
+    /// Stopping criteria that compare solves "at matched γ" (the engine's
+    /// warm-vs-cold protocol) set `min_iters` past this point.
+    pub fn iters_to_floor(&self) -> usize {
+        match *self {
+            GammaSchedule::Fixed(_) => 0,
+            GammaSchedule::Decay { init, floor, factor, every } => {
+                let mut g = init;
+                let mut steps = 0usize;
+                while g > floor && factor < 1.0 && steps < 10_000 {
+                    g = (g * factor).max(floor);
+                    steps += 1;
+                }
+                steps * every.max(1)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +111,15 @@ mod tests {
         assert!(!s.decays_at(26));
         assert!(s.decays_at(100));
         assert!(!s.decays_at(125)); // already at floor
+    }
+
+    #[test]
+    fn iters_to_floor_matches_schedule() {
+        assert_eq!(GammaSchedule::Fixed(0.05).iters_to_floor(), 0);
+        let s = GammaSchedule::paper_fig5(); // 0.16 →(×0.5 every 25)→ 0.01
+        assert_eq!(s.iters_to_floor(), 100);
+        assert_eq!(s.gamma_at(100), 0.01);
+        assert!(s.gamma_at(99) > 0.01);
     }
 
     #[test]

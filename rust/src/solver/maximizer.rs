@@ -88,6 +88,7 @@ pub(crate) fn run_loop(
     let mut stop_reason = StopReason::MaxIters;
     let mut last: Option<ObjectiveResult> = None;
     let mut iters = 0usize;
+    let mut stall_run = 0usize; // consecutive small objective steps
 
     for t in 0..opts.max_iters {
         let gamma = opts.gamma.gamma_at(t);
@@ -110,9 +111,13 @@ pub(crate) fn run_loop(
         }
 
         let prev_obj = last.as_ref().map(|r| r.dual_obj);
+        if opts.stopping.is_stall_step(prev_obj, res.dual_obj) {
+            stall_run += 1;
+        } else {
+            stall_run = 0;
+        }
         last = Some(res);
-        if let Some(reason) = opts.stopping.check(t, grad_norm, prev_obj, last.as_ref().unwrap().dual_obj)
-        {
+        if let Some(reason) = opts.stopping.check(t, grad_norm, stall_run) {
             stop_reason = reason;
             break;
         }

@@ -11,12 +11,19 @@ pub enum StopReason {
 
 #[derive(Clone, Debug)]
 pub struct StoppingCriteria {
-    /// Stop when ‖∇g‖₂ falls below this (None = never).
+    /// Stop when ‖∇g‖₂ falls below this (None = never). NOTE: the RAW
+    /// gradient does not vanish at a constrained dual optimum (slack rows
+    /// hold λ = 0 against a negative gradient), so for matching LPs prefer
+    /// the stall criterion; grad tolerance suits unconstrained objectives.
     pub grad_norm_tol: Option<f64>,
-    /// Stop when |Δg| stays below `stall_tol` for `stall_patience`
-    /// consecutive iterations (None = never). Interacts with continuation:
-    /// disabled until γ reaches its floor would be ideal; we keep it simple
-    /// and recommend patience > decay interval.
+    /// Stop when |Δg| ≤ stall_tol · max(|g|, 1) for `stall_patience`
+    /// consecutive iterations (None = never). The consecutive window is
+    /// tracked by the solve loop (`is_stall_step`), which makes the
+    /// criterion robust to momentum oscillations — a single transient tiny
+    /// step resets nothing it shouldn't. Interacts with continuation: set
+    /// `min_iters` past the γ descent (`GammaSchedule::iters_to_floor`) so
+    /// stalls are only declared at the floor; the engine layer does this
+    /// automatically.
     pub stall_tol: Option<f64>,
     pub stall_patience: usize,
     /// Never stop before this many iterations.
@@ -35,15 +42,18 @@ impl Default for StoppingCriteria {
 }
 
 impl StoppingCriteria {
-    /// Stateless check — stall tracking folds the consecutive count into
-    /// the caller via an internal counter.
-    pub fn check(
-        &self,
-        t: usize,
-        grad_norm: f64,
-        prev_obj: Option<f64>,
-        obj: f64,
-    ) -> Option<StopReason> {
+    /// Whether one objective transition counts toward the stall window:
+    /// |Δg| ≤ stall_tol · max(|g|, 1). The loop accumulates consecutive
+    /// true results and feeds the count to `check`.
+    pub fn is_stall_step(&self, prev_obj: Option<f64>, obj: f64) -> bool {
+        match (self.stall_tol, prev_obj) {
+            (Some(tol), Some(prev)) => (obj - prev).abs() <= tol * obj.abs().max(1.0),
+            _ => false,
+        }
+    }
+
+    /// Stateless check given the loop-tracked consecutive stall count.
+    pub fn check(&self, t: usize, grad_norm: f64, stall_run: usize) -> Option<StopReason> {
         if t + 1 < self.min_iters {
             return None;
         }
@@ -52,16 +62,8 @@ impl StoppingCriteria {
                 return Some(StopReason::GradNormTol);
             }
         }
-        if let (Some(tol), Some(prev)) = (self.stall_tol, prev_obj) {
-            // Cheap stall check without internal state: relative change.
-            // (The patience window is enforced by callers that care; the
-            // default loop treats a single tiny step after min_iters +
-            // patience iterations as a stall signal.)
-            if t >= self.min_iters + self.stall_patience
-                && (obj - prev).abs() <= tol * obj.abs().max(1.0)
-            {
-                return Some(StopReason::ObjectiveStall);
-            }
+        if self.stall_tol.is_some() && stall_run >= self.stall_patience.max(1) {
+            return Some(StopReason::ObjectiveStall);
         }
         None
     }
@@ -74,14 +76,15 @@ mod tests {
     #[test]
     fn default_never_stops_early() {
         let s = StoppingCriteria::default();
-        assert_eq!(s.check(100, 1e-30, Some(1.0), 1.0), None);
+        assert_eq!(s.check(100, 1e-30, 1000), None);
+        assert!(!s.is_stall_step(Some(1.0), 1.0)); // no stall_tol configured
     }
 
     #[test]
     fn grad_tol_triggers() {
         let s = StoppingCriteria { grad_norm_tol: Some(1e-6), ..Default::default() };
-        assert_eq!(s.check(5, 1e-7, None, 0.0), Some(StopReason::GradNormTol));
-        assert_eq!(s.check(5, 1e-5, None, 0.0), None);
+        assert_eq!(s.check(5, 1e-7, 0), Some(StopReason::GradNormTol));
+        assert_eq!(s.check(5, 1e-5, 0), None);
     }
 
     #[test]
@@ -91,23 +94,37 @@ mod tests {
             min_iters: 10,
             ..Default::default()
         };
-        assert_eq!(s.check(3, 0.0, None, 0.0), None);
-        assert_eq!(s.check(9, 0.0, None, 0.0), Some(StopReason::GradNormTol));
+        assert_eq!(s.check(3, 0.0, 0), None);
+        assert_eq!(s.check(9, 0.0, 0), Some(StopReason::GradNormTol));
     }
 
     #[test]
-    fn stall_requires_patience_window() {
+    fn stall_requires_consecutive_window() {
         let s = StoppingCriteria {
             stall_tol: Some(1e-9),
             stall_patience: 5,
             min_iters: 1,
             ..Default::default()
         };
-        assert_eq!(s.check(2, 1.0, Some(5.0), 5.0), None); // too early
-        assert_eq!(
-            s.check(10, 1.0, Some(5.0), 5.0),
-            Some(StopReason::ObjectiveStall)
-        );
-        assert_eq!(s.check(10, 1.0, Some(5.0), 6.0), None); // still moving
+        // step classification: relative to max(|g|, 1)
+        assert!(s.is_stall_step(Some(5.0), 5.0));
+        assert!(!s.is_stall_step(Some(5.0), 6.0));
+        assert!(!s.is_stall_step(None, 5.0)); // no previous value yet
+        // window: 4 consecutive small steps is not enough, 5 is
+        assert_eq!(s.check(10, 1.0, 4), None);
+        assert_eq!(s.check(10, 1.0, 5), Some(StopReason::ObjectiveStall));
+        // min_iters = 1 is already satisfied at t = 0
+        assert_eq!(s.check(0, 1.0, 5), Some(StopReason::ObjectiveStall));
+    }
+
+    #[test]
+    fn zero_patience_still_needs_one_small_step() {
+        let s = StoppingCriteria {
+            stall_tol: Some(1e-9),
+            stall_patience: 0,
+            ..Default::default()
+        };
+        assert_eq!(s.check(5, 1.0, 0), None);
+        assert_eq!(s.check(5, 1.0, 1), Some(StopReason::ObjectiveStall));
     }
 }

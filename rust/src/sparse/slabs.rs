@@ -99,10 +99,11 @@ impl SlabLayout {
             }
             let kind = kind_of(i);
             if deg > MAX_WIDTH {
-                if kind == ProjectionKind::Simplex {
+                if !kind.separable() {
                     return Err(format!(
                         "source {i} degree {deg} exceeds MAX_WIDTH {MAX_WIDTH} \
-                         for non-separable simplex projection"
+                         for non-separable {} projection",
+                        kind.name()
                     ));
                 }
                 // separable: split into MAX_WIDTH chunks (handled in pass 2

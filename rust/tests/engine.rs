@@ -1,0 +1,178 @@
+//! Engine-layer integration (experiment E12): warm-started repeated
+//! solving on perturbation streams, batch-scheduler determinism, and the
+//! acceptance protocol — on a generated perturbation sequence (same `A`
+//! pattern, perturbed `c`/`b`) the warm-started solve reaches the matched
+//! stopping criterion in measurably fewer iterations than the cold solve,
+//! and `solve_batch` across ≥ 8 concurrent jobs is bit-identical to
+//! sequential execution.
+
+use dualip::engine::{EngineConfig, Fingerprint, SolveEngine, SolveJob};
+use dualip::gen::workloads::{perturbation_sequence, PerturbSpec};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::problem::{jacobi_row_normalize, MatchingLp};
+use dualip::solver::{GammaSchedule, SolveOptions, StopReason, StoppingCriteria};
+
+/// Conditioned base instance for the stream (the paper's standard §5.1
+/// pipeline; conditioning commutes with the c/b perturbation because the
+/// row scaling depends only on A, which the stream shares).
+fn base_instance(seed: u64) -> MatchingLp {
+    let mut lp = generate(&SyntheticConfig {
+        num_requests: 1_200,
+        num_resources: 60,
+        avg_nnz_per_row: 6.0,
+        seed,
+        ..Default::default()
+    });
+    jacobi_row_normalize(&mut lp);
+    lp
+}
+
+/// Matched stopping criterion: objective stall at the floor γ. The raw
+/// gradient norm does NOT vanish at a constrained dual optimum (slack rows
+/// pin λ = 0 against a negative gradient), so stall — not grad tolerance —
+/// is the reachable criterion for matching LPs.
+fn stream_options() -> SolveOptions {
+    SolveOptions {
+        max_iters: 2_000,
+        max_step_size: 1.0,
+        initial_step_size: 1e-4,
+        gamma: GammaSchedule::paper_fig5(), // 0.16 → 0.01, floor at iter 100
+        stopping: StoppingCriteria {
+            stall_tol: Some(1e-6),
+            stall_patience: 10,
+            ..Default::default()
+        },
+        record_every: 500,
+    }
+}
+
+fn engine(threads: usize, cache_capacity: usize) -> SolveEngine {
+    SolveEngine::new(EngineConfig {
+        opts: stream_options(),
+        warm_tail: 5,
+        threads,
+        cache_capacity,
+    })
+}
+
+const STREAM_SEED: u64 = 17;
+const JOBS: usize = 10; // ≥ 8 per the acceptance criteria
+
+fn stream_jobs(spec: &PerturbSpec) -> Vec<SolveJob> {
+    let base = base_instance(STREAM_SEED);
+    perturbation_sequence(&base, spec, JOBS, 1000)
+        .into_iter()
+        .enumerate()
+        .map(|(k, lp)| SolveJob::new(k as u64, lp))
+        .collect()
+}
+
+#[test]
+fn warm_resolve_beats_cold_at_matched_stopping() {
+    let spec = PerturbSpec { c_rel: 0.03, b_rel: 0.03 };
+
+    // cold baseline: zero-capacity cache ⇒ every solve from λ = 0
+    let cold = engine(1, 0);
+    let cold_results: Vec<_> =
+        stream_jobs(&spec).into_iter().map(|j| cold.submit(j)).collect();
+
+    // warm: primed on the base instance, then the stream
+    let warm = engine(8, 16);
+    let primer = warm.submit(SolveJob::new(u64::MAX, base_instance(STREAM_SEED)));
+    assert!(!primer.warm);
+    let (warm_results, report) = warm.solve_batch(stream_jobs(&spec));
+    assert_eq!(report.jobs, JOBS);
+
+    let mut cold_total = 0usize;
+    let mut warm_total = 0usize;
+    for (c, w) in cold_results.iter().zip(&warm_results) {
+        // both reach the SAME criterion (stall at floor γ), neither the
+        // iteration-budget fallback
+        assert_eq!(c.stop_reason, StopReason::ObjectiveStall, "cold job {}", c.id);
+        assert_eq!(w.stop_reason, StopReason::ObjectiveStall, "warm job {}", w.id);
+        assert_eq!(c.final_gamma, 0.01);
+        assert_eq!(w.final_gamma, 0.01);
+        assert!(w.warm, "job {} should warm-start", w.id);
+        // same instance ⇒ same optimum: objectives agree within tolerance
+        let rel = (c.dual_obj - w.dual_obj).abs() / c.dual_obj.abs().max(1.0);
+        assert!(
+            rel < 5e-3,
+            "job {}: cold obj {} vs warm obj {} (rel {rel})",
+            c.id,
+            c.dual_obj,
+            w.dual_obj
+        );
+        // warm takes fewer iterations on every job — the cold path cannot
+        // even evaluate its criterion before the γ floor (iter 100), while
+        // the warm path re-smooths over a 5-iteration tail
+        assert!(
+            w.iterations < c.iterations,
+            "job {}: warm {} !< cold {}",
+            w.id,
+            w.iterations,
+            c.iterations
+        );
+        cold_total += c.iterations;
+        warm_total += w.iterations;
+    }
+    // aggregate: measurably fewer — at least 2× fewer iterations
+    assert!(
+        (warm_total as f64) < 0.5 * cold_total as f64,
+        "warm {warm_total} vs cold {cold_total} total iterations"
+    );
+}
+
+#[test]
+fn solve_batch_concurrent_equals_sequential_bitwise() {
+    let spec = PerturbSpec { c_rel: 0.05, b_rel: 0.05 };
+
+    // two engines with identical configs except pool width, primed
+    // identically — every per-job computation is a pure function of
+    // (instance, snapshot warm start, options), so trajectories' final λ
+    // must agree bit-for-bit
+    let par = engine(8, 16);
+    let seq = engine(1, 16);
+    let p1 = par.submit(SolveJob::new(u64::MAX, base_instance(STREAM_SEED)));
+    let p2 = seq.submit(SolveJob::new(u64::MAX, base_instance(STREAM_SEED)));
+    assert_eq!(p1.lam, p2.lam, "primers must agree bitwise");
+
+    let (a, report_a) = par.solve_batch(stream_jobs(&spec));
+    let (b, _report_b) = seq.solve_batch(stream_jobs(&spec));
+    assert_eq!(a.len(), JOBS);
+    assert!(report_a.threads >= 8.min(JOBS), "pool width {}", report_a.threads);
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.id, rb.id);
+        assert_eq!(ra.iterations, rb.iterations, "job {}", ra.id);
+        assert_eq!(ra.lam, rb.lam, "job {}: final λ must match bit-for-bit", ra.id);
+        assert_eq!(ra.dual_obj, rb.dual_obj, "job {}", ra.id);
+    }
+}
+
+#[test]
+fn fingerprints_recognize_the_stream_and_reject_strangers() {
+    let base = base_instance(3);
+    let spec = PerturbSpec::default();
+    let fp = Fingerprint::of(&base);
+    for lp in perturbation_sequence(&base, &spec, 4, 7) {
+        assert_eq!(Fingerprint::of(&lp), fp);
+    }
+    let other = base_instance(4);
+    assert_ne!(Fingerprint::of(&other), fp);
+}
+
+#[test]
+fn engine_stats_track_the_serving_mix() {
+    let spec = PerturbSpec { c_rel: 0.03, b_rel: 0.03 };
+    let e = engine(4, 16);
+    let _ = e.submit(SolveJob::new(u64::MAX, base_instance(STREAM_SEED)));
+    let (_results, _report) = e.solve_batch(stream_jobs(&spec));
+    let s = e.stats();
+    assert_eq!(s.submitted, 1 + JOBS as u64);
+    assert_eq!(s.cold_solves, 1);
+    assert_eq!(s.warm_solves, JOBS as u64);
+    assert!(s.mean_warm_iters() < s.mean_cold_iters());
+    assert_eq!(s.batches, 1);
+    let (hits, misses) = e.cache_counters();
+    assert_eq!(hits, JOBS as u64);
+    assert_eq!(misses, 1);
+}

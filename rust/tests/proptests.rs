@@ -9,7 +9,8 @@
 use dualip::gen::{generate, SyntheticConfig};
 use dualip::problem::{jacobi_row_normalize, unscale_dual, ObjectiveFunction};
 use dualip::projection::{
-    project_box_cut, project_simplex_eq, project_simplex_ineq, project_unit_box, ProjectionKind,
+    project_box_cut, project_capped_simplex, project_simplex_eq, project_simplex_ineq,
+    project_unit_box, ProjectionKind,
 };
 use dualip::reference::CpuObjective;
 use dualip::sparse::slabs::SlabLayout;
@@ -86,6 +87,84 @@ fn prop_simplex_eq_hits_radius() {
         assert!((s - r as f64).abs() < 1e-3, "sum {s} != {r}");
         assert!(v.iter().all(|&x| x >= 0.0));
     }
+}
+
+#[test]
+fn prop_capped_simplex_oracle() {
+    // Feasibility, idempotence and optimality of Π onto {0 ≤ x ≤ u, Σx ≤ s}
+    // against random feasible probes (Π(v) minimizes ‖x − v‖).
+    let mut rng = Rng::new(909);
+    for case in 0..CASES {
+        let n = 1 + rng.below(16);
+        let cap = (rng.uniform() * 2.0 + 0.05) as f32;
+        let total = (rng.uniform() * 3.0 + 0.05) as f32;
+        let v = rand_vec(&mut rng, n, 2.0);
+
+        let mut p = v.clone();
+        project_capped_simplex(&mut p, cap, total);
+        let s: f64 = p.iter().map(|&x| x as f64).sum();
+        assert!(s <= total as f64 + 1e-3, "case {case}: Σ {s} > {total}");
+        assert!(
+            p.iter().all(|&x| (-1e-6..=cap + 1e-5).contains(&x)),
+            "case {case}: coordinate outside [0, {cap}]: {p:?}"
+        );
+
+        let mut p2 = p.clone();
+        project_capped_simplex(&mut p2, cap, total);
+        for (a, b) in p.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-4, "case {case}: not idempotent");
+        }
+
+        let d_star: f64 = v.iter().zip(&p).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        for _ in 0..30 {
+            let mut y: Vec<f64> = (0..n).map(|_| rng.uniform() * cap as f64).collect();
+            let sy: f64 = y.iter().sum();
+            if sy > total as f64 {
+                let scale = total as f64 / sy;
+                y.iter_mut().for_each(|x| *x *= scale);
+            }
+            let d: f64 = v.iter().zip(&y).map(|(a, b)| (*a as f64 - b).powi(2)).sum();
+            assert!(d_star <= d + 1e-4, "case {case}: probe beat projection");
+        }
+    }
+}
+
+#[test]
+fn prop_capped_simplex_nonexpansive_and_reductions() {
+    let mut rng = Rng::new(1010);
+    // ‖Π(u) − Π(v)‖ ≤ ‖u − v‖ (convex projection)
+    for _ in 0..CASES {
+        let n = 2 + rng.below(10);
+        let cap = (rng.uniform() * 1.5 + 0.1) as f32;
+        let total = (rng.uniform() * 2.0 + 0.1) as f32;
+        let u = rand_vec(&mut rng, n, 2.0);
+        let v = rand_vec(&mut rng, n, 2.0);
+        let d_in: f64 = u.iter().zip(&v).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let mut pu = u.clone();
+        let mut pv = v.clone();
+        project_capped_simplex(&mut pu, cap, total);
+        project_capped_simplex(&mut pv, cap, total);
+        let d_out: f64 = pu.iter().zip(&pv).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(d_out <= d_in + 1e-5, "{d_out} > {d_in}");
+    }
+    // cap ≥ total ⇒ the per-edge cap can never bind and the polytope is
+    // {x ≥ 0, Σx ≤ total}; at total = 1 that is the simplex-ineq oracle.
+    for _ in 0..50 {
+        let n = 1 + rng.below(12);
+        let v = rand_vec(&mut rng, n, 2.0);
+        let mut a = v.clone();
+        project_capped_simplex(&mut a, 1.5, 1.0);
+        let mut b = v.clone();
+        project_simplex_ineq(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{a:?} vs {b:?}");
+        }
+    }
+    // parse/spec round-trip of the parametrized kind (the engine stores
+    // kinds in bucket and artifact maps by value)
+    let k = ProjectionKind::capped_simplex(0.25, 2.0);
+    assert_eq!(ProjectionKind::parse(&k.spec()), Some(k));
+    assert_eq!(k.capped_params(), Some((0.25, 2.0)));
 }
 
 #[test]

@@ -1,0 +1,171 @@
+//! Offline shim of the `anyhow` API surface this repo uses: `Error`,
+//! `Result`, `anyhow!`, `Context::{context, with_context}`, `Error::msg`,
+//! plus the `{e}` / `{e:#}` / `{e:?}` formatting conventions. Unlike the
+//! real crate it stores the cause chain as strings (no backtraces, no
+//! downcasting) — enough for error propagation and reporting in a no-network
+//! build. Replace with crates.io `anyhow = "1"` when vendoring is unneeded.
+
+use std::fmt;
+
+/// Error with a context chain; frame 0 is the outermost context.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirror of `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (mirror of `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// Innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-separated (anyhow convention)
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames[0])?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.frames[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts into Error (same blanket as real anyhow; Error
+// itself does not implement std::error::Error, so no impl overlap).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as frames.
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible result (mirror of `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a format string / expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return an error (provided for parity; unused paths cost nothing).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn from_std_error_and_question_mark() {
+        fn parse(s: &str) -> Result<i32> {
+            let v: i32 = s.parse()?;
+            Ok(v)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io fail"));
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading x: io fail");
+        let o: Option<i32> = None;
+        assert!(o.context("missing").is_err());
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let n = 7;
+        let b = anyhow!("captured {n}");
+        assert_eq!(format!("{b}"), "captured 7");
+        let c = anyhow!("args {}", 9);
+        assert_eq!(format!("{c}"), "args 9");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(format!("{d}"), "owned");
+    }
+}
