@@ -11,6 +11,7 @@ use crate::distributed::{solve_distributed, LinkModel};
 use crate::gen::{generate, workloads, SyntheticConfig};
 use crate::metrics::{comm_report, solve_report};
 use crate::problem::{check_primal, jacobi_row_normalize, MatchingLp, ObjectiveFunction};
+use crate::projection::{registry, ProjectionKind, ProjectionMap};
 use crate::reference::CpuObjective;
 use crate::runtime::{default_artifacts_dir, HloObjective};
 use crate::solver::{Agd, GammaSchedule, Maximizer, SolveOptions, SolveResult};
@@ -26,6 +27,12 @@ pub fn usage() -> &'static str {
          --sources N --dests N --nnz-per-row F --families N --seed S\n\
          --backend cpu|hlo|dist   --workers N   --iters N\n\
          --gamma F | --gamma-decay init,floor,factor,every\n\
+         --projection SPEC  blockwise polytope from the operator registry\n\
+                            (simplex | box | capped_simplex:c:t |\n\
+                             weighted_simplex:s:w1,w2,.. | box_vec:u1,u2,..;\n\
+                             non-simplex/box families are CPU-reference-only\n\
+                             until their slab kernels land — use --backend cpu)\n\
+         --count-cap M      append the global row Σx ≤ M (paper §4)\n\
          --precondition --primal-scaling --csv PATH\n\
        parity            E1/E2: baseline-vs-accelerated trajectories (Fig 1/2)\n\
          --sources N --iters N --out-dir results/\n\
@@ -72,14 +79,23 @@ fn solve_options(args: &Args) -> Result<SolveOptions> {
 }
 
 fn workload(args: &Args) -> Result<SyntheticConfig> {
-    Ok(SyntheticConfig {
+    let mut cfg = SyntheticConfig {
         num_requests: args.usize_or("sources", 50_000)?,
         num_resources: args.usize_or("dests", 500)?,
         avg_nnz_per_row: args.f64_or("nnz-per-row", 10.0)?,
         num_families: args.usize_or("families", 1)?,
         seed: args.u64_or("seed", 0)?,
         ..SyntheticConfig::default_with(args.u64_or("seed", 0)?)
-    })
+    };
+    if let Some(spec) = args.get("projection") {
+        cfg.kind = ProjectionKind::parse(spec).ok_or_else(|| {
+            anyhow!(
+                "--projection: unknown spec {spec:?} (registered families: {})",
+                registry::families().join(", ")
+            )
+        })?;
+    }
+    Ok(cfg)
 }
 
 fn write_trajectory(path: &str, label: &str, r: &SolveResult) -> Result<()> {
@@ -116,6 +132,13 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
         cfg.num_requests, cfg.num_resources, cfg.avg_nnz_per_row, cfg.num_families, cfg.seed
     );
     let mut lp = generate(&cfg);
+    // append the global row BEFORE conditioning so jacobi normalization
+    // sees (and scales) it like every other dual row
+    if let Some(m) = args.get("count-cap") {
+        let cap: f32 = m.parse().map_err(|_| anyhow!("--count-cap: bad float {m:?}"))?;
+        lp.push_global_row(vec![1.0; lp.nnz()], cap);
+        eprintln!("global count row appended: Σx ≤ {cap}");
+    }
     if args.flag("precondition") {
         let s = jacobi_row_normalize(&mut lp);
         eprintln!("jacobi row normalization applied ({} empty rows)", s.empty_rows);
@@ -124,7 +147,12 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
         crate::problem::apply_primal_scaling(&mut lp);
         eprintln!("primal scaling applied");
     }
-    eprintln!("nnz={} dual_dim={}", lp.nnz(), lp.dual_dim());
+    eprintln!(
+        "nnz={} dual_dim={} projection={}",
+        lp.nnz(),
+        lp.dual_dim(),
+        cfg.kind.spec()
+    );
 
     let init = vec![0.0f32; lp.dual_dim()];
     let mut agd = Agd::default();
@@ -257,17 +285,10 @@ fn reference_optimum(
     precondition: bool,
 ) -> Result<f64> {
     // Work on a preconditioned copy for fast convergence; the optimum VALUE
-    // is invariant under row scaling (same perturbed primal).
-    let mut lp_ref = MatchingLp {
-        a: lp.a.clone(),
-        cost: lp.cost.clone(),
-        b: lp.b.clone(),
-        projection: crate::projection::ProjectionMap::Uniform(
-            crate::projection::ProjectionKind::Simplex,
-        ),
-        primal_scale: lp.primal_scale.clone(),
-        global_rows: lp.global_rows.clone(),
-    };
+    // is invariant under row scaling (same perturbed primal). The ablation
+    // drivers are simplex instances, so the reference pins that polytope.
+    let mut lp_ref = lp.clone();
+    lp_ref.projection = ProjectionMap::Uniform(ProjectionKind::Simplex);
     if precondition {
         jacobi_row_normalize(&mut lp_ref);
     }
@@ -308,16 +329,10 @@ pub fn cmd_ablation_precond(args: &Args) -> Result<()> {
 
     let mut runs = Vec::new();
     for precondition in [false, true] {
-        let mut lp_run = MatchingLp {
-            a: lp.a.clone(),
-            cost: lp.cost.clone(),
-            b: lp.b.clone(),
-            projection: crate::projection::ProjectionMap::Uniform(
-                crate::projection::ProjectionKind::Simplex,
-            ),
-            primal_scale: None,
-            global_rows: Vec::new(),
-        };
+        let mut lp_run = lp.clone();
+        lp_run.projection = ProjectionMap::Uniform(ProjectionKind::Simplex);
+        lp_run.primal_scale = None;
+        lp_run.global_rows = Vec::new();
         // Preconditioning rescales the dual Hessian to ~unit diagonal, so
         // the stable step cap is ~1/L(AAᵀ)≈1 instead of the paper's 1e-3.
         let max_step = if precondition {

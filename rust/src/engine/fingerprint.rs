@@ -4,14 +4,22 @@
 //! graph (which (source, destination) pairs carry variables) changes
 //! slowly, while objective coefficients `c` and budgets `b` refresh every
 //! cycle. The fingerprint captures exactly the slow part — dimensions,
-//! family count, global-row count, and a hash of the sparsity pattern
-//! (`src_ptr` + `dest_idx`) — and deliberately ignores the numeric planes,
-//! so a (same-pattern, new-`c`/`b`) instance maps to the same key and the
-//! warm-start cache recognizes it as a re-solve.
+//! family count, a hash of the sparsity pattern (`src_ptr` + `dest_idx`),
+//! the per-block projection specs (polytope identity), the constraint
+//! coefficient planes (matching families and global rows) and the
+//! primal-scale vector — and deliberately ignores the numeric
+//! `c`/`b`/global-rhs planes, so a (same-structure, new-`c`/`b`)
+//! instance maps to the same key and the warm-start cache recognizes it
+//! as a re-solve. Polytopes and coefficients are part of identity
+//! because two instances sharing a sparsity pattern but projecting onto
+//! different sets (or weighting `A` differently) have different duals —
+//! colliding them would warm-start from a wrong λ.
 
+use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::problem::MatchingLp;
+use crate::projection::{ProjectionKind, ProjectionMap};
 
 /// 64-bit FNV-1a over a little-endian byte stream — dependency-free,
 /// deterministic across runs and platforms (same requirement as the
@@ -43,6 +51,14 @@ impl Fnv64 {
         }
     }
 
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
     pub fn finish(self) -> u64 {
         self.0
     }
@@ -68,6 +84,24 @@ pub struct Fingerprint {
     pub nnz: usize,
     /// FNV-1a over (src_ptr, dest_idx).
     pub pattern_hash: u64,
+    /// FNV-1a over each block's projection spec string, in block order —
+    /// the polytope side of identity. Instances with identical sparsity
+    /// but different projection operators must not share warm starts.
+    pub projection_hash: u64,
+    /// FNV-1a over the global rows' coefficient planes (their rhs is a
+    /// numeric plane and stays excluded, like `b`).
+    pub global_coeff_hash: u64,
+    /// FNV-1a over the matching-family coefficient planes (`A`'s values)
+    /// and the primal-scale vector. Like the polytopes, these shape the
+    /// dual optimum; only `c`/`b`/global-rhs drift between re-solves.
+    pub coeff_hash: u64,
+}
+
+/// Hash of one operator's canonical spec string.
+fn spec_hash(k: ProjectionKind) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_bytes(k.spec().as_bytes());
+    h.finish()
 }
 
 impl Fingerprint {
@@ -79,6 +113,56 @@ impl Fingerprint {
         for &j in &lp.a.dest_idx {
             h.write_u32(j);
         }
+        // Polytope identity: one spec hash per block, written in block
+        // order so a uniform map and its materialized per-block equivalent
+        // fingerprint identically. Distinct kinds are memoized — spec
+        // strings are only rendered once per operator.
+        let mut ph = Fnv64::new();
+        match &lp.projection {
+            ProjectionMap::Uniform(k) => {
+                let hk = spec_hash(*k);
+                for _ in 0..lp.num_sources() {
+                    ph.write_u64(hk);
+                }
+            }
+            ProjectionMap::PerBlock(_) => {
+                let mut memo: BTreeMap<ProjectionKind, u64> = BTreeMap::new();
+                for i in 0..lp.num_sources() {
+                    let k = lp.projection.kind_of(i);
+                    let hk = *memo.entry(k).or_insert_with(|| spec_hash(k));
+                    ph.write_u64(hk);
+                }
+            }
+        }
+        let mut gh = Fnv64::new();
+        for g in &lp.global_rows {
+            for &c in &g.coeffs {
+                gh.write_u32(c.to_bits());
+            }
+            // row separator so plane boundaries are order-sensitive
+            gh.write_u64(0x9E37_79B9_7F4A_7C15);
+        }
+        // Coefficient identity: the family planes and primal scaling shape
+        // the dual optimum exactly like the global-row coefficients do, so
+        // same-pattern instances with different `A` values must not share
+        // warm starts. Held fixed across a perturbation stream (only c/b
+        // and global rhs drift), so re-solves still key identically.
+        let mut ch = Fnv64::new();
+        for ak in &lp.a.a {
+            for &c in ak {
+                ch.write_u32(c.to_bits());
+            }
+            ch.write_u64(0x9E37_79B9_7F4A_7C15);
+        }
+        match &lp.primal_scale {
+            None => ch.write_u64(0),
+            Some(v) => {
+                ch.write_u64(1);
+                for &s in v {
+                    ch.write_u32(s.to_bits());
+                }
+            }
+        }
         Fingerprint {
             num_sources: lp.num_sources(),
             num_dests: lp.num_dests(),
@@ -86,6 +170,9 @@ impl Fingerprint {
             num_global_rows: lp.global_rows.len(),
             nnz: lp.nnz(),
             pattern_hash: h.finish(),
+            projection_hash: ph.finish(),
+            global_coeff_hash: gh.finish(),
+            coeff_hash: ch.finish(),
         }
     }
 
@@ -158,6 +245,73 @@ mod tests {
         let b = Fingerprint::of(&lp);
         assert_ne!(a, b);
         assert_eq!(b.dual_dim(), a.dual_dim() + 1);
+    }
+
+    #[test]
+    fn projection_spec_is_part_of_identity() {
+        use crate::projection::{ProjectionKind, ProjectionMap};
+        let base = small(11);
+        let mut capped = base.clone();
+        capped.projection =
+            ProjectionMap::Uniform(ProjectionKind::capped_simplex(0.5, 1.0));
+        let a = Fingerprint::of(&base);
+        let b = Fingerprint::of(&capped);
+        assert_eq!(a.pattern_hash, b.pattern_hash, "same sparsity");
+        assert_ne!(a, b, "different polytopes must not collide");
+        // different parameters of the same family differ too
+        let mut capped2 = base.clone();
+        capped2.projection =
+            ProjectionMap::Uniform(ProjectionKind::capped_simplex(0.5, 2.0));
+        assert_ne!(Fingerprint::of(&capped2), b);
+    }
+
+    #[test]
+    fn uniform_and_materialized_per_block_maps_agree() {
+        use crate::projection::{ProjectionKind, ProjectionMap};
+        let uniform = small(12);
+        let mut per_block = uniform.clone();
+        per_block.projection = ProjectionMap::per_block(|_| ProjectionKind::Simplex);
+        assert_eq!(Fingerprint::of(&uniform), Fingerprint::of(&per_block));
+        // ...but a genuinely mixed map differs
+        let mut mixed = uniform.clone();
+        mixed.projection = ProjectionMap::per_block(|i| {
+            if i % 2 == 0 {
+                ProjectionKind::Simplex
+            } else {
+                ProjectionKind::Box
+            }
+        });
+        assert_ne!(Fingerprint::of(&uniform), Fingerprint::of(&mixed));
+    }
+
+    #[test]
+    fn global_row_coeffs_count_rhs_does_not() {
+        let base = small(13);
+        let mut ones = base.clone();
+        ones.push_global_row(vec![1.0; ones.nnz()], 10.0);
+        let mut ones_other_rhs = base.clone();
+        ones_other_rhs.push_global_row(vec![1.0; ones_other_rhs.nnz()], 99.0);
+        let mut twos = base.clone();
+        twos.push_global_row(vec![2.0; twos.nnz()], 10.0);
+        // rhs is a numeric plane (perturbs between re-solves): excluded
+        assert_eq!(Fingerprint::of(&ones), Fingerprint::of(&ones_other_rhs));
+        // the coefficient plane is structural: included
+        assert_ne!(Fingerprint::of(&ones), Fingerprint::of(&twos));
+    }
+
+    #[test]
+    fn family_coeff_planes_and_primal_scale_count() {
+        let base = small(14);
+        let mut fam1 = base.clone();
+        fam1.push_family(vec![1.0; fam1.nnz()], vec![0.5; fam1.num_dests()]);
+        let mut fam5 = base.clone();
+        fam5.push_family(vec![5.0; fam5.nnz()], vec![0.5; fam5.num_dests()]);
+        // same pattern + family count, different A values ⇒ distinct keys
+        assert_ne!(Fingerprint::of(&fam1), Fingerprint::of(&fam5));
+        // primal scaling changes the effective objective ⇒ distinct keys
+        let mut scaled = base.clone();
+        scaled.primal_scale = Some(vec![2.0; scaled.num_sources()]);
+        assert_ne!(Fingerprint::of(&base), Fingerprint::of(&scaled));
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::sync::Mutex;
 use super::fingerprint::Fingerprint;
 use super::scheduler::{BatchReport, Scheduler};
 use super::warmstart::{warm_options, WarmStart, WarmStartCache};
-use crate::problem::MatchingLp;
+use crate::problem::{LpSpec, MatchingLp};
 use crate::reference::CpuObjective;
 use crate::solver::{Agd, Maximizer, SolveOptions, StopReason};
 
@@ -38,6 +38,14 @@ pub struct SolveJob {
 impl SolveJob {
     pub fn new(id: u64, lp: MatchingLp) -> SolveJob {
         SolveJob { id, lp, opts: None }
+    }
+
+    /// Build the job's instance from a declarative [`LpSpec`] — the
+    /// formulation-API entry into the serving layer. Any registered
+    /// projection family is accepted; the compiled instance is validated
+    /// before it reaches the scheduler.
+    pub fn from_spec(id: u64, spec: LpSpec) -> Result<SolveJob, String> {
+        Ok(SolveJob::new(id, spec.build()?))
     }
 }
 
@@ -343,6 +351,36 @@ mod tests {
         let b = engine.submit(SolveJob::new(1, instance(2)));
         assert!(!a.warm && !b.warm);
         assert_eq!(engine.cache_len(), 2);
+    }
+
+    #[test]
+    fn polytope_change_misses_the_cache() {
+        use crate::projection::{ProjectionKind, ProjectionMap};
+        // same sparsity pattern, different blockwise polytope: the
+        // fingerprints must differ, so no cross-polytope warm start (a λ
+        // optimized for one feasible set is wrong for the other)
+        let engine = SolveEngine::new(test_config(1));
+        let a = engine.submit(SolveJob::new(0, instance(1)));
+        let mut lp2 = instance(1);
+        lp2.projection = ProjectionMap::Uniform(ProjectionKind::capped_simplex(0.5, 1.0));
+        let b = engine.submit(SolveJob::new(1, lp2));
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert!(!b.warm, "different polytope must solve cold");
+        assert_eq!(engine.cache_len(), 2);
+    }
+
+    #[test]
+    fn jobs_build_from_lpspec_with_registry_operator() {
+        let base = instance(9);
+        let spec = LpSpec::new(base.a.clone(), base.cost.clone(), base.b.clone())
+            .projection("weighted_simplex:1:1,0.5");
+        let engine = SolveEngine::new(test_config(1));
+        let r = engine.submit(SolveJob::from_spec(3, spec).unwrap());
+        assert_eq!(r.id, 3);
+        assert!(r.dual_obj.is_finite());
+        // malformed specs surface as errors, not panics
+        let bad = LpSpec::new(base.a.clone(), vec![0.0; 1], base.b.clone());
+        assert!(SolveJob::from_spec(4, bad).is_err());
     }
 
     #[test]

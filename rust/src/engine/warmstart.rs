@@ -167,6 +167,9 @@ mod tests {
             num_global_rows: 0,
             nnz: 4 * n,
             pattern_hash: n as u64,
+            projection_hash: 0,
+            global_coeff_hash: 0,
+            coeff_hash: 0,
         }
     }
 

@@ -15,7 +15,7 @@
 //! Values are generated as *positive* and signs flipped to match the
 //! minimization convention (paper: "signs adjusted").
 
-use crate::problem::MatchingLp;
+use crate::problem::{LpSpec, MatchingLp};
 use crate::projection::ProjectionKind;
 use crate::sparse::slabs::MAX_WIDTH;
 use crate::sparse::BlockedMatrix;
@@ -200,9 +200,12 @@ pub fn generate(cfg: &SyntheticConfig) -> MatchingLp {
         }
     }
 
-    let lp = MatchingLp::new_uniform(matrix, cost, b, cfg.kind);
-    debug_assert!(lp.validate().is_ok());
-    lp
+    // Assemble through the declarative builder (the §4 formulation API);
+    // `build` validates, replacing the old debug-only assertion.
+    LpSpec::new(matrix, cost, b)
+        .projection_kind(cfg.kind)
+        .build()
+        .expect("Appendix-B generator produced an invalid LP")
 }
 
 #[cfg(test)]

@@ -9,7 +9,7 @@
 
 use super::synthetic::SyntheticConfig;
 use crate::problem::MatchingLp;
-use crate::projection::{ProjectionKind, ProjectionMap};
+use crate::projection::ProjectionKind;
 use crate::util::rng::Rng;
 
 /// Source-count divisor vs. the paper's instances.
@@ -111,21 +111,12 @@ pub fn perturb_instance(base: &MatchingLp, spec: &PerturbSpec, seed: u64) -> Mat
             g2
         })
         .collect();
-    // ProjectionMap is not Clone (PerBlock holds a closure); rebuild an
-    // equivalent map by materializing the per-block kinds.
-    let projection = match &base.projection {
-        ProjectionMap::Uniform(k) => ProjectionMap::Uniform(*k),
-        ProjectionMap::PerBlock(_) => {
-            let kinds: Vec<ProjectionKind> =
-                (0..base.num_sources()).map(|i| base.projection.kind_of(i)).collect();
-            ProjectionMap::PerBlock(Box::new(move |i| kinds[i]))
-        }
-    };
     MatchingLp {
         a: base.a.clone(),
         cost,
         b,
-        projection,
+        // shallow Arc clone — same polytopes, same fingerprint
+        projection: base.projection.clone(),
         primal_scale: base.primal_scale.clone(),
         global_rows,
     }

@@ -23,6 +23,11 @@ pub struct GlobalRow {
     pub rhs: f32,
 }
 
+/// A matching LP instance (Definition 1). `Clone` is cheap on the
+/// projection side (`ProjectionMap` clones shallowly via `Arc`), so engine
+/// jobs can share one instance across scheduler threads or derive
+/// variants without rebuilding per-block metadata.
+#[derive(Clone)]
 pub struct MatchingLp {
     /// The complex-constraint matrix A (Definition 1).
     pub a: BlockedMatrix,

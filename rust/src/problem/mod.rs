@@ -1,13 +1,16 @@
 //! Problem layer: the matching LP instance type (Definition 1), the
+//! declarative `LpSpec` builder (§4 formulation API), the
 //! `ObjectiveFunction` contract (paper Table 1), conditioning transforms
 //! (§5.1) and primal validation.
 
 pub mod matching;
 pub mod objective;
 pub mod scaling;
+pub mod spec;
 pub mod validate;
 
-pub use matching::MatchingLp;
+pub use matching::{GlobalRow, MatchingLp};
 pub use objective::{ObjectiveFunction, ObjectiveResult};
 pub use scaling::{apply_primal_scaling, jacobi_row_normalize, unscale_dual, RowScaling};
+pub use spec::LpSpec;
 pub use validate::{check_primal, PrimalReport};

@@ -1,0 +1,263 @@
+//! `LpSpec` — the declarative problem builder of the operator-centric
+//! formulation API (paper §4).
+//!
+//! A formulation is data planes (matrix, cost, rhs) plus *composable
+//! declarations*: a projection spec per block (resolved through the
+//! operator registry), extra matching constraint families, global rows,
+//! and primal scaling. `build` compiles the declarations into a validated
+//! [`MatchingLp`], so callers — `gen/workloads`, the CLI, `engine`
+//! sessions — never hand-assemble the struct, and a new constraint family
+//! becomes usable everywhere the moment its spec string parses.
+
+use crate::problem::matching::{GlobalRow, MatchingLp};
+use crate::projection::{ProjectionKind, ProjectionMap};
+use crate::sparse::BlockedMatrix;
+
+/// Declarative matching-LP specification. Consume-and-return builder:
+/// chain declarations, then `build()`.
+pub struct LpSpec {
+    matrix: BlockedMatrix,
+    cost: Vec<f32>,
+    b: Vec<f32>,
+    projection: ProjectionMap,
+    extra_families: Vec<(Vec<f32>, Vec<f32>)>,
+    global_rows: Vec<GlobalRow>,
+    primal_scale: Option<Vec<f32>>,
+    /// First declaration error, surfaced by `build` (keeps the chain fluent).
+    deferred_err: Option<String>,
+}
+
+impl LpSpec {
+    /// Start from the data planes of Definition 1: the blocked matrix
+    /// (first constraint family included), per-edge costs, and the
+    /// per-(family, destination) rhs. Projection defaults to the uniform
+    /// simplex.
+    pub fn new(matrix: BlockedMatrix, cost: Vec<f32>, b: Vec<f32>) -> LpSpec {
+        LpSpec {
+            matrix,
+            cost,
+            b,
+            projection: ProjectionMap::Uniform(ProjectionKind::Simplex),
+            extra_families: Vec::new(),
+            global_rows: Vec::new(),
+            primal_scale: None,
+            deferred_err: None,
+        }
+    }
+
+    /// Uniform blockwise projection from a registry spec string, e.g.
+    /// `"simplex"`, `"capped_simplex:0.5:2"`, `"weighted_simplex:1:1,2"`.
+    /// An unknown spec surfaces as an error from `build` (like every other
+    /// declaration problem), so the chain stays fluent.
+    pub fn projection(mut self, spec: &str) -> LpSpec {
+        match ProjectionKind::parse(spec) {
+            Some(kind) => self.projection = ProjectionMap::Uniform(kind),
+            None => {
+                let msg = format!("unknown projection spec {spec:?}");
+                self.deferred_err.get_or_insert(msg);
+            }
+        }
+        self
+    }
+
+    /// Uniform blockwise projection from an operator handle.
+    pub fn projection_kind(mut self, kind: ProjectionKind) -> LpSpec {
+        self.projection = ProjectionMap::Uniform(kind);
+        self
+    }
+
+    /// Heterogeneous projection from a block-id closure.
+    pub fn per_block_projection<F>(mut self, f: F) -> LpSpec
+    where
+        F: Fn(usize) -> ProjectionKind + Send + Sync + 'static,
+    {
+        self.projection = ProjectionMap::per_block(f);
+        self
+    }
+
+    /// Heterogeneous projection from materialized per-block kinds
+    /// (length must be `num_sources`; checked at `build`).
+    pub fn block_projections(mut self, kinds: Vec<ProjectionKind>) -> LpSpec {
+        if kinds.len() != self.matrix.num_sources {
+            self.deferred_err.get_or_insert_with(|| {
+                format!(
+                    "block_projections: {} kinds for {} sources",
+                    kinds.len(),
+                    self.matrix.num_sources
+                )
+            });
+        }
+        self.projection = ProjectionMap::per_block(move |i| kinds[i]);
+        self
+    }
+
+    /// Append a matching constraint family: per-edge coefficients on the
+    /// shared eligibility pattern plus a per-destination rhs (adds J dual
+    /// rows).
+    pub fn family(mut self, coeffs: Vec<f32>, rhs: Vec<f32>) -> LpSpec {
+        self.extra_families.push((coeffs, rhs));
+        self
+    }
+
+    /// Append an arbitrary global constraint row Σ coeffs·x ≤ rhs (adds
+    /// one dual row after the matching block).
+    pub fn global_row(mut self, coeffs: Vec<f32>, rhs: f32) -> LpSpec {
+        self.global_rows.push(GlobalRow { coeffs, rhs });
+        self
+    }
+
+    /// The paper §4 global count constraint Σ_ij x_ij ≤ m.
+    pub fn count_cap(self, m: f32) -> LpSpec {
+        let coeffs = vec![1.0; self.matrix.nnz()];
+        self.global_row(coeffs, m)
+    }
+
+    /// Per-source primal scale factors v_i (§5.1): the ridge becomes
+    /// γ/2 Σ_i v_i²‖x_i‖².
+    pub fn primal_scale(mut self, v: Vec<f32>) -> LpSpec {
+        self.primal_scale = Some(v);
+        self
+    }
+
+    /// Compile the declarations into a validated `MatchingLp`.
+    pub fn build(self) -> Result<MatchingLp, String> {
+        if let Some(e) = self.deferred_err {
+            return Err(e);
+        }
+        if self.cost.len() != self.matrix.nnz() {
+            return Err(format!(
+                "cost length {} != nnz {}",
+                self.cost.len(),
+                self.matrix.nnz()
+            ));
+        }
+        if self.b.len() != self.matrix.dual_dim() {
+            return Err(format!(
+                "b length {} != mJ {}",
+                self.b.len(),
+                self.matrix.dual_dim()
+            ));
+        }
+        let mut lp = MatchingLp {
+            a: self.matrix,
+            cost: self.cost,
+            b: self.b,
+            projection: self.projection,
+            primal_scale: self.primal_scale,
+            global_rows: Vec::new(),
+        };
+        for (k, (coeffs, rhs)) in self.extra_families.into_iter().enumerate() {
+            if coeffs.len() != lp.a.nnz() {
+                return Err(format!("extra family {k}: coeffs length != nnz"));
+            }
+            if rhs.len() != lp.a.num_dests {
+                return Err(format!("extra family {k}: rhs length != J"));
+            }
+            lp.push_family(coeffs, rhs);
+        }
+        for (r, g) in self.global_rows.into_iter().enumerate() {
+            if g.coeffs.len() != lp.a.nnz() {
+                return Err(format!("global row {r}: coeffs length != nnz"));
+            }
+            lp.global_rows.push(g);
+        }
+        lp.validate()?;
+        Ok(lp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_matrix() -> (BlockedMatrix, Vec<f32>, Vec<f32>) {
+        let m = BlockedMatrix {
+            num_sources: 2,
+            num_dests: 3,
+            num_families: 1,
+            src_ptr: vec![0, 2, 4],
+            dest_idx: vec![0, 1, 1, 2],
+            a: vec![vec![1.0, 2.0, 3.0, 4.0]],
+        };
+        let cost = vec![-1.0, -2.0, -3.0, -4.0];
+        let b = vec![1.0, 1.0, 1.0];
+        (m, cost, b)
+    }
+
+    #[test]
+    fn minimal_spec_builds_uniform_simplex() {
+        let (m, cost, b) = tiny_matrix();
+        let lp = LpSpec::new(m, cost, b).build().unwrap();
+        assert_eq!(lp.projection.uniform_kind(), Some(ProjectionKind::Simplex));
+        assert_eq!(lp.dual_dim(), 3);
+    }
+
+    #[test]
+    fn full_composition_builds_and_validates() {
+        let (m, cost, b) = tiny_matrix();
+        let lp = LpSpec::new(m, cost, b)
+            .projection("weighted_simplex:2:1,2")
+            .family(vec![1.0; 4], vec![0.5, 0.5, 0.5])
+            .count_cap(3.0)
+            .global_row(vec![0.0, 1.0, 1.0, 0.0], 0.7)
+            .primal_scale(vec![1.0, 2.0])
+            .build()
+            .unwrap();
+        assert_eq!(lp.num_families(), 2);
+        assert_eq!(lp.global_rows.len(), 2);
+        assert_eq!(lp.dual_dim(), 2 * 3 + 2);
+        assert_eq!(lp.gamma_scale(1), 4.0);
+        assert_eq!(
+            lp.projection.uniform_kind().map(|k| k.spec()),
+            Some("weighted_simplex:2:1,2".to_string())
+        );
+    }
+
+    #[test]
+    fn per_block_specs_compose() {
+        let (m, cost, b) = tiny_matrix();
+        let box_half = ProjectionKind::parse("box_vec:0.5").unwrap();
+        let lp = LpSpec::new(m, cost, b)
+            .block_projections(vec![ProjectionKind::Simplex, box_half])
+            .build()
+            .unwrap();
+        assert_eq!(lp.projection.kind_of(0), ProjectionKind::Simplex);
+        assert_eq!(lp.projection.kind_of(1), box_half);
+        // the LP (including its Arc'd per-block map) clones shallowly
+        let lp2 = lp.clone();
+        assert_eq!(lp2.projection.kind_of(1), box_half);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let (m, cost, b) = tiny_matrix();
+        let r = LpSpec::new(m.clone(), cost.clone(), b.clone())
+            .projection("no_such_family:1")
+            .build();
+        assert!(r.is_err(), "unknown spec must surface at build");
+        // wrong plane lengths
+        assert!(LpSpec::new(m.clone(), vec![0.0; 3], b.clone()).build().is_err());
+        assert!(LpSpec::new(m.clone(), cost.clone(), vec![0.0; 2]).build().is_err());
+        assert!(LpSpec::new(m.clone(), cost.clone(), b.clone())
+            .family(vec![1.0; 2], vec![0.5; 3])
+            .build()
+            .is_err());
+        assert!(LpSpec::new(m.clone(), cost.clone(), b.clone())
+            .global_row(vec![1.0; 3], 1.0)
+            .build()
+            .is_err());
+        assert!(LpSpec::new(m, cost, b)
+            .primal_scale(vec![1.0, -1.0])
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn mismatched_block_projection_length_fails_build() {
+        let (m, cost, b) = tiny_matrix();
+        let r = LpSpec::new(m, cost, b)
+            .block_projections(vec![ProjectionKind::Simplex]) // 1 kind, 2 sources
+            .build();
+        assert!(r.is_err());
+    }
+}

@@ -2,8 +2,11 @@
 //! constraint classes, objective value, and the quantities EXPERIMENTS.md
 //! reports for the E2E drivers.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use super::matching::MatchingLp;
-use crate::projection::ProjectionKind;
+use crate::projection::{BlockProjection, ProjectionKind};
 
 /// Summary of a primal candidate x (per-edge).
 #[derive(Clone, Debug)]
@@ -44,31 +47,17 @@ pub fn check_primal(lp: &MatchingLp, x: &[f32], tol: f32) -> PrimalReport {
         }
     }
 
+    // Simple-constraint violations come from each block's registered
+    // operator (the `violation` oracle of `BlockProjection`), so custom
+    // families are validated with no edits here. Operators are memoized
+    // per distinct kind — one registry lookup per kind, not per block.
+    let mut ops: BTreeMap<ProjectionKind, Arc<dyn BlockProjection>> = BTreeMap::new();
     let mut simple_mx = 0.0f64;
     for i in 0..lp.num_sources() {
         let (e0, e1) = (lp.a.src_ptr[i], lp.a.src_ptr[i + 1]);
-        let block = &x[e0..e1];
-        let v = match lp.projection.kind_of(i) {
-            ProjectionKind::Simplex => {
-                let s: f64 = block.iter().map(|&v| v as f64).sum();
-                let neg: f64 = block.iter().map(|&v| (-v).max(0.0) as f64).fold(0.0, f64::max);
-                (s - 1.0).max(0.0).max(neg)
-            }
-            ProjectionKind::Box => block
-                .iter()
-                .map(|&v| ((v as f64) - 1.0).max(0.0).max((-v).max(0.0) as f64))
-                .fold(0.0, f64::max),
-            k @ ProjectionKind::CappedSimplex { .. } => {
-                let (cap, total) = k.capped_params().unwrap();
-                let s: f64 = block.iter().map(|&v| v as f64).sum();
-                let coord: f64 = block
-                    .iter()
-                    .map(|&v| ((v as f64) - cap as f64).max(0.0).max((-v).max(0.0) as f64))
-                    .fold(0.0, f64::max);
-                (s - total as f64).max(0.0).max(coord)
-            }
-        };
-        simple_mx = simple_mx.max(v);
+        let kind = lp.projection.kind_of(i);
+        let op = ops.entry(kind).or_insert_with(|| kind.op());
+        simple_mx = simple_mx.max(op.violation(&x[e0..e1]));
     }
 
     let objective = lp
@@ -90,6 +79,7 @@ pub fn check_primal(lp: &MatchingLp, x: &[f32], tol: f32) -> PrimalReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::projection::ProjectionKind;
     use crate::sparse::BlockedMatrix;
 
     fn lp() -> MatchingLp {

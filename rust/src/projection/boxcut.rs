@@ -7,6 +7,65 @@
 //! Σ x(μ*) = s (when the clamp alone exceeds s) is found to tolerance in
 //! ~60 iterations.
 
+use std::any::Any;
+
+use super::registry::BlockProjection;
+
+/// Registry operator for {0 ≤ x ≤ cap, Σx ≤ total}. CPU-reference-only
+/// until its slab kernel lands in L1/L2.
+pub struct CappedSimplexOp {
+    pub cap: f32,
+    pub total: f32,
+}
+
+impl CappedSimplexOp {
+    pub(crate) const SAMPLES: &'static [&'static str] = &[
+        "capped_simplex:1:1",
+        "capped_simplex:0.5:1",
+        "capped_simplex:0.4:2",
+    ];
+
+    /// Family parser: bare args default to (cap=1, total=1);
+    /// `<cap>:<total>` parses explicit positive finite parameters.
+    pub(crate) fn parse_args(args: &str) -> Option<Box<dyn BlockProjection>> {
+        let (cap, total) = if args.is_empty() {
+            (1.0f32, 1.0f32)
+        } else {
+            let (c, t) = args.split_once(':')?;
+            (c.parse().ok()?, t.parse().ok()?)
+        };
+        (cap > 0.0 && cap.is_finite() && total > 0.0 && total.is_finite())
+            .then(|| Box::new(CappedSimplexOp { cap, total }) as Box<dyn BlockProjection>)
+    }
+}
+
+impl BlockProjection for CappedSimplexOp {
+    fn family(&self) -> &str {
+        "capped_simplex"
+    }
+
+    fn spec(&self) -> String {
+        format!("capped_simplex:{}:{}", self.cap, self.total)
+    }
+
+    fn project(&self, v: &mut [f32]) {
+        project_capped_simplex(v, self.cap, self.total)
+    }
+
+    fn violation(&self, v: &[f32]) -> f64 {
+        let s: f64 = v.iter().map(|&x| x as f64).sum();
+        let coord = v
+            .iter()
+            .map(|&x| ((x - self.cap) as f64).max((-x) as f64).max(0.0))
+            .fold(0.0, f64::max);
+        (s - self.total as f64).max(0.0).max(coord)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
 /// In-place projection of `v` onto {0 ≤ x ≤ cap, Σx ≤ total}.
 pub fn project_capped_simplex(v: &mut [f32], cap: f32, total: f32) {
     debug_assert!(cap > 0.0);

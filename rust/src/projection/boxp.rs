@@ -1,5 +1,42 @@
 //! Unit-box projection [0, 1]^n — the "box" simple constraint of [6].
 
+use std::any::Any;
+
+use super::registry::BlockProjection;
+
+/// Registry operator for [0, 1]^n.
+pub struct UnitBoxOp;
+
+impl BlockProjection for UnitBoxOp {
+    fn family(&self) -> &str {
+        "box"
+    }
+
+    fn spec(&self) -> String {
+        "box".to_string()
+    }
+
+    fn project(&self, v: &mut [f32]) {
+        project_unit_box(v)
+    }
+
+    fn violation(&self, v: &[f32]) -> f64 {
+        v.iter()
+            .map(|&x| ((x as f64) - 1.0).max((-x) as f64).max(0.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// The box factors per coordinate with no positional parameters, so
+    /// slab rows may be split freely.
+    fn separable(&self) -> bool {
+        true
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
 /// In-place projection onto [0, 1]^n.
 pub fn project_unit_box(v: &mut [f32]) {
     for x in v.iter_mut() {

@@ -1,0 +1,137 @@
+//! Vector-box projection: Π onto {0 ≤ xᵢ ≤ uᵢ} — per-coordinate upper
+//! bounds (e.g. per-edge frequency caps that differ by destination).
+//!
+//! The first operator whose parameter is a non-`Copy` payload: the bound
+//! vector lives in the registry's interned table and the slab/bucket maps
+//! keep keying by the compact `OpId` handle. Registered purely inside
+//! `projection/` — no solver, sparse-layout, or runtime edits (paper §4
+//! locality). The bound vector cycles over block coordinates
+//! (`u[i % len]`), so `box_vec:0.5` is a uniform [0, 0.5] box and a
+//! full-width vector is per-edge. CPU-reference-only until a slab kernel
+//! lands in L1/L2.
+
+use std::any::Any;
+
+use super::registry::BlockProjection;
+use super::ProjectionKind;
+
+/// Registry operator for {0 ≤ xᵢ ≤ uᵢ} with cycling bounds.
+pub struct BoxVecOp {
+    pub upper: Vec<f32>,
+}
+
+/// Intern {0 ≤ xᵢ ≤ uᵢ} with cycling per-coordinate bounds.
+pub fn box_vec(upper: &[f32]) -> ProjectionKind {
+    assert!(
+        !upper.is_empty() && upper.iter().all(|&u| u > 0.0 && u.is_finite()),
+        "bounds must be a nonempty positive finite vector"
+    );
+    ProjectionKind::intern(Box::new(BoxVecOp {
+        upper: upper.to_vec(),
+    }))
+}
+
+impl BoxVecOp {
+    pub(crate) const SAMPLES: &'static [&'static str] =
+        &["box_vec:1", "box_vec:0.5,1.5", "box_vec:0.25,2,1"];
+
+    /// Family parser: bare args default to u = [1] ≡ the unit box;
+    /// `<u1>,<u2>,…` sets explicit cycling bounds.
+    pub(crate) fn parse_args(args: &str) -> Option<Box<dyn BlockProjection>> {
+        let upper: Vec<f32> = if args.is_empty() {
+            vec![1.0]
+        } else {
+            args.split(',')
+                .map(|s| s.parse().ok())
+                .collect::<Option<Vec<f32>>>()?
+        };
+        let ok = !upper.is_empty() && upper.iter().all(|&u| u > 0.0 && u.is_finite());
+        ok.then(|| Box::new(BoxVecOp { upper }) as Box<dyn BlockProjection>)
+    }
+
+    #[inline]
+    fn bound(&self, i: usize) -> f32 {
+        self.upper[i % self.upper.len()]
+    }
+}
+
+impl BlockProjection for BoxVecOp {
+    fn family(&self) -> &str {
+        "box_vec"
+    }
+
+    fn spec(&self) -> String {
+        let us: Vec<String> = self.upper.iter().map(|u| u.to_string()).collect();
+        format!("box_vec:{}", us.join(","))
+    }
+
+    fn project(&self, v: &mut [f32]) {
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = x.clamp(0.0, self.bound(i));
+        }
+    }
+
+    fn violation(&self, v: &[f32]) -> f64 {
+        v.iter()
+            .enumerate()
+            .map(|(i, &x)| ((x - self.bound(i)) as f64).max((-x) as f64).max(0.0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Coordinatewise math, but the bounds are positional: splitting a
+    /// block across slab rows would re-index `i` and misalign `u[i %
+    /// len]`. Conservatively non-separable until the slab kernel carries
+    /// its own parameter-offset plane.
+    fn separable(&self) -> bool {
+        false
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_per_coordinate_with_cycling() {
+        let op = BoxVecOp {
+            upper: vec![0.5, 2.0],
+        };
+        let mut v = vec![1.0, 1.0, -3.0, 3.0, 0.25];
+        op.project(&mut v);
+        // bounds cycle: 0.5, 2, 0.5, 2, 0.5
+        assert_eq!(v, vec![0.5, 1.0, 0.0, 2.0, 0.25]);
+        assert!(op.feasible(&v, 0.0));
+        assert!(op.violation(&[0.6, 0.0]) > 0.0);
+        assert!((op.violation(&[0.75, 0.0]) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_bound_one_matches_unit_box() {
+        let op = BoxVecOp { upper: vec![1.0] };
+        let mut a = vec![-0.5, 0.5, 2.0];
+        let mut b = a.clone();
+        op.project(&mut a);
+        crate::projection::project_unit_box(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn spec_roundtrip_and_constructor() {
+        let k = box_vec(&[0.5, 1.5]);
+        assert_eq!(k.spec(), "box_vec:0.5,1.5");
+        assert_eq!(ProjectionKind::parse(&k.spec()), Some(k));
+        assert_eq!(k.name(), "box_vec");
+        assert!(!k.separable());
+        let bare = ProjectionKind::parse("box_vec").map(|b| b.spec());
+        assert_eq!(bare, Some("box_vec:1".to_string()));
+        // malformed / invalid parameters rejected
+        assert_eq!(ProjectionKind::parse("box_vec:0"), None);
+        assert_eq!(ProjectionKind::parse("box_vec:-1,1"), None);
+        assert_eq!(ProjectionKind::parse("box_vec:1,"), None);
+        assert_eq!(ProjectionKind::parse("box_vec:a"), None);
+    }
+}

@@ -1,132 +1,154 @@
 //! Blockwise projection operators onto the "simple constraint" polytopes
-//! (paper §3.2 and Table 1's `ProjectionMap` role).
+//! (paper §3.2 and Table 1's `ProjectionMap` role), organized as the §4
+//! operator model: a [`BlockProjection`] trait, a process-wide
+//! [`registry`] of composable families, and a compact [`ProjectionKind`]
+//! handle over interned operator instances.
 //!
 //! Every operator projects one source's variable block in place. These CPU
 //! implementations back the reference ("Scala-equivalent") objective, the
 //! primal rounding/validation path, and the oracles the property tests
 //! compare the Pallas kernels against. The accelerated path runs the same
-//! math inside the AOT slab kernels (python/compile/kernels/slab.py).
+//! math inside the AOT slab kernels (python/compile/kernels/slab.py) for
+//! the kinds with artifacts (`simplex`, `box`); the others are
+//! CPU-reference-only until their slab kernels land.
+//!
+//! New constraint families are added *locally*: implement the trait,
+//! register a parser + conformance samples (one line in
+//! `registry::with_builtins`, or `registry::register_family` at runtime
+//! from any crate), and every consumer picks the family up through the
+//! spec-string surface — see `weighted` and `boxvec` for the template and
+//! DESIGN.md "Adding a constraint family" for the recipe.
 
 mod boxcut;
 mod boxp;
+mod boxvec;
+pub mod registry;
 mod simplex;
+mod weighted;
 
-pub use boxcut::{project_box_cut, project_capped_simplex};
-pub use boxp::{project_box, project_unit_box};
-pub use simplex::{project_simplex_eq, project_simplex_ineq};
+use std::fmt;
+use std::sync::Arc;
 
-/// Projection kinds available to slab buckets (must stay in sync with the
-/// AOT artifact family in python/compile/aot.py; `CappedSimplex` is
-/// CPU-reference-only until its slab kernel lands there).
+pub use boxcut::{project_box_cut, project_capped_simplex, CappedSimplexOp};
+pub use boxp::{project_box, project_unit_box, UnitBoxOp};
+pub use boxvec::{box_vec, BoxVecOp};
+pub use registry::{BlockProjection, OpId};
+pub use simplex::{project_simplex_eq, project_simplex_ineq, SimplexOp};
+pub use weighted::{weighted_simplex, WeightedSimplexOp};
+
+/// Handle of one interned projection operator — the open successor of the
+/// former closed enum. Stays `Copy + Eq + Ord + Hash` (it keys the bucket
+/// map in `sparse::slabs` and the artifact map in `runtime::pjrt`) while
+/// arbitrary operator parameters live in the registry's interned table.
 ///
-/// Parameterized kinds store their f32 parameters as bit patterns so the
-/// enum stays `Copy + Eq + Ord + Hash` — it keys the bucket map in
-/// `sparse::slabs` and the artifact map in `runtime::pjrt`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum ProjectionKind {
-    /// {x ≥ 0, Σx ≤ 1} — per-source impression capacity (paper Eq. 4–5).
-    Simplex,
-    /// [0, 1]^w unit box.
-    Box,
-    /// {0 ≤ x ≤ u, Σx ≤ s} — per-edge caps plus a per-source total
-    /// capacity (the "box-cut" family of [6] with a general cap/total).
-    /// Construct via [`ProjectionKind::capped_simplex`].
-    CappedSimplex { cap_bits: u32, total_bits: u32 },
-}
+/// Equality is interning identity: operators with the same canonical spec
+/// string share a handle, so `parse(k.spec()) == Some(k)` for every kind.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ProjectionKind(OpId);
 
 impl ProjectionKind {
+    /// {x ≥ 0, Σx ≤ 1} — per-source impression capacity (paper Eq. 4–5).
+    #[allow(non_upper_case_globals)]
+    pub const Simplex: ProjectionKind = ProjectionKind(registry::OPID_SIMPLEX);
+
+    /// [0, 1]^w unit box.
+    #[allow(non_upper_case_globals)]
+    pub const Box: ProjectionKind = ProjectionKind(registry::OPID_BOX);
+
+    /// Intern an operator instance and return its handle. The registry
+    /// deduplicates by canonical spec, so equal parameterizations compare
+    /// equal.
+    pub fn intern(op: Box<dyn BlockProjection>) -> ProjectionKind {
+        ProjectionKind(registry::intern(op))
+    }
+
     /// {0 ≤ x ≤ cap, Σx ≤ total}. Both parameters must be positive finite.
     pub fn capped_simplex(cap: f32, total: f32) -> Self {
         assert!(cap > 0.0 && cap.is_finite(), "cap must be positive finite");
         assert!(total > 0.0 && total.is_finite(), "total must be positive finite");
-        ProjectionKind::CappedSimplex {
-            cap_bits: cap.to_bits(),
-            total_bits: total.to_bits(),
-        }
+        Self::intern(Box::new(CappedSimplexOp { cap, total }))
     }
 
-    /// (cap, total) of a `CappedSimplex`, None otherwise.
-    pub fn capped_params(self) -> Option<(f32, f32)> {
-        match self {
-            ProjectionKind::CappedSimplex { cap_bits, total_bits } => {
-                Some((f32::from_bits(cap_bits), f32::from_bits(total_bits)))
-            }
-            _ => None,
-        }
+    /// Parse a family name or spec string through the registry. Bare
+    /// family names get that family's default parameters.
+    pub fn parse(s: &str) -> Option<Self> {
+        registry::parse(s).map(ProjectionKind)
+    }
+
+    /// The interned operator behind this handle.
+    pub fn op(self) -> Arc<dyn BlockProjection> {
+        registry::get(self.0)
+    }
+
+    /// Raw registry handle.
+    pub fn id(self) -> OpId {
+        self.0
     }
 
     /// Family name (parameter-free; see [`ProjectionKind::spec`] for the
     /// round-trippable form).
-    pub fn name(self) -> &'static str {
-        match self {
-            ProjectionKind::Simplex => "simplex",
-            ProjectionKind::Box => "box",
-            ProjectionKind::CappedSimplex { .. } => "capped_simplex",
-        }
+    pub fn name(self) -> String {
+        self.op().family().to_string()
     }
 
     /// Full round-trippable spec string: `parse(k.spec()) == Some(k)`.
-    /// (f32 `Display` is the shortest exact representation in Rust, so the
-    /// parameter round-trip is lossless.)
     pub fn spec(self) -> String {
-        match self.capped_params() {
-            Some((cap, total)) => format!("capped_simplex:{cap}:{total}"),
-            None => self.name().to_string(),
-        }
-    }
-
-    /// Parse a name or spec string. Bare `capped_simplex` gets the
-    /// (cap=1, total=1) defaults; `capped_simplex:<cap>:<total>` parses
-    /// explicit parameters.
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "simplex" => return Some(ProjectionKind::Simplex),
-            "box" => return Some(ProjectionKind::Box),
-            "capped_simplex" => return Some(ProjectionKind::capped_simplex(1.0, 1.0)),
-            _ => {}
-        }
-        let rest = s.strip_prefix("capped_simplex:")?;
-        let (cap_s, total_s) = rest.split_once(':')?;
-        let cap: f32 = cap_s.parse().ok()?;
-        let total: f32 = total_s.parse().ok()?;
-        if cap > 0.0 && cap.is_finite() && total > 0.0 && total.is_finite() {
-            Some(ProjectionKind::capped_simplex(cap, total))
-        } else {
-            None
-        }
+        self.op().spec()
     }
 
     /// Apply this projection to one block in place.
     pub fn apply(self, v: &mut [f32]) {
-        match self {
-            ProjectionKind::Simplex => project_simplex_ineq(v),
-            ProjectionKind::Box => project_unit_box(v),
-            ProjectionKind::CappedSimplex { cap_bits, total_bits } => project_capped_simplex(
-                v,
-                f32::from_bits(cap_bits),
-                f32::from_bits(total_bits),
-            ),
-        }
+        self.op().project(v)
     }
 
     /// Whether the polytope is separable per coordinate (allows slab rows
-    /// to be split when a block exceeds the maximum slab width). The sum
-    /// cut couples coordinates, so `CappedSimplex` is non-separable like
-    /// `Simplex`.
+    /// to be split when a block exceeds the maximum slab width).
     pub fn separable(self) -> bool {
-        matches!(self, ProjectionKind::Box)
+        self.op().separable()
+    }
+
+    /// Maximum constraint violation of `v` (0 when feasible).
+    pub fn violation(self, v: &[f32]) -> f64 {
+        self.op().violation(v)
+    }
+
+    /// Feasibility oracle: violation within `tol`.
+    pub fn feasible(self, v: &[f32], tol: f64) -> bool {
+        self.op().feasible(v, tol)
+    }
+
+    /// (cap, total) when this handle is a `capped_simplex`, None otherwise.
+    pub fn capped_params(self) -> Option<(f32, f32)> {
+        let op = self.op();
+        op.as_any().downcast_ref::<CappedSimplexOp>().map(|c| (c.cap, c.total))
+    }
+}
+
+impl fmt::Debug for ProjectionKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ProjectionKind({})", self.spec())
     }
 }
 
 /// The `ProjectionMap` of paper Table 1: maps a block id to its projection
-/// operator. A uniform map is one allocation; heterogeneous maps are a
-/// closure over per-block metadata.
+/// operator. A uniform map is one handle; heterogeneous maps are a shared
+/// closure over per-block metadata. `Clone` is shallow (`Arc`), so one
+/// `MatchingLp` can fan out across scheduler threads without rebuilding.
+#[derive(Clone)]
 pub enum ProjectionMap {
     Uniform(ProjectionKind),
-    PerBlock(Box<dyn Fn(usize) -> ProjectionKind + Send + Sync>),
+    PerBlock(Arc<dyn Fn(usize) -> ProjectionKind + Send + Sync>),
 }
 
 impl ProjectionMap {
+    /// Heterogeneous map from a block-id closure.
+    pub fn per_block<F>(f: F) -> ProjectionMap
+    where
+        F: Fn(usize) -> ProjectionKind + Send + Sync + 'static,
+    {
+        ProjectionMap::PerBlock(Arc::new(f))
+    }
+
     pub fn kind_of(&self, block: usize) -> ProjectionKind {
         match self {
             ProjectionMap::Uniform(k) => *k,
@@ -134,9 +156,26 @@ impl ProjectionMap {
         }
     }
 
+    /// The single kind of a uniform map, None for per-block maps.
+    pub fn uniform_kind(&self) -> Option<ProjectionKind> {
+        match self {
+            ProjectionMap::Uniform(k) => Some(*k),
+            ProjectionMap::PerBlock(_) => None,
+        }
+    }
+
     /// `project(block_id, v)` — the single required method (paper Table 1).
     pub fn project(&self, block: usize, v: &mut [f32]) {
         self.kind_of(block).apply(v)
+    }
+}
+
+impl fmt::Debug for ProjectionMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProjectionMap::Uniform(k) => write!(f, "Uniform({})", k.spec()),
+            ProjectionMap::PerBlock(_) => write!(f, "PerBlock(..)"),
+        }
     }
 }
 
@@ -147,7 +186,7 @@ mod tests {
     #[test]
     fn kind_roundtrip() {
         for k in [ProjectionKind::Simplex, ProjectionKind::Box] {
-            assert_eq!(ProjectionKind::parse(k.name()), Some(k));
+            assert_eq!(ProjectionKind::parse(&k.name()), Some(k));
             assert_eq!(ProjectionKind::parse(&k.spec()), Some(k));
         }
         assert_eq!(ProjectionKind::parse("nope"), None);
@@ -183,26 +222,61 @@ mod tests {
         let s: f64 = v.iter().map(|&x| x as f64).sum();
         assert!(s <= 1.0 + 1e-4, "sum {s}");
         assert!(v.iter().all(|&x| (-1e-6..=0.5 + 1e-6).contains(&x)));
+        assert!(k.feasible(&v, 1e-4));
+    }
+
+    #[test]
+    fn handles_are_interning_identity() {
+        let a = ProjectionKind::capped_simplex(0.5, 1.5);
+        let b = ProjectionKind::parse("capped_simplex:0.5:1.5").unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, ProjectionKind::capped_simplex(0.5, 1.25));
+        // non-capped kinds have no capped params
+        assert_eq!(ProjectionKind::Simplex.capped_params(), None);
+        assert_eq!(ProjectionKind::Box.capped_params(), None);
+    }
+
+    #[test]
+    fn violation_oracle_matches_polytopes() {
+        assert_eq!(ProjectionKind::Simplex.violation(&[0.5, 0.4]), 0.0);
+        assert!((ProjectionKind::Simplex.violation(&[0.9, 0.6]) - 0.5).abs() < 1e-6);
+        assert!((ProjectionKind::Box.violation(&[1.25, -0.5]) - 0.5).abs() < 1e-6);
+        let k = ProjectionKind::capped_simplex(0.5, 0.8);
+        assert_eq!(k.violation(&[0.4, 0.4]), 0.0);
+        assert!((k.violation(&[0.7, 0.0]) - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn debug_prints_spec() {
+        let k = ProjectionKind::capped_simplex(0.5, 1.0);
+        assert_eq!(format!("{k:?}"), "ProjectionKind(capped_simplex:0.5:1)");
     }
 
     #[test]
     fn uniform_map_projects() {
         let m = ProjectionMap::Uniform(ProjectionKind::Box);
+        assert_eq!(m.uniform_kind(), Some(ProjectionKind::Box));
         let mut v = vec![-0.5, 0.5, 2.0];
         m.project(0, &mut v);
         assert_eq!(v, vec![0.0, 0.5, 1.0]);
     }
 
     #[test]
-    fn per_block_map_dispatches() {
-        let m = ProjectionMap::PerBlock(Box::new(|i| {
-            if i == 0 { ProjectionKind::Box } else { ProjectionKind::Simplex }
-        }));
+    fn per_block_map_dispatches_and_clones_shallowly() {
+        let m = ProjectionMap::per_block(|i| {
+            if i == 0 {
+                ProjectionKind::Box
+            } else {
+                ProjectionKind::Simplex
+            }
+        });
+        assert_eq!(m.uniform_kind(), None);
+        let m2 = m.clone();
         let mut v = vec![2.0, 2.0];
         m.project(0, &mut v);
         assert_eq!(v, vec![1.0, 1.0]); // box clamp
         let mut w = vec![2.0, 2.0];
-        m.project(1, &mut w);
+        m2.project(1, &mut w);
         let s: f32 = w.iter().sum();
         assert!((s - 1.0).abs() < 1e-6); // simplex cap
     }

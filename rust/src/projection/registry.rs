@@ -1,0 +1,311 @@
+//! Process-wide registry of blockwise projection operators — the paper's
+//! §4 operator-centric extensibility surface.
+//!
+//! A *family* (e.g. `simplex`, `capped_simplex`, `weighted_simplex`) is a
+//! named parser from spec strings to operator instances; an *operator* is
+//! one parameterization of a family implementing [`BlockProjection`].
+//! Interning gives every operator — including arbitrary-parameter ones
+//! like per-coordinate bound vectors — a compact `Copy + Eq + Ord + Hash`
+//! [`OpId`] handle, so the slab bucket map (`sparse::slabs`) and the PJRT
+//! artifact cache (`runtime::pjrt`) keep keying by value while the
+//! parameter payload lives here. Interned entries are deduplicated by
+//! their canonical spec string and retained for the process lifetime (the
+//! table only grows; it is the identity space for cache keys). Operator
+//! parameters are therefore *identity*, not data: keep drifting numeric
+//! planes (costs, budgets, rhs) in `c`/`b`/global-row rhs — a
+//! parameterization that changes every re-solve would intern one
+//! permanent entry per cycle in a long-running engine process.
+//!
+//! Adding a constraint family is local to `projection/`: implement the
+//! trait, register the family with a parser and conformance samples, and
+//! every consumer — CPU objective, slab bucketing, primal validation, the
+//! `LpSpec` builder, the CLI `--projection` flag, and the generic
+//! conformance proptests — picks it up with zero further edits (DESIGN.md
+//! "Adding a constraint family").
+
+use std::any::Any;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::boxcut::CappedSimplexOp;
+use super::boxp::UnitBoxOp;
+use super::boxvec::BoxVecOp;
+use super::simplex::SimplexOp;
+use super::weighted::WeightedSimplexOp;
+
+/// One blockwise projection operator Π onto a simple-constraint polytope
+/// C (paper Table 1's `ProjectionMap` role, opened into a trait).
+///
+/// Implementations must be pure (no interior mutability observable through
+/// `project`) and deterministic: the engine layer relies on bit-identical
+/// re-execution, and `spec` round-tripping is the interning identity.
+pub trait BlockProjection: Send + Sync + 'static {
+    /// Registry family name, e.g. `"capped_simplex"`. Must equal the name
+    /// the family was registered under.
+    fn family(&self) -> &str;
+
+    /// Canonical round-trippable spec string: `parse(op.spec())` must
+    /// resolve to this exact operator (f32 `Display` is shortest-exact in
+    /// Rust, so numeric parameters round-trip losslessly).
+    fn spec(&self) -> String;
+
+    /// Project one variable block onto C in place (Euclidean projection).
+    fn project(&self, v: &mut [f32]);
+
+    /// Maximum constraint violation of `v` (0 when feasible) — the oracle
+    /// behind primal validation and the conformance proptests.
+    fn violation(&self, v: &[f32]) -> f64;
+
+    /// Whether the polytope factors per coordinate, allowing slab rows to
+    /// be split when a block exceeds the maximum slab width. Operators
+    /// with positional parameters should stay non-separable even when the
+    /// math factors, because chunk splitting re-indexes coordinates.
+    fn separable(&self) -> bool {
+        false
+    }
+
+    /// Feasibility oracle: violation within `tol`.
+    fn feasible(&self, v: &[f32], tol: f64) -> bool {
+        self.violation(v) <= tol
+    }
+
+    /// Downcast support (e.g. `ProjectionKind::capped_params`).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Compact handle of an interned operator. `Copy + Eq + Ord + Hash` so the
+/// types wrapping it can keep keying bucket/artifact maps by value. Ids
+/// are assigned in interning order and are only meaningful within the
+/// process — cross-process identity is the spec string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OpId(u32);
+
+impl OpId {
+    /// Position in the interned-operator table.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Reserved ids for the two slab-kernel builtins; `ProjectionKind::Simplex`
+/// and `ProjectionKind::Box` are compile-time constants over these.
+pub(crate) const OPID_SIMPLEX: OpId = OpId(0);
+pub(crate) const OPID_BOX: OpId = OpId(1);
+
+type Parser = Arc<dyn Fn(&str) -> Option<Box<dyn BlockProjection>> + Send + Sync>;
+
+struct Family {
+    parser: Parser,
+    samples: Vec<String>,
+}
+
+struct Registry {
+    families: BTreeMap<String, Family>,
+    ops: Vec<Arc<dyn BlockProjection>>,
+    by_spec: HashMap<String, OpId>,
+}
+
+impl Registry {
+    fn with_builtins() -> Registry {
+        let mut r = Registry {
+            families: BTreeMap::new(),
+            ops: Vec::new(),
+            by_spec: HashMap::new(),
+        };
+        // Builtins claim the reserved ids (interning order fixes them).
+        let simplex: Box<dyn BlockProjection> = Box::new(SimplexOp);
+        let id = r.intern_op(simplex.spec(), simplex);
+        assert_eq!(id, OPID_SIMPLEX);
+        let unit_box: Box<dyn BlockProjection> = Box::new(UnitBoxOp);
+        let id = r.intern_op(unit_box.spec(), unit_box);
+        assert_eq!(id, OPID_BOX);
+        r.add_family("simplex", &["simplex"], |args: &str| {
+            args.is_empty().then(|| Box::new(SimplexOp) as Box<dyn BlockProjection>)
+        });
+        r.add_family("box", &["box"], |args: &str| {
+            args.is_empty().then(|| Box::new(UnitBoxOp) as Box<dyn BlockProjection>)
+        });
+        r.add_family("capped_simplex", CappedSimplexOp::SAMPLES, CappedSimplexOp::parse_args);
+        r.add_family("weighted_simplex", WeightedSimplexOp::SAMPLES, WeightedSimplexOp::parse_args);
+        r.add_family("box_vec", BoxVecOp::SAMPLES, BoxVecOp::parse_args);
+        r
+    }
+
+    fn intern_op(&mut self, spec: String, op: Box<dyn BlockProjection>) -> OpId {
+        if let Some(&id) = self.by_spec.get(&spec) {
+            return id;
+        }
+        let id = OpId(u32::try_from(self.ops.len()).expect("operator table overflow"));
+        self.ops.push(Arc::from(op));
+        self.by_spec.insert(spec, id);
+        id
+    }
+
+    fn add_family<F>(&mut self, name: &str, samples: &[&str], parser: F) -> bool
+    where
+        F: Fn(&str) -> Option<Box<dyn BlockProjection>> + Send + Sync + 'static,
+    {
+        let entry = Family {
+            parser: Arc::new(parser),
+            samples: samples.iter().map(|s| s.to_string()).collect(),
+        };
+        self.families.insert(name.to_string(), entry).is_none()
+    }
+}
+
+static REGISTRY: OnceLock<RwLock<Registry>> = OnceLock::new();
+
+fn global() -> &'static RwLock<Registry> {
+    REGISTRY.get_or_init(|| RwLock::new(Registry::with_builtins()))
+}
+
+/// Intern an operator instance, returning its handle. Deduplicates by the
+/// canonical spec string, so equal parameterizations share one id.
+pub fn intern(op: Box<dyn BlockProjection>) -> OpId {
+    // Render the canonical spec BEFORE taking the write lock: a composed
+    // operator's `spec()` may consult the registry (e.g. an inner kind's
+    // spec), and the lock is not reentrant.
+    let spec = op.spec();
+    global().write().unwrap().intern_op(spec, op)
+}
+
+/// Resolve a handle to its operator (panics on a foreign `OpId`, which
+/// cannot be constructed through the public API).
+pub fn get(id: OpId) -> Arc<dyn BlockProjection> {
+    global().read().unwrap().ops[id.index()].clone()
+}
+
+/// Parse `family` or `family:args` into an interned operator. Unknown
+/// families, malformed arguments, and parsers answering for a different
+/// family all return `None`.
+pub fn parse(spec: &str) -> Option<OpId> {
+    {
+        // fast path: canonical specs of already-interned operators
+        let r = global().read().unwrap();
+        if let Some(&id) = r.by_spec.get(spec) {
+            return Some(id);
+        }
+    }
+    let (family, args) = match spec.split_once(':') {
+        Some((f, a)) => (f, a),
+        None => (spec, ""),
+    };
+    // clone the parser out so user parsers never run under the lock
+    let parser = global().read().unwrap().families.get(family)?.parser.clone();
+    let op = parser(args)?;
+    if op.family() != family {
+        return None;
+    }
+    Some(intern(op))
+}
+
+/// Register a constraint family. `samples` are spec strings exercising
+/// representative parameterizations — the generic conformance proptests
+/// run every registered family through them, so new operators get
+/// idempotence/feasibility/optimality coverage for free. Returns whether
+/// the name was new (an existing family is replaced either way; interned
+/// operators are unaffected).
+pub fn register_family<F>(name: &str, samples: &[&str], parser: F) -> bool
+where
+    F: Fn(&str) -> Option<Box<dyn BlockProjection>> + Send + Sync + 'static,
+{
+    global().write().unwrap().add_family(name, samples, parser)
+}
+
+/// Names of all registered families, sorted.
+pub fn families() -> Vec<String> {
+    global().read().unwrap().families.keys().cloned().collect()
+}
+
+/// Conformance sample specs of one family (empty for unknown names).
+pub fn family_samples(name: &str) -> Vec<String> {
+    let r = global().read().unwrap();
+    r.families.get(name).map(|f| f.samples.clone()).unwrap_or_default()
+}
+
+/// Current size of the interned-operator table (diagnostics).
+pub fn num_interned() -> usize {
+    global().read().unwrap().ops.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_hold_reserved_ids() {
+        assert_eq!(parse("simplex"), Some(OPID_SIMPLEX));
+        assert_eq!(parse("box"), Some(OPID_BOX));
+        assert_eq!(get(OPID_SIMPLEX).spec(), "simplex");
+        assert_eq!(get(OPID_BOX).spec(), "box");
+    }
+
+    #[test]
+    fn builtin_families_reject_arguments() {
+        assert_eq!(parse("simplex:1"), None);
+        assert_eq!(parse("box:0.5"), None);
+        assert_eq!(parse("no_such_family"), None);
+        assert_eq!(parse("no_such_family:1:2"), None);
+    }
+
+    #[test]
+    fn interning_dedups_by_canonical_spec() {
+        let a = parse("capped_simplex:0.5:2").unwrap();
+        let b = parse("capped_simplex:0.50:2.0").unwrap(); // non-canonical
+        let c = parse("capped_simplex:0.5:3").unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(get(a).spec(), "capped_simplex:0.5:2");
+    }
+
+    #[test]
+    fn every_family_sample_parses_and_roundtrips() {
+        for fam in families() {
+            let samples = family_samples(&fam);
+            assert!(!samples.is_empty(), "family {fam} has no samples");
+            for s in samples {
+                let id = parse(&s).unwrap_or_else(|| panic!("sample {s} must parse"));
+                let op = get(id);
+                assert_eq!(op.family(), fam, "sample {s}");
+                assert_eq!(parse(&op.spec()), Some(id), "spec of {s} must round-trip");
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_family_registration_is_picked_up() {
+        // a toy half-line family {x ≥ 0}: the extension path user crates take
+        struct HalfLine;
+        impl BlockProjection for HalfLine {
+            fn family(&self) -> &str {
+                "halfline_test"
+            }
+            fn spec(&self) -> String {
+                "halfline_test".to_string()
+            }
+            fn project(&self, v: &mut [f32]) {
+                for x in v.iter_mut() {
+                    *x = x.max(0.0);
+                }
+            }
+            fn violation(&self, v: &[f32]) -> f64 {
+                v.iter().map(|&x| (-x).max(0.0) as f64).fold(0.0, f64::max)
+            }
+            fn separable(&self) -> bool {
+                true
+            }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        register_family("halfline_test", &["halfline_test"], |args: &str| {
+            args.is_empty().then(|| Box::new(HalfLine) as Box<dyn BlockProjection>)
+        });
+        let id = parse("halfline_test").expect("registered family parses");
+        let mut v = vec![-1.0, 2.0];
+        get(id).project(&mut v);
+        assert_eq!(v, vec![0.0, 2.0]);
+        assert!(get(id).feasible(&v, 1e-9));
+        assert!(families().contains(&"halfline_test".to_string()));
+    }
+}

@@ -9,6 +9,37 @@
 //! ρ = max{k : v_(k) > (Σ_{l≤k} v_(l) − r)/k}, θ = (Σ_{l≤ρ} v_(l) − r)/ρ,
 //! x = max(v − θ, 0). O(n log n).
 
+use std::any::Any;
+
+use super::registry::BlockProjection;
+
+/// Registry operator for {x ≥ 0, Σx ≤ 1} (paper Eq. 4–5).
+pub struct SimplexOp;
+
+impl BlockProjection for SimplexOp {
+    fn family(&self) -> &str {
+        "simplex"
+    }
+
+    fn spec(&self) -> String {
+        "simplex".to_string()
+    }
+
+    fn project(&self, v: &mut [f32]) {
+        project_simplex_ineq(v)
+    }
+
+    fn violation(&self, v: &[f32]) -> f64 {
+        let s: f64 = v.iter().map(|&x| x as f64).sum();
+        let neg = v.iter().map(|&x| (-x).max(0.0) as f64).fold(0.0, f64::max);
+        (s - 1.0).max(0.0).max(neg)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
 /// In-place projection onto {x ≥ 0, Σ x = r}.
 pub fn project_simplex_eq(v: &mut [f32], r: f32) {
     debug_assert!(r >= 0.0);

@@ -1,0 +1,263 @@
+//! Weighted-simplex projection: Π onto {x ≥ 0, Σ wᵢxᵢ ≤ s} — per-edge
+//! resource weights under one block capacity (e.g. impression slots that
+//! consume different inventory amounts).
+//!
+//! Registered as the `weighted_simplex` family purely inside
+//! `projection/` — no solver, sparse-layout, or runtime edits — which is
+//! the paper's §4 locality claim for new formulations. Solved by
+//! bisection on the cut multiplier μ: x(μ) = max(v − μw, 0) makes
+//! wᵀx(μ) monotone nonincreasing, so the binding μ* is found to
+//! tolerance in 64 halvings, mirroring `boxcut`.
+//!
+//! The weight vector cycles over block coordinates (`w[i % len]`), so one
+//! operator serves blocks of any width: a single weight is a uniform
+//! weighting, a pair alternates, a full-width vector is per-edge.
+//! CPU-reference-only until a slab kernel lands in L1/L2.
+
+use std::any::Any;
+
+use super::registry::BlockProjection;
+use super::ProjectionKind;
+
+/// Registry operator for {x ≥ 0, Σ wᵢxᵢ ≤ total}.
+pub struct WeightedSimplexOp {
+    pub total: f32,
+    pub weights: Vec<f32>,
+}
+
+/// Intern {x ≥ 0, Σ wᵢxᵢ ≤ total} with cycling weights.
+pub fn weighted_simplex(total: f32, weights: &[f32]) -> ProjectionKind {
+    assert!(
+        total > 0.0 && total.is_finite(),
+        "total must be positive finite"
+    );
+    assert!(
+        !weights.is_empty() && weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+        "weights must be a nonempty positive finite vector"
+    );
+    ProjectionKind::intern(Box::new(WeightedSimplexOp {
+        total,
+        weights: weights.to_vec(),
+    }))
+}
+
+impl WeightedSimplexOp {
+    pub(crate) const SAMPLES: &'static [&'static str] = &[
+        "weighted_simplex:1:1",
+        "weighted_simplex:2:1,2",
+        "weighted_simplex:0.8:0.5,1.5,1",
+    ];
+
+    /// Family parser: bare args default to (total=1, w=[1]) ≡ the plain
+    /// simplex polytope; `<total>` sets the capacity with unit weights;
+    /// `<total>:<w1>,<w2>,…` sets explicit cycling weights.
+    pub(crate) fn parse_args(args: &str) -> Option<Box<dyn BlockProjection>> {
+        if args.is_empty() {
+            return Some(Box::new(WeightedSimplexOp {
+                total: 1.0,
+                weights: vec![1.0],
+            }));
+        }
+        let (total_s, weights_s) = match args.split_once(':') {
+            Some((t, w)) => (t, Some(w)),
+            None => (args, None),
+        };
+        let total: f32 = total_s.parse().ok()?;
+        let weights: Vec<f32> = match weights_s {
+            None => vec![1.0],
+            Some(w) => w
+                .split(',')
+                .map(|s| s.parse().ok())
+                .collect::<Option<Vec<f32>>>()?,
+        };
+        let ok = total > 0.0
+            && total.is_finite()
+            && !weights.is_empty()
+            && weights.iter().all(|&w| w > 0.0 && w.is_finite());
+        ok.then(|| Box::new(WeightedSimplexOp { total, weights }) as Box<dyn BlockProjection>)
+    }
+
+    #[inline]
+    fn weight(&self, i: usize) -> f64 {
+        self.weights[i % self.weights.len()] as f64
+    }
+}
+
+impl BlockProjection for WeightedSimplexOp {
+    fn family(&self) -> &str {
+        "weighted_simplex"
+    }
+
+    fn spec(&self) -> String {
+        let ws: Vec<String> = self.weights.iter().map(|w| w.to_string()).collect();
+        format!("weighted_simplex:{}:{}", self.total, ws.join(","))
+    }
+
+    fn project(&self, v: &mut [f32]) {
+        // Clamping negatives first is exact: for v_i ≤ 0 the KKT solution
+        // x_i = max(v_i − μwᵢ, 0) is 0 at any μ ≥ 0, same as for the
+        // clamped coordinate (the `simplex` operator uses the same step).
+        let mut wsum = 0.0f64;
+        for (i, x) in v.iter_mut().enumerate() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+            wsum += self.weight(i) * *x as f64;
+        }
+        let total = self.total as f64;
+        if wsum <= total {
+            return;
+        }
+        // Bisection on μ (KKT multiplier of the cut): wᵀx(μ) is monotone
+        // nonincreasing, wᵀx(0) > total, and x(μ_hi) = 0.
+        let mut hi = 0.0f64;
+        for (i, &x) in v.iter().enumerate() {
+            if x > 0.0 {
+                hi = hi.max(x as f64 / self.weight(i));
+            }
+        }
+        let mut lo = 0.0f64;
+        for _ in 0..64 {
+            let mu = 0.5 * (lo + hi);
+            let s: f64 = v
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| {
+                    let w = self.weight(i);
+                    w * ((x as f64) - mu * w).max(0.0)
+                })
+                .sum();
+            if s > total {
+                lo = mu;
+            } else {
+                hi = mu;
+            }
+        }
+        let mu = 0.5 * (lo + hi);
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = ((*x as f64) - mu * self.weight(i)).max(0.0) as f32;
+        }
+    }
+
+    fn violation(&self, v: &[f32]) -> f64 {
+        let neg = v.iter().map(|&x| (-x).max(0.0) as f64).fold(0.0, f64::max);
+        let wsum: f64 = v
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| self.weight(i) * x as f64)
+            .sum();
+        (wsum - self.total as f64).max(0.0).max(neg)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn project(total: f32, weights: &[f32], v: &[f32]) -> Vec<f32> {
+        let mut p = v.to_vec();
+        WeightedSimplexOp {
+            total,
+            weights: weights.to_vec(),
+        }
+        .project(&mut p);
+        p
+    }
+
+    #[test]
+    fn unit_weights_match_simplex() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..100 {
+            let n = 1 + rng.below(10);
+            let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let a = project(1.0, &[1.0], &v);
+            let mut b = v.clone();
+            crate::projection::project_simplex_ineq(&mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-4, "{a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn binding_cut_respects_weights() {
+        // w = (1, 3), total = 1, v = (1, 1): heavier coordinate is pushed
+        // down harder (x = v − μw), and the cut holds with equality.
+        let p = project(1.0, &[1.0, 3.0], &[1.0, 1.0]);
+        let wsum = p[0] as f64 + 3.0 * p[1] as f64;
+        assert!((wsum - 1.0).abs() < 1e-4, "wᵀx = {wsum}");
+        assert!(p[0] > p[1], "{p:?}");
+    }
+
+    #[test]
+    fn weights_cycle_across_wide_blocks() {
+        // 4 coordinates, 2 weights → effective w = (1, 2, 1, 2)
+        let v = [5.0f32; 4];
+        let a = project(2.0, &[1.0, 2.0], &v);
+        let b = project(2.0, &[1.0, 2.0, 1.0, 2.0], &v);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn interior_point_only_clamped() {
+        let p = project(10.0, &[1.0, 2.0], &[0.5, -1.0, 0.25]);
+        assert_eq!(p, vec![0.5, 0.0, 0.25]);
+    }
+
+    #[test]
+    fn optimality_vs_random_feasible_probes() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        for case in 0..50 {
+            let n = 2 + rng.below(6);
+            let total = (rng.uniform() * 2.0 + 0.1) as f32;
+            let weights: Vec<f32> = (0..1 + rng.below(3))
+                .map(|_| (rng.uniform() * 2.0 + 0.1) as f32)
+                .collect();
+            let op = WeightedSimplexOp {
+                total,
+                weights: weights.clone(),
+            };
+            let v: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let mut p = v.clone();
+            op.project(&mut p);
+            assert!(op.feasible(&p, 1e-3), "violation {}", op.violation(&p));
+            let d_star: f64 = v.iter().zip(&p).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            for _ in 0..30 {
+                // random feasible probe: scale a positive draw under the cut
+                let mut y: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+                let wsum: f64 = y
+                    .iter()
+                    .enumerate()
+                    .map(|(i, yi)| op.weight(i) * yi)
+                    .sum();
+                if wsum > total as f64 {
+                    let s = total as f64 / wsum;
+                    y.iter_mut().for_each(|x| *x *= s);
+                }
+                let d: f64 = v.iter().zip(&y).map(|(a, b)| (*a as f64 - b).powi(2)).sum();
+                assert!(d_star <= d + 1e-4, "case {case}: probe beat projection");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_roundtrip_and_constructor() {
+        let k = weighted_simplex(2.0, &[1.0, 2.0]);
+        assert_eq!(k.spec(), "weighted_simplex:2:1,2");
+        assert_eq!(ProjectionKind::parse(&k.spec()), Some(k));
+        assert_eq!(k.name(), "weighted_simplex");
+        assert!(!k.separable());
+        // bare and total-only forms
+        assert!(ProjectionKind::parse("weighted_simplex").is_some());
+        assert!(ProjectionKind::parse("weighted_simplex:3").is_some());
+        // malformed / invalid parameters rejected
+        assert_eq!(ProjectionKind::parse("weighted_simplex:0:1"), None);
+        assert_eq!(ProjectionKind::parse("weighted_simplex:1:-1"), None);
+        assert_eq!(ProjectionKind::parse("weighted_simplex:1:"), None);
+        assert_eq!(ProjectionKind::parse("weighted_simplex:a:b"), None);
+    }
+}

@@ -13,7 +13,11 @@
 //! Rust-vs-JVM constant factors are noted in EXPERIMENTS.md; Table-2/Fig-3
 //! comparisons report the *shape* (batched sharded vs unbatched serial).
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+use crate::projection::{BlockProjection, ProjectionKind};
 
 /// One eligible edge in the tuple-sequence layout.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +33,9 @@ struct EdgeTuple {
 struct SourceBlock {
     tuples: Vec<EdgeTuple>,
     gamma_scale: f32,
+    /// Projection operator, resolved from the registry once at
+    /// construction so the per-iteration hot loop stays lock-free.
+    op: Arc<dyn BlockProjection>,
 }
 
 pub struct CpuObjective<'a> {
@@ -41,6 +48,9 @@ pub struct CpuObjective<'a> {
 impl<'a> CpuObjective<'a> {
     pub fn new(lp: &'a MatchingLp) -> Self {
         let mut blocks = Vec::with_capacity(lp.num_sources());
+        // memoize registry lookups per distinct kind (one lock acquisition
+        // per kind, not per block)
+        let mut ops: BTreeMap<ProjectionKind, Arc<dyn BlockProjection>> = BTreeMap::new();
         for i in 0..lp.num_sources() {
             let (e0, e1) = (lp.a.src_ptr[i], lp.a.src_ptr[i + 1]);
             let tuples = (e0..e1)
@@ -50,7 +60,9 @@ impl<'a> CpuObjective<'a> {
                     cost: lp.cost[e],
                 })
                 .collect();
-            blocks.push(SourceBlock { tuples, gamma_scale: lp.gamma_scale(i) });
+            let kind = lp.projection.kind_of(i);
+            let op = ops.entry(kind).or_insert_with(|| kind.op()).clone();
+            blocks.push(SourceBlock { tuples, gamma_scale: lp.gamma_scale(i), op });
         }
         CpuObjective { lp, blocks, scratch: Vec::new() }
     }
@@ -74,7 +86,7 @@ impl<'a> CpuObjective<'a> {
             }
             self.scratch.push(-(u + t.cost) / g_eff);
         }
-        self.lp.projection.project(i, &mut self.scratch);
+        block.op.project(&mut self.scratch);
     }
 }
 

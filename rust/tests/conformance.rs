@@ -1,0 +1,183 @@
+//! Generic projection-operator conformance suite, driven off the operator
+//! registry: EVERY registered family is exercised through its registered
+//! sample specs, with no per-family test code. A new constraint family
+//! (trait impl + `register_family` with samples) gets this coverage for
+//! free:
+//!
+//! - spec round-trip: `parse(spec(k)) == Some(k)` (interning identity);
+//! - feasibility: `feasible(project(v))` per the operator's own oracle;
+//! - idempotence: projecting a projected point is a no-op;
+//! - non-expansiveness: ‖Π(u) − Π(v)‖ ≤ ‖u − v‖ (any convex projection);
+//! - distance minimality on small blocks against a brute-force grid
+//!   oracle over the positive orthant (all shipped polytopes live there).
+
+use dualip::projection::{registry, BlockProjection, ProjectionKind};
+use dualip::util::rng::Rng;
+
+const CASES_PER_OP: usize = 60;
+/// Grid oracle bounds: [0, GRID_MAX]^n in GRID_STEPS steps per axis.
+/// Registered conformance samples must keep their polytopes inside this
+/// box (bounds/totals ≲ 2.5), which all shipped samples do.
+const GRID_MAX: f64 = 2.6;
+const GRID_STEPS: usize = 13;
+
+fn seed_of(label: &str) -> u64 {
+    label.bytes().fold(0xC0F0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64))
+}
+
+fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum()
+}
+
+/// Enumerate the grid points of [0, GRID_MAX]^n (n ≤ 3 keeps this small).
+fn grid_points(n: usize) -> Vec<Vec<f32>> {
+    let axis: Vec<f32> = (0..=GRID_STEPS)
+        .map(|s| (s as f64 * GRID_MAX / GRID_STEPS as f64) as f32)
+        .collect();
+    let mut pts: Vec<Vec<f32>> = vec![Vec::new()];
+    for _ in 0..n {
+        pts = pts
+            .into_iter()
+            .flat_map(|p| {
+                axis.iter().map(move |&x| {
+                    let mut q = p.clone();
+                    q.push(x);
+                    q
+                })
+            })
+            .collect();
+    }
+    pts
+}
+
+fn conformance(k: ProjectionKind, label: &str) {
+    let mut rng = Rng::new(seed_of(label));
+    for case in 0..CASES_PER_OP {
+        let n = 1 + rng.below(6);
+        let scale = 10f64.powf(rng.uniform_range(-1.0, 1.0));
+        let v: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+
+        let mut p = v.clone();
+        k.apply(&mut p);
+        let tol = 1e-3 * scale.max(1.0);
+
+        // feasibility via the operator's own oracle
+        let viol = k.violation(&p);
+        assert!(viol <= tol, "{label} case {case}: Π(v) infeasible by {viol}");
+
+        // idempotence
+        let mut p2 = p.clone();
+        k.apply(&mut p2);
+        for (a, b) in p.iter().zip(&p2) {
+            assert!(
+                ((a - b).abs() as f64) <= tol,
+                "{label} case {case}: not idempotent ({a} vs {b})"
+            );
+        }
+
+        // non-expansiveness against a second random point
+        let u: Vec<f32> = (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+        let mut pu = u.clone();
+        k.apply(&mut pu);
+        let d_in = dist_sq(&u, &v);
+        let d_out = dist_sq(&pu, &p);
+        assert!(
+            d_out <= d_in + tol,
+            "{label} case {case}: expansive ({d_out} > {d_in})"
+        );
+
+        // distance minimality vs the brute-force grid oracle
+        if n <= 3 {
+            let d_star = dist_sq(&v, &p);
+            for g in grid_points(n) {
+                if k.feasible(&g, 1e-9) {
+                    let d = dist_sq(&v, &g);
+                    assert!(
+                        d_star <= d + tol,
+                        "{label} case {case}: grid point {g:?} beat Π(v) \
+                         ({d} < {d_star})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Run the generic suite over everything currently registered.
+fn conformance_over_registry() {
+    for fam in registry::families() {
+        let samples = registry::family_samples(&fam);
+        assert!(!samples.is_empty(), "family {fam} registered without samples");
+        for spec in samples {
+            let k = ProjectionKind::parse(&spec)
+                .unwrap_or_else(|| panic!("sample {spec} of family {fam} must parse"));
+            assert_eq!(k.name(), fam, "sample {spec} resolved outside its family");
+            assert_eq!(
+                ProjectionKind::parse(&k.spec()),
+                Some(k),
+                "canonical spec of {spec} must round-trip"
+            );
+            conformance(k, &spec);
+        }
+    }
+}
+
+#[test]
+fn every_registered_family_passes_conformance() {
+    let families = registry::families();
+    for required in ["simplex", "box", "capped_simplex", "weighted_simplex", "box_vec"] {
+        assert!(
+            families.contains(&required.to_string()),
+            "builtin family {required} missing from registry: {families:?}"
+        );
+    }
+    conformance_over_registry();
+}
+
+#[test]
+fn runtime_registered_family_is_covered_for_free() {
+    // The extension path: a downstream crate registers a family and the
+    // same generic suite covers it with zero new test code. Scaled box
+    // [0, s]^n with spec `scaled_box_test:<s>`.
+    struct ScaledBox {
+        s: f32,
+    }
+    impl BlockProjection for ScaledBox {
+        fn family(&self) -> &str {
+            "scaled_box_test"
+        }
+        fn spec(&self) -> String {
+            format!("scaled_box_test:{}", self.s)
+        }
+        fn project(&self, v: &mut [f32]) {
+            for x in v.iter_mut() {
+                *x = x.clamp(0.0, self.s);
+            }
+        }
+        fn violation(&self, v: &[f32]) -> f64 {
+            v.iter()
+                .map(|&x| ((x - self.s) as f64).max((-x) as f64).max(0.0))
+                .fold(0.0, f64::max)
+        }
+        fn separable(&self) -> bool {
+            true
+        }
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+    }
+    registry::register_family(
+        "scaled_box_test",
+        &["scaled_box_test:0.75", "scaled_box_test:2"],
+        |args: &str| {
+            let s: f32 = if args.is_empty() { 1.0 } else { args.parse().ok()? };
+            (s > 0.0 && s.is_finite())
+                .then(|| Box::new(ScaledBox { s }) as Box<dyn BlockProjection>)
+        },
+    );
+    assert!(registry::families().contains(&"scaled_box_test".to_string()));
+    conformance_over_registry();
+}

@@ -161,6 +161,37 @@ fn fingerprints_recognize_the_stream_and_reject_strangers() {
 }
 
 #[test]
+fn projection_spec_distinguishes_engine_fingerprints() {
+    use dualip::projection::{ProjectionKind, ProjectionMap};
+
+    // Two instances differing ONLY in projection spec: same sparsity,
+    // same c/b — structurally distinct, so the warm-start LRU must not
+    // serve one's dual to the other.
+    let base = base_instance(6);
+    let mut capped = base.clone();
+    capped.projection = ProjectionMap::Uniform(ProjectionKind::capped_simplex(0.5, 1.0));
+    let fp_base = Fingerprint::of(&base);
+    let fp_capped = Fingerprint::of(&capped);
+    assert_eq!(fp_base.pattern_hash, fp_capped.pattern_hash, "same A pattern");
+    assert_ne!(fp_base, fp_capped, "polytope must be part of identity");
+
+    // registry-parsed operators (incl. non-Copy-parameter families) too
+    let mut weighted = base.clone();
+    weighted.projection = ProjectionMap::Uniform(
+        ProjectionKind::parse("weighted_simplex:1:1,2").unwrap(),
+    );
+    assert_ne!(Fingerprint::of(&weighted), fp_base);
+    assert_ne!(Fingerprint::of(&weighted), fp_capped);
+
+    // and the engine keeps them in separate cache slots
+    let e = engine(1, 8);
+    let r1 = e.submit(SolveJob::new(0, base));
+    let r2 = e.submit(SolveJob::new(1, capped));
+    assert!(!r1.warm && !r2.warm, "no cross-polytope warm start");
+    assert_eq!(e.cache_len(), 2);
+}
+
+#[test]
 fn engine_stats_track_the_serving_mix() {
     let spec = PerturbSpec { c_rel: 0.03, b_rel: 0.03 };
     let e = engine(4, 16);

@@ -151,13 +151,13 @@ fn mixed_projection_map_through_hlo_backend() {
     }
     // half the sources use box, half simplex — exercises multi-kind buckets
     let mut lp = instance(16, 1);
-    lp.projection = dualip::projection::ProjectionMap::PerBlock(Box::new(|i| {
+    lp.projection = dualip::projection::ProjectionMap::per_block(|i| {
         if i % 2 == 0 {
             dualip::projection::ProjectionKind::Simplex
         } else {
             dualip::projection::ProjectionKind::Box
         }
-    }));
+    });
     let mut hlo = HloObjective::new(&lp, default_artifacts_dir()).unwrap();
     let mut cpu = dualip::reference::CpuObjective::new(&lp);
     let lam = vec![0.02f32; lp.dual_dim()];

@@ -9,8 +9,7 @@
 use dualip::gen::{generate, SyntheticConfig};
 use dualip::problem::{jacobi_row_normalize, unscale_dual, ObjectiveFunction};
 use dualip::projection::{
-    project_box_cut, project_capped_simplex, project_simplex_eq, project_simplex_ineq,
-    project_unit_box, ProjectionKind,
+    project_simplex_eq, project_simplex_ineq, project_unit_box, ProjectionKind,
 };
 use dualip::reference::CpuObjective;
 use dualip::sparse::slabs::SlabLayout;
@@ -47,10 +46,11 @@ fn prop_projections_feasible_and_idempotent() {
         project_unit_box(&mut q);
         assert!(q.iter().all(|&x| (0.0..=1.0).contains(&x)));
 
-        // box-cut with random radius
+        // box-cut with random radius, applied through the registry handle
+        // (capped_simplex at cap 1 — `project_box_cut` is its thin alias)
         let r = (rng.uniform() * n as f64) as f32 + 0.1;
         let mut bc = v.clone();
-        project_box_cut(&mut bc, r);
+        ProjectionKind::capped_simplex(1.0, r).apply(&mut bc);
         let sbc: f64 = bc.iter().map(|&x| x as f64).sum();
         assert!(sbc <= r as f64 + 1e-3, "case {case}: {sbc} > {r}");
         assert!(bc.iter().all(|&x| (-1e-6..=1.0 + 1e-6).contains(&x)));
@@ -92,25 +92,28 @@ fn prop_simplex_eq_hits_radius() {
 #[test]
 fn prop_capped_simplex_oracle() {
     // Feasibility, idempotence and optimality of Π onto {0 ≤ x ≤ u, Σx ≤ s}
-    // against random feasible probes (Π(v) minimizes ‖x − v‖).
+    // against random feasible probes (Π(v) minimizes ‖x − v‖). Applied
+    // through interned registry handles — the path every backend uses.
     let mut rng = Rng::new(909);
     for case in 0..CASES {
         let n = 1 + rng.below(16);
         let cap = (rng.uniform() * 2.0 + 0.05) as f32;
         let total = (rng.uniform() * 3.0 + 0.05) as f32;
+        let k = ProjectionKind::capped_simplex(cap, total);
         let v = rand_vec(&mut rng, n, 2.0);
 
         let mut p = v.clone();
-        project_capped_simplex(&mut p, cap, total);
+        k.apply(&mut p);
         let s: f64 = p.iter().map(|&x| x as f64).sum();
         assert!(s <= total as f64 + 1e-3, "case {case}: Σ {s} > {total}");
         assert!(
             p.iter().all(|&x| (-1e-6..=cap + 1e-5).contains(&x)),
             "case {case}: coordinate outside [0, {cap}]: {p:?}"
         );
+        assert!(k.feasible(&p, 1e-3), "case {case}: oracle disagrees");
 
         let mut p2 = p.clone();
-        project_capped_simplex(&mut p2, cap, total);
+        k.apply(&mut p2);
         for (a, b) in p.iter().zip(&p2) {
             assert!((a - b).abs() < 1e-4, "case {case}: not idempotent");
         }
@@ -137,23 +140,25 @@ fn prop_capped_simplex_nonexpansive_and_reductions() {
         let n = 2 + rng.below(10);
         let cap = (rng.uniform() * 1.5 + 0.1) as f32;
         let total = (rng.uniform() * 2.0 + 0.1) as f32;
+        let k = ProjectionKind::capped_simplex(cap, total);
         let u = rand_vec(&mut rng, n, 2.0);
         let v = rand_vec(&mut rng, n, 2.0);
         let d_in: f64 = u.iter().zip(&v).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
         let mut pu = u.clone();
         let mut pv = v.clone();
-        project_capped_simplex(&mut pu, cap, total);
-        project_capped_simplex(&mut pv, cap, total);
+        k.apply(&mut pu);
+        k.apply(&mut pv);
         let d_out: f64 = pu.iter().zip(&pv).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
         assert!(d_out <= d_in + 1e-5, "{d_out} > {d_in}");
     }
     // cap ≥ total ⇒ the per-edge cap can never bind and the polytope is
     // {x ≥ 0, Σx ≤ total}; at total = 1 that is the simplex-ineq oracle.
+    let k_loose = ProjectionKind::capped_simplex(1.5, 1.0);
     for _ in 0..50 {
         let n = 1 + rng.below(12);
         let v = rand_vec(&mut rng, n, 2.0);
         let mut a = v.clone();
-        project_capped_simplex(&mut a, 1.5, 1.0);
+        k_loose.apply(&mut a);
         let mut b = v.clone();
         project_simplex_ineq(&mut b);
         for (x, y) in a.iter().zip(&b) {
