@@ -1,0 +1,143 @@
+//! Experiment E14 — slab-native batched CPU objective vs the reference
+//! tuple-layout baseline: per-iteration `calculate` wall-clock on the
+//! default synthetic workload, single-threaded speedup (the serving hot
+//! path win), thread scaling, and the bit-identity of multithreaded
+//! evaluation.
+//!
+//! Emits machine-readable `results/BENCH_slab_cpu.json` (per-iteration µs
+//! per backend/thread-count, speedup vs reference, padding factor) so the
+//! perf trajectory is tracked across PRs.
+//!
+//! Run: cargo bench --bench bench_slab_cpu
+//!      [DUALIP_BENCH_FAST=1 for CI size — also asserts speedup ≥ 1.0]
+
+use dualip::backend::SlabCpuObjective;
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::metrics::{BenchJson, JsonValue};
+use dualip::problem::ObjectiveFunction;
+use dualip::reference::CpuObjective;
+use dualip::util::rng::Rng;
+use dualip::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let (sources, dests, reps) = if fast { (5_000, 100, 20) } else { (50_000, 500, 30) };
+    let cfg = SyntheticConfig {
+        num_requests: sources,
+        num_resources: dests,
+        avg_nnz_per_row: 10.0,
+        seed: 0,
+        ..Default::default()
+    };
+    let lp = generate(&cfg);
+    let gamma = 0.05f32;
+    // evaluate at a representative non-zero dual (λ = 0 over-activates the
+    // simplex sort branch relative to mid-solve iterates)
+    let mut rng = Rng::new(7);
+    let lam: Vec<f32> = (0..lp.dual_dim()).map(|_| (rng.uniform() * 0.1) as f32).collect();
+
+    println!(
+        "E14 — slab vs reference CPU objective: I={} J={} nnz={} reps={reps}{}",
+        lp.num_sources(),
+        lp.num_dests(),
+        lp.nnz(),
+        if fast { " (fast)" } else { "" }
+    );
+
+    let time_iters = |obj: &mut dyn ObjectiveFunction| -> f64 {
+        let _ = obj.calculate(&lam, gamma); // warm caches and scratch
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let _ = obj.calculate(&lam, gamma);
+        }
+        sw.elapsed_ms() * 1e3 / reps as f64 // µs per iteration
+    };
+
+    let mut reference = CpuObjective::new(&lp);
+    let ref_us = time_iters(&mut reference);
+    let ref_obj = reference.calculate(&lam, gamma);
+
+    let mut slab1 = SlabCpuObjective::new(&lp, 1).map_err(anyhow::Error::msg)?;
+    let padding = slab1.layout().padding_factor();
+    let launches = slab1.layout().num_launches();
+    let chunks = slab1.num_chunks();
+    let slab1_us = time_iters(&mut slab1);
+    let slab1_obj = slab1.calculate(&lam, gamma);
+    let speedup = ref_us / slab1_us;
+
+    // value sanity: the fast path must still be solving the same problem
+    let rel = (slab1_obj.dual_obj - ref_obj.dual_obj).abs() / ref_obj.dual_obj.abs().max(1.0);
+    anyhow::ensure!(rel < 1e-3, "slab dual_obj diverges from reference: rel {rel:.3e}");
+
+    println!("{:>12} {:>8} {:>14} {:>10}", "backend", "threads", "iter µs", "speedup");
+    println!("{:>12} {:>8} {:>14.1} {:>10.2}x", "reference", 1, ref_us, 1.0);
+    println!("{:>12} {:>8} {:>14.1} {:>10.2}x", "slab", 1, slab1_us, speedup);
+
+    let mut bench = BenchJson::new("slab_cpu");
+    bench
+        .meta("sources", JsonValue::UInt(lp.num_sources() as u64))
+        .meta("dests", JsonValue::UInt(lp.num_dests() as u64))
+        .meta("nnz", JsonValue::UInt(lp.nnz() as u64))
+        .meta("dual_dim", JsonValue::UInt(lp.dual_dim() as u64))
+        .meta("padding_factor", JsonValue::Num(padding))
+        .meta("launches", JsonValue::UInt(launches as u64))
+        .meta("chunks", JsonValue::UInt(chunks as u64))
+        .meta("reps", JsonValue::UInt(reps as u64))
+        .meta("gamma", JsonValue::Num(gamma as f64))
+        .meta("fast", JsonValue::Bool(fast))
+        .meta("speedup_1t", JsonValue::Num(speedup));
+    bench.row(&[
+        ("backend", JsonValue::Str("reference".into())),
+        ("threads", JsonValue::UInt(1)),
+        ("iter_us", JsonValue::Num(ref_us)),
+        ("speedup_vs_reference", JsonValue::Num(1.0)),
+    ]);
+    bench.row(&[
+        ("backend", JsonValue::Str("slab".into())),
+        ("threads", JsonValue::UInt(1)),
+        ("iter_us", JsonValue::Num(slab1_us)),
+        ("speedup_vs_reference", JsonValue::Num(speedup)),
+    ]);
+
+    for &threads in &[2usize, 4, 8] {
+        let mut slab_t = SlabCpuObjective::new(&lp, threads).map_err(anyhow::Error::msg)?;
+        let us = time_iters(&mut slab_t);
+        let rt = slab_t.calculate(&lam, gamma);
+        // determinism contract: any pool width is bit-identical to 1 thread
+        anyhow::ensure!(
+            rt.dual_obj.to_bits() == slab1_obj.dual_obj.to_bits()
+                && rt
+                    .grad
+                    .iter()
+                    .zip(&slab1_obj.grad)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{threads}-thread slab result is not bit-identical to 1 thread"
+        );
+        println!("{:>12} {:>8} {:>14.1} {:>10.2}x", "slab", threads, us, ref_us / us);
+        bench.row(&[
+            ("backend", JsonValue::Str("slab".into())),
+            ("threads", JsonValue::UInt(threads as u64)),
+            ("iter_us", JsonValue::Num(us)),
+            ("speedup_vs_reference", JsonValue::Num(ref_us / us)),
+        ]);
+    }
+
+    let path = bench.write("results")?;
+    println!(
+        "padding factor {padding:.2}, {launches} launches, {chunks} chunks; \
+         single-threaded slab speedup {speedup:.2}x"
+    );
+    println!("wrote {}", path.display());
+
+    // CI smoke gate: the slab layout must never be slower than the
+    // comparator it exists to beat (the full-size run reports, the fast
+    // run enforces — CI machines are noisy but a <1.0x would mean the hot
+    // path regressed outright)
+    if fast {
+        anyhow::ensure!(
+            speedup >= 1.0,
+            "slab backend slower than reference on CI workload: {speedup:.2}x"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! CPU execution backends for the `ObjectiveFunction` contract.
+//!
+//! The contract (paper Table 1) is backend-agnostic; this module names the
+//! CPU choices and owns the default:
+//!
+//! | backend     | layout                         | role                      |
+//! |-------------|--------------------------------|---------------------------|
+//! | `slab`      | §6 bucketed padded slabs (SoA) | default serving hot path  |
+//! | `reference` | per-source tuple vectors       | the §7 Scala comparator   |
+//!
+//! (The PJRT/HLO path in `runtime/` is a third, artifact-gated backend and
+//! is selected separately.) `CpuBackend::objective` resolves a choice into
+//! a concrete objective; `slab` falls back to `reference` when the slab
+//! layout is unbuildable for an instance, and the fallback is observable
+//! through `ObjectiveFunction::name`. [`TimedObjective`] wraps any backend
+//! to attribute solve wall-clock to objective evaluation — the engine uses
+//! it to report per-job eval time.
+
+pub mod slab_cpu;
+
+pub use slab_cpu::SlabCpuObjective;
+
+use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+use crate::reference::CpuObjective;
+use crate::util::timer::Stopwatch;
+
+/// Named CPU backend choice (CLI `--backend`, `EngineConfig::backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CpuBackend {
+    /// Slab-native batched objective (`backend::slab_cpu`) — the default.
+    #[default]
+    Slab,
+    /// Per-source tuple baseline (`reference::CpuObjective`).
+    Reference,
+}
+
+impl CpuBackend {
+    /// Parse a CLI spelling. `cpu` is accepted as a legacy alias for the
+    /// reference backend.
+    pub fn parse(s: &str) -> Option<CpuBackend> {
+        match s {
+            "slab" => Some(CpuBackend::Slab),
+            "reference" | "cpu" => Some(CpuBackend::Reference),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CpuBackend::Slab => "slab",
+            CpuBackend::Reference => "reference",
+        }
+    }
+
+    /// Build an objective for `lp` on this backend. `threads` is the slab
+    /// evaluation pool width (ignored by the reference backend). A slab
+    /// request that cannot build its layout (non-separable block wider
+    /// than the slab maximum) falls back to the reference backend; check
+    /// `.name()` on the result to see which backend actually runs.
+    pub fn objective<'a>(self, lp: &'a MatchingLp, threads: usize) -> AnyObjective<'a> {
+        match self {
+            CpuBackend::Slab => match SlabCpuObjective::new(lp, threads) {
+                Ok(o) => AnyObjective::Slab(o),
+                Err(_) => AnyObjective::Reference(CpuObjective::new(lp)),
+            },
+            CpuBackend::Reference => AnyObjective::Reference(CpuObjective::new(lp)),
+        }
+    }
+}
+
+/// A backend-erased CPU objective (enum, not `Box<dyn>`, so call sites
+/// keep static dispatch and borrowck-visible lifetimes).
+pub enum AnyObjective<'a> {
+    Slab(SlabCpuObjective<'a>),
+    Reference(CpuObjective<'a>),
+}
+
+impl ObjectiveFunction for AnyObjective<'_> {
+    fn dual_dim(&self) -> usize {
+        match self {
+            AnyObjective::Slab(o) => o.dual_dim(),
+            AnyObjective::Reference(o) => o.dual_dim(),
+        }
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        match self {
+            AnyObjective::Slab(o) => o.calculate(lam, gamma),
+            AnyObjective::Reference(o) => o.calculate(lam, gamma),
+        }
+    }
+
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
+        match self {
+            AnyObjective::Slab(o) => o.primal(lam, gamma),
+            AnyObjective::Reference(o) => o.primal(lam, gamma),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyObjective::Slab(o) => o.name(),
+            AnyObjective::Reference(o) => o.name(),
+        }
+    }
+}
+
+/// Wrapper that accumulates wall time spent inside `calculate` — the
+/// objective-eval share of a solve, reported per job by the engine.
+pub struct TimedObjective<O> {
+    pub inner: O,
+    /// Total wall-clock spent in `calculate` so far.
+    pub eval_ms: f64,
+    /// Number of `calculate` calls.
+    pub evals: u64,
+}
+
+impl<O: ObjectiveFunction> TimedObjective<O> {
+    pub fn new(inner: O) -> TimedObjective<O> {
+        TimedObjective { inner, eval_ms: 0.0, evals: 0 }
+    }
+}
+
+impl<O: ObjectiveFunction> ObjectiveFunction for TimedObjective<O> {
+    fn dual_dim(&self) -> usize {
+        self.inner.dual_dim()
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        let sw = Stopwatch::start();
+        let r = self.inner.calculate(lam, gamma);
+        self.eval_ms += sw.elapsed_ms();
+        self.evals += 1;
+        r
+    }
+
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
+        self.inner.primal(lam, gamma)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::projection::ProjectionKind;
+    use crate::sparse::slabs::MAX_WIDTH;
+    use crate::sparse::BlockedMatrix;
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(CpuBackend::parse("slab"), Some(CpuBackend::Slab));
+        assert_eq!(CpuBackend::parse("reference"), Some(CpuBackend::Reference));
+        assert_eq!(CpuBackend::parse("cpu"), Some(CpuBackend::Reference));
+        assert_eq!(CpuBackend::parse("hlo"), None);
+        assert_eq!(CpuBackend::default(), CpuBackend::Slab);
+        assert_eq!(CpuBackend::Slab.name(), "slab");
+        assert_eq!(CpuBackend::Reference.name(), "reference");
+    }
+
+    #[test]
+    fn objective_dispatch_and_names() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 100,
+            num_resources: 16,
+            seed: 2,
+            ..Default::default()
+        });
+        let mut slab = CpuBackend::Slab.objective(&lp, 1);
+        let mut reference = CpuBackend::Reference.objective(&lp, 1);
+        assert_eq!(slab.name(), "cpu-slab");
+        assert_eq!(reference.name(), "cpu-reference");
+        let lam = vec![0.0f32; lp.dual_dim()];
+        let a = slab.calculate(&lam, 0.1);
+        let b = reference.calculate(&lam, 0.1);
+        assert!((a.dual_obj - b.dual_obj).abs() < 1e-4 * (1.0 + b.dual_obj.abs()));
+    }
+
+    #[test]
+    fn slab_falls_back_to_reference_when_layout_unbuildable() {
+        let deg = MAX_WIDTH + 1;
+        let a = BlockedMatrix {
+            num_sources: 1,
+            num_dests: deg,
+            num_families: 1,
+            src_ptr: vec![0, deg],
+            dest_idx: (0..deg as u32).collect(),
+            a: vec![vec![1.0; deg]],
+        };
+        let lp = MatchingLp::new_uniform(
+            a,
+            vec![-1.0; deg],
+            vec![0.5; deg],
+            ProjectionKind::Simplex,
+        );
+        let obj = CpuBackend::Slab.objective(&lp, 1);
+        assert_eq!(obj.name(), "cpu-reference");
+    }
+
+    #[test]
+    fn timed_wrapper_counts_and_delegates() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 80,
+            num_resources: 8,
+            seed: 4,
+            ..Default::default()
+        });
+        let mut obj = TimedObjective::new(CpuBackend::Slab.objective(&lp, 1));
+        let lam = vec![0.0f32; lp.dual_dim()];
+        let _ = obj.calculate(&lam, 0.1);
+        let _ = obj.calculate(&lam, 0.1);
+        assert_eq!(obj.evals, 2);
+        assert!(obj.eval_ms >= 0.0);
+        assert_eq!(obj.name(), "cpu-slab");
+        assert_eq!(obj.primal(&lam, 0.1).len(), lp.nnz());
+    }
+}

@@ -1,0 +1,451 @@
+//! Slab-native batched CPU objective — the default serving backend.
+//!
+//! The reference objective (`reference::CpuObjective`) exists to be the
+//! paper's §7 comparator: per-source tuple vectors, pointer-chasing
+//! traversal, one projection call per block. This backend runs the same
+//! math over the §6 constraint-aligned [`SlabLayout`] instead:
+//!
+//! - **structure-of-arrays traversal**: per bucket, the `cost` / `a[k]` /
+//!   `dest_idx` planes are contiguous `[rows × width]` slabs, so the
+//!   gather `u = Aᵀλ + c` and the scatter `ax += a ⊙ x` are tight
+//!   width-strided sweeps instead of per-tuple hops;
+//! - **batched projections**: one [`BlockProjection::project_rows`] call
+//!   per (bucket, chunk) — the CPU mirror of the L1 Pallas slab kernels —
+//!   replacing one dynamic `project` dispatch (and, for simplex, one sort
+//!   allocation) per source;
+//! - **deterministic parallelism**: rows are split into a **fixed chunk
+//!   grid** that never depends on the thread count. Each chunk reduces
+//!   into its own partial `ax`/`cx`/`xsq` accumulator, and partials are
+//!   merged in chunk-index order — so an N-thread evaluation is
+//!   bit-identical to the 1-thread evaluation (the same argument as the
+//!   rank-ordered reduction in `distributed/` and the engine scheduler,
+//!   applied one level down). `std::thread::scope` keeps it on borrowed
+//!   data with no new crates.
+//!
+//! Layout-ineligible instances (a non-separable block wider than
+//! `MAX_WIDTH`) are reported as a build error; `backend::CpuBackend`
+//! falls back to the reference objective for those.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+use crate::projection::BlockProjection;
+use crate::sparse::slabs::SlabLayout;
+
+/// Target chunk-grid size. Fixed (never derived from the thread count)
+/// so the reduction order — and therefore every bit of the result — is
+/// identical at any pool width. Chunks never span buckets, so the actual
+/// grid (and partial-accumulator memory, `num_chunks × dual_dim` floats)
+/// can exceed this by up to one chunk per bucket.
+const MAX_CHUNKS: usize = 32;
+/// Minimum rows per chunk — below this the per-chunk bookkeeping
+/// dominates the math.
+const MIN_CHUNK_ROWS: usize = 64;
+
+/// One unit of the fixed parallel grid: a row range within one bucket
+/// (chunks never span buckets, so each chunk projects with one operator
+/// at one width).
+struct ChunkTask {
+    bucket: usize,
+    row_lo: usize,
+    row_hi: usize,
+}
+
+/// Per-chunk scratch, persistent across iterations: projected slab values
+/// plus the chunk's partial reductions. Wrapped in an (uncontended)
+/// `Mutex` so worker threads can fill disjoint slots through `&self`.
+struct ChunkScratch {
+    /// Projected primal values for the chunk's rows, `[rows × width]`.
+    x: Vec<f32>,
+    /// Partial Ax accumulator over the full dual dimension.
+    ax: Vec<f32>,
+    cx: f64,
+    xsq: f64,
+}
+
+/// `ObjectiveFunction` over the slab layout (see module docs).
+pub struct SlabCpuObjective<'a> {
+    lp: &'a MatchingLp,
+    layout: SlabLayout,
+    threads: usize,
+    /// Projection operator per bucket, resolved from the registry once at
+    /// construction so the hot loop stays lock-free.
+    ops: Vec<Arc<dyn BlockProjection>>,
+    /// v_i² per slab row per bucket (γ is folded in per call).
+    row_v2: Vec<Vec<f32>>,
+    tasks: Vec<ChunkTask>,
+    scratch: Vec<Mutex<ChunkScratch>>,
+    /// Precomputed rhs over all dual rows.
+    full_b: Vec<f32>,
+}
+
+impl<'a> SlabCpuObjective<'a> {
+    /// Build the slab layout and the fixed chunk grid for `lp`. `threads`
+    /// is the evaluation pool width (1 = fully sequential; results are
+    /// bit-identical either way). Errors when the layout is unbuildable
+    /// (non-separable block wider than the maximum slab width).
+    pub fn new(lp: &'a MatchingLp, threads: usize) -> Result<SlabCpuObjective<'a>, String> {
+        let layout = SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
+            lp.projection.kind_of(i)
+        })?;
+        let ops: Vec<Arc<dyn BlockProjection>> =
+            layout.buckets.iter().map(|b| b.kind.op()).collect();
+        let row_v2: Vec<Vec<f32>> = layout
+            .buckets
+            .iter()
+            .map(|b| b.sources.iter().map(|&s| lp.gamma_scale(s as usize)).collect())
+            .collect();
+
+        // Fixed chunk grid: a deterministic function of the layout alone.
+        let total_rows = layout.total_rows();
+        let target = total_rows.div_ceil(MAX_CHUNKS).max(MIN_CHUNK_ROWS);
+        let mut tasks = Vec::new();
+        for (b, bk) in layout.buckets.iter().enumerate() {
+            let rows = bk.rows();
+            let mut lo = 0usize;
+            while lo < rows {
+                let hi = (lo + target).min(rows);
+                tasks.push(ChunkTask { bucket: b, row_lo: lo, row_hi: hi });
+                lo = hi;
+            }
+        }
+
+        let dual = lp.dual_dim();
+        let scratch = tasks
+            .iter()
+            .map(|_| {
+                Mutex::new(ChunkScratch {
+                    x: Vec::new(),
+                    ax: vec![0.0f32; dual],
+                    cx: 0.0,
+                    xsq: 0.0,
+                })
+            })
+            .collect();
+        Ok(SlabCpuObjective {
+            lp,
+            layout,
+            threads: threads.max(1),
+            ops,
+            row_v2,
+            tasks,
+            scratch,
+            full_b: lp.full_b(),
+        })
+    }
+
+    pub fn layout(&self) -> &SlabLayout {
+        &self.layout
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over every chunk index, across the pool when it pays.
+    /// Which thread runs which chunk is irrelevant to values: each chunk
+    /// writes only its own scratch slot.
+    ///
+    /// Scoped threads are spawned per call (i.e. per solver iteration):
+    /// a few tens of µs of spawn/join overhead at `threads` > 1, which
+    /// only pays off on instances whose single evaluation is well into
+    /// the millisecond range. That is why `threads` defaults to 1
+    /// everywhere (the serving engine parallelizes across jobs instead)
+    /// and why the E14 bench reports thread scaling explicitly. A
+    /// persistent worker pool would amortize the spawns; not worth the
+    /// complexity until a profile says otherwise.
+    fn for_each_chunk<F: Fn(usize) + Sync>(&self, f: F) {
+        let n = self.tasks.len();
+        if self.threads <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(n) {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+
+    /// Fill `x` with the chunk's projected primal block values:
+    /// x = Π_C(−(Aᵀλ + c) / (γ v²)), batched per row.
+    fn gather_project(&self, t: &ChunkTask, lam: &[f32], gamma: f32, x: &mut Vec<f32>) {
+        let bk = &self.layout.buckets[t.bucket];
+        let w = bk.width;
+        let rows = t.row_hi - t.row_lo;
+        let jj = self.lp.num_dests();
+        let m = self.lp.num_families();
+        let mj = self.lp.matching_dual_dim();
+        x.clear();
+        x.resize(rows * w, 0.0);
+        for rr in 0..rows {
+            let r = t.row_lo + rr;
+            let base = r * w;
+            let out = &mut x[rr * w..(rr + 1) * w];
+            let dest = &bk.dest_idx[base..base + w];
+            // u = Σ_k a_k ⊙ λ_k[dest]: one contiguous plane sweep per
+            // family (padding has a = 0, so it lands on exact zero)
+            for k in 0..m {
+                let ak = &bk.a[k][base..base + w];
+                let lk = &lam[k * jj..(k + 1) * jj];
+                if k == 0 {
+                    for c in 0..w {
+                        out[c] = ak[c] * lk[dest[c] as usize];
+                    }
+                } else {
+                    for c in 0..w {
+                        out[c] += ak[c] * lk[dest[c] as usize];
+                    }
+                }
+            }
+            for (g_idx, g) in self.lp.global_rows.iter().enumerate() {
+                let lg = lam[mj + g_idx];
+                let eid = &bk.edge_id[base..base + w];
+                let msk = &bk.mask[base..base + w];
+                for c in 0..w {
+                    if msk[c] > 0.0 {
+                        out[c] += g.coeffs[eid[c] as usize] * lg;
+                    }
+                }
+            }
+            // one multiply per element instead of the reference's divide;
+            // the mask factor pins padding to exact zero for the batched
+            // projections
+            let neg_inv = -1.0f32 / (gamma * self.row_v2[t.bucket][r]);
+            let cost = &bk.cost[base..base + w];
+            let msk = &bk.mask[base..base + w];
+            for c in 0..w {
+                out[c] = (out[c] + cost[c]) * neg_inv * msk[c];
+            }
+        }
+        let mask = &bk.mask[t.row_lo * w..t.row_hi * w];
+        self.ops[t.bucket].project_rows(x, rows, w, mask);
+    }
+
+    /// Accumulate the chunk's contribution to Ax / cᵀx / Σv²‖x‖².
+    fn reduce_chunk(&self, t: &ChunkTask, x: &[f32], ax: &mut [f32]) -> (f64, f64) {
+        let bk = &self.layout.buckets[t.bucket];
+        let w = bk.width;
+        let jj = self.lp.num_dests();
+        let m = self.lp.num_families();
+        let mj = self.lp.matching_dual_dim();
+        let mut cx = 0.0f64;
+        let mut xsq = 0.0f64;
+        for rr in 0..(t.row_hi - t.row_lo) {
+            let r = t.row_lo + rr;
+            let base = r * w;
+            let xr = &x[rr * w..(rr + 1) * w];
+            let v2 = self.row_v2[t.bucket][r] as f64;
+            for c in 0..w {
+                let xv = xr[c];
+                if xv == 0.0 {
+                    continue; // padding and clamped-out coordinates
+                }
+                cx += bk.cost[base + c] as f64 * xv as f64;
+                xsq += v2 * xv as f64 * xv as f64;
+                for k in 0..m {
+                    ax[k * jj + bk.dest_idx[base + c] as usize] += bk.a[k][base + c] * xv;
+                }
+                for (g_idx, g) in self.lp.global_rows.iter().enumerate() {
+                    ax[mj + g_idx] += g.coeffs[bk.edge_id[base + c] as usize] * xv;
+                }
+            }
+        }
+        (cx, xsq)
+    }
+}
+
+impl ObjectiveFunction for SlabCpuObjective<'_> {
+    fn dual_dim(&self) -> usize {
+        self.lp.dual_dim()
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        assert_eq!(lam.len(), self.lp.dual_dim());
+        let this: &Self = self;
+        this.for_each_chunk(|i| {
+            let t = &this.tasks[i];
+            let mut guard = this.scratch[i].lock().unwrap();
+            let s = &mut *guard;
+            this.gather_project(t, lam, gamma, &mut s.x);
+            s.ax.fill(0.0);
+            let (cx, xsq) = this.reduce_chunk(t, &s.x, &mut s.ax);
+            s.cx = cx;
+            s.xsq = xsq;
+        });
+
+        // Merge partials in chunk-index order — the grid is fixed, so the
+        // floating-point summation order is identical at any thread count.
+        // The merge target is the result's own gradient vector (it must be
+        // owned by the ObjectiveResult, so this is the one per-call
+        // allocation); all hot-loop scratch lives in the chunk slots.
+        let mut ax = vec![0.0f32; self.lp.dual_dim()];
+        let mut cx = 0.0f64;
+        let mut xsq = 0.0f64;
+        for slot in &self.scratch {
+            let s = slot.lock().unwrap();
+            for (g, p) in ax.iter_mut().zip(&s.ax) {
+                *g += *p;
+            }
+            cx += s.cx;
+            xsq += s.xsq;
+        }
+        for (g, b) in ax.iter_mut().zip(&self.full_b) {
+            *g -= *b;
+        }
+        ObjectiveResult::assemble(ax, cx, xsq, lam, gamma)
+    }
+
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
+        assert_eq!(lam.len(), self.lp.dual_dim());
+        let mut out = vec![0.0f32; self.lp.nnz()];
+        // off the iteration hot path: sequential sweep, scatter by edge id
+        // (split separable rows land in their own edge ranges)
+        for (i, t) in self.tasks.iter().enumerate() {
+            let mut guard = self.scratch[i].lock().unwrap();
+            let s = &mut *guard;
+            self.gather_project(t, lam, gamma, &mut s.x);
+            let bk = &self.layout.buckets[t.bucket];
+            let w = bk.width;
+            for rr in 0..(t.row_hi - t.row_lo) {
+                let base = (t.row_lo + rr) * w;
+                for c in 0..w {
+                    if bk.mask[base + c] > 0.0 {
+                        out[bk.edge_id[base + c] as usize] = s.x[rr * w + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu-slab"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::projection::ProjectionKind;
+    use crate::reference::CpuObjective;
+    use crate::sparse::BlockedMatrix;
+
+    fn tiny_lp() -> MatchingLp {
+        let a = BlockedMatrix {
+            num_sources: 2,
+            num_dests: 2,
+            num_families: 1,
+            src_ptr: vec![0, 2, 4],
+            dest_idx: vec![0, 1, 0, 1],
+            a: vec![vec![1.0, 1.0, 1.0, 1.0]],
+        };
+        MatchingLp::new_uniform(
+            a,
+            vec![-2.0, -1.0, -1.0, -2.0],
+            vec![0.6, 0.6],
+            ProjectionKind::Simplex,
+        )
+    }
+
+    #[test]
+    fn matches_hand_computation_like_reference() {
+        let lp = tiny_lp();
+        let mut obj = SlabCpuObjective::new(&lp, 1).unwrap();
+        let res = obj.calculate(&[0.0, 0.0], 1.0);
+        assert!((res.grad[0] - 0.4).abs() < 1e-6, "{:?}", res.grad);
+        assert!((res.grad[1] - 0.4).abs() < 1e-6);
+        assert!((res.cx - (-4.0)).abs() < 1e-6);
+        assert!((res.xsq_weighted - 2.0).abs() < 1e-6);
+        assert!((res.dual_obj - (-3.0)).abs() < 1e-6);
+        assert_eq!(obj.name(), "cpu-slab");
+    }
+
+    #[test]
+    fn agrees_with_reference_on_generated_instance() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 300,
+            num_resources: 24,
+            avg_nnz_per_row: 5.0,
+            num_families: 2,
+            seed: 11,
+            ..Default::default()
+        });
+        let mut slab = SlabCpuObjective::new(&lp, 1).unwrap();
+        let mut reference = CpuObjective::new(&lp);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let lam: Vec<f32> =
+            (0..lp.dual_dim()).map(|_| (rng.uniform() * 0.2) as f32).collect();
+        let gamma = 0.2;
+        let rs = slab.calculate(&lam, gamma);
+        let rr = reference.calculate(&lam, gamma);
+        for (r, (a, b)) in rs.grad.iter().zip(&rr.grad).enumerate() {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "row {r}: {a} vs {b}");
+        }
+        assert!((rs.dual_obj - rr.dual_obj).abs() < 1e-4 * (1.0 + rr.dual_obj.abs()));
+        assert!((rs.cx - rr.cx).abs() < 1e-4 * (1.0 + rr.cx.abs()));
+        let xs = slab.primal(&lam, gamma);
+        let xr = reference.primal(&lam, gamma);
+        for (e, (a, b)) in xs.iter().zip(&xr).enumerate() {
+            assert!((a - b).abs() < 1e-4, "edge {e}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn multithreaded_is_bit_identical_to_single() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 800,
+            num_resources: 40,
+            avg_nnz_per_row: 6.0,
+            seed: 5,
+            ..Default::default()
+        });
+        let mut one = SlabCpuObjective::new(&lp, 1).unwrap();
+        let mut many = SlabCpuObjective::new(&lp, 7).unwrap();
+        assert_eq!(one.num_chunks(), many.num_chunks(), "grid must be thread-independent");
+        let lam = vec![0.03f32; lp.dual_dim()];
+        let r1 = one.calculate(&lam, 0.1);
+        let rn = many.calculate(&lam, 0.1);
+        assert_eq!(r1.dual_obj.to_bits(), rn.dual_obj.to_bits());
+        assert_eq!(r1.cx.to_bits(), rn.cx.to_bits());
+        for (a, b) in r1.grad.iter().zip(&rn.grad) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_overwide_nonseparable_blocks() {
+        use crate::sparse::slabs::MAX_WIDTH;
+        let deg = MAX_WIDTH + 3;
+        let a = BlockedMatrix {
+            num_sources: 1,
+            num_dests: deg,
+            num_families: 1,
+            src_ptr: vec![0, deg],
+            dest_idx: (0..deg as u32).collect(),
+            a: vec![vec![1.0; deg]],
+        };
+        let lp = MatchingLp::new_uniform(
+            a,
+            vec![-1.0; deg],
+            vec![0.5; deg],
+            ProjectionKind::Simplex,
+        );
+        assert!(SlabCpuObjective::new(&lp, 1).is_err());
+    }
+}

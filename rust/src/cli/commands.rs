@@ -7,6 +7,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::args::Args;
+use crate::backend::{CpuBackend, SlabCpuObjective};
 use crate::distributed::{solve_distributed, LinkModel};
 use crate::gen::{generate, workloads, SyntheticConfig};
 use crate::metrics::{comm_report, solve_report};
@@ -25,13 +26,16 @@ pub fn usage() -> &'static str {
      SUBCOMMANDS\n\
        solve             solve a synthetic matching LP\n\
          --sources N --dests N --nnz-per-row F --families N --seed S\n\
-         --backend cpu|hlo|dist   --workers N   --iters N\n\
+         --backend slab|reference|hlo|dist   --workers N   --iters N\n\
+         --obj-threads N    slab objective pool width (results are\n\
+                            bit-identical at any width; default 1)\n\
          --gamma F | --gamma-decay init,floor,factor,every\n\
          --projection SPEC  blockwise polytope from the operator registry\n\
                             (simplex | box | capped_simplex:c:t |\n\
                              weighted_simplex:s:w1,w2,.. | box_vec:u1,u2,..;\n\
-                             non-simplex/box families are CPU-reference-only\n\
-                             until their slab kernels land — use --backend cpu)\n\
+                             every family runs on the slab and reference\n\
+                             CPU backends; only simplex/box have HLO\n\
+                             artifacts — use --backend slab otherwise)\n\
          --count-cap M      append the global row Σx ≤ M (paper §4)\n\
          --precondition --primal-scaling --csv PATH\n\
        parity            E1/E2: baseline-vs-accelerated trajectories (Fig 1/2)\n\
@@ -44,6 +48,7 @@ pub fn usage() -> &'static str {
                          perturbation stream (cold vs warm, matched stop)\n\
          --sources N --dests N --nnz-per-row F --seed S\n\
          --jobs N --threads N --perturb F --warm-tail N\n\
+         --backend slab|reference --obj-threads N\n\
          --iters N --stall-tol F --out-dir results/\n\
        info              artifact + environment report\n\
      \n\
@@ -157,9 +162,22 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
     let init = vec![0.0f32; lp.dual_dim()];
     let mut agd = Agd::default();
     let (label, result) = match backend.as_str() {
-        "cpu" => {
+        "slab" => {
+            let obj_threads = args.usize_or("obj-threads", 1)?;
+            let mut obj =
+                SlabCpuObjective::new(&lp, obj_threads).map_err(anyhow::Error::msg)?;
+            eprintln!(
+                "slab backend: {} buckets, {} chunks, {} threads, padding factor {:.2}",
+                obj.layout().num_launches(),
+                obj.num_chunks(),
+                obj.threads(),
+                obj.layout().padding_factor()
+            );
+            ("slab", agd.maximize(&mut obj, &init, &opts))
+        }
+        "cpu" | "reference" => {
             let mut obj = CpuObjective::new(&lp);
-            ("cpu", agd.maximize(&mut obj, &init, &opts))
+            ("reference", agd.maximize(&mut obj, &init, &opts))
         }
         "hlo" => {
             let mut obj = HloObjective::new(&lp, &art)?;
@@ -183,7 +201,9 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
             }
             return Ok(());
         }
-        other => return Err(anyhow!("unknown backend {other:?} (cpu|hlo|dist)")),
+        other => {
+            return Err(anyhow!("unknown backend {other:?} (slab|reference|hlo|dist)"))
+        }
     };
     println!("{}", solve_report(label, &result));
     if let Some(csv) = args.get("csv") {
@@ -485,10 +505,19 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     let stall_tol = args.f64_or("stall-tol", 1e-7)?;
     let max_iters = args.usize_or("iters", 2_000)?;
     let out_dir = args.get_or("out-dir", "results").to_string();
+    let backend_spec = args.get_or("backend", "slab");
+    let backend = CpuBackend::parse(backend_spec)
+        .ok_or_else(|| anyhow!("--backend: unknown {backend_spec:?} (slab|reference)"))?;
+    let obj_threads = args.usize_or("obj-threads", 1)?;
 
     eprintln!(
-        "engine-batch: I={} J={} ν={} seed={} jobs={jobs} threads={threads} perturb={perturb}",
-        cfg.num_requests, cfg.num_resources, cfg.avg_nnz_per_row, cfg.seed
+        "engine-batch: I={} J={} ν={} seed={} jobs={jobs} threads={threads} perturb={perturb} \
+         backend={}",
+        cfg.num_requests,
+        cfg.num_resources,
+        cfg.avg_nnz_per_row,
+        cfg.seed,
+        backend.name()
     );
     let mut base = generate(&cfg);
     jacobi_row_normalize(&mut base);
@@ -518,6 +547,8 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         warm_tail,
         threads: 1,
         cache_capacity: 0, // disables warm starting
+        backend,
+        objective_threads: obj_threads,
     });
     let cold_results: Vec<_> = perturbation_sequence(&base, &spec, jobs, seq_seed)
         .into_iter()
@@ -531,6 +562,8 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         warm_tail,
         threads,
         cache_capacity: 16,
+        backend,
+        objective_threads: obj_threads,
     });
     let warm_jobs: Vec<SolveJob> = perturbation_sequence(&base, &spec, jobs, seq_seed)
         .into_iter()
@@ -555,19 +588,22 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         .meta("perturb", JsonValue::Num(perturb))
         .meta("stall_tol", JsonValue::Num(stall_tol))
         .meta("warm_tail", JsonValue::UInt(warm_tail as u64))
+        .meta("backend", JsonValue::Str(backend.name().into()))
+        .meta("objective_threads", JsonValue::UInt(obj_threads as u64))
         .meta("seed", JsonValue::UInt(cfg.seed));
 
     println!(
-        "{:>4} {:>10} {:>10} {:>12} {:>12} {:>10}",
-        "job", "cold iter", "warm iter", "cold ms", "warm ms", "Δobj rel"
+        "{:>4} {:>10} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "job", "cold iter", "warm iter", "cold ms", "warm ms", "eval ms", "Δobj rel"
     );
     let (mut cold_iter_sum, mut warm_iter_sum) = (0u64, 0u64);
     let (mut cold_ms_sum, mut warm_ms_sum) = (0.0f64, 0.0f64);
+    let (mut cold_eval_sum, mut warm_eval_sum) = (0.0f64, 0.0f64);
     for (c, w) in cold_results.iter().zip(&warm_results) {
         let rel = (c.dual_obj - w.dual_obj).abs() / c.dual_obj.abs().max(1.0);
         println!(
-            "{:>4} {:>10} {:>10} {:>12.1} {:>12.1} {:>10.2e}",
-            c.id, c.iterations, w.iterations, c.wall_ms, w.wall_ms, rel
+            "{:>4} {:>10} {:>10} {:>12.1} {:>12.1} {:>10.1} {:>10.2e}",
+            c.id, c.iterations, w.iterations, c.wall_ms, w.wall_ms, w.objective_eval_ms, rel
         );
         bench.row(&[
             ("job", JsonValue::UInt(c.id)),
@@ -575,6 +611,11 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
             ("warm_iters", JsonValue::UInt(w.iterations as u64)),
             ("cold_wall_ms", JsonValue::Num(c.wall_ms)),
             ("warm_wall_ms", JsonValue::Num(w.wall_ms)),
+            ("cold_obj_eval_ms", JsonValue::Num(c.objective_eval_ms)),
+            ("warm_obj_eval_ms", JsonValue::Num(w.objective_eval_ms)),
+            // actual objective name (meta "backend" is the configured
+            // choice; this reflects a layout-ineligible fallback)
+            ("backend_used", JsonValue::Str(w.backend.to_string())),
             ("cold_obj", JsonValue::Num(c.dual_obj)),
             ("warm_obj", JsonValue::Num(w.dual_obj)),
             ("obj_rel_diff", JsonValue::Num(rel)),
@@ -585,6 +626,8 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         warm_iter_sum += w.iterations as u64;
         cold_ms_sum += c.wall_ms;
         warm_ms_sum += w.wall_ms;
+        cold_eval_sum += c.objective_eval_ms;
+        warm_eval_sum += w.objective_eval_ms;
     }
     let n = cold_results.len().max(1) as f64;
     let iter_speedup = cold_iter_sum as f64 / warm_iter_sum.max(1) as f64;
@@ -602,6 +645,14 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         cold_ms_sum / n,
         warm_ms_sum / n,
     );
+    if let Some(r0) = warm_results.first() {
+        println!(
+            "objective backend: {} — mean eval: cold {:.1}ms/job, warm {:.1}ms/job",
+            r0.backend,
+            cold_eval_sum / n,
+            warm_eval_sum / n,
+        );
+    }
     println!("{}", engine_report(&warm_engine.stats()));
     println!("{}", batch_report(&breport));
     println!("wrote {}", path.display());

@@ -11,19 +11,22 @@
 //!   granularity makes the batch bit-identical to running the same jobs
 //!   through a 1-thread scheduler — no dependence on completion order.
 //!
-//! Jobs are solved on the CPU reference backend (`CpuObjective`): it is
-//! always available, deterministic, and exercises the identical math as
-//! the accelerated backends (the `Maximizer`/`ObjectiveFunction` contract
-//! is backend-agnostic, so swapping in slab/PJRT objectives is a local
-//! change once artifacts exist).
+//! Jobs are solved on a named CPU backend (`backend::CpuBackend`) — the
+//! slab-native batched objective by default, with the per-source
+//! reference baseline selectable per engine. Both are always available
+//! and deterministic, and the `Maximizer`/`ObjectiveFunction` contract is
+//! backend-agnostic, so swapping in the PJRT objective stays a local
+//! change once artifacts exist. Each job's objective is wrapped in a
+//! `TimedObjective`, so results attribute their wall-clock to objective
+//! evaluation.
 
 use std::sync::Mutex;
 
 use super::fingerprint::Fingerprint;
 use super::scheduler::{BatchReport, Scheduler};
 use super::warmstart::{warm_options, WarmStart, WarmStartCache};
-use crate::problem::{LpSpec, MatchingLp};
-use crate::reference::CpuObjective;
+use crate::backend::{CpuBackend, TimedObjective};
+use crate::problem::{LpSpec, MatchingLp, ObjectiveFunction};
 use crate::solver::{Agd, Maximizer, SolveOptions, StopReason};
 
 /// One unit of work: an instance plus an optional per-job options override
@@ -63,6 +66,12 @@ pub struct JobResult {
     pub infeas_pos_norm: f64,
     pub final_gamma: f32,
     pub wall_ms: f64,
+    /// Objective backend the job actually ran on (e.g. `cpu-slab`; a slab
+    /// request that could not build its layout reports `cpu-reference`).
+    pub backend: &'static str,
+    /// Wall-clock spent inside objective evaluation (the per-iteration
+    /// hot path), a subset of `wall_ms`.
+    pub objective_eval_ms: f64,
     /// Final dual iterate (feeds the cache and downstream primal recovery).
     pub lam: Vec<f32>,
 }
@@ -80,6 +89,13 @@ pub struct EngineConfig {
     /// Warm-start cache capacity (distinct fingerprints); 0 disables
     /// warm starting entirely (cold-baseline engine).
     pub cache_capacity: usize,
+    /// Objective backend jobs solve on (slab by default).
+    pub backend: CpuBackend,
+    /// Thread-pool width *inside* one objective evaluation (slab backend
+    /// only). Defaults to 1: batches already parallelize across jobs, and
+    /// slab results are bit-identical at any width, so this is purely a
+    /// latency knob for wide single jobs.
+    pub objective_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -91,6 +107,8 @@ impl Default for EngineConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             cache_capacity: 64,
+            backend: CpuBackend::Slab,
+            objective_threads: 1,
         }
     }
 }
@@ -104,6 +122,9 @@ pub struct EngineStats {
     pub cold_iters: u64,
     pub warm_iters: u64,
     pub total_wall_ms: f64,
+    /// Wall-clock spent inside objective evaluation across all solves —
+    /// attributes engine time to the backend hot path.
+    pub objective_eval_ms: f64,
     pub batches: u64,
     pub peak_in_flight: usize,
 }
@@ -165,12 +186,14 @@ impl SolveEngine {
         cold: &SolveOptions,
         warm: Option<&WarmStart>,
         tail: usize,
+        backend: CpuBackend,
+        objective_threads: usize,
     ) -> JobResult {
         let (init, opts, is_warm) = match warm {
             Some(ws) => (ws.lam.clone(), warm_options(cold, tail), true),
             None => (vec![0.0f32; job.lp.dual_dim()], cold.clone(), false),
         };
-        let mut obj = CpuObjective::new(&job.lp);
+        let mut obj = TimedObjective::new(backend.objective(&job.lp, objective_threads));
         let mut agd = Agd::default();
         let r = agd.maximize(&mut obj, &init, &opts);
         JobResult {
@@ -184,6 +207,8 @@ impl SolveEngine {
             infeas_pos_norm: r.final_obj.infeas_pos_norm,
             final_gamma: r.final_gamma,
             wall_ms: r.total_wall_ms,
+            backend: obj.name(),
+            objective_eval_ms: obj.eval_ms,
             lam: r.lam,
         }
     }
@@ -192,6 +217,7 @@ impl SolveEngine {
         let mut s = self.stats.lock().unwrap();
         s.submitted += 1;
         s.total_wall_ms += r.wall_ms;
+        s.objective_eval_ms += r.objective_eval_ms;
         if r.warm {
             s.warm_solves += 1;
             s.warm_iters += r.iterations as u64;
@@ -206,7 +232,15 @@ impl SolveEngine {
         let fp = Fingerprint::of(&job.lp);
         let warm = self.cache.lock().unwrap().lookup(&fp);
         let cold = self.cold_options(&job);
-        let r = Self::solve_resolved(&job, fp, &cold, warm.as_ref(), self.cfg.warm_tail);
+        let r = Self::solve_resolved(
+            &job,
+            fp,
+            &cold,
+            warm.as_ref(),
+            self.cfg.warm_tail,
+            self.cfg.backend,
+            self.cfg.objective_threads,
+        );
         self.cache
             .lock()
             .unwrap()
@@ -232,10 +266,12 @@ impl SolveEngine {
                 .collect()
         };
 
+        let backend = self.cfg.backend;
+        let obj_threads = self.cfg.objective_threads;
         let sched = Scheduler::new(self.cfg.threads);
         let (results, report) = sched.run(resolved.len(), |i| {
             let (job, fp, cold, warm) = &resolved[i];
-            Self::solve_resolved(job, *fp, cold, warm.as_ref(), tail)
+            Self::solve_resolved(job, *fp, cold, warm.as_ref(), tail, backend, obj_threads)
         });
 
         {
@@ -320,6 +356,8 @@ mod tests {
             warm_tail: 4,
             threads,
             cache_capacity: 8,
+            backend: CpuBackend::Slab,
+            objective_threads: 1,
         }
     }
 
@@ -381,6 +419,30 @@ mod tests {
         // malformed specs surface as errors, not panics
         let bad = LpSpec::new(base.a.clone(), vec![0.0; 1], base.b.clone());
         assert!(SolveJob::from_spec(4, bad).is_err());
+    }
+
+    #[test]
+    fn job_results_surface_backend_and_eval_time() {
+        // default engine runs slab; reference stays selectable and both
+        // report where the wall-clock went
+        let slab_engine = SolveEngine::new(test_config(1));
+        let a = slab_engine.submit(SolveJob::new(0, instance(4)));
+        assert_eq!(a.backend, "cpu-slab");
+        assert!(a.objective_eval_ms > 0.0 && a.objective_eval_ms <= a.wall_ms);
+        assert!(slab_engine.stats().objective_eval_ms >= a.objective_eval_ms);
+
+        let mut cfg = test_config(1);
+        cfg.backend = CpuBackend::Reference;
+        let ref_engine = SolveEngine::new(cfg);
+        let b = ref_engine.submit(SolveJob::new(1, instance(4)));
+        assert_eq!(b.backend, "cpu-reference");
+        // both backends agree on the solve up to float noise
+        assert!(
+            (a.dual_obj - b.dual_obj).abs() < 1e-3 * (1.0 + b.dual_obj.abs()),
+            "slab {} vs reference {}",
+            a.dual_obj,
+            b.dual_obj
+        );
     }
 
     #[test]

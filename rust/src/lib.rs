@@ -8,7 +8,8 @@
 //!   γ-continuation, Jacobi/primal conditioning, sharded workers and
 //!   λ-only collectives, diagnostics, CLI; plus the serving layer
 //!   (`engine/`): fingerprinted warm-start cache and batch scheduler for
-//!   the production repeated-solve pattern.
+//!   the production repeated-solve pattern, running on the slab-native
+//!   batched CPU objective (`backend/`) by default.
 //! - **L2/L1 (python/compile, build-time only)**: the batched slab dual
 //!   step (scale → blockwise projection → reduce) as a Pallas kernel inside
 //!   a JAX graph, AOT-lowered to HLO text artifacts.
@@ -38,6 +39,7 @@
     clippy::comparison_chain
 )]
 
+pub mod backend;
 pub mod cli;
 pub mod distributed;
 pub mod engine;

@@ -64,17 +64,24 @@ pub fn solve_report(label: &str, r: &SolveResult) -> String {
 }
 
 /// One-paragraph engine report: warm/cold solve mix, mean iterations per
-/// class, cache efficiency, batch concurrency.
+/// class, objective-eval share of wall-clock, batch concurrency.
 pub fn engine_report(s: &EngineStats) -> String {
+    let eval_share = if s.total_wall_ms > 0.0 {
+        100.0 * s.objective_eval_ms / s.total_wall_ms
+    } else {
+        0.0
+    };
     format!(
         "engine: {} solves ({} cold / {} warm), mean iters cold={:.1} warm={:.1}, \
-         {:.1}ms total, {} batches (peak {} in flight)",
+         {:.1}ms total ({:.1}ms / {eval_share:.0}% in objective eval), \
+         {} batches (peak {} in flight)",
         s.submitted,
         s.cold_solves,
         s.warm_solves,
         s.mean_cold_iters(),
         s.mean_warm_iters(),
         s.total_wall_ms,
+        s.objective_eval_ms,
         s.batches,
         s.peak_in_flight,
     )

@@ -20,6 +20,17 @@ impl BlockProjection for UnitBoxOp {
         project_unit_box(v)
     }
 
+    /// Width-strided batched projection (the CPU mirror of the L1 box slab
+    /// kernel): the clamp is separable and maps zero padding to zero, so
+    /// one branch-free sweep over the whole slab is exact — no per-row
+    /// dispatch at all.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, _mask: &[f32]) {
+        debug_assert_eq!(slab.len(), rows * width);
+        for x in slab.iter_mut() {
+            *x = x.clamp(0.0, 1.0);
+        }
+    }
+
     fn violation(&self, v: &[f32]) -> f64 {
         v.iter()
             .map(|&x| ((x as f64) - 1.0).max((-x) as f64).max(0.0))
@@ -68,6 +79,16 @@ mod tests {
         let mut v = vec![-1.0, 0.5, 2.0];
         project_box(&mut v, 0.25, 0.75);
         assert_eq!(v, vec![0.25, 0.5, 0.75]);
+    }
+
+    #[test]
+    fn project_rows_clamps_whole_slab() {
+        use crate::projection::BlockProjection;
+        let op = UnitBoxOp;
+        let mut slab = vec![-1.0f32, 0.5, 2.0, 0.0, 0.25, 3.0, -0.5, 0.0];
+        let mask = vec![1.0f32, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0];
+        op.project_rows(&mut slab, 2, 4, &mask);
+        assert_eq!(slab, vec![0.0, 0.5, 1.0, 0.0, 0.25, 1.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -52,6 +52,28 @@ pub trait BlockProjection: Send + Sync + 'static {
     /// Project one variable block onto C in place (Euclidean projection).
     fn project(&self, v: &mut [f32]);
 
+    /// Batched slab entry point: project `rows` rows of `width` stored
+    /// contiguously row-major in `slab`, honoring the validity `mask`
+    /// (1 real, 0 padding; padding is always a contiguous per-row tail,
+    /// as `sparse::slabs` builds it). This is the CPU mirror of the L1
+    /// Pallas slab kernels: one call per bucket instead of one `project`
+    /// per source. The default loops the scalar `project` over each
+    /// row's real prefix (so every registered family is slab-correct
+    /// with zero edits — positional parameters keep their coordinate
+    /// indices because real entries occupy the row head) and zeroes the
+    /// padding tail; layout-aware operators override with width-strided
+    /// sweeps over the full slab.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
+        debug_assert_eq!(slab.len(), rows * width);
+        debug_assert_eq!(mask.len(), rows * width);
+        for r in 0..rows {
+            let base = r * width;
+            let real = mask[base..base + width].iter().take_while(|&&m| m > 0.0).count();
+            self.project(&mut slab[base..base + real]);
+            slab[base + real..base + width].fill(0.0);
+        }
+    }
+
     /// Maximum constraint violation of `v` (0 when feasible) — the oracle
     /// behind primal validation and the conformance proptests.
     fn violation(&self, v: &[f32]) -> f64;
@@ -307,5 +329,44 @@ mod tests {
         assert_eq!(v, vec![0.0, 2.0]);
         assert!(get(id).feasible(&v, 1e-9));
         assert!(families().contains(&"halfline_test".to_string()));
+    }
+
+    #[test]
+    fn default_project_rows_matches_scalar_on_real_prefixes() {
+        // Every registered family's samples: the default batched entry
+        // point must agree with the scalar `project` on each row's real
+        // prefix and leave the padding tail exactly zero.
+        for fam in families() {
+            for sample in family_samples(&fam) {
+                let op = get(parse(&sample).unwrap());
+                let width = 8usize;
+                let reals = [3usize, 8, 1, 5];
+                let mut slab = vec![0.0f32; reals.len() * width];
+                let mut mask = vec![0.0f32; reals.len() * width];
+                for (r, &real) in reals.iter().enumerate() {
+                    for c in 0..real {
+                        slab[r * width + c] = (r as f32 + 1.0) * 0.7 - c as f32 * 0.9;
+                        mask[r * width + c] = 1.0;
+                    }
+                }
+                let mut expect = slab.clone();
+                op.project_rows(&mut slab, reals.len(), width, &mask);
+                for (r, &real) in reals.iter().enumerate() {
+                    let base = r * width;
+                    op.project(&mut expect[base..base + real]);
+                    for c in 0..width {
+                        if c < real {
+                            assert_eq!(
+                                slab[base + c].to_bits(),
+                                expect[base + c].to_bits(),
+                                "{sample} row {r} col {c}"
+                            );
+                        } else {
+                            assert_eq!(slab[base + c], 0.0, "{sample} padding row {r} col {c}");
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -29,6 +29,57 @@ impl BlockProjection for SimplexOp {
         project_simplex_ineq(v)
     }
 
+    /// Width-strided batched projection (the CPU mirror of the L1 simplex
+    /// slab kernel). Padding entries are zero on input and a zero tail is
+    /// transparent to this polytope: when the cap binds, θ > 0 and zeros
+    /// never enter the support, so the sort-threshold over the padded row
+    /// computes the exact same θ as over the real prefix. One sort scratch
+    /// is reused across all rows, replacing the per-block `Vec` the scalar
+    /// path allocates inside `project_simplex_eq`.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
+        debug_assert_eq!(slab.len(), rows * width);
+        let mut sorted: Vec<f32> = Vec::with_capacity(width);
+        for r in 0..rows {
+            let row = &mut slab[r * width..(r + 1) * width];
+            let mut s = 0.0f64;
+            for x in row.iter_mut() {
+                if *x < 0.0 {
+                    *x = 0.0;
+                }
+                s += *x as f64;
+            }
+            if s <= 1.0 {
+                continue;
+            }
+            let mrow = &mask[r * width..(r + 1) * width];
+            let real = mrow.iter().take_while(|&&m| m > 0.0).count();
+            if real == 1 {
+                // mirror `project_simplex_eq`'s single-coordinate case
+                row[0] = 1.0;
+                row[1..].fill(0.0);
+                continue;
+            }
+            sorted.clear();
+            sorted.extend_from_slice(row);
+            sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut cumsum = 0.0f64;
+            let mut theta = 0.0f64;
+            for (k, &val) in sorted.iter().enumerate() {
+                cumsum += val as f64;
+                let t = (cumsum - 1.0) / (k + 1) as f64;
+                if (val as f64) > t {
+                    theta = t;
+                }
+            }
+            for x in row[..real].iter_mut() {
+                *x = (*x as f64 - theta).max(0.0) as f32;
+            }
+            // padding stays exactly zero even on borderline rows where θ
+            // rounds to ≤ 0
+            row[real..].fill(0.0);
+        }
+    }
+
     fn violation(&self, v: &[f32]) -> f64 {
         let s: f64 = v.iter().map(|&x| x as f64).sum();
         let neg = v.iter().map(|&x| (-x).max(0.0) as f64).fold(0.0, f64::max);
@@ -160,6 +211,46 @@ mod tests {
         project_simplex_ineq(&mut v);
         for (a, b) in v.iter().zip(&once) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn project_rows_matches_scalar_rowwise_including_padding() {
+        use crate::projection::BlockProjection;
+        let op = SimplexOp;
+        let mut rng = crate::util::rng::Rng::new(19);
+        for _ in 0..50 {
+            let width = 1 << (2 + rng.below(4)); // 4..32
+            let rows = 1 + rng.below(6);
+            let mut slab = vec![0.0f32; rows * width];
+            let mut mask = vec![0.0f32; rows * width];
+            let mut reals = Vec::new();
+            for r in 0..rows {
+                let real = 1 + rng.below(width);
+                reals.push(real);
+                for c in 0..real {
+                    slab[r * width + c] = (rng.normal() * 2.0) as f32;
+                    mask[r * width + c] = 1.0;
+                }
+            }
+            let mut expect = slab.clone();
+            op.project_rows(&mut slab, rows, width, &mask);
+            for (r, &real) in reals.iter().enumerate() {
+                let base = r * width;
+                project_simplex_ineq(&mut expect[base..base + real]);
+                for c in 0..real {
+                    assert_eq!(
+                        slab[base + c].to_bits(),
+                        expect[base + c].to_bits(),
+                        "row {r} col {c}: {} vs {}",
+                        slab[base + c],
+                        expect[base + c]
+                    );
+                }
+                for c in real..width {
+                    assert_eq!(slab[base + c], 0.0, "padding row {r} col {c}");
+                }
+            }
         }
     }
 

@@ -43,6 +43,14 @@ pub struct CpuObjective<'a> {
     blocks: Vec<SourceBlock>,
     /// scratch: per-block projection input (reused across blocks)
     scratch: Vec<f32>,
+    /// scratch: Ax accumulator (reused across iterations, same pattern as
+    /// the projection scratch). The result's gradient must be owned, so
+    /// the end of `calculate` still clones this once; together with the
+    /// hoisted `full_b` that takes the per-iteration allocations from two
+    /// (ax + full_b) to one.
+    ax: Vec<f32>,
+    /// full rhs over all dual rows, precomputed once
+    full_b: Vec<f32>,
 }
 
 impl<'a> CpuObjective<'a> {
@@ -64,7 +72,8 @@ impl<'a> CpuObjective<'a> {
             let op = ops.entry(kind).or_insert_with(|| kind.op()).clone();
             blocks.push(SourceBlock { tuples, gamma_scale: lp.gamma_scale(i), op });
         }
-        CpuObjective { lp, blocks, scratch: Vec::new() }
+        let full_b = lp.full_b();
+        CpuObjective { lp, blocks, scratch: Vec::new(), ax: Vec::new(), full_b }
     }
 
     /// Compute x for one block into `self.scratch`.
@@ -99,7 +108,8 @@ impl ObjectiveFunction for CpuObjective<'_> {
         assert_eq!(lam.len(), self.lp.dual_dim());
         let jj = self.lp.num_dests();
         let m = self.lp.num_families();
-        let mut ax = vec![0.0f32; self.lp.dual_dim()];
+        self.ax.clear();
+        self.ax.resize(self.lp.dual_dim(), 0.0);
         let mut cx = 0.0f64;
         let mut xsq_w = 0.0f64;
 
@@ -114,20 +124,21 @@ impl ObjectiveFunction for CpuObjective<'_> {
                 cx += t.cost as f64 * x as f64;
                 xsq_w += block.gamma_scale as f64 * (x as f64) * (x as f64);
                 for k in 0..m {
-                    ax[k * jj + t.dest as usize] +=
+                    self.ax[k * jj + t.dest as usize] +=
                         self.lp.a.a[k][t.edge as usize] * x;
                 }
                 for (r, g) in self.lp.global_rows.iter().enumerate() {
-                    ax[mj + r] += g.coeffs[t.edge as usize] * x;
+                    self.ax[mj + r] += g.coeffs[t.edge as usize] * x;
                 }
             }
         }
 
-        // grad = Ax − b (matching rows then global rows)
-        for (g, b) in ax.iter_mut().zip(self.lp.full_b()) {
-            *g -= b;
+        // grad = Ax − b (matching rows then global rows); the result owns
+        // its gradient, so the scratch is cloned out rather than moved
+        for (g, b) in self.ax.iter_mut().zip(&self.full_b) {
+            *g -= *b;
         }
-        ObjectiveResult::assemble(ax, cx, xsq_w, lam, gamma)
+        ObjectiveResult::assemble(self.ax.clone(), cx, xsq_w, lam, gamma)
     }
 
     fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {

@@ -40,6 +40,9 @@ pub struct Bucket {
     pub a: Vec<Vec<f32>>,
     /// Flattened [rows × width] validity mask (1 real, 0 padding).
     pub mask: Vec<f32>,
+    /// Number of real (non-padding) edges, counted once at build time so
+    /// per-iteration consumers don't rescan the mask.
+    pub real_edge_count: usize,
 }
 
 impl Bucket {
@@ -48,7 +51,7 @@ impl Bucket {
     }
 
     pub fn real_edges(&self) -> usize {
-        self.mask.iter().filter(|&&m| m > 0.0).count()
+        self.real_edge_count
     }
 
     pub fn padded_edges(&self) -> usize {
@@ -132,6 +135,7 @@ impl SlabLayout {
                 cost: vec![0.0f32; n],
                 a: vec![vec![0.0f32; n]; m.num_families],
                 mask: vec![0.0f32; n],
+                real_edge_count: 0,
             };
             let mut row = 0usize;
             let mut cursor: Option<(u32, usize)> = None; // (source, next edge offset) for splits
@@ -154,6 +158,7 @@ impl SlabLayout {
                     bk.mask[base + col] = 1.0;
                 }
                 bk.sources.push(src);
+                bk.real_edge_count += take;
                 cursor = if start + take < e1 {
                     Some((src, start + take - e0))
                 } else {
@@ -312,6 +317,17 @@ mod tests {
         let kinds: Vec<_> = l.buckets.iter().map(|b| b.kind).collect();
         assert!(kinds.contains(&ProjectionKind::Simplex));
         assert!(kinds.contains(&ProjectionKind::Box));
+    }
+
+    #[test]
+    fn stored_real_edge_count_matches_mask_scan() {
+        let (m, cost) = matrix(&[3, 4, 5, 9, 17, 2, MAX_WIDTH + 10], MAX_WIDTH + 16);
+        let l = SlabLayout::build(&m, &cost, 0, 7, &|_| ProjectionKind::Box).unwrap();
+        for bk in &l.buckets {
+            let scanned = bk.mask.iter().filter(|&&v| v > 0.0).count();
+            assert_eq!(bk.real_edges(), scanned);
+        }
+        assert_eq!(l.total_real_edges(), 3 + 4 + 5 + 9 + 17 + 2 + MAX_WIDTH + 10);
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Backend parity (seeded property harness, same style as proptests.rs):
+//! the slab-native batched CPU objective must agree with the reference
+//! tuple-layout objective — `calculate` and `primal` — to tight tolerance
+//! on random instances across **every registered projection family**,
+//! including split overwide separable rows and mixed-kind maps, and its
+//! multithreaded evaluation must be bit-identical to 1 thread.
+
+use dualip::backend::SlabCpuObjective;
+use dualip::problem::{MatchingLp, ObjectiveFunction};
+use dualip::projection::{registry, ProjectionKind, ProjectionMap};
+use dualip::reference::CpuObjective;
+use dualip::sparse::slabs::MAX_WIDTH;
+use dualip::sparse::BlockedMatrix;
+use dualip::util::rng::Rng;
+
+/// Random matching LP with the given per-source degrees (distinct dests).
+fn lp_with_degrees(
+    rng: &mut Rng,
+    degrees: &[usize],
+    num_dests: usize,
+    families: usize,
+) -> MatchingLp {
+    let mut src_ptr = vec![0usize];
+    let mut dest_idx: Vec<u32> = Vec::new();
+    for &deg in degrees {
+        assert!(deg <= num_dests, "degree {deg} exceeds dest count {num_dests}");
+        dest_idx.extend(rng.sample_distinct(num_dests, deg));
+        src_ptr.push(dest_idx.len());
+    }
+    let nnz = dest_idx.len();
+    let a: Vec<Vec<f32>> = (0..families)
+        .map(|_| (0..nnz).map(|_| (rng.uniform() * 2.0 + 0.05) as f32).collect())
+        .collect();
+    let cost: Vec<f32> = (0..nnz).map(|_| -(rng.uniform() as f32) - 0.01).collect();
+    let b: Vec<f32> = (0..families * num_dests)
+        .map(|_| (rng.uniform() * 2.0 + 0.01) as f32)
+        .collect();
+    let m = BlockedMatrix {
+        num_sources: degrees.len(),
+        num_dests,
+        num_families: families,
+        src_ptr,
+        dest_idx,
+        a,
+    };
+    let lp = MatchingLp::new_uniform(m, cost, b, ProjectionKind::Simplex);
+    lp.validate().unwrap();
+    lp
+}
+
+fn random_lp(rng: &mut Rng, num_sources: usize, num_dests: usize, families: usize) -> MatchingLp {
+    let deg_cap = 12.min(num_dests);
+    let degrees: Vec<usize> = (0..num_sources).map(|_| rng.below(deg_cap + 1)).collect();
+    lp_with_degrees(rng, &degrees, num_dests, families)
+}
+
+fn random_lam(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.uniform() * 0.3) as f32).collect()
+}
+
+/// Slab (1 thread) vs reference: calculate + primal within tight tolerance.
+fn assert_parity(lp: &MatchingLp, lam: &[f32], gamma: f32, ctx: &str) {
+    let mut slab = SlabCpuObjective::new(lp, 1)
+        .unwrap_or_else(|e| panic!("{ctx}: slab layout must build, got error: {e}"));
+    let mut reference = CpuObjective::new(lp);
+    let rs = slab.calculate(lam, gamma);
+    let rr = reference.calculate(lam, gamma);
+    for (r, (a, b)) in rs.grad.iter().zip(&rr.grad).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "{ctx}: grad row {r}: slab {a} vs reference {b}"
+        );
+    }
+    let close = |a: f64, b: f64, what: &str| {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "{ctx}: {what}: slab {a} vs reference {b}"
+        );
+    };
+    close(rs.dual_obj, rr.dual_obj, "dual_obj");
+    close(rs.cx, rr.cx, "cx");
+    close(rs.xsq_weighted, rr.xsq_weighted, "xsq_weighted");
+    close(rs.infeas_pos_norm, rr.infeas_pos_norm, "infeas_pos_norm");
+    let xs = slab.primal(lam, gamma);
+    let xr = reference.primal(lam, gamma);
+    assert_eq!(xs.len(), xr.len(), "{ctx}: primal length");
+    for (e, (a, b)) in xs.iter().zip(&xr).enumerate() {
+        assert!((a - b).abs() <= 1e-4, "{ctx}: primal edge {e}: {a} vs {b}");
+    }
+}
+
+/// Multithreaded slab evaluation is bit-identical to the 1-thread run.
+fn assert_thread_invariant(lp: &MatchingLp, lam: &[f32], gamma: f32, ctx: &str) {
+    let mut one = SlabCpuObjective::new(lp, 1).unwrap();
+    let r1 = one.calculate(lam, gamma);
+    let x1 = one.primal(lam, gamma);
+    for threads in [2usize, 5, 8] {
+        let mut many = SlabCpuObjective::new(lp, threads).unwrap();
+        let rt = many.calculate(lam, gamma);
+        assert_eq!(
+            r1.dual_obj.to_bits(),
+            rt.dual_obj.to_bits(),
+            "{ctx}: dual_obj differs at {threads} threads"
+        );
+        assert_eq!(r1.cx.to_bits(), rt.cx.to_bits(), "{ctx}: cx at {threads} threads");
+        assert_eq!(
+            r1.xsq_weighted.to_bits(),
+            rt.xsq_weighted.to_bits(),
+            "{ctx}: xsq at {threads} threads"
+        );
+        for (r, (a, b)) in r1.grad.iter().zip(&rt.grad).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: grad row {r} differs at {threads} threads ({a} vs {b})"
+            );
+        }
+        let xt = many.primal(lam, gamma);
+        for (e, (a, b)) in x1.iter().zip(&xt).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: primal edge {e} at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn prop_slab_matches_reference_for_every_registered_family() {
+    let mut rng = Rng::new(4242);
+    for fam in registry::families() {
+        for sample in registry::family_samples(&fam) {
+            let kind = ProjectionKind::parse(&sample)
+                .unwrap_or_else(|| panic!("sample {sample} must parse"));
+            for case in 0..4 {
+                let (ns, nd, nf) = (40 + rng.below(120), 8 + rng.below(24), 1 + rng.below(2));
+                let mut lp = random_lp(&mut rng, ns, nd, nf);
+                lp.projection = ProjectionMap::Uniform(kind);
+                let lam = random_lam(&mut rng, lp.dual_dim());
+                let gamma = if case % 2 == 0 { 0.05 } else { 0.3 };
+                let ctx = format!("{sample} case {case}");
+                assert_parity(&lp, &lam, gamma, &ctx);
+                assert_thread_invariant(&lp, &lam, gamma, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_split_overwide_separable_rows_match() {
+    // box blocks wider than MAX_WIDTH are split across slab rows; the
+    // box projection is separable so the reference (whole-block) result
+    // must be recovered exactly through the split
+    let mut rng = Rng::new(777);
+    let num_dests = 2 * MAX_WIDTH + 32;
+    for case in 0..3 {
+        let degrees = vec![
+            MAX_WIDTH + 30 + rng.below(20),
+            3,
+            2 * MAX_WIDTH + rng.below(16),
+            0,
+            1 + rng.below(8),
+        ];
+        let mut lp = lp_with_degrees(&mut rng, &degrees, num_dests, 1);
+        lp.projection = ProjectionMap::Uniform(ProjectionKind::Box);
+        let lam = random_lam(&mut rng, lp.dual_dim());
+        let ctx = format!("overwide box case {case}");
+        assert_parity(&lp, &lam, 0.1, &ctx);
+        assert_thread_invariant(&lp, &lam, 0.1, &ctx);
+    }
+}
+
+#[test]
+fn prop_mixed_kind_maps_match() {
+    let kinds = [
+        ProjectionKind::Simplex,
+        ProjectionKind::Box,
+        ProjectionKind::capped_simplex(0.5, 1.0),
+        ProjectionKind::parse("weighted_simplex:2:1,2").unwrap(),
+        ProjectionKind::parse("box_vec:0.5,1.5").unwrap(),
+    ];
+    let mut rng = Rng::new(31337);
+    for case in 0..5 {
+        let (ns, nd) = (60 + rng.below(140), 10 + rng.below(20));
+        let mut lp = random_lp(&mut rng, ns, nd, 1);
+        lp.projection = ProjectionMap::per_block(move |i| kinds[i % kinds.len()]);
+        let lam = random_lam(&mut rng, lp.dual_dim());
+        let ctx = format!("mixed map case {case}");
+        assert_parity(&lp, &lam, 0.2, &ctx);
+        assert_thread_invariant(&lp, &lam, 0.2, &ctx);
+    }
+}
+
+#[test]
+fn prop_global_rows_and_primal_scale_match() {
+    let mut rng = Rng::new(909);
+    for case in 0..4 {
+        let ns = 80 + rng.below(80);
+        let mut lp = random_lp(&mut rng, ns, 12, 2);
+        let nnz = lp.nnz();
+        lp.push_global_row(vec![1.0; nnz], (rng.uniform() * 4.0 + 0.5) as f32);
+        let coeffs: Vec<f32> = (0..nnz).map(|_| (rng.uniform() * 0.8) as f32).collect();
+        lp.push_global_row(coeffs, (rng.uniform() * 2.0 + 0.1) as f32);
+        lp.primal_scale = Some(
+            (0..lp.num_sources()).map(|_| (rng.uniform() * 1.5 + 0.25) as f32).collect(),
+        );
+        lp.validate().unwrap();
+        let lam = random_lam(&mut rng, lp.dual_dim());
+        let ctx = format!("global+scale case {case}");
+        assert_parity(&lp, &lam, 0.15, &ctx);
+        assert_thread_invariant(&lp, &lam, 0.15, &ctx);
+    }
+}
+
+#[test]
+fn repeated_evaluations_are_pure_on_both_backends() {
+    // scratch reuse (slab chunk buffers, reference ax buffer) must not
+    // leak state across calls: same (λ, γ) twice → bitwise-same result,
+    // with an unrelated evaluation in between
+    let mut rng = Rng::new(55);
+    let lp = random_lp(&mut rng, 150, 16, 1);
+    let lam_a = random_lam(&mut rng, lp.dual_dim());
+    let lam_b = random_lam(&mut rng, lp.dual_dim());
+
+    let mut slab = SlabCpuObjective::new(&lp, 2).unwrap();
+    let mut reference = CpuObjective::new(&lp);
+    let s1 = slab.calculate(&lam_a, 0.1);
+    let r1 = reference.calculate(&lam_a, 0.1);
+    let _ = slab.calculate(&lam_b, 0.4);
+    let _ = reference.calculate(&lam_b, 0.4);
+    let s2 = slab.calculate(&lam_a, 0.1);
+    let r2 = reference.calculate(&lam_a, 0.1);
+    assert_eq!(s1.dual_obj.to_bits(), s2.dual_obj.to_bits());
+    assert_eq!(r1.dual_obj.to_bits(), r2.dual_obj.to_bits());
+    for ((a, b), (c, d)) in s1.grad.iter().zip(&s2.grad).zip(r1.grad.iter().zip(&r2.grad)) {
+        assert_eq!(a.to_bits(), b.to_bits(), "slab not pure");
+        assert_eq!(c.to_bits(), d.to_bits(), "reference not pure");
+    }
+}

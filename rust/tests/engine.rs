@@ -52,6 +52,8 @@ fn engine(threads: usize, cache_capacity: usize) -> SolveEngine {
         warm_tail: 5,
         threads,
         cache_capacity,
+        backend: dualip::backend::CpuBackend::Slab,
+        objective_threads: 1,
     })
 }
 
@@ -203,7 +205,29 @@ fn engine_stats_track_the_serving_mix() {
     assert_eq!(s.warm_solves, JOBS as u64);
     assert!(s.mean_warm_iters() < s.mean_cold_iters());
     assert_eq!(s.batches, 1);
+    assert!(
+        s.objective_eval_ms > 0.0 && s.objective_eval_ms <= s.total_wall_ms,
+        "objective eval {}ms must be a subset of total {}ms",
+        s.objective_eval_ms,
+        s.total_wall_ms
+    );
     let (hits, misses) = e.cache_counters();
     assert_eq!(hits, JOBS as u64);
     assert_eq!(misses, 1);
+}
+
+#[test]
+fn engine_jobs_run_on_the_slab_backend_by_default() {
+    // construct through ..Default::default() so this actually guards the
+    // default backend choice, not a hardcoded one
+    let e = SolveEngine::new(EngineConfig {
+        opts: stream_options(),
+        warm_tail: 5,
+        threads: 1,
+        cache_capacity: 4,
+        ..Default::default()
+    });
+    let r = e.submit(SolveJob::new(0, base_instance(STREAM_SEED)));
+    assert_eq!(r.backend, "cpu-slab");
+    assert!(r.objective_eval_ms > 0.0);
 }

@@ -1,6 +1,7 @@
 //! Offline shim of the `anyhow` API surface this repo uses: `Error`,
-//! `Result`, `anyhow!`, `Context::{context, with_context}`, `Error::msg`,
-//! plus the `{e}` / `{e:#}` / `{e:?}` formatting conventions. Unlike the
+//! `Result`, `anyhow!`, `bail!`, `ensure!`, `Context::{context,
+//! with_context}`, `Error::msg`, plus the `{e}` / `{e:#}` / `{e:?}`
+//! formatting conventions. Unlike the
 //! real crate it stores the cause chain as strings (no backtraces, no
 //! downcasting) — enough for error propagation and reporting in a no-network
 //! build. Replace with crates.io `anyhow = "1"` when vendoring is unneeded.
@@ -124,6 +125,25 @@ macro_rules! bail {
     };
 }
 
+/// Early-return an error unless the condition holds (mirror of
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +174,18 @@ mod tests {
         assert_eq!(format!("{e:#}"), "reading x: io fail");
         let o: Option<i32> = None;
         assert!(o.context("missing").is_err());
+    }
+
+    #[test]
+    fn ensure_macro_forms() {
+        fn check(v: i32) -> Result<i32> {
+            ensure!(v >= 0);
+            ensure!(v < 100, "too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(check(42).unwrap(), 42);
+        assert!(format!("{}", check(-1).unwrap_err()).contains("condition failed"));
+        assert_eq!(format!("{}", check(200).unwrap_err()), "too big: 200");
     }
 
     #[test]
