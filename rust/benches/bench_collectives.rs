@@ -1,15 +1,19 @@
 //! Experiment E10 — the paper's §6 communication claim: per-iteration
-//! traffic is exactly 1 reduce + 2 broadcasts of |λ| floats (+2 scalars),
-//! independent of nnz and of the per-device column split.
+//! traffic is λ-proportional — broadcasts and reduce payloads sized by
+//! the dual dimension (plus, for the sharded-slab reduce, the fixed chunk
+//! grid) — independent of nnz and of the per-device split.
 //!
-//! Sweeps nnz (at fixed dual dim) and workers, asserts byte counts, and
-//! prints the α-β model's estimated wire time on NVLink/Ethernet.
+//! Sweeps nnz (at fixed dual dim) and workers for BOTH execution
+//! strategies: the slab strategy (runs everywhere) asserts
+//! `2·4·|λ| + chunks·(4·|λ| + 16)` bytes per iteration; the HLO strategy
+//! (skipped without artifacts) asserts the flat `3·4·|λ| + 16` pattern.
+//! Prints the α-β model's estimated wire time on NVLink/Ethernet.
 //!
 //! Run: cargo bench --bench bench_collectives
 
 use std::sync::Arc;
 
-use dualip::distributed::{DistributedObjective, LinkModel};
+use dualip::distributed::{DistributedObjective, ExecStrategy, LinkModel};
 use dualip::gen::{generate, SyntheticConfig};
 use dualip::problem::ObjectiveFunction;
 use dualip::runtime::default_artifacts_dir;
@@ -17,16 +21,20 @@ use dualip::util::csv::CsvWriter;
 
 fn main() -> anyhow::Result<()> {
     let art = default_artifacts_dir();
+    let have_artifacts = art.join("manifest.txt").exists();
     let dests = 200usize;
     let iters = 5usize;
 
     let mut csv = CsvWriter::create(
         "results/e10_collectives.csv",
-        &["nnz", "workers", "dual_dim", "bytes_per_iter", "expected"],
+        &["exec", "nnz", "workers", "dual_dim", "bytes_per_iter", "expected"],
     )?;
 
-    println!("E10 — per-iteration comm bytes (must depend ONLY on dual dim)");
-    println!("{:>10} {:>8} {:>9} {:>14} {:>14}", "nnz", "workers", "dual", "B/iter", "expected");
+    println!("E10 — per-iteration comm bytes (must depend ONLY on dual dim + chunk grid)");
+    println!(
+        "{:>6} {:>10} {:>8} {:>9} {:>14} {:>14}",
+        "exec", "nnz", "workers", "dual", "B/iter", "expected"
+    );
     for &sources in &[2_000usize, 8_000, 32_000] {
         for &workers in &[1usize, 2, 4] {
             let lp = Arc::new(generate(&SyntheticConfig {
@@ -37,9 +45,15 @@ fn main() -> anyhow::Result<()> {
                 ..Default::default()
             }));
             let dual = lp.dual_dim();
-            let mut dist = DistributedObjective::new(lp.clone(), &art, workers)?;
-            let before = dist.comm();
             let lam = vec![0.01f32; dual];
+
+            // --- slab strategy (no artifacts needed) ---------------------
+            let mut dist = DistributedObjective::new_with(
+                lp.clone(),
+                ExecStrategy::Slab { threads: 1 },
+                workers,
+            )?;
+            let before = dist.comm();
             for _ in 0..iters {
                 let _ = dist.calculate(&lam, 0.01);
             }
@@ -47,27 +61,66 @@ fn main() -> anyhow::Result<()> {
             let bytes = (after.bcast_bytes + after.reduce_bytes)
                 - (before.bcast_bytes + before.reduce_bytes);
             let per_iter = bytes as f64 / iters as f64;
-            // 2 bcasts (4·dual each) + 1 reduce (4·dual + 2×8)
-            let expected = (3 * 4 * dual + 16) as f64;
+            // 2 bcasts (4·dual each) + 1 segmented reduce of
+            // chunks × (4·dual + 16)
+            let expected = (2 * 4 * dual + dist.num_chunks() * (4 * dual + 16)) as f64;
             println!(
-                "{:>10} {:>8} {:>9} {:>14.0} {:>14.0}",
+                "{:>6} {:>10} {:>8} {:>9} {:>14.0} {:>14.0}",
+                "slab",
                 lp.nnz(),
                 workers,
                 dual,
                 per_iter,
                 expected
             );
-            assert_eq!(per_iter, expected, "comm volume must be λ-sized only");
+            assert_eq!(per_iter, expected, "slab comm volume must be λ/chunk-sized only");
             csv.row(&[
+                "slab".to_string(),
                 lp.nnz().to_string(),
                 workers.to_string(),
                 dual.to_string(),
                 format!("{per_iter:.0}"),
                 format!("{expected:.0}"),
             ])?;
+
+            // --- HLO strategy (artifact-gated) ---------------------------
+            if have_artifacts {
+                let mut dist = DistributedObjective::new(lp.clone(), &art, workers)?;
+                let before = dist.comm();
+                for _ in 0..iters {
+                    let _ = dist.calculate(&lam, 0.01);
+                }
+                let after = dist.comm();
+                let bytes = (after.bcast_bytes + after.reduce_bytes)
+                    - (before.bcast_bytes + before.reduce_bytes);
+                let per_iter = bytes as f64 / iters as f64;
+                // 2 bcasts (4·dual each) + 1 reduce (4·dual + 2×8)
+                let expected = (3 * 4 * dual + 16) as f64;
+                println!(
+                    "{:>6} {:>10} {:>8} {:>9} {:>14.0} {:>14.0}",
+                    "hlo",
+                    lp.nnz(),
+                    workers,
+                    dual,
+                    per_iter,
+                    expected
+                );
+                assert_eq!(per_iter, expected, "hlo comm volume must be λ-sized only");
+                csv.row(&[
+                    "hlo".to_string(),
+                    lp.nnz().to_string(),
+                    workers.to_string(),
+                    dual.to_string(),
+                    format!("{per_iter:.0}"),
+                    format!("{expected:.0}"),
+                ])?;
+            }
         }
     }
     csv.flush()?;
+    if !have_artifacts {
+        println!("(HLO strategy skipped: no artifacts at {})", art.display());
+    }
 
     println!("\nα-β wire-time estimates per iteration (3 ops of 4·|λ| bytes):");
     for dual in [1_000usize, 10_000, 100_000] {

@@ -1,0 +1,196 @@
+//! Experiment E15 — sharded slab execution scaling: per-iteration
+//! evaluation time of the chunk-sharded slab objective at shard counts
+//! S ∈ {1, 2, 4, 8}, the bit-identity contract (every S reproduces the
+//! single-shard bits exactly, asserted), and the paper's §6 λ-only
+//! traffic claim: per-iteration communication is `2·4·|λ|` broadcast
+//! bytes plus one segmented reduce of `chunks × (4·|λ| + 16)` bytes —
+//! proportional to the dual dimension and the fixed chunk grid, never to
+//! shard edge counts (asserted across an nnz sweep).
+//!
+//! Emits machine-readable `results/BENCH_shard_scaling.json` so the
+//! scaling trajectory is tracked across PRs.
+//!
+//! Run: cargo bench --bench bench_shard_scaling
+//!      [DUALIP_BENCH_FAST=1 for CI size]
+
+use dualip::backend::{ShardedSlabObjective, SlabCpuObjective};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::metrics::{BenchJson, JsonValue};
+use dualip::problem::{MatchingLp, ObjectiveFunction};
+use dualip::solver::{Agd, GammaSchedule, Maximizer, SolveOptions};
+use dualip::util::rng::Rng;
+use dualip::util::timer::Stopwatch;
+
+fn instance(sources: usize, dests: usize, nnz_per_row: f64) -> MatchingLp {
+    generate(&SyntheticConfig {
+        num_requests: sources,
+        num_resources: dests,
+        avg_nnz_per_row: nnz_per_row,
+        seed: 0,
+        ..Default::default()
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let (sources, dests, reps) = if fast { (5_000, 100, 15) } else { (50_000, 500, 30) };
+    let lp = instance(sources, dests, 10.0);
+    let gamma = 0.05f32;
+    let mut rng = Rng::new(7);
+    let lam: Vec<f32> = (0..lp.dual_dim()).map(|_| (rng.uniform() * 0.1) as f32).collect();
+    let dual = lp.dual_dim();
+
+    println!(
+        "E15 — sharded slab scaling: I={} J={} nnz={} dual_dim={dual} reps={reps}{}",
+        lp.num_sources(),
+        lp.num_dests(),
+        lp.nnz(),
+        if fast { " (fast)" } else { "" }
+    );
+
+    let time_iters = |obj: &mut dyn ObjectiveFunction| -> f64 {
+        let _ = obj.calculate(&lam, gamma); // warm caches and scratch
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let _ = obj.calculate(&lam, gamma);
+        }
+        sw.elapsed_ms() * 1e3 / reps as f64 // µs per iteration
+    };
+
+    // --- single-shard baseline ------------------------------------------
+    let mut one = SlabCpuObjective::new(&lp, 1).map_err(anyhow::Error::msg)?;
+    let one_us = time_iters(&mut one);
+    let r1 = one.calculate(&lam, gamma);
+
+    let mut bench = BenchJson::new("shard_scaling");
+    bench
+        .meta("sources", JsonValue::UInt(lp.num_sources() as u64))
+        .meta("dests", JsonValue::UInt(lp.num_dests() as u64))
+        .meta("nnz", JsonValue::UInt(lp.nnz() as u64))
+        .meta("dual_dim", JsonValue::UInt(dual as u64))
+        .meta("chunks", JsonValue::UInt(one.num_chunks() as u64))
+        .meta("reps", JsonValue::UInt(reps as u64))
+        .meta("gamma", JsonValue::Num(gamma as f64))
+        .meta("fast", JsonValue::Bool(fast));
+
+    println!(
+        "{:>8} {:>14} {:>10} {:>14} {:>12} {:>10}",
+        "shards", "iter µs", "speedup", "λ-B/iter", "imbalance", "bitident"
+    );
+    println!("{:>8} {:>14.1} {:>10.2}x {:>14} {:>12} {:>10}", 1, one_us, 1.0, "-", "-", "-");
+    bench.row(&[
+        ("shards", JsonValue::UInt(1)),
+        ("iter_us", JsonValue::Num(one_us)),
+        ("speedup_vs_1shard", JsonValue::Num(1.0)),
+    ]);
+
+    // --- shard sweep: timing + λ-traffic + bit-identity ------------------
+    for &shards in &[2usize, 4, 8] {
+        let mut sh = ShardedSlabObjective::new(&lp, shards, 1).map_err(anyhow::Error::msg)?;
+        let us = time_iters(&mut sh);
+        let comm_before = sh.comm();
+        let rs = sh.calculate(&lam, gamma);
+        let comm_after = sh.comm();
+
+        // bit-identity contract: the whole point of the chunk-ordered
+        // allreduce — any shard count reproduces the 1-shard bits
+        anyhow::ensure!(
+            rs.dual_obj.to_bits() == r1.dual_obj.to_bits()
+                && rs.cx.to_bits() == r1.cx.to_bits()
+                && rs.grad.iter().zip(&r1.grad).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{shards}-shard evaluation is not bit-identical to 1 shard"
+        );
+
+        // λ-only traffic: 2 broadcasts + chunks segments of (4·dual + 16)
+        let per_iter = (comm_after.bcast_bytes + comm_after.reduce_bytes)
+            - (comm_before.bcast_bytes + comm_before.reduce_bytes);
+        let expected = (2 * 4 * dual + sh.num_chunks() * (4 * dual + 16)) as u64;
+        anyhow::ensure!(
+            per_iter == expected,
+            "comm volume must be λ/chunk-sized only: got {per_iter}, expected {expected}"
+        );
+
+        println!(
+            "{:>8} {:>14.1} {:>10.2}x {:>14} {:>12.2} {:>10}",
+            shards,
+            us,
+            one_us / us,
+            per_iter,
+            sh.imbalance(),
+            "yes"
+        );
+        bench.row(&[
+            ("shards", JsonValue::UInt(shards as u64)),
+            ("iter_us", JsonValue::Num(us)),
+            ("speedup_vs_1shard", JsonValue::Num(one_us / us)),
+            ("bytes_per_iter", JsonValue::UInt(per_iter)),
+            ("imbalance", JsonValue::Num(sh.imbalance())),
+            ("chunks", JsonValue::UInt(sh.num_chunks() as u64)),
+            ("bit_identical", JsonValue::Bool(true)),
+        ]);
+    }
+
+    // --- traffic is independent of shard edge counts ---------------------
+    // quadruple the edges at a fixed dual dimension: reduce payload may
+    // shift only with the (bounded) chunk-grid size, never with nnz
+    let mut traffic = Vec::new();
+    for &scale in &[1usize, 4] {
+        let lp2 = instance(sources * scale, dests, 10.0);
+        let mut sh = ShardedSlabObjective::new(&lp2, 4, 1).map_err(anyhow::Error::msg)?;
+        let lam2 = vec![0.01f32; lp2.dual_dim()];
+        let before = sh.comm();
+        let _ = sh.calculate(&lam2, gamma);
+        let after = sh.comm();
+        let per_iter =
+            (after.bcast_bytes + after.reduce_bytes) - (before.bcast_bytes + before.reduce_bytes);
+        let expected =
+            (2 * 4 * lp2.dual_dim() + sh.num_chunks() * (4 * lp2.dual_dim() + 16)) as u64;
+        anyhow::ensure!(per_iter == expected, "traffic formula violated at nnz scale {scale}");
+        println!(
+            "nnz sweep: {:>9} edges -> {per_iter} λ-B/iter ({} chunks)",
+            lp2.nnz(),
+            sh.num_chunks()
+        );
+        bench.row(&[
+            ("nnz_sweep_edges", JsonValue::UInt(lp2.nnz() as u64)),
+            ("bytes_per_iter", JsonValue::UInt(per_iter)),
+            ("chunks", JsonValue::UInt(sh.num_chunks() as u64)),
+        ]);
+        traffic.push((lp2.nnz() as f64, per_iter as f64));
+    }
+    let (small, big) = (traffic[0], traffic[1]);
+    let edge_ratio = big.0 / small.0;
+    let byte_ratio = big.1 / small.1;
+    anyhow::ensure!(
+        byte_ratio < edge_ratio / 2.0,
+        "λ traffic must not scale with edges: {edge_ratio:.1}x edges -> {byte_ratio:.2}x bytes"
+    );
+    bench.meta("nnz_sweep_byte_ratio", JsonValue::Num(byte_ratio));
+
+    // --- end-to-end: a short solve is bit-identical across shard counts --
+    let opts = SolveOptions {
+        max_iters: if fast { 25 } else { 60 },
+        gamma: GammaSchedule::Fixed(0.05),
+        max_step_size: 1e-2,
+        initial_step_size: 1e-4,
+        ..Default::default()
+    };
+    let mut agd = Agd::default();
+    let solve_1 = agd.maximize(&mut one, &vec![0.0; dual], &opts);
+    let mut sh4 = ShardedSlabObjective::new(&lp, 4, 1).map_err(anyhow::Error::msg)?;
+    let mut agd4 = Agd::default();
+    let solve_4 = agd4.maximize(&mut sh4, &vec![0.0; dual], &opts);
+    anyhow::ensure!(
+        solve_1.lam.iter().zip(&solve_4.lam).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "4-shard solve trajectory diverged from single-shard slab"
+    );
+    println!(
+        "solve bit-identity: 4-shard == 1-shard over {} iterations (λ bitwise equal)",
+        solve_1.iterations
+    );
+    bench.meta("solve_bit_identical", JsonValue::Bool(true));
+
+    let path = bench.write("results")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -3,22 +3,28 @@
 //! The contract (paper Table 1) is backend-agnostic; this module names the
 //! CPU choices and owns the default:
 //!
-//! | backend     | layout                         | role                      |
-//! |-------------|--------------------------------|---------------------------|
-//! | `slab`      | §6 bucketed padded slabs (SoA) | default serving hot path  |
-//! | `reference` | per-source tuple vectors       | the §7 Scala comparator   |
+//! | backend        | layout                         | role                                  |
+//! |----------------|--------------------------------|---------------------------------------|
+//! | `slab`         | §6 bucketed padded slabs (SoA) | default serving hot path              |
+//! | `sharded-slab` | same slabs, chunk-sharded      | §6 multi-device execution, in-process |
+//! | `reference`    | per-source tuple vectors       | the §7 Scala comparator               |
 //!
-//! (The PJRT/HLO path in `runtime/` is a third, artifact-gated backend and
-//! is selected separately.) `CpuBackend::objective` resolves a choice into
-//! a concrete objective; `slab` falls back to `reference` when the slab
+//! (The PJRT/HLO path in `runtime/` is a fourth, artifact-gated backend
+//! and is selected separately.) `CpuBackend::objective_with` resolves a
+//! choice plus a shard count into a concrete objective; `slab` with
+//! `shards > 1` promotes to `sharded-slab`, whose results are
+//! **bit-identical** to single-shard slab at any shard count (see
+//! [`sharded`]). Both slab flavors fall back to `reference` when the slab
 //! layout is unbuildable for an instance, and the fallback is observable
 //! through `ObjectiveFunction::name`. [`TimedObjective`] wraps any backend
 //! to attribute solve wall-clock to objective evaluation — the engine uses
 //! it to report per-job eval time.
 
+pub mod sharded;
 pub mod slab_cpu;
 
-pub use slab_cpu::SlabCpuObjective;
+pub use sharded::ShardedSlabObjective;
+pub use slab_cpu::{ChunkPartial, SlabCpuObjective};
 
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
 use crate::reference::CpuObjective;
@@ -28,18 +34,24 @@ use crate::util::timer::Stopwatch;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum CpuBackend {
     /// Slab-native batched objective (`backend::slab_cpu`) — the default.
+    /// Promoted to the sharded flavor when a shard count > 1 is requested
+    /// (results are bit-equal either way).
     #[default]
     Slab,
+    /// Chunk-sharded slab objective (`backend::sharded`): the §6
+    /// distributed execution pattern in-process.
+    ShardedSlab,
     /// Per-source tuple baseline (`reference::CpuObjective`).
     Reference,
 }
 
 impl CpuBackend {
     /// Parse a CLI spelling. `cpu` is accepted as a legacy alias for the
-    /// reference backend.
+    /// reference backend, `sharded` for the sharded slab.
     pub fn parse(s: &str) -> Option<CpuBackend> {
         match s {
             "slab" => Some(CpuBackend::Slab),
+            "sharded-slab" | "sharded" => Some(CpuBackend::ShardedSlab),
             "reference" | "cpu" => Some(CpuBackend::Reference),
             _ => None,
         }
@@ -48,21 +60,42 @@ impl CpuBackend {
     pub fn name(self) -> &'static str {
         match self {
             CpuBackend::Slab => "slab",
+            CpuBackend::ShardedSlab => "sharded-slab",
             CpuBackend::Reference => "reference",
         }
     }
 
-    /// Build an objective for `lp` on this backend. `threads` is the slab
-    /// evaluation pool width (ignored by the reference backend). A slab
-    /// request that cannot build its layout (non-separable block wider
-    /// than the slab maximum) falls back to the reference backend; check
-    /// `.name()` on the result to see which backend actually runs.
+    /// Build an objective for `lp` on this backend with a single shard —
+    /// see [`Self::objective_with`].
     pub fn objective<'a>(self, lp: &'a MatchingLp, threads: usize) -> AnyObjective<'a> {
+        self.objective_with(lp, threads, 1)
+    }
+
+    /// Build an objective for `lp` on this backend. `threads` is the slab
+    /// evaluation pool width per shard (ignored by the reference
+    /// backend); `shards` the shard count (`Slab` with `shards > 1` runs
+    /// sharded — bit-identical, so the promotion is safe). A slab request
+    /// that cannot build its layout (non-separable block wider than the
+    /// slab maximum) falls back to the reference backend; check `.name()`
+    /// on the result to see which backend actually runs.
+    pub fn objective_with<'a>(
+        self,
+        lp: &'a MatchingLp,
+        threads: usize,
+        shards: usize,
+    ) -> AnyObjective<'a> {
+        let shards = shards.max(1);
         match self {
-            CpuBackend::Slab => match SlabCpuObjective::new(lp, threads) {
+            CpuBackend::Slab if shards == 1 => match SlabCpuObjective::new(lp, threads) {
                 Ok(o) => AnyObjective::Slab(o),
                 Err(_) => AnyObjective::Reference(CpuObjective::new(lp)),
             },
+            CpuBackend::Slab | CpuBackend::ShardedSlab => {
+                match ShardedSlabObjective::new(lp, shards, threads) {
+                    Ok(o) => AnyObjective::Sharded(o),
+                    Err(_) => AnyObjective::Reference(CpuObjective::new(lp)),
+                }
+            }
             CpuBackend::Reference => AnyObjective::Reference(CpuObjective::new(lp)),
         }
     }
@@ -72,13 +105,27 @@ impl CpuBackend {
 /// keep static dispatch and borrowck-visible lifetimes).
 pub enum AnyObjective<'a> {
     Slab(SlabCpuObjective<'a>),
+    Sharded(ShardedSlabObjective<'a>),
     Reference(CpuObjective<'a>),
+}
+
+impl AnyObjective<'_> {
+    /// Shard count this objective actually runs with (1 for the
+    /// unsharded backends, including a reference fallback from a sharded
+    /// request).
+    pub fn shards(&self) -> usize {
+        match self {
+            AnyObjective::Sharded(o) => o.num_shards(),
+            AnyObjective::Slab(_) | AnyObjective::Reference(_) => 1,
+        }
+    }
 }
 
 impl ObjectiveFunction for AnyObjective<'_> {
     fn dual_dim(&self) -> usize {
         match self {
             AnyObjective::Slab(o) => o.dual_dim(),
+            AnyObjective::Sharded(o) => o.dual_dim(),
             AnyObjective::Reference(o) => o.dual_dim(),
         }
     }
@@ -86,6 +133,7 @@ impl ObjectiveFunction for AnyObjective<'_> {
     fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
         match self {
             AnyObjective::Slab(o) => o.calculate(lam, gamma),
+            AnyObjective::Sharded(o) => o.calculate(lam, gamma),
             AnyObjective::Reference(o) => o.calculate(lam, gamma),
         }
     }
@@ -93,6 +141,7 @@ impl ObjectiveFunction for AnyObjective<'_> {
     fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
         match self {
             AnyObjective::Slab(o) => o.primal(lam, gamma),
+            AnyObjective::Sharded(o) => o.primal(lam, gamma),
             AnyObjective::Reference(o) => o.primal(lam, gamma),
         }
     }
@@ -100,6 +149,7 @@ impl ObjectiveFunction for AnyObjective<'_> {
     fn name(&self) -> &'static str {
         match self {
             AnyObjective::Slab(o) => o.name(),
+            AnyObjective::Sharded(o) => o.name(),
             AnyObjective::Reference(o) => o.name(),
         }
     }
@@ -154,12 +204,62 @@ mod tests {
     #[test]
     fn parse_and_names() {
         assert_eq!(CpuBackend::parse("slab"), Some(CpuBackend::Slab));
+        assert_eq!(CpuBackend::parse("sharded-slab"), Some(CpuBackend::ShardedSlab));
+        assert_eq!(CpuBackend::parse("sharded"), Some(CpuBackend::ShardedSlab));
         assert_eq!(CpuBackend::parse("reference"), Some(CpuBackend::Reference));
         assert_eq!(CpuBackend::parse("cpu"), Some(CpuBackend::Reference));
         assert_eq!(CpuBackend::parse("hlo"), None);
         assert_eq!(CpuBackend::default(), CpuBackend::Slab);
         assert_eq!(CpuBackend::Slab.name(), "slab");
+        assert_eq!(CpuBackend::ShardedSlab.name(), "sharded-slab");
         assert_eq!(CpuBackend::Reference.name(), "reference");
+    }
+
+    #[test]
+    fn shard_count_promotes_slab_and_keeps_bits() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 200,
+            num_resources: 16,
+            seed: 6,
+            ..Default::default()
+        });
+        let lam = vec![0.02f32; lp.dual_dim()];
+        let mut one = CpuBackend::Slab.objective_with(&lp, 1, 1);
+        let mut four = CpuBackend::Slab.objective_with(&lp, 1, 4);
+        let mut named = CpuBackend::ShardedSlab.objective_with(&lp, 1, 3);
+        assert_eq!(one.name(), "cpu-slab");
+        assert_eq!(four.name(), "cpu-sharded-slab");
+        assert_eq!(named.name(), "cpu-sharded-slab");
+        let a = one.calculate(&lam, 0.1);
+        let b = four.calculate(&lam, 0.1);
+        let c = named.calculate(&lam, 0.1);
+        assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+        assert_eq!(a.dual_obj.to_bits(), c.dual_obj.to_bits());
+        for ((x, y), z) in a.grad.iter().zip(&b.grad).zip(&c.grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+            assert_eq!(x.to_bits(), z.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_falls_back_to_reference_when_layout_unbuildable() {
+        let deg = MAX_WIDTH + 1;
+        let a = BlockedMatrix {
+            num_sources: 1,
+            num_dests: deg,
+            num_families: 1,
+            src_ptr: vec![0, deg],
+            dest_idx: (0..deg as u32).collect(),
+            a: vec![vec![1.0; deg]],
+        };
+        let lp = MatchingLp::new_uniform(
+            a,
+            vec![-1.0; deg],
+            vec![0.5; deg],
+            ProjectionKind::Simplex,
+        );
+        let obj = CpuBackend::ShardedSlab.objective_with(&lp, 1, 3);
+        assert_eq!(obj.name(), "cpu-reference");
     }
 
     #[test]

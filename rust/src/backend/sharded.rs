@@ -1,0 +1,337 @@
+//! In-process sharded slab objective — the paper's §6 distributed design
+//! (per-device slab evaluation, λ-only exchange) run inside one process,
+//! selectable wherever a CPU backend is (`CpuBackend::ShardedSlab`, the
+//! engine's `EngineConfig::shards`, CLI `--shards`).
+//!
+//! Construction mirrors the device story: build the full
+//! [`SlabLayout`] once (rank 0 partitions on CPU), cut its fixed chunk
+//! grid into contiguous ranges balanced by **real** edge count
+//! (`distributed::balanced_partition` over the grid's cumulative edge
+//! pointer), and give each shard a [`SlabCpuObjective`] view over its
+//! range with its own thread budget. Each `calculate` evaluates shards
+//! concurrently (scoped threads — shard state is borrowed, no `'static`
+//! bound) and merges their per-chunk partials through the deterministic
+//! chunk-index-ordered allreduce
+//! (`distributed::collective::reduce_chunk_partials`), so an S-shard
+//! evaluation — and therefore a whole AGD solve — is **bit-identical** to
+//! the single-shard slab solve. Logical traffic is counted per iteration
+//! exactly as the device pool counts it: two |λ| broadcasts (the momentum
+//! pair) plus one chunk-segmented reduce whose payload is
+//! `num_chunks × (|λ| + 2)` values — independent of shard edge counts.
+//!
+//! The difference from `distributed::WorkerPool` with the slab strategy
+//! is thread topology only: this type spawns scoped threads per call and
+//! borrows the instance (so the engine can run it on jobs it owns),
+//! while the pool keeps persistent device threads behind channels for
+//! the distributed drivers. Both produce the same bits.
+
+use std::sync::Arc;
+
+use super::slab_cpu::{ChunkPartial, SlabCpuObjective};
+use crate::distributed::collective::{reduce_chunk_partials, CommSnapshot, CommStats};
+use crate::distributed::partition::{balanced_partition, imbalance};
+use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+use crate::sparse::slabs::{SlabChunk, SlabLayout};
+use crate::util::timer::thread_cpu_time_ms;
+
+/// Leader-side shard plan shared by BOTH sharded execution paths (this
+/// module's in-process objective and `distributed::WorkerPool`'s slab
+/// strategy): the canonical layout + fixed chunk grid, contiguous chunk
+/// ranges balanced by real edge count, and the per-shard edge counts the
+/// one-time scatter accounting is computed from. Keeping the construction
+/// in one place is what keeps the two paths bit-equal by construction.
+pub struct SlabShardPlan {
+    pub layout: Arc<SlabLayout>,
+    pub grid: Arc<Vec<SlabChunk>>,
+    /// Chunk-grid range `[lo, hi)` owned by each shard (ascending,
+    /// contiguous — the precondition of the chunk-ordered allreduce).
+    pub ranges: Vec<(usize, usize)>,
+    /// Real (non-padding) edges owned by each shard.
+    pub shard_edges: Vec<usize>,
+    /// Real-edge load imbalance of the partition (max/mean, 1.0 = perfect).
+    pub imbalance: f64,
+}
+
+impl SlabShardPlan {
+    /// Build the layout, grid, and a `num_shards`-way balanced partition
+    /// for `lp`. Errors when the layout is unbuildable (same condition as
+    /// [`SlabCpuObjective::new`]).
+    pub fn build(lp: &MatchingLp, num_shards: usize) -> Result<SlabShardPlan, String> {
+        let layout = Arc::new(SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
+            lp.projection.kind_of(i)
+        })?);
+        let grid = Arc::new(layout.fixed_chunk_grid());
+        let ptr = layout.chunk_edge_ptr(&grid);
+        let ranges = balanced_partition(&ptr, num_shards.max(1));
+        let imbalance = imbalance(&ptr, &ranges);
+        let shard_edges = ranges.iter().map(|&(lo, hi)| ptr[hi] - ptr[lo]).collect();
+        Ok(SlabShardPlan { layout, grid, ranges, shard_edges, imbalance })
+    }
+
+    /// Record the one-time data distribution into `stats` (paper §6: rank
+    /// 0 partitions on CPU and scatters): each shard receives its real
+    /// edges × (index + cost + m coefficient planes). The shared `b`
+    /// broadcast is recorded separately by the leader.
+    pub fn record_scatter(&self, lp: &MatchingLp, stats: &CommStats) {
+        for &edges in &self.shard_edges {
+            stats.record_scatter((edges * (4 + 4 + 4 * lp.num_families())) as u64);
+        }
+    }
+}
+
+/// `ObjectiveFunction` running S slab shards in-process (see module docs).
+pub struct ShardedSlabObjective<'a> {
+    shards: Vec<SlabCpuObjective<'a>>,
+    plan: SlabShardPlan,
+    stats: Arc<CommStats>,
+    /// Cumulative per-shard evaluation thread-CPU time (ms).
+    shard_eval_ms: Vec<f64>,
+    /// Number of `calculate` calls so far.
+    evals: u64,
+    full_b: Vec<f32>,
+    dual_dim: usize,
+    nnz: usize,
+}
+
+impl<'a> ShardedSlabObjective<'a> {
+    /// Build `num_shards` shard views over `lp`'s slab layout, each with
+    /// an evaluation pool of `threads_per_shard` (1 = sequential within a
+    /// shard; results are bit-identical at any width). Errors when the
+    /// layout is unbuildable (same condition as [`SlabCpuObjective::new`]).
+    pub fn new(
+        lp: &'a MatchingLp,
+        num_shards: usize,
+        threads_per_shard: usize,
+    ) -> Result<ShardedSlabObjective<'a>, String> {
+        let plan = SlabShardPlan::build(lp, num_shards)?;
+        let shards: Vec<SlabCpuObjective<'a>> = plan
+            .ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                SlabCpuObjective::new_shard(
+                    lp,
+                    plan.layout.clone(),
+                    &plan.grid,
+                    lo,
+                    hi,
+                    threads_per_shard,
+                )
+            })
+            .collect();
+        let stats = CommStats::new();
+        plan.record_scatter(lp, &stats);
+        stats.record_broadcast(lp.dual_dim()); // shared b (once)
+        Ok(ShardedSlabObjective {
+            shard_eval_ms: vec![0.0; shards.len()],
+            shards,
+            plan,
+            stats,
+            evals: 0,
+            full_b: lp.full_b(),
+            dual_dim: lp.dual_dim(),
+            nnz: lp.nnz(),
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Size of the (global) fixed chunk grid the shards partition.
+    pub fn num_chunks(&self) -> usize {
+        self.plan.grid.len()
+    }
+
+    /// Chunk-grid range owned by each shard.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.plan.ranges
+    }
+
+    /// Real-edge load imbalance of the partition (max/mean, 1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        self.plan.imbalance
+    }
+
+    /// Cumulative evaluation thread-CPU time per shard (ms) — what each
+    /// device would have spent computing.
+    pub fn shard_eval_ms(&self) -> &[f64] {
+        &self.shard_eval_ms
+    }
+
+    /// Number of `calculate` calls so far.
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+
+    /// Logical communication counters (broadcast / segmented-reduce /
+    /// one-time scatter bytes).
+    pub fn comm(&self) -> CommSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+impl ObjectiveFunction for ShardedSlabObjective<'_> {
+    fn dual_dim(&self) -> usize {
+        self.dual_dim
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        assert_eq!(lam.len(), self.dual_dim);
+        // The paper's per-iteration pattern: the leader broadcasts the
+        // (λ₁, λ₂) momentum pair — counted as two |λ| payloads here even
+        // though in-process shards read λ by reference.
+        self.stats.record_broadcast(lam.len());
+        self.stats.record_broadcast(lam.len());
+
+        let n = self.shards.len();
+        let mut parts: Vec<Option<(Vec<ChunkPartial>, f64)>> = (0..n).map(|_| None).collect();
+        if n == 1 {
+            // no cross-shard concurrency to exploit; skip the spawn cost
+            let t0 = thread_cpu_time_ms();
+            let p = self.shards[0].eval_chunk_partials(lam, gamma);
+            parts[0] = Some((p, thread_cpu_time_ms() - t0));
+        } else {
+            std::thread::scope(|scope| {
+                for (slot, shard) in parts.iter_mut().zip(self.shards.iter_mut()) {
+                    scope.spawn(move || {
+                        let t0 = thread_cpu_time_ms();
+                        let p = shard.eval_chunk_partials(lam, gamma);
+                        *slot = Some((p, thread_cpu_time_ms() - t0));
+                    });
+                }
+            });
+        }
+        let mut by_rank: Vec<Vec<ChunkPartial>> = Vec::with_capacity(n);
+        for (rank, slot) in parts.into_iter().enumerate() {
+            let (p, ms) = slot.expect("shard evaluation missing");
+            self.shard_eval_ms[rank] += ms;
+            by_rank.push(p);
+        }
+        let segments: usize = by_rank.iter().map(|p| p.len()).sum();
+        self.stats.record_segmented_reduce(segments, self.dual_dim, 2);
+        self.evals += 1;
+
+        let (mut ax, cx, xsq) = reduce_chunk_partials(&by_rank, self.dual_dim);
+        for (g, b) in ax.iter_mut().zip(&self.full_b) {
+            *g -= *b;
+        }
+        ObjectiveResult::assemble(ax, cx, xsq, lam, gamma)
+    }
+
+    fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
+        // Off the hot path. Shards own disjoint edge sets and write by
+        // assignment, so one shared buffer reconstructs the single-shard
+        // primal exactly.
+        self.stats.record_broadcast(lam.len());
+        let mut out = vec![0.0f32; self.nnz];
+        for shard in &mut self.shards {
+            shard.primal_into(lam, gamma, &mut out);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu-sharded-slab"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, SyntheticConfig};
+
+    fn instance(seed: u64) -> MatchingLp {
+        generate(&SyntheticConfig {
+            num_requests: 600,
+            num_resources: 40,
+            avg_nnz_per_row: 6.0,
+            num_families: 2,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn sharded_eval_is_bit_identical_to_single_shard() {
+        let lp = instance(17);
+        let mut one = SlabCpuObjective::new(&lp, 1).unwrap();
+        let lam = vec![0.04f32; lp.dual_dim()];
+        let r1 = one.calculate(&lam, 0.1);
+        let x1 = one.primal(&lam, 0.1);
+        for shards in [1usize, 2, 3, 5] {
+            let mut sh = ShardedSlabObjective::new(&lp, shards, 1).unwrap();
+            assert_eq!(sh.num_shards(), shards);
+            let rs = sh.calculate(&lam, 0.1);
+            assert_eq!(r1.dual_obj.to_bits(), rs.dual_obj.to_bits(), "{shards} shards");
+            assert_eq!(r1.cx.to_bits(), rs.cx.to_bits());
+            assert_eq!(r1.xsq_weighted.to_bits(), rs.xsq_weighted.to_bits());
+            for (a, b) in r1.grad.iter().zip(&rs.grad) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{shards} shards");
+            }
+            let xs = sh.primal(&lam, 0.1);
+            for (a, b) in x1.iter().zip(&xs) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{shards} shards primal");
+            }
+        }
+    }
+
+    #[test]
+    fn per_shard_threads_do_not_change_bits() {
+        let lp = instance(23);
+        let lam = vec![0.02f32; lp.dual_dim()];
+        let mut narrow = ShardedSlabObjective::new(&lp, 3, 1).unwrap();
+        let mut wide = ShardedSlabObjective::new(&lp, 3, 4).unwrap();
+        let a = narrow.calculate(&lam, 0.2);
+        let b = wide.calculate(&lam, 0.2);
+        assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+        for (x, y) in a.grad.iter().zip(&b.grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn comm_accounting_is_lambda_sized_per_iteration() {
+        let lp = instance(31);
+        let dual = lp.dual_dim();
+        let mut sh = ShardedSlabObjective::new(&lp, 4, 1).unwrap();
+        let before = sh.comm();
+        assert!(before.scatter_bytes > 0, "one-time distribution counted");
+        let lam = vec![0.0f32; dual];
+        let iters = 6u64;
+        for _ in 0..iters {
+            let _ = sh.calculate(&lam, 0.1);
+        }
+        let after = sh.comm();
+        assert_eq!(after.bcast_ops - before.bcast_ops, 2 * iters);
+        assert_eq!(after.reduce_ops - before.reduce_ops, iters);
+        let per_iter = (after.bcast_bytes + after.reduce_bytes
+            - before.bcast_bytes
+            - before.reduce_bytes) as f64
+            / iters as f64;
+        let expected = (2 * 4 * dual + sh.num_chunks() * (4 * dual + 16)) as f64;
+        assert_eq!(per_iter, expected, "traffic must be λ/chunk-sized only");
+        // scatter does not grow with iterations
+        assert_eq!(after.scatter_bytes, before.scatter_bytes);
+        // per-shard eval time recorded for every shard
+        assert_eq!(sh.shard_eval_ms().len(), 4);
+        assert_eq!(sh.evals(), iters);
+    }
+
+    #[test]
+    fn more_shards_than_chunks_is_ok() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 30,
+            num_resources: 8,
+            avg_nnz_per_row: 3.0,
+            seed: 5,
+            ..Default::default()
+        });
+        let mut one = SlabCpuObjective::new(&lp, 1).unwrap();
+        let chunks = one.num_chunks();
+        let mut sh = ShardedSlabObjective::new(&lp, chunks + 4, 1).unwrap();
+        let lam = vec![0.01f32; lp.dual_dim()];
+        let a = one.calculate(&lam, 0.1);
+        let b = sh.calculate(&lam, 0.1);
+        assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+    }
+}

@@ -25,31 +25,35 @@
 //! Layout-ineligible instances (a non-separable block wider than
 //! `MAX_WIDTH`) are reported as a build error; `backend::CpuBackend`
 //! falls back to the reference objective for those.
+//!
+//! **Sharding.** The chunk grid is also the unit of cross-shard
+//! partitioning: [`SlabCpuObjective::new_shard`] builds a view over a
+//! contiguous range of the grid, and [`eval_chunk_partials`] returns the
+//! per-chunk partial reductions unmerged, so a leader (the in-process
+//! [`super::ShardedSlabObjective`] or the `distributed::WorkerPool`
+//! device threads) can merge all shards' partials in global chunk-index
+//! order and reproduce the single-shard bit pattern exactly.
+//!
+//! [`eval_chunk_partials`]: SlabCpuObjective::eval_chunk_partials
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
 use crate::projection::BlockProjection;
-use crate::sparse::slabs::SlabLayout;
+use crate::sparse::slabs::{SlabChunk, SlabLayout};
 
-/// Target chunk-grid size. Fixed (never derived from the thread count)
-/// so the reduction order — and therefore every bit of the result — is
-/// identical at any pool width. Chunks never span buckets, so the actual
-/// grid (and partial-accumulator memory, `num_chunks × dual_dim` floats)
-/// can exceed this by up to one chunk per bucket.
-const MAX_CHUNKS: usize = 32;
-/// Minimum rows per chunk — below this the per-chunk bookkeeping
-/// dominates the math.
-const MIN_CHUNK_ROWS: usize = 64;
-
-/// One unit of the fixed parallel grid: a row range within one bucket
-/// (chunks never span buckets, so each chunk projects with one operator
-/// at one width).
-struct ChunkTask {
-    bucket: usize,
-    row_lo: usize,
-    row_hi: usize,
+/// One chunk's partial reduction — the unit payload of the deterministic
+/// chunk-index-ordered allreduce (`distributed::collective`). Sized by
+/// the dual dimension only (λ-sized), never by the chunk's edge count.
+#[derive(Clone, Debug)]
+pub struct ChunkPartial {
+    /// Partial Ax accumulator over the full dual dimension.
+    pub ax: Vec<f32>,
+    /// Partial cᵀx.
+    pub cx: f64,
+    /// Partial Σ v²‖x‖².
+    pub xsq: f64,
 }
 
 /// Per-chunk scratch, persistent across iterations: projected slab values
@@ -64,17 +68,26 @@ struct ChunkScratch {
     xsq: f64,
 }
 
-/// `ObjectiveFunction` over the slab layout (see module docs).
+/// `ObjectiveFunction` over the slab layout (see module docs). Either the
+/// full layout (`new`) or a shard view over a contiguous chunk range of
+/// it (`new_shard`).
 pub struct SlabCpuObjective<'a> {
     lp: &'a MatchingLp,
-    layout: SlabLayout,
+    layout: Arc<SlabLayout>,
     threads: usize,
     /// Projection operator per bucket, resolved from the registry once at
     /// construction so the hot loop stays lock-free.
     ops: Vec<Arc<dyn BlockProjection>>,
     /// v_i² per slab row per bucket (γ is folded in per call).
     row_v2: Vec<Vec<f32>>,
-    tasks: Vec<ChunkTask>,
+    /// This objective's slice of the fixed chunk grid (the whole grid for
+    /// `new`, `grid[chunk_lo..chunk_hi]` for `new_shard`).
+    tasks: Vec<SlabChunk>,
+    /// Global grid index of `tasks[0]` (0 for a full objective).
+    chunk_lo: usize,
+    /// Whether `tasks` covers the entire grid (only then is `calculate`
+    /// a complete dual evaluation).
+    full_range: bool,
     scratch: Vec<Mutex<ChunkScratch>>,
     /// Precomputed rhs over all dual rows.
     full_b: Vec<f32>,
@@ -86,9 +99,41 @@ impl<'a> SlabCpuObjective<'a> {
     /// bit-identical either way). Errors when the layout is unbuildable
     /// (non-separable block wider than the maximum slab width).
     pub fn new(lp: &'a MatchingLp, threads: usize) -> Result<SlabCpuObjective<'a>, String> {
-        let layout = SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
+        let layout = Arc::new(SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
             lp.projection.kind_of(i)
-        })?;
+        })?);
+        let grid = layout.fixed_chunk_grid();
+        let n = grid.len();
+        Ok(Self::from_parts(lp, layout, &grid, 0, n, threads))
+    }
+
+    /// Build a shard view over `grid[chunk_lo..chunk_hi]` of an already
+    /// built layout. `grid` MUST be the layout's canonical
+    /// `fixed_chunk_grid()` — shards that cut the grid differently from
+    /// the single-shard objective forfeit bit-identity. Shard views are
+    /// driven through [`Self::eval_chunk_partials`] / [`Self::primal_into`]
+    /// by a leader that owns the cross-shard merge; their `calculate`
+    /// panics (it would subtract the full `b` from a partial gradient).
+    pub fn new_shard(
+        lp: &'a MatchingLp,
+        layout: Arc<SlabLayout>,
+        grid: &[SlabChunk],
+        chunk_lo: usize,
+        chunk_hi: usize,
+        threads: usize,
+    ) -> SlabCpuObjective<'a> {
+        Self::from_parts(lp, layout, grid, chunk_lo, chunk_hi, threads)
+    }
+
+    fn from_parts(
+        lp: &'a MatchingLp,
+        layout: Arc<SlabLayout>,
+        grid: &[SlabChunk],
+        chunk_lo: usize,
+        chunk_hi: usize,
+        threads: usize,
+    ) -> SlabCpuObjective<'a> {
+        assert!(chunk_lo <= chunk_hi && chunk_hi <= grid.len());
         let ops: Vec<Arc<dyn BlockProjection>> =
             layout.buckets.iter().map(|b| b.kind.op()).collect();
         let row_v2: Vec<Vec<f32>> = layout
@@ -96,21 +141,7 @@ impl<'a> SlabCpuObjective<'a> {
             .iter()
             .map(|b| b.sources.iter().map(|&s| lp.gamma_scale(s as usize)).collect())
             .collect();
-
-        // Fixed chunk grid: a deterministic function of the layout alone.
-        let total_rows = layout.total_rows();
-        let target = total_rows.div_ceil(MAX_CHUNKS).max(MIN_CHUNK_ROWS);
-        let mut tasks = Vec::new();
-        for (b, bk) in layout.buckets.iter().enumerate() {
-            let rows = bk.rows();
-            let mut lo = 0usize;
-            while lo < rows {
-                let hi = (lo + target).min(rows);
-                tasks.push(ChunkTask { bucket: b, row_lo: lo, row_hi: hi });
-                lo = hi;
-            }
-        }
-
+        let tasks: Vec<SlabChunk> = grid[chunk_lo..chunk_hi].to_vec();
         let dual = lp.dual_dim();
         let scratch = tasks
             .iter()
@@ -123,16 +154,18 @@ impl<'a> SlabCpuObjective<'a> {
                 })
             })
             .collect();
-        Ok(SlabCpuObjective {
+        SlabCpuObjective {
             lp,
             layout,
             threads: threads.max(1),
             ops,
             row_v2,
             tasks,
+            chunk_lo,
+            full_range: chunk_lo == 0 && chunk_hi == grid.len(),
             scratch,
             full_b: lp.full_b(),
-        })
+        }
     }
 
     pub fn layout(&self) -> &SlabLayout {
@@ -141,6 +174,16 @@ impl<'a> SlabCpuObjective<'a> {
 
     pub fn num_chunks(&self) -> usize {
         self.tasks.len()
+    }
+
+    /// Global grid range `[lo, hi)` this objective covers.
+    pub fn chunk_range(&self) -> (usize, usize) {
+        (self.chunk_lo, self.chunk_lo + self.tasks.len())
+    }
+
+    /// This objective's slice of the fixed chunk grid.
+    pub fn chunks(&self) -> &[SlabChunk] {
+        &self.tasks
     }
 
     pub fn threads(&self) -> usize {
@@ -183,7 +226,7 @@ impl<'a> SlabCpuObjective<'a> {
 
     /// Fill `x` with the chunk's projected primal block values:
     /// x = Π_C(−(Aᵀλ + c) / (γ v²)), batched per row.
-    fn gather_project(&self, t: &ChunkTask, lam: &[f32], gamma: f32, x: &mut Vec<f32>) {
+    fn gather_project(&self, t: &SlabChunk, lam: &[f32], gamma: f32, x: &mut Vec<f32>) {
         let bk = &self.layout.buckets[t.bucket];
         let w = bk.width;
         let rows = t.row_hi - t.row_lo;
@@ -237,7 +280,7 @@ impl<'a> SlabCpuObjective<'a> {
     }
 
     /// Accumulate the chunk's contribution to Ax / cᵀx / Σv²‖x‖².
-    fn reduce_chunk(&self, t: &ChunkTask, x: &[f32], ax: &mut [f32]) -> (f64, f64) {
+    fn reduce_chunk(&self, t: &SlabChunk, x: &[f32], ax: &mut [f32]) -> (f64, f64) {
         let bk = &self.layout.buckets[t.bucket];
         let w = bk.width;
         let jj = self.lp.num_dests();
@@ -267,14 +310,11 @@ impl<'a> SlabCpuObjective<'a> {
         }
         (cx, xsq)
     }
-}
 
-impl ObjectiveFunction for SlabCpuObjective<'_> {
-    fn dual_dim(&self) -> usize {
-        self.lp.dual_dim()
-    }
-
-    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+    /// Evaluate every chunk of this objective's range into its scratch
+    /// slot (the parallel phase shared by `calculate` and
+    /// `eval_chunk_partials`).
+    fn fill_scratch(&self, lam: &[f32], gamma: f32) {
         assert_eq!(lam.len(), self.lp.dual_dim());
         let this: &Self = self;
         this.for_each_chunk(|i| {
@@ -287,6 +327,69 @@ impl ObjectiveFunction for SlabCpuObjective<'_> {
             s.cx = cx;
             s.xsq = xsq;
         });
+    }
+
+    /// Evaluate this objective's chunk range at (λ, γ) and return the
+    /// per-chunk partial reductions in ascending chunk order — unmerged
+    /// and with `b` NOT subtracted. This is the shard half of a
+    /// distributed evaluation: the leader concatenates all shards'
+    /// partials (shards own contiguous ascending chunk ranges) and merges
+    /// them in global chunk-index order
+    /// (`distributed::collective::reduce_chunk_partials`), which
+    /// reproduces the exact f32 summation sequence of a single-shard
+    /// `calculate`. Payload is `num_chunks × (|λ| + 2)` values —
+    /// λ-proportional, independent of the shard's edge count.
+    pub fn eval_chunk_partials(&mut self, lam: &[f32], gamma: f32) -> Vec<ChunkPartial> {
+        self.fill_scratch(lam, gamma);
+        self.scratch
+            .iter()
+            .map(|slot| {
+                let s = slot.lock().unwrap();
+                ChunkPartial { ax: s.ax.clone(), cx: s.cx, xsq: s.xsq }
+            })
+            .collect()
+    }
+
+    /// Write this objective's chunks' primal values into `out` (full-nnz
+    /// indexing) by **assignment**. Chunks own disjoint edge sets, so a
+    /// leader calling this per shard over one buffer reconstructs exactly
+    /// the single-shard `primal` output, -0.0 bits included (a merge by
+    /// `+=` would quietly turn −0.0 into +0.0).
+    pub fn primal_into(&mut self, lam: &[f32], gamma: f32, out: &mut [f32]) {
+        assert_eq!(lam.len(), self.lp.dual_dim());
+        assert_eq!(out.len(), self.lp.nnz());
+        // off the iteration hot path: sequential sweep, scatter by edge id
+        // (split separable rows land in their own edge ranges)
+        for (i, t) in self.tasks.iter().enumerate() {
+            let mut guard = self.scratch[i].lock().unwrap();
+            let s = &mut *guard;
+            self.gather_project(t, lam, gamma, &mut s.x);
+            let bk = &self.layout.buckets[t.bucket];
+            let w = bk.width;
+            for rr in 0..(t.row_hi - t.row_lo) {
+                let base = (t.row_lo + rr) * w;
+                for c in 0..w {
+                    if bk.mask[base + c] > 0.0 {
+                        out[bk.edge_id[base + c] as usize] = s.x[rr * w + c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ObjectiveFunction for SlabCpuObjective<'_> {
+    fn dual_dim(&self) -> usize {
+        self.lp.dual_dim()
+    }
+
+    fn calculate(&mut self, lam: &[f32], gamma: f32) -> ObjectiveResult {
+        assert!(
+            self.full_range,
+            "calculate() needs the full chunk range; shard views are driven \
+             through eval_chunk_partials by their leader"
+        );
+        self.fill_scratch(lam, gamma);
 
         // Merge partials in chunk-index order — the grid is fixed, so the
         // floating-point summation order is identical at any thread count.
@@ -311,25 +414,10 @@ impl ObjectiveFunction for SlabCpuObjective<'_> {
     }
 
     fn primal(&mut self, lam: &[f32], gamma: f32) -> Vec<f32> {
-        assert_eq!(lam.len(), self.lp.dual_dim());
+        // On a shard view this fills only the shard's edges (zeros
+        // elsewhere) — the distributed workers rely on exactly that.
         let mut out = vec![0.0f32; self.lp.nnz()];
-        // off the iteration hot path: sequential sweep, scatter by edge id
-        // (split separable rows land in their own edge ranges)
-        for (i, t) in self.tasks.iter().enumerate() {
-            let mut guard = self.scratch[i].lock().unwrap();
-            let s = &mut *guard;
-            self.gather_project(t, lam, gamma, &mut s.x);
-            let bk = &self.layout.buckets[t.bucket];
-            let w = bk.width;
-            for rr in 0..(t.row_hi - t.row_lo) {
-                let base = (t.row_lo + rr) * w;
-                for c in 0..w {
-                    if bk.mask[base + c] > 0.0 {
-                        out[bk.edge_id[base + c] as usize] = s.x[rr * w + c];
-                    }
-                }
-            }
-        }
+        self.primal_into(lam, gamma, &mut out);
         out
     }
 

@@ -7,10 +7,12 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::args::Args;
-use crate::backend::{CpuBackend, SlabCpuObjective};
-use crate::distributed::{solve_distributed, LinkModel};
+use crate::backend::{CpuBackend, ShardedSlabObjective, SlabCpuObjective};
+use crate::distributed::{
+    solve_distributed, solve_distributed_with, DistributedSolve, ExecStrategy, LinkModel,
+};
 use crate::gen::{generate, workloads, SyntheticConfig};
-use crate::metrics::{comm_report, solve_report};
+use crate::metrics::{comm_report, shard_report, solve_report};
 use crate::problem::{check_primal, jacobi_row_normalize, MatchingLp, ObjectiveFunction};
 use crate::projection::{registry, ProjectionKind, ProjectionMap};
 use crate::reference::CpuObjective;
@@ -26,18 +28,30 @@ pub fn usage() -> &'static str {
      SUBCOMMANDS\n\
        solve             solve a synthetic matching LP\n\
          --sources N --dests N --nnz-per-row F --families N --seed S\n\
-         --backend slab|reference|hlo|dist   --workers N   --iters N\n\
-         --obj-threads N    slab objective pool width (results are\n\
-                            bit-identical at any width; default 1)\n\
+         --backend slab|sharded-slab|reference|hlo|dist   --iters N\n\
+         --shards S         shard count: slab with S>1 runs the chunk-\n\
+                            sharded objective (bit-identical to S=1);\n\
+                            for --backend dist it sizes the worker pool\n\
+                            (overriding --workers N, the legacy spelling,\n\
+                            default 2) and --exec slab|hlo picks the\n\
+                            worker execution strategy\n\
+         --obj-threads N    slab objective pool width per shard (results\n\
+                            are bit-identical at any width; default 1)\n\
          --gamma F | --gamma-decay init,floor,factor,every\n\
          --projection SPEC  blockwise polytope from the operator registry\n\
                             (simplex | box | capped_simplex:c:t |\n\
                              weighted_simplex:s:w1,w2,.. | box_vec:u1,u2,..;\n\
-                             every family runs on the slab and reference\n\
-                             CPU backends; only simplex/box have HLO\n\
-                             artifacts — use --backend slab otherwise)\n\
+                             every family runs on the slab, sharded and\n\
+                             reference CPU backends; only simplex/box have\n\
+                             HLO artifacts — use --backend slab otherwise)\n\
          --count-cap M      append the global row Σx ≤ M (paper §4)\n\
          --precondition --primal-scaling --csv PATH\n\
+       distributed       E15: sharded execution through the device-thread\n\
+                         worker pool, with λ-only comm accounting\n\
+         --shards S --exec slab|hlo --obj-threads N --iters N\n\
+         --verify           assert the sharded solve is bit-identical to\n\
+                            the single-shard slab solve (slab exec only)\n\
+         (+ the solve workload/schedule/conditioning flags)\n\
        parity            E1/E2: baseline-vs-accelerated trajectories (Fig 1/2)\n\
          --sources N --iters N --out-dir results/\n\
        ablation-precond  E5: Jacobi preconditioning on/off (Fig 4)\n\
@@ -48,7 +62,7 @@ pub fn usage() -> &'static str {
                          perturbation stream (cold vs warm, matched stop)\n\
          --sources N --dests N --nnz-per-row F --seed S\n\
          --jobs N --threads N --perturb F --warm-tail N\n\
-         --backend slab|reference --obj-threads N\n\
+         --backend slab|sharded-slab|reference --obj-threads N --shards S\n\
          --iters N --stall-tol F --out-dir results/\n\
        info              artifact + environment report\n\
      \n\
@@ -101,6 +115,29 @@ fn workload(args: &Args) -> Result<SyntheticConfig> {
         })?;
     }
     Ok(cfg)
+}
+
+/// Worker execution strategy from `--exec slab|hlo` (shared by `solve
+/// --backend dist` and the `distributed` subcommand).
+fn exec_strategy(args: &Args, obj_threads: usize) -> Result<ExecStrategy> {
+    match args.get_or("exec", "slab") {
+        "slab" => Ok(ExecStrategy::Slab { threads: obj_threads }),
+        "hlo" => Ok(ExecStrategy::Hlo { artifacts: default_artifacts_dir() }),
+        other => Err(anyhow!("unknown --exec {other:?} (slab|hlo)")),
+    }
+}
+
+/// Communication + per-shard + wire-time reports for a distributed solve
+/// (shared by `solve --backend dist` and the `distributed` subcommand).
+fn print_distributed_reports(out: &DistributedSolve, dual_dim: usize) {
+    let iters = out.result.iterations as u64;
+    println!("{}", comm_report(&out.comm, iters));
+    println!("{}", shard_report(&out.shard_eval_ms, &out.comm, iters));
+    println!(
+        "estimated NCCL wire time/iter: nvlink {:.1}µs, ethernet {:.1}µs",
+        LinkModel::nvlink().iter_time(dual_dim) * 1e6,
+        LinkModel::ethernet().iter_time(dual_dim) * 1e6,
+    );
 }
 
 fn write_trajectory(path: &str, label: &str, r: &SolveResult) -> Result<()> {
@@ -161,19 +198,49 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
 
     let init = vec![0.0f32; lp.dual_dim()];
     let mut agd = Agd::default();
+    let shards = args.usize_or("shards", 1)?;
+    let obj_threads = args.usize_or("obj-threads", 1)?;
     let (label, result) = match backend.as_str() {
-        "slab" => {
-            let obj_threads = args.usize_or("obj-threads", 1)?;
-            let mut obj =
-                SlabCpuObjective::new(&lp, obj_threads).map_err(anyhow::Error::msg)?;
-            eprintln!(
-                "slab backend: {} buckets, {} chunks, {} threads, padding factor {:.2}",
-                obj.layout().num_launches(),
-                obj.num_chunks(),
-                obj.threads(),
-                obj.layout().padding_factor()
-            );
-            ("slab", agd.maximize(&mut obj, &init, &opts))
+        "slab" | "sharded-slab" => {
+            // slab with --shards > 1 (or the explicit sharded-slab
+            // spelling) runs the chunk-sharded objective — bit-identical
+            // to the single-shard slab solve at any shard count. An
+            // explicit --shards is always honored (sharded-slab merely
+            // changes the DEFAULT to 2, matching engine-batch semantics).
+            let shards = if backend == "sharded-slab" && args.get("shards").is_none() {
+                2
+            } else {
+                shards
+            };
+            if backend == "sharded-slab" || shards > 1 {
+                let mut obj = ShardedSlabObjective::new(&lp, shards, obj_threads)
+                    .map_err(anyhow::Error::msg)?;
+                eprintln!(
+                    "sharded slab backend: {} shards over {} chunks \
+                     (imbalance {:.2}), {obj_threads} threads/shard",
+                    obj.num_shards(),
+                    obj.num_chunks(),
+                    obj.imbalance(),
+                );
+                let r = agd.maximize(&mut obj, &init, &opts);
+                println!("{}", comm_report(&obj.comm(), r.iterations as u64));
+                println!(
+                    "{}",
+                    shard_report(obj.shard_eval_ms(), &obj.comm(), r.iterations as u64)
+                );
+                ("sharded-slab", r)
+            } else {
+                let mut obj =
+                    SlabCpuObjective::new(&lp, obj_threads).map_err(anyhow::Error::msg)?;
+                eprintln!(
+                    "slab backend: {} buckets, {} chunks, {} threads, padding factor {:.2}",
+                    obj.layout().num_launches(),
+                    obj.num_chunks(),
+                    obj.threads(),
+                    obj.layout().padding_factor()
+                );
+                ("slab", agd.maximize(&mut obj, &init, &opts))
+            }
         }
         "cpu" | "reference" => {
             let mut obj = CpuObjective::new(&lp);
@@ -187,14 +254,13 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
             ("hlo", r)
         }
         "dist" => {
+            // device-thread worker pool; slab execution by default
+            // (--exec hlo restores the artifact-gated path)
+            let workers = if args.get("shards").is_some() { shards.max(1) } else { workers };
+            let strategy = exec_strategy(args, obj_threads)?;
             let lp_arc = Arc::new(lp);
-            let out = solve_distributed(lp_arc.clone(), &art, workers, &opts)?;
-            println!("{}", comm_report(&out.comm, out.result.iterations as u64));
-            println!(
-                "estimated NCCL wire time/iter: nvlink {:.1}µs, ethernet {:.1}µs",
-                LinkModel::nvlink().iter_time(lp_arc.dual_dim()) * 1e6,
-                LinkModel::ethernet().iter_time(lp_arc.dual_dim()) * 1e6,
-            );
+            let out = solve_distributed_with(lp_arc.clone(), strategy, workers, &opts)?;
+            print_distributed_reports(&out, lp_arc.dual_dim());
             println!("{}", solve_report("dist", &out.result));
             if let Some(csv) = args.get("csv") {
                 write_trajectory(csv, "dist", &out.result)?;
@@ -202,12 +268,73 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
             return Ok(());
         }
         other => {
-            return Err(anyhow!("unknown backend {other:?} (slab|reference|hlo|dist)"))
+            return Err(anyhow!(
+                "unknown backend {other:?} (slab|sharded-slab|reference|hlo|dist)"
+            ))
         }
     };
     println!("{}", solve_report(label, &result));
     if let Some(csv) = args.get("csv") {
         write_trajectory(csv, label, &result)?;
+    }
+    Ok(())
+}
+
+/// `dualip distributed` — E15 driver: a sharded solve through the
+/// device-thread `WorkerPool` (slab execution by default; `--exec hlo`
+/// selects the artifact-gated path), reporting the λ-only communication
+/// accounting, per-shard compute times, and — with `--verify` — asserting
+/// the §6 determinism contract: the S-shard solve is bit-identical to the
+/// single-shard slab solve.
+pub fn cmd_distributed(args: &Args) -> Result<()> {
+    let cfg = workload(args)?;
+    let opts = solve_options(args)?;
+    let shards = args.usize_or("shards", 4)?;
+    let obj_threads = args.usize_or("obj-threads", 1)?;
+    let exec = args.get_or("exec", "slab").to_string();
+
+    let mut lp = generate(&cfg);
+    if let Some(m) = args.get("count-cap") {
+        let cap: f32 = m.parse().map_err(|_| anyhow!("--count-cap: bad float {m:?}"))?;
+        lp.push_global_row(vec![1.0; lp.nnz()], cap);
+    }
+    if args.flag("precondition") {
+        jacobi_row_normalize(&mut lp);
+    }
+    let lp = Arc::new(lp);
+    eprintln!(
+        "distributed: I={} J={} nnz={} dual_dim={} shards={shards} exec={exec}",
+        lp.num_sources(),
+        lp.num_dests(),
+        lp.nnz(),
+        lp.dual_dim()
+    );
+
+    let strategy = exec_strategy(args, obj_threads)?;
+    let out = solve_distributed_with(lp.clone(), strategy, shards, &opts)?;
+    println!("{}", solve_report(&format!("dist-{exec}-{shards}shard"), &out.result));
+    print_distributed_reports(&out, lp.dual_dim());
+
+    if args.flag("verify") {
+        if exec != "slab" {
+            return Err(anyhow!("--verify requires --exec slab (the bit-identity contract)"));
+        }
+        let mut one = SlabCpuObjective::new(&lp, obj_threads).map_err(anyhow::Error::msg)?;
+        let mut agd = Agd::default();
+        let r1 = agd.maximize(&mut one, &vec![0.0f32; lp.dual_dim()], &opts);
+        anyhow::ensure!(
+            r1.lam.len() == out.result.lam.len()
+                && r1
+                    .lam
+                    .iter()
+                    .zip(&out.result.lam)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{shards}-shard solve diverged from the single-shard slab solve"
+        );
+        println!("verified: {shards}-shard solve bit-identical to single-shard slab");
+    }
+    if let Some(csv) = args.get("csv") {
+        write_trajectory(csv, &format!("dist_{exec}_{shards}"), &out.result)?;
     }
     Ok(())
 }
@@ -506,13 +633,15 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     let max_iters = args.usize_or("iters", 2_000)?;
     let out_dir = args.get_or("out-dir", "results").to_string();
     let backend_spec = args.get_or("backend", "slab");
-    let backend = CpuBackend::parse(backend_spec)
-        .ok_or_else(|| anyhow!("--backend: unknown {backend_spec:?} (slab|reference)"))?;
+    let backend = CpuBackend::parse(backend_spec).ok_or_else(|| {
+        anyhow!("--backend: unknown {backend_spec:?} (slab|sharded-slab|reference)")
+    })?;
     let obj_threads = args.usize_or("obj-threads", 1)?;
+    let shards = args.usize_or("shards", 1)?;
 
     eprintln!(
         "engine-batch: I={} J={} ν={} seed={} jobs={jobs} threads={threads} perturb={perturb} \
-         backend={}",
+         backend={} shards={shards}",
         cfg.num_requests,
         cfg.num_resources,
         cfg.avg_nnz_per_row,
@@ -549,6 +678,7 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         cache_capacity: 0, // disables warm starting
         backend,
         objective_threads: obj_threads,
+        shards,
     });
     let cold_results: Vec<_> = perturbation_sequence(&base, &spec, jobs, seq_seed)
         .into_iter()
@@ -564,6 +694,7 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         cache_capacity: 16,
         backend,
         objective_threads: obj_threads,
+        shards,
     });
     let warm_jobs: Vec<SolveJob> = perturbation_sequence(&base, &spec, jobs, seq_seed)
         .into_iter()
@@ -590,6 +721,7 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         .meta("warm_tail", JsonValue::UInt(warm_tail as u64))
         .meta("backend", JsonValue::Str(backend.name().into()))
         .meta("objective_threads", JsonValue::UInt(obj_threads as u64))
+        .meta("shards", JsonValue::UInt(shards as u64))
         .meta("seed", JsonValue::UInt(cfg.seed));
 
     println!(

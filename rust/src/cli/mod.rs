@@ -15,6 +15,7 @@ pub fn run(args: Args) -> Result<()> {
     }
     match args.subcommand.as_deref().unwrap() {
         "solve" => commands::cmd_solve(&args),
+        "distributed" => commands::cmd_distributed(&args),
         "parity" => commands::cmd_parity(&args),
         "ablation-precond" => commands::cmd_ablation_precond(&args),
         "ablation-gamma" => commands::cmd_ablation_gamma(&args),

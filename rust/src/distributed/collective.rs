@@ -6,10 +6,22 @@
 //! broadcasts of the (λ₁, λ₂) momentum pair — independent of nnz and the
 //! per-GPU column split. These collectives move the same logical payloads
 //! over channels and count every byte so the benches can assert the claim
-//! (experiment E10).
+//! (experiments E10/E15).
+//!
+//! **Deterministic chunk-ordered allreduce** (the sharded-slab reduce,
+//! DESIGN.md §6): slab shards own contiguous ascending ranges of the
+//! layout's fixed chunk grid and send one λ-sized partial per chunk.
+//! [`reduce_chunk_partials`] merges them in global chunk-index order —
+//! the exact f32 summation sequence of a single-shard slab evaluation —
+//! so an S-shard solve is bit-identical to the 1-shard solve at any S.
+//! The payload is `num_chunks × (|λ| + 2)` values: proportional to the
+//! dual dimension and the (fixed, ≈`sparse::slabs::MAX_CHUNKS`) grid
+//! size, never to shard edge counts.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+use crate::backend::slab_cpu::ChunkPartial;
 
 /// Byte/op counters shared between leader and workers.
 #[derive(Debug, Default)]
@@ -54,6 +66,19 @@ impl CommStats {
             .fetch_add(4 * n_floats as u64 + 8 * n_scalars as u64, Ordering::Relaxed);
     }
 
+    /// Record one chunk-segmented SUM-reduce to rank 0: `segments`
+    /// ordered segments of `n_floats` + `n_scalars` each — the wire shape
+    /// of [`reduce_chunk_partials`]. Counted as ONE op (it replaces the
+    /// flat gradient reduce); its payload scales with the fixed chunk-grid
+    /// size, never with shard edge counts.
+    pub fn record_segmented_reduce(&self, segments: usize, n_floats: usize, n_scalars: usize) {
+        self.reduce_ops.fetch_add(1, Ordering::Relaxed);
+        self.reduce_bytes.fetch_add(
+            segments as u64 * (4 * n_floats as u64 + 8 * n_scalars as u64),
+            Ordering::Relaxed,
+        );
+    }
+
     /// Record the one-time data distribution (paper §6: rank 0 generates
     /// and partitions on CPU, scatters column partitions).
     pub fn record_scatter(&self, bytes: u64) {
@@ -82,6 +107,37 @@ impl CommSnapshot {
         }
         (self.reduce_bytes + self.bcast_bytes) as f64 / iters as f64
     }
+}
+
+/// Deterministic chunk-index-ordered allreduce (the sharded-slab reduce).
+///
+/// `parts_by_rank` holds each rank's per-chunk partials in ascending
+/// chunk order; ranks own contiguous ascending chunk ranges, so iterating
+/// ranks in order and chunks within each rank visits the global chunk
+/// grid in index order. The elementwise f32 adds below are therefore the
+/// **same summation sequence** as the single-shard
+/// `backend::SlabCpuObjective::calculate` merge — bit-identical results
+/// at any shard count, the sharded analogue of NCCL's order-fixed tree
+/// reduction. Returns (Σ Ax, Σ cᵀx, Σ v²‖x‖²) with `b` NOT subtracted
+/// (the leader owns `b`).
+pub fn reduce_chunk_partials(
+    parts_by_rank: &[Vec<ChunkPartial>],
+    dual_dim: usize,
+) -> (Vec<f32>, f64, f64) {
+    let mut ax = vec![0.0f32; dual_dim];
+    let mut cx = 0.0f64;
+    let mut xsq = 0.0f64;
+    for parts in parts_by_rank {
+        for p in parts {
+            debug_assert_eq!(p.ax.len(), dual_dim);
+            for (g, v) in ax.iter_mut().zip(&p.ax) {
+                *g += *v;
+            }
+            cx += p.cx;
+            xsq += p.xsq;
+        }
+    }
+    (ax, cx, xsq)
 }
 
 /// α–β interconnect cost model for reporting estimated wire time of a
@@ -146,6 +202,44 @@ mod tests {
         let snap = s.snapshot();
         // per iter: 2*200 + 200+16 = 616
         assert!((snap.bytes_per_iter(10) - 616.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn segmented_reduce_counts_one_op_with_per_chunk_payload() {
+        let s = CommStats::new();
+        s.record_segmented_reduce(7, 100, 2);
+        let snap = s.snapshot();
+        assert_eq!(snap.reduce_ops, 1);
+        assert_eq!(snap.reduce_bytes, 7 * (4 * 100 + 16));
+    }
+
+    #[test]
+    fn chunk_partial_reduce_is_rank_then_chunk_ordered() {
+        // the merged sum must equal a single pass over the concatenated
+        // chunk list — bit for bit (f32 addition is order-sensitive)
+        let chunk = |seed: f32| ChunkPartial {
+            ax: (0..5).map(|i| seed + i as f32 * 0.1).collect(),
+            cx: seed as f64,
+            xsq: (seed * 2.0) as f64,
+        };
+        let by_rank = vec![
+            vec![chunk(1.0), chunk(2.0)],
+            vec![],
+            vec![chunk(3.0)],
+        ];
+        let (ax, cx, xsq) = reduce_chunk_partials(&by_rank, 5);
+        let mut eax = vec![0.0f32; 5];
+        let (mut ecx, mut exsq) = (0.0f64, 0.0f64);
+        for p in by_rank.iter().flatten() {
+            for (g, v) in eax.iter_mut().zip(&p.ax) {
+                *g += *v;
+            }
+            ecx += p.cx;
+            exsq += p.xsq;
+        }
+        assert!(ax.iter().zip(&eax).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(cx.to_bits(), ecx.to_bits());
+        assert_eq!(xsq.to_bits(), exsq.to_bits());
     }
 
     #[test]

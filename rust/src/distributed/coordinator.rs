@@ -5,8 +5,11 @@
 //! multi-device solves — the paper's point that the solve loop is shared
 //! while execution strategy varies. Each `calculate` performs the paper's
 //! §6 iteration: two |λ|-sized broadcasts (the momentum pair), local shard
-//! evaluation on every device, and one SUM-reduce of the gradient plus two
-//! scalars.
+//! evaluation on every device, and one SUM-reduce of λ-sized payloads plus
+//! scalars. Under the default slab strategy the reduce is the
+//! chunk-index-ordered allreduce, so the distributed solve is
+//! bit-identical to the single-shard slab solve; under HLO it is the
+//! rank-ordered shard-gradient reduce of the artifact path.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -14,7 +17,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::collective::CommSnapshot;
-use super::worker::WorkerPool;
+use super::worker::{ExecStrategy, WorkerPool};
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
 use crate::solver::{Agd, Maximizer, SolveOptions, SolveResult};
 
@@ -26,10 +29,23 @@ pub struct DistributedObjective {
 }
 
 impl DistributedObjective {
+    /// Spawn an HLO-strategy pool (artifact-gated). Kept as the
+    /// historical entry point; `new_with` selects the strategy.
     pub fn new(lp: Arc<MatchingLp>, artifacts: impl Into<PathBuf>, num_workers: usize) -> Result<Self> {
+        Self::new_with(lp, ExecStrategy::Hlo { artifacts: artifacts.into() }, num_workers)
+    }
+
+    /// Spawn a pool with an explicit [`ExecStrategy`]. The slab strategy
+    /// runs everywhere (no artifacts) and is the CPU default for
+    /// distributed solves.
+    pub fn new_with(
+        lp: Arc<MatchingLp>,
+        strategy: ExecStrategy,
+        num_workers: usize,
+    ) -> Result<Self> {
         let b = lp.full_b();
         let dual_dim = lp.dual_dim();
-        let pool = WorkerPool::spawn(lp, artifacts, num_workers)?;
+        let pool = WorkerPool::spawn(lp, strategy, num_workers)?;
         Ok(DistributedObjective { pool, b, last_query: vec![0.0; dual_dim] })
     }
 
@@ -45,6 +61,16 @@ impl DistributedObjective {
         &self.pool.shards
     }
 
+    /// Strategy name: "slab" | "hlo".
+    pub fn strategy(&self) -> &'static str {
+        self.pool.strategy
+    }
+
+    /// Size of the global fixed chunk grid (slab strategy; 0 under HLO).
+    pub fn num_chunks(&self) -> usize {
+        self.pool.num_chunks()
+    }
+
     /// Per-iteration modeled parallel compute times (max over workers).
     pub fn iter_compute_max_ms(&self) -> &[f64] {
         &self.pool.iter_compute_max_ms
@@ -53,6 +79,11 @@ impl DistributedObjective {
     /// Per-iteration serialized compute times (sum over workers).
     pub fn iter_compute_sum_ms(&self) -> &[f64] {
         &self.pool.iter_compute_sum_ms
+    }
+
+    /// Cumulative per-rank shard evaluation CPU time (ms).
+    pub fn shard_eval_ms(&self) -> &[f64] {
+        &self.pool.shard_eval_ms
     }
 }
 
@@ -78,7 +109,10 @@ impl ObjectiveFunction for DistributedObjective {
     }
 
     fn name(&self) -> &'static str {
-        "distributed-slab"
+        match self.pool.strategy {
+            "slab" => "sharded-slab",
+            _ => "distributed-hlo",
+        }
     }
 }
 
@@ -88,20 +122,37 @@ pub struct DistributedSolve {
     pub result: SolveResult,
     pub comm: CommSnapshot,
     pub num_workers: usize,
+    /// Execution strategy the pool ran ("slab" | "hlo").
+    pub strategy: &'static str,
     /// Per-iteration max-over-workers compute ms (true-parallel model).
     pub iter_compute_max_ms: Vec<f64>,
     /// Per-iteration sum-over-workers compute ms (serialized measurement).
     pub iter_compute_sum_ms: Vec<f64>,
+    /// Cumulative per-rank shard evaluation CPU time (ms).
+    pub shard_eval_ms: Vec<f64>,
 }
 
-/// End-to-end distributed solve with the production AGD maximizer.
+/// End-to-end distributed solve on the HLO strategy (artifact-gated) —
+/// the historical entry point; see [`solve_distributed_with`].
 pub fn solve_distributed(
     lp: Arc<MatchingLp>,
     artifacts: impl Into<PathBuf>,
     num_workers: usize,
     opts: &SolveOptions,
 ) -> Result<DistributedSolve> {
-    let mut obj = DistributedObjective::new(lp, artifacts, num_workers)?;
+    solve_distributed_with(lp, ExecStrategy::Hlo { artifacts: artifacts.into() }, num_workers, opts)
+}
+
+/// End-to-end distributed solve with the production AGD maximizer on an
+/// explicit [`ExecStrategy`]. With `ExecStrategy::Slab` the result is
+/// bit-identical to the single-shard slab solve at any worker count.
+pub fn solve_distributed_with(
+    lp: Arc<MatchingLp>,
+    strategy: ExecStrategy,
+    num_workers: usize,
+    opts: &SolveOptions,
+) -> Result<DistributedSolve> {
+    let mut obj = DistributedObjective::new_with(lp, strategy, num_workers)?;
     let init = vec![0.0f32; obj.dual_dim()];
     let mut agd = Agd::default();
     let result = agd.maximize(&mut obj, &init, opts);
@@ -111,8 +162,10 @@ pub fn solve_distributed(
         result,
         comm,
         num_workers,
+        strategy: obj.pool.strategy,
         iter_compute_max_ms: obj.pool.iter_compute_max_ms.clone(),
         iter_compute_sum_ms: obj.pool.iter_compute_sum_ms.clone(),
+        shard_eval_ms: obj.pool.shard_eval_ms.clone(),
     })
 }
 
@@ -257,6 +310,131 @@ mod tests {
         let lp = Arc::new(small_lp());
         let err = DistributedObjective::new(lp, "/nonexistent/artifacts", 2);
         assert!(err.is_err());
+    }
+
+    // ---- slab strategy: runs everywhere, no artifacts needed ----------
+
+    #[test]
+    fn slab_strategy_eval_is_bit_identical_to_single_shard() {
+        let lp = Arc::new(small_lp());
+        let mut single = crate::backend::SlabCpuObjective::new(&lp, 1).unwrap();
+        let mut dist =
+            DistributedObjective::new_with(lp.clone(), ExecStrategy::Slab { threads: 1 }, 3)
+                .unwrap();
+        assert_eq!(dist.strategy(), "slab");
+        assert_eq!(dist.name(), "sharded-slab");
+        assert!(dist.num_chunks() > 0);
+        let lam = vec![0.03f32; lp.dual_dim()];
+        let rs = single.calculate(&lam, 0.05);
+        let rd = dist.calculate(&lam, 0.05);
+        assert_eq!(rs.dual_obj.to_bits(), rd.dual_obj.to_bits());
+        assert_eq!(rs.cx.to_bits(), rd.cx.to_bits());
+        for (a, b) in rs.grad.iter().zip(&rd.grad) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let xs = single.primal(&lam, 0.05);
+        let xd = dist.primal(&lam, 0.05);
+        for (a, b) in xs.iter().zip(&xd) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn slab_strategy_solve_is_bit_identical_to_single_shard() {
+        let lp = Arc::new(small_lp());
+        let opts = SolveOptions {
+            max_iters: 60,
+            gamma: GammaSchedule::Fixed(0.05),
+            max_step_size: 1e-2,
+            initial_step_size: 1e-4,
+            ..Default::default()
+        };
+        let mut single = crate::backend::SlabCpuObjective::new(&lp, 1).unwrap();
+        let mut agd = Agd::default();
+        let r1 = agd.maximize(&mut single, &vec![0.0; lp.dual_dim()], &opts);
+        for workers in [2usize, 4] {
+            let out = solve_distributed_with(
+                lp.clone(),
+                ExecStrategy::Slab { threads: 1 },
+                workers,
+                &opts,
+            )
+            .unwrap();
+            assert_eq!(out.strategy, "slab");
+            assert_eq!(out.result.lam.len(), r1.lam.len());
+            for (i, (a, b)) in out.result.lam.iter().zip(&r1.lam).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{workers}-shard λ[{i}] diverged");
+            }
+            assert_eq!(
+                out.result.trajectory.last().unwrap().dual_obj.to_bits(),
+                r1.trajectory.last().unwrap().dual_obj.to_bits()
+            );
+            assert_eq!(out.shard_eval_ms.len(), workers);
+        }
+    }
+
+    #[test]
+    fn slab_strategy_comm_is_lambda_and_chunk_sized() {
+        let lp = Arc::new(small_lp());
+        let dual = lp.dual_dim();
+        let iters = 10usize;
+        let opts = SolveOptions {
+            max_iters: iters,
+            gamma: GammaSchedule::Fixed(0.01),
+            ..Default::default()
+        };
+        let out =
+            solve_distributed_with(lp, ExecStrategy::Slab { threads: 1 }, 2, &opts).unwrap();
+        let c = out.comm;
+        // per iter: 2 bcasts + 1 segmented reduce; plus the one-time b bcast
+        assert_eq!(c.bcast_ops, 2 * iters as u64 + 1, "{c:?}");
+        assert_eq!(c.reduce_ops, iters as u64);
+        // reduce payload = chunks × (4·dual + 16) per iteration
+        assert_eq!(c.reduce_bytes % iters as u64, 0);
+        let per_iter_reduce = c.reduce_bytes / iters as u64;
+        assert_eq!(per_iter_reduce % (4 * dual as u64 + 16), 0);
+        assert!(per_iter_reduce >= 4 * dual as u64 + 16);
+    }
+
+    #[test]
+    fn slab_strategy_worker_count_exceeding_chunks_is_ok() {
+        let lp = Arc::new(generate(&SyntheticConfig {
+            num_requests: 12,
+            num_resources: 8,
+            avg_nnz_per_row: 2.0,
+            seed: 2,
+            ..Default::default()
+        }));
+        let mut dist =
+            DistributedObjective::new_with(lp.clone(), ExecStrategy::Slab { threads: 1 }, 6)
+                .unwrap();
+        let lam = vec![0.0f32; lp.dual_dim()];
+        let r = dist.calculate(&lam, 0.1);
+        assert_eq!(r.grad.len(), lp.dual_dim());
+    }
+
+    #[test]
+    fn slab_strategy_rejects_unbuildable_layout() {
+        use crate::projection::ProjectionKind;
+        use crate::sparse::slabs::MAX_WIDTH;
+        use crate::sparse::BlockedMatrix;
+        let deg = MAX_WIDTH + 1;
+        let a = BlockedMatrix {
+            num_sources: 1,
+            num_dests: deg,
+            num_families: 1,
+            src_ptr: vec![0, deg],
+            dest_idx: (0..deg as u32).collect(),
+            a: vec![vec![1.0; deg]],
+        };
+        let lp = Arc::new(MatchingLp::new_uniform(
+            a,
+            vec![-1.0; deg],
+            vec![0.5; deg],
+            ProjectionKind::Simplex,
+        ));
+        let err = DistributedObjective::new_with(lp, ExecStrategy::Slab { threads: 1 }, 2);
+        assert!(err.is_err(), "overwide non-separable block must error loudly");
     }
 }
 

@@ -1,13 +1,37 @@
 //! Distributed execution (paper §6 "Distributed GPU communication"):
-//! balanced column partitioning, worker threads as simulated devices, and
+//! balanced shard partitioning, worker threads as simulated devices, and
 //! λ-only collectives with full byte accounting.
+//!
+//! Workers run one of two execution strategies ([`ExecStrategy`]):
+//!
+//! - **`Slab`** (the CPU default): each worker owns a
+//!   `backend::SlabCpuObjective` view over a contiguous range of the
+//!   layout's fixed chunk grid, partitioned by **real-edge** count
+//!   ([`balanced_partition`] over the grid's cumulative edge pointer).
+//!   Per-shard gradients travel as per-chunk λ-sized partials and merge
+//!   through the deterministic chunk-index-ordered allreduce
+//!   ([`reduce_chunk_partials`]), so an S-shard solve is **bit-identical**
+//!   to the 1-shard slab solve. Needs no artifacts; exercised by
+//!   `tests/distributed_parity.rs` and experiment E15
+//!   (`bench_shard_scaling`).
+//! - **`Hlo`**: per-worker PJRT executables over a balanced column
+//!   (source-range) split — the accelerated, artifact-gated path
+//!   (experiments E4/E10).
+//!
+//! Either way, per-iteration traffic is λ-proportional — two |λ|
+//! broadcasts (the momentum pair) and one reduce whose payload never
+//! scales with shard edge counts — which is the paper's core distributed
+//! claim. `collective::CommStats` counts every logical byte so benches
+//! can assert it.
 
 pub mod collective;
 pub mod coordinator;
 pub mod partition;
 pub mod worker;
 
-pub use collective::{CommSnapshot, CommStats, LinkModel};
-pub use coordinator::{solve_distributed, DistributedObjective, DistributedSolve};
+pub use collective::{reduce_chunk_partials, CommSnapshot, CommStats, LinkModel};
+pub use coordinator::{
+    solve_distributed, solve_distributed_with, DistributedObjective, DistributedSolve,
+};
 pub use partition::{balanced_partition, imbalance, shard_nnz};
-pub use worker::{WorkerPool, WorkerMsg};
+pub use worker::{ExecStrategy, WorkerMsg, WorkerPool};

@@ -1,13 +1,24 @@
-//! Balanced column (source) partitioning across devices (paper §6:
+//! Balanced contiguous-range partitioning across devices (paper §6:
 //! "Columns of T (and c, consistently) are partitioned across devices in a
 //! balanced column split of the CSC-format matrices").
 //!
-//! Shards are contiguous source ranges balanced by nonzero count — source
-//! blocks are atomic (a block's simple constraint can't span devices).
+//! [`balanced_partition`] splits any cumulative-weight pointer into
+//! contiguous ranges of approximately equal weight. Two callers:
+//!
+//! - the HLO worker pool passes the matrix's `src_ptr` — shards are
+//!   source ranges balanced by nonzero count, and source blocks stay
+//!   atomic (a block's simple constraint can't span devices);
+//! - the slab paths (`backend::sharded`, the slab worker strategy) pass
+//!   the chunk grid's cumulative **real-edge** pointer
+//!   (`SlabLayout::chunk_edge_ptr`) — shards are chunk ranges balanced by
+//!   real edge count, not column count, so one hot wide bucket cannot
+//!   skew the split, and contiguity in chunk index is exactly what the
+//!   deterministic chunk-ordered allreduce requires.
 
-/// Partition sources [0, I) into `n` contiguous shards with approximately
-/// equal edge counts. Returns (lo, hi) pairs; every source appears in
-/// exactly one shard. Empty shards are allowed when n > I.
+/// Partition items [0, N) — sources or slab chunks, per the pointer given
+/// — into `n` contiguous shards with approximately equal cumulative
+/// weight. Returns (lo, hi) pairs; every item appears in exactly one
+/// shard. Empty shards are allowed when n > N.
 pub fn balanced_partition(src_ptr: &[usize], n: usize) -> Vec<(usize, usize)> {
     assert!(n >= 1);
     let num_sources = src_ptr.len() - 1;

@@ -1,12 +1,26 @@
-//! Worker pool: one OS thread per simulated device, each owning a column
-//! (source-range) shard and its own PJRT engine + compiled executables —
-//! the stand-in for the paper's one-process-per-GPU torch.distributed
-//! setup (DESIGN.md §5).
+//! Worker pool: one OS thread per simulated device, each owning a shard
+//! of the problem — the stand-in for the paper's one-process-per-GPU
+//! torch.distributed setup (DESIGN.md §5).
 //!
-//! Protocol per iteration (paper §6):
+//! Two execution strategies share the pool ([`ExecStrategy`]):
+//!
+//! - **`Slab`** (default on CPU): the leader builds the full
+//!   [`SlabLayout`] once (paper §6: rank 0 partitions on CPU), cuts its
+//!   fixed chunk grid into contiguous ranges balanced by real-edge count,
+//!   and each worker owns a [`SlabCpuObjective`] shard view with its own
+//!   thread budget. Workers return **per-chunk** partial reductions; the
+//!   leader merges them in global chunk-index order
+//!   (`collective::reduce_chunk_partials`), making the S-shard evaluation
+//!   bit-identical to the single-shard slab evaluation.
+//! - **`Hlo`**: each worker compiles its own PJRT executables over a
+//!   balanced column (source-range) split — the accelerated,
+//!   artifact-gated path. Workers return one shard-summed gradient,
+//!   merged in rank order.
+//!
+//! Protocol per iteration (paper §6), identical for both strategies:
 //!   leader --2 broadcasts (λ₁, λ₂)--> workers
 //!   workers: local gather → slab kernels → scatter (no cross-device deps)
-//!   workers --reduce SUM (grad, 2 scalars)--> leader
+//!   workers --reduce SUM (λ-sized payloads + scalars)--> leader
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -15,10 +29,40 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use super::collective::CommStats;
+use super::collective::{reduce_chunk_partials, CommStats};
 use super::partition::balanced_partition;
+use crate::backend::sharded::SlabShardPlan;
+use crate::backend::slab_cpu::{ChunkPartial, SlabCpuObjective};
 use crate::problem::MatchingLp;
 use crate::runtime::HloObjective;
+use crate::sparse::slabs::{SlabChunk, SlabLayout};
+use crate::util::timer::thread_cpu_time_ms;
+
+/// How workers execute their shard (see module docs).
+pub enum ExecStrategy {
+    /// Slab-native CPU objective per worker over a chunk-grid range —
+    /// runs everywhere, bit-identical to single-shard slab.
+    Slab {
+        /// Evaluation pool width inside each worker (1 = sequential;
+        /// results are bit-identical at any width).
+        threads: usize,
+    },
+    /// Per-shard PJRT/HLO executables over a source-range split
+    /// (artifact-gated).
+    Hlo {
+        /// AOT artifact directory (`runtime::default_artifacts_dir`).
+        artifacts: PathBuf,
+    },
+}
+
+impl ExecStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecStrategy::Slab { .. } => "slab",
+            ExecStrategy::Hlo { .. } => "hlo",
+        }
+    }
+}
 
 /// Leader → worker commands. `momentum` is the second broadcast payload of
 /// the paper's protocol (the λ₁ iterate of the momentum pair); workers use
@@ -36,19 +80,13 @@ pub enum Cmd {
 /// the interconnect model (DESIGN.md §5 Substitutions).
 pub enum WorkerMsg {
     Ready { rank: usize, buckets: usize, rows: usize, real_edges: usize, padded_edges: usize },
+    /// HLO strategy: one shard-summed gradient per worker.
     Grad { rank: usize, ax: Vec<f32>, cx: f64, xsq: f64, compute_ms: f64 },
+    /// Slab strategy: per-chunk partials in ascending chunk order — the
+    /// worker's segment of the chunk-ordered allreduce.
+    GradChunks { rank: usize, parts: Vec<ChunkPartial>, compute_ms: f64 },
     Primal { rank: usize, x: Vec<f32> },
     Error { rank: usize, message: String },
-}
-
-/// Per-thread CPU time in milliseconds (contention-immune; used for the
-/// modeled-parallel device time).
-fn thread_cpu_time_ms() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
-    }
-    ts.tv_sec as f64 * 1e3 + ts.tv_nsec as f64 / 1e6
 }
 
 pub struct WorkerPool {
@@ -56,17 +94,24 @@ pub struct WorkerPool {
     msg_rx: Receiver<WorkerMsg>,
     handles: Vec<JoinHandle<()>>,
     pub stats: Arc<CommStats>,
+    /// Per-rank shard ranges: source ranges under `Hlo`, chunk-grid
+    /// ranges under `Slab` (both contiguous and ascending by rank).
     pub shards: Vec<(usize, usize)>,
+    /// Strategy name ("slab" | "hlo") for diagnostics.
+    pub strategy: &'static str,
     /// Per-eval modeled parallel compute time: max over workers of the
-    /// shard-local wall time (what N real devices would take).
+    /// shard-local thread CPU time (what N real devices would take).
     pub iter_compute_max_ms: Vec<f64>,
     /// Per-eval sum over workers (the serialized single-core cost).
     pub iter_compute_sum_ms: Vec<f64>,
+    /// Cumulative per-rank shard evaluation CPU time (ms).
+    pub shard_eval_ms: Vec<f64>,
+    slab: Option<SlabShardPlan>,
     dual_dim: usize,
     nnz: usize,
 }
 
-fn worker_main(
+fn worker_main_hlo(
     rank: usize,
     lp: Arc<MatchingLp>,
     artifacts: PathBuf,
@@ -126,38 +171,113 @@ fn worker_main(
     }
 }
 
+fn worker_main_slab(
+    rank: usize,
+    lp: Arc<MatchingLp>,
+    layout: Arc<SlabLayout>,
+    grid: Arc<Vec<SlabChunk>>,
+    range: (usize, usize),
+    threads: usize,
+    cmd_rx: Receiver<Cmd>,
+    msg_tx: Sender<WorkerMsg>,
+) {
+    let mut obj =
+        SlabCpuObjective::new_shard(&lp, layout.clone(), &grid, range.0, range.1, threads);
+    let chunks = &grid[range.0..range.1];
+    let mut buckets: Vec<usize> = chunks.iter().map(|c| c.bucket).collect();
+    buckets.dedup();
+    let _ = msg_tx.send(WorkerMsg::Ready {
+        rank,
+        buckets: buckets.len(),
+        rows: chunks.iter().map(|c| c.rows()).sum(),
+        real_edges: chunks.iter().map(|c| layout.chunk_real_edges(c)).sum(),
+        padded_edges: chunks.iter().map(|c| c.rows() * layout.buckets[c.bucket].width).sum(),
+    });
+    for cmd in cmd_rx {
+        match cmd {
+            Cmd::Eval { query, momentum, gamma } => {
+                let _ = &momentum; // momentum pair received (traffic parity)
+                let t0 = thread_cpu_time_ms();
+                let parts = obj.eval_chunk_partials(&query, gamma);
+                let compute_ms = thread_cpu_time_ms() - t0;
+                let _ = msg_tx.send(WorkerMsg::GradChunks { rank, parts, compute_ms });
+            }
+            Cmd::Primal { query, gamma } => {
+                // full-nnz buffer with only this shard's edges populated;
+                // the leader copies the owned slots by assignment
+                let mut x = vec![0.0f32; lp.nnz()];
+                obj.primal_into(&query, gamma, &mut x);
+                let _ = msg_tx.send(WorkerMsg::Primal { rank, x });
+            }
+            Cmd::Shutdown => return,
+        }
+    }
+}
+
 impl WorkerPool {
-    /// Spawn `num_workers` device threads over a balanced column split,
-    /// blocking until every worker has built + compiled its shard.
+    /// Spawn `num_workers` device threads over a balanced shard split for
+    /// `strategy`, blocking until every worker has built (and, for HLO,
+    /// compiled) its shard.
     pub fn spawn(
         lp: Arc<MatchingLp>,
-        artifacts: impl Into<PathBuf>,
+        strategy: ExecStrategy,
         num_workers: usize,
     ) -> Result<WorkerPool> {
         assert!(num_workers >= 1);
-        let artifacts = artifacts.into();
-        let shards = balanced_partition(&lp.a.src_ptr, num_workers);
         let stats = CommStats::new();
         let (msg_tx, msg_rx) = channel::<WorkerMsg>();
         let mut cmd_txs = Vec::with_capacity(num_workers);
         let mut handles = Vec::with_capacity(num_workers);
 
-        for (rank, &shard) in shards.iter().enumerate() {
-            let (tx, rx) = channel::<Cmd>();
-            cmd_txs.push(tx);
-            let lp2 = lp.clone();
-            let art = artifacts.clone();
-            let mtx = msg_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dualip-worker-{rank}"))
-                    .spawn(move || worker_main(rank, lp2, art, shard, rx, mtx))?,
-            );
-            // one-time data distribution accounting (edges × (idx + cost +
-            // m coefficient planes) + shared b broadcast)
-            let edges = lp.a.src_ptr[shard.1] - lp.a.src_ptr[shard.0];
-            stats.record_scatter((edges * (4 + 4 + 4 * lp.num_families())) as u64);
-        }
+        let (shards, slab) = match &strategy {
+            ExecStrategy::Hlo { artifacts } => {
+                let shards = balanced_partition(&lp.a.src_ptr, num_workers);
+                for (rank, &shard) in shards.iter().enumerate() {
+                    let (tx, rx) = channel::<Cmd>();
+                    cmd_txs.push(tx);
+                    let lp2 = lp.clone();
+                    let art = artifacts.clone();
+                    let mtx = msg_tx.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("dualip-worker-{rank}"))
+                            .spawn(move || worker_main_hlo(rank, lp2, art, shard, rx, mtx))?,
+                    );
+                    // one-time data distribution accounting (edges × (idx +
+                    // cost + m coefficient planes) + shared b broadcast)
+                    let edges = lp.a.src_ptr[shard.1] - lp.a.src_ptr[shard.0];
+                    stats.record_scatter((edges * (4 + 4 + 4 * lp.num_families())) as u64);
+                }
+                (shards, None)
+            }
+            ExecStrategy::Slab { threads } => {
+                // Rank 0 builds the canonical layout + grid and cuts
+                // contiguous chunk ranges balanced by real edge count —
+                // the SAME plan construction the in-process sharded
+                // objective uses, so the two paths stay bit-equal by
+                // construction.
+                let plan =
+                    SlabShardPlan::build(&lp, num_workers).map_err(anyhow::Error::msg)?;
+                let threads = *threads;
+                for (rank, &range) in plan.ranges.iter().enumerate() {
+                    let (tx, rx) = channel::<Cmd>();
+                    cmd_txs.push(tx);
+                    let lp2 = lp.clone();
+                    let lay = plan.layout.clone();
+                    let gr = plan.grid.clone();
+                    let mtx = msg_tx.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("dualip-worker-{rank}"))
+                            .spawn(move || {
+                                worker_main_slab(rank, lp2, lay, gr, range, threads, rx, mtx)
+                            })?,
+                    );
+                }
+                plan.record_scatter(&lp, &stats);
+                (plan.ranges.clone(), Some(plan))
+            }
+        };
         stats.record_broadcast(lp.dual_dim()); // b broadcast (once)
 
         // wait for readiness
@@ -178,8 +298,11 @@ impl WorkerPool {
             handles,
             stats,
             shards,
+            strategy: strategy.name(),
             iter_compute_max_ms: Vec::new(),
             iter_compute_sum_ms: Vec::new(),
+            shard_eval_ms: vec![0.0; num_workers],
+            slab,
             dual_dim: lp.dual_dim(),
             nnz: lp.nnz(),
         })
@@ -187,6 +310,11 @@ impl WorkerPool {
 
     pub fn num_workers(&self) -> usize {
         self.cmd_txs.len()
+    }
+
+    /// Size of the global fixed chunk grid (slab strategy; 0 under HLO).
+    pub fn num_chunks(&self) -> usize {
+        self.slab.as_ref().map_or(0, |p| p.grid.len())
     }
 
     /// One distributed dual evaluation: 2 broadcasts + compute + 1 reduce.
@@ -201,15 +329,25 @@ impl WorkerPool {
             tx.send(Cmd::Eval { query: q.clone(), momentum: mo.clone(), gamma })
                 .map_err(|_| anyhow!("worker died"))?;
         }
-        // Collect per-rank, then reduce in RANK order: a fixed reduction
-        // order keeps the f32 sum — and therefore the whole AGD trajectory
-        // — bit-deterministic regardless of thread scheduling (NCCL's tree
-        // reduction is likewise order-fixed).
-        let mut parts: Vec<Option<(Vec<f32>, f64, f64, f64)>> = (0..self.num_workers()).map(|_| None).collect();
-        for _ in 0..self.num_workers() {
+        // Collect per-rank, then reduce in a FIXED order: rank order for
+        // shard-summed HLO gradients, global chunk-index order for slab
+        // chunk partials (ranks own contiguous ascending chunk ranges).
+        // A fixed reduction order keeps the f32 sum — and therefore the
+        // whole AGD trajectory — bit-deterministic regardless of thread
+        // scheduling (NCCL's tree reduction is likewise order-fixed).
+        let n = self.num_workers();
+        let mut sums: Vec<Option<(Vec<f32>, f64, f64)>> = (0..n).map(|_| None).collect();
+        let mut chunked: Vec<Option<Vec<ChunkPartial>>> = (0..n).map(|_| None).collect();
+        let mut times = vec![0.0f64; n];
+        for _ in 0..n {
             match self.msg_rx.recv().map_err(|_| anyhow!("worker channel closed"))? {
-                WorkerMsg::Grad { rank, ax: g, cx: c, xsq: s, compute_ms } => {
-                    parts[rank] = Some((g, c, s, compute_ms));
+                WorkerMsg::Grad { rank, ax, cx, xsq, compute_ms } => {
+                    sums[rank] = Some((ax, cx, xsq));
+                    times[rank] = compute_ms;
+                }
+                WorkerMsg::GradChunks { rank, parts, compute_ms } => {
+                    chunked[rank] = Some(parts);
+                    times[rank] = compute_ms;
                 }
                 WorkerMsg::Error { rank, message } => {
                     return Err(anyhow!("worker {rank} failed: {message}"));
@@ -217,18 +355,32 @@ impl WorkerPool {
                 _ => return Err(anyhow!("unexpected worker message")),
             }
         }
-        let mut ax = vec![0.0f32; self.dual_dim];
-        let (mut cx, mut xsq) = (0.0f64, 0.0f64);
+        let (ax, cx, xsq) = if self.slab.is_some() {
+            let by_rank: Vec<Vec<ChunkPartial>> = chunked
+                .into_iter()
+                .map(|p| p.expect("missing rank result"))
+                .collect();
+            let segments: usize = by_rank.iter().map(|p| p.len()).sum();
+            self.stats.record_segmented_reduce(segments, self.dual_dim, 2);
+            reduce_chunk_partials(&by_rank, self.dual_dim)
+        } else {
+            let mut ax = vec![0.0f32; self.dual_dim];
+            let (mut cx, mut xsq) = (0.0f64, 0.0f64);
+            for part in sums.into_iter() {
+                let (g, c, s) = part.expect("missing rank result");
+                crate::util::mathvec::add_assign(&mut ax, &g);
+                cx += c;
+                xsq += s;
+            }
+            self.stats.record_reduce(self.dual_dim, 2);
+            (ax, cx, xsq)
+        };
         let (mut t_max, mut t_sum) = (0.0f64, 0.0f64);
-        for part in parts.into_iter() {
-            let (g, c, s, compute_ms) = part.expect("missing rank result");
-            crate::util::mathvec::add_assign(&mut ax, &g);
-            cx += c;
-            xsq += s;
-            t_max = t_max.max(compute_ms);
-            t_sum += compute_ms;
+        for (rank, &ms) in times.iter().enumerate() {
+            self.shard_eval_ms[rank] += ms;
+            t_max = t_max.max(ms);
+            t_sum += ms;
         }
-        self.stats.record_reduce(self.dual_dim, 2);
         self.iter_compute_max_ms.push(t_max);
         self.iter_compute_sum_ms.push(t_sum);
         Ok((ax, cx, xsq))
@@ -242,17 +394,40 @@ impl WorkerPool {
             tx.send(Cmd::Primal { query: q.clone(), gamma })
                 .map_err(|_| anyhow!("worker died"))?;
         }
-        // shards write disjoint edges, so arrival order is immaterial here
-        let mut x = vec![0.0f32; self.nnz];
-        for _ in 0..self.num_workers() {
+        let n = self.num_workers();
+        let mut by_rank: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
             match self.msg_rx.recv().map_err(|_| anyhow!("worker channel closed"))? {
-                WorkerMsg::Primal { x: xs, .. } => {
-                    crate::util::mathvec::add_assign(&mut x, &xs);
-                }
+                WorkerMsg::Primal { rank, x: xs } => by_rank[rank] = Some(xs),
                 WorkerMsg::Error { rank, message } => {
                     return Err(anyhow!("worker {rank} failed: {message}"));
                 }
                 _ => return Err(anyhow!("unexpected worker message")),
+            }
+        }
+        let mut x = vec![0.0f32; self.nnz];
+        if let Some(plan) = &self.slab {
+            // copy each rank's OWNED edges by assignment — shards hold
+            // disjoint edge sets, and assignment (unlike `+=`) preserves
+            // the single-shard bit pattern for signed zeros
+            for (rank, &(lo, hi)) in plan.ranges.iter().enumerate() {
+                let xr = by_rank[rank].as_ref().expect("missing rank result");
+                for c in &plan.grid[lo..hi] {
+                    let bk = &plan.layout.buckets[c.bucket];
+                    let w = bk.width;
+                    for idx in c.row_lo * w..c.row_hi * w {
+                        if bk.mask[idx] > 0.0 {
+                            let e = bk.edge_id[idx] as usize;
+                            x[e] = xr[e];
+                        }
+                    }
+                }
+            }
+        } else {
+            // HLO shards write disjoint source ranges; summing zeros
+            // elsewhere reconstructs the full vector
+            for xs in by_rank.into_iter() {
+                crate::util::mathvec::add_assign(&mut x, &xs.expect("missing rank result"));
             }
         }
         Ok(x)

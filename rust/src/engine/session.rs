@@ -12,11 +12,13 @@
 //!   through a 1-thread scheduler — no dependence on completion order.
 //!
 //! Jobs are solved on a named CPU backend (`backend::CpuBackend`) — the
-//! slab-native batched objective by default, with the per-source
-//! reference baseline selectable per engine. Both are always available
-//! and deterministic, and the `Maximizer`/`ObjectiveFunction` contract is
-//! backend-agnostic, so swapping in the PJRT objective stays a local
-//! change once artifacts exist. Each job's objective is wrapped in a
+//! slab-native batched objective by default, promoted to the chunk-sharded
+//! flavor when `EngineConfig::shards > 1` (bit-identical results, so the
+//! promotion and the warm-start cache are shard-count-agnostic), with the
+//! per-source reference baseline selectable per engine. All are always
+//! available and deterministic, and the `Maximizer`/`ObjectiveFunction`
+//! contract is backend-agnostic, so swapping in the PJRT objective stays a
+//! local change once artifacts exist. Each job's objective is wrapped in a
 //! `TimedObjective`, so results attribute their wall-clock to objective
 //! evaluation.
 
@@ -66,9 +68,15 @@ pub struct JobResult {
     pub infeas_pos_norm: f64,
     pub final_gamma: f32,
     pub wall_ms: f64,
-    /// Objective backend the job actually ran on (e.g. `cpu-slab`; a slab
-    /// request that could not build its layout reports `cpu-reference`).
+    /// Objective backend the job actually ran on (e.g. `cpu-slab`,
+    /// `cpu-sharded-slab`; a slab request that could not build its layout
+    /// reports `cpu-reference`).
     pub backend: &'static str,
+    /// Shard count the job's objective ran with. Stats-only: shard count
+    /// is NOT part of the fingerprint, because sharded results are
+    /// bit-equal to single-shard results — warm starts are freely shared
+    /// across shard configurations.
+    pub shards: usize,
     /// Wall-clock spent inside objective evaluation (the per-iteration
     /// hot path), a subset of `wall_ms`.
     pub objective_eval_ms: f64,
@@ -96,6 +104,13 @@ pub struct EngineConfig {
     /// slab results are bit-identical at any width, so this is purely a
     /// latency knob for wide single jobs.
     pub objective_threads: usize,
+    /// Shard count per objective (slab backends only). 1 = unsharded; a
+    /// slab backend with `shards > 1` runs the chunk-sharded objective
+    /// (`backend::ShardedSlabObjective`). Results are bit-identical at
+    /// any shard count, so this — like `objective_threads` — is purely an
+    /// execution knob: it is folded into stats (`JobResult::shards`), not
+    /// into the fingerprint, and warm starts cross shard configurations.
+    pub shards: usize,
 }
 
 impl Default for EngineConfig {
@@ -109,6 +124,7 @@ impl Default for EngineConfig {
             cache_capacity: 64,
             backend: CpuBackend::Slab,
             objective_threads: 1,
+            shards: 1,
         }
     }
 }
@@ -188,12 +204,17 @@ impl SolveEngine {
         tail: usize,
         backend: CpuBackend,
         objective_threads: usize,
+        shards: usize,
     ) -> JobResult {
         let (init, opts, is_warm) = match warm {
             Some(ws) => (ws.lam.clone(), warm_options(cold, tail), true),
             None => (vec![0.0f32; job.lp.dual_dim()], cold.clone(), false),
         };
-        let mut obj = TimedObjective::new(backend.objective(&job.lp, objective_threads));
+        let mut obj =
+            TimedObjective::new(backend.objective_with(&job.lp, objective_threads, shards));
+        // actual, not requested: a layout-ineligible instance falls back
+        // to the (unsharded) reference objective
+        let ran_shards = obj.inner.shards();
         let mut agd = Agd::default();
         let r = agd.maximize(&mut obj, &init, &opts);
         JobResult {
@@ -208,6 +229,7 @@ impl SolveEngine {
             final_gamma: r.final_gamma,
             wall_ms: r.total_wall_ms,
             backend: obj.name(),
+            shards: ran_shards,
             objective_eval_ms: obj.eval_ms,
             lam: r.lam,
         }
@@ -240,6 +262,7 @@ impl SolveEngine {
             self.cfg.warm_tail,
             self.cfg.backend,
             self.cfg.objective_threads,
+            self.cfg.shards,
         );
         self.cache
             .lock()
@@ -268,10 +291,11 @@ impl SolveEngine {
 
         let backend = self.cfg.backend;
         let obj_threads = self.cfg.objective_threads;
+        let shards = self.cfg.shards;
         let sched = Scheduler::new(self.cfg.threads);
         let (results, report) = sched.run(resolved.len(), |i| {
             let (job, fp, cold, warm) = &resolved[i];
-            Self::solve_resolved(job, *fp, cold, warm.as_ref(), tail, backend, obj_threads)
+            Self::solve_resolved(job, *fp, cold, warm.as_ref(), tail, backend, obj_threads, shards)
         });
 
         {
@@ -358,6 +382,7 @@ mod tests {
             cache_capacity: 8,
             backend: CpuBackend::Slab,
             objective_threads: 1,
+            shards: 1,
         }
     }
 
@@ -443,6 +468,36 @@ mod tests {
             a.dual_obj,
             b.dual_obj
         );
+    }
+
+    #[test]
+    fn sharded_engine_is_bit_identical_and_shares_warm_starts() {
+        // shard count is an execution knob, not identity: a sharded solve
+        // must reproduce the unsharded bits, and a λ cached by a sharded
+        // engine config must warm-start an unsharded re-solve (and vice
+        // versa) because the fingerprint ignores shard count
+        let plain = SolveEngine::new(test_config(1));
+        let mut cfg = test_config(1);
+        cfg.shards = 3;
+        let sharded = SolveEngine::new(cfg);
+
+        let a = plain.submit(SolveJob::new(0, instance(6)));
+        let b = sharded.submit(SolveJob::new(0, instance(6)));
+        assert_eq!(a.backend, "cpu-slab");
+        assert_eq!(b.backend, "cpu-sharded-slab");
+        assert_eq!((a.shards, b.shards), (1, 3));
+        assert_eq!(a.fingerprint, b.fingerprint, "shards must not change identity");
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+        assert_eq!(a.lam.len(), b.lam.len());
+        for (x, y) in a.lam.iter().zip(&b.lam) {
+            assert_eq!(x.to_bits(), y.to_bits(), "sharded λ diverged");
+        }
+        // cross-config warm start: the sharded engine's cache was primed
+        // by its own (bit-identical) solve, so a re-submit of the same
+        // pattern under shards=3 must run warm
+        let c = sharded.submit(SolveJob::new(1, instance(6)));
+        assert!(c.warm, "same fingerprint must warm-start across shard configs");
     }
 
     #[test]

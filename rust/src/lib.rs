@@ -9,14 +9,17 @@
 //!   λ-only collectives, diagnostics, CLI; plus the serving layer
 //!   (`engine/`): fingerprinted warm-start cache and batch scheduler for
 //!   the production repeated-solve pattern, running on the slab-native
-//!   batched CPU objective (`backend/`) by default.
+//!   batched CPU objective (`backend/`) by default — chunk-sharded
+//!   across workers on request (`--shards`, `EngineConfig::shards`),
+//!   with S-shard solves bit-identical to 1-shard solves.
 //! - **L2/L1 (python/compile, build-time only)**: the batched slab dual
 //!   step (scale → blockwise projection → reduce) as a Pallas kernel inside
 //!   a JAX graph, AOT-lowered to HLO text artifacts.
 //! - **runtime**: loads the artifacts through PJRT (`xla` crate) and runs
 //!   them from the solve hot path — Python is never on the request path.
 //!
-//! See DESIGN.md for the system inventory and experiment index.
+//! See README.md for the architecture map and quickstart, DESIGN.md for
+//! the system inventory and experiment index.
 //!
 //! New LP formulations are added *locally* through the operator registry
 //! (`projection::registry`) and the declarative `problem::LpSpec` builder

@@ -99,6 +99,25 @@ pub fn batch_report(r: &BatchReport) -> String {
     )
 }
 
+/// Per-shard execution report for sharded solves: each shard's cumulative
+/// evaluation CPU time (what its device would have spent computing) plus
+/// the λ-only wire traffic per iteration — the §6 accounting pair the E15
+/// bench tracks.
+pub fn shard_report(shard_eval_ms: &[f64], c: &CommSnapshot, iters: u64) -> String {
+    let per: Vec<String> = shard_eval_ms
+        .iter()
+        .enumerate()
+        .map(|(r, ms)| format!("r{r}={ms:.1}ms"))
+        .collect();
+    let max = shard_eval_ms.iter().cloned().fold(0.0f64, f64::max);
+    format!(
+        "shards: {} workers, eval [{}] (max {max:.1}ms) | λ-traffic {:.1} B/iter",
+        shard_eval_ms.len(),
+        per.join(" "),
+        c.bytes_per_iter(iters),
+    )
+}
+
 /// Communication report (per-iteration steady state).
 pub fn comm_report(c: &CommSnapshot, iters: u64) -> String {
     format!(
@@ -138,5 +157,16 @@ mod tests {
     #[should_panic]
     fn stats_rejects_empty() {
         stats(&[]);
+    }
+
+    #[test]
+    fn shard_report_names_every_rank() {
+        let s = crate::distributed::CommStats::new();
+        s.record_broadcast(10);
+        s.record_segmented_reduce(3, 10, 2);
+        let rep = shard_report(&[1.0, 2.5], &s.snapshot(), 1);
+        assert!(rep.contains("2 workers"), "{rep}");
+        assert!(rep.contains("r0=1.0ms") && rep.contains("r1=2.5ms"), "{rep}");
+        assert!(rep.contains("B/iter"), "{rep}");
     }
 }

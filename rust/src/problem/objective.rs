@@ -4,8 +4,13 @@
 //! Implementations in this repo:
 //! - `reference::CpuObjective` — single-threaded per-edge loop (the
 //!   Scala-equivalent baseline),
+//! - `backend::SlabCpuObjective` — slab-native batched CPU objective
+//!   (the serving default),
+//! - `backend::ShardedSlabObjective` — the slab objective chunk-sharded
+//!   in-process (bit-identical to the unsharded slab),
 //! - `runtime::HloObjective` — batched slab kernels through PJRT,
-//! - `distributed::DistributedObjective` — sharded workers + collectives.
+//! - `distributed::DistributedObjective` — sharded workers + collectives
+//!   (slab or HLO execution strategy).
 
 /// Result of one dual evaluation at (λ, γ).
 #[derive(Clone, Debug)]

@@ -10,6 +10,17 @@
 //! The slab row order remembers its source ids so the coordinator can
 //! gather λ into per-edge `u` and scatter-add `a ⊙ x` back into the dual
 //! gradient.
+//!
+//! On top of the buckets sits the **fixed chunk grid**
+//! ([`SlabLayout::fixed_chunk_grid`]): every bucket's rows cut into
+//! [`SlabChunk`] row ranges by a rule that depends on the layout alone —
+//! never on thread or shard counts. The grid is the shared unit of both
+//! intra-process parallelism (`backend::slab_cpu`) and cross-shard
+//! partitioning (`backend::sharded`, `distributed::worker`): shards own
+//! contiguous chunk ranges, so merging per-chunk partial reductions in
+//! ascending chunk index reproduces the exact f32 summation order of a
+//! single-shard evaluation, making sharded solves bit-identical to
+//! unsharded ones.
 
 use super::blocked::BlockedMatrix;
 use crate::projection::ProjectionKind;
@@ -18,6 +29,35 @@ use crate::projection::ProjectionKind;
 pub const MIN_WIDTH: usize = 4;
 /// Maximum slab width supported by the AOT artifact family.
 pub const MAX_WIDTH: usize = 512;
+
+/// Target size of the fixed chunk grid. Fixed (never derived from thread
+/// or shard counts) so the chunk-ordered reduction — and therefore every
+/// bit of the result — is identical at any pool width and shard count.
+/// Chunks never span buckets, so the actual grid can exceed this by up to
+/// one chunk per bucket.
+pub const MAX_CHUNKS: usize = 32;
+/// Minimum rows per chunk — below this the per-chunk bookkeeping
+/// dominates the math.
+pub const MIN_CHUNK_ROWS: usize = 64;
+
+/// One unit of the fixed parallel/shard grid: a row range within one
+/// bucket. Chunks never span buckets, so each chunk projects with one
+/// operator at one width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlabChunk {
+    /// Index into [`SlabLayout::buckets`].
+    pub bucket: usize,
+    /// First row (inclusive) of the range within the bucket.
+    pub row_lo: usize,
+    /// Last row (exclusive) of the range within the bucket.
+    pub row_hi: usize,
+}
+
+impl SlabChunk {
+    pub fn rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+}
 
 /// One log₂ bucket: a dense `[rows × width]` slab of edges.
 #[derive(Clone, Debug)]
@@ -197,6 +237,50 @@ impl SlabLayout {
     pub fn num_launches(&self) -> usize {
         self.buckets.len()
     }
+
+    /// The canonical fixed chunk grid over this layout: each bucket's rows
+    /// cut into ranges of a target size derived from the layout alone
+    /// (`total_rows / MAX_CHUNKS`, floored at `MIN_CHUNK_ROWS`). Every
+    /// consumer of the layout — the slab objective's thread pool, the
+    /// sharded backend, the distributed worker pool — must use THIS grid:
+    /// per-chunk partial reductions merged in ascending grid index are the
+    /// definition of the layout's bit-exact evaluation order.
+    pub fn fixed_chunk_grid(&self) -> Vec<SlabChunk> {
+        let target = self.total_rows().div_ceil(MAX_CHUNKS).max(MIN_CHUNK_ROWS);
+        let mut grid = Vec::new();
+        for (b, bk) in self.buckets.iter().enumerate() {
+            let rows = bk.rows();
+            let mut lo = 0usize;
+            while lo < rows {
+                let hi = (lo + target).min(rows);
+                grid.push(SlabChunk { bucket: b, row_lo: lo, row_hi: hi });
+                lo = hi;
+            }
+        }
+        grid
+    }
+
+    /// Real (non-padding) edges inside one chunk — a mask scan, intended
+    /// for build/partition time, not the per-iteration path.
+    pub fn chunk_real_edges(&self, c: &SlabChunk) -> usize {
+        let bk = &self.buckets[c.bucket];
+        let w = bk.width;
+        bk.mask[c.row_lo * w..c.row_hi * w].iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Cumulative real-edge pointer over a chunk grid — the `src_ptr`
+    /// analogue that `distributed::balanced_partition` consumes to cut
+    /// the grid into contiguous shard ranges balanced by **real** edge
+    /// count (padding is free to evaluate relative to real work and must
+    /// not skew the split).
+    pub fn chunk_edge_ptr(&self, grid: &[SlabChunk]) -> Vec<usize> {
+        let mut ptr = Vec::with_capacity(grid.len() + 1);
+        ptr.push(0usize);
+        for c in grid {
+            ptr.push(ptr.last().unwrap() + self.chunk_real_edges(c));
+        }
+        ptr
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +412,43 @@ mod tests {
             assert_eq!(bk.real_edges(), scanned);
         }
         assert_eq!(l.total_real_edges(), 3 + 4 + 5 + 9 + 17 + 2 + MAX_WIDTH + 10);
+    }
+
+    #[test]
+    fn fixed_chunk_grid_covers_rows_in_order() {
+        let degrees: Vec<usize> = (1..400).map(|i| 1 + i % 13).collect();
+        let (m, cost) = matrix(&degrees, 64);
+        let l = SlabLayout::build(&m, &cost, 0, degrees.len(), &|_| ProjectionKind::Box).unwrap();
+        let grid = l.fixed_chunk_grid();
+        // chunks cover every bucket's rows exactly once, in ascending
+        // (bucket, row) order
+        let mut covered = 0usize;
+        let mut prev: Option<SlabChunk> = None;
+        for c in &grid {
+            assert!(c.row_lo < c.row_hi);
+            if let Some(p) = prev {
+                if p.bucket == c.bucket {
+                    assert_eq!(p.row_hi, c.row_lo, "gap within bucket");
+                } else {
+                    assert!(c.bucket > p.bucket, "buckets out of order");
+                    assert_eq!(p.row_hi, l.buckets[p.bucket].rows(), "bucket not exhausted");
+                    assert_eq!(c.row_lo, 0);
+                }
+            } else {
+                assert_eq!((c.bucket, c.row_lo), (0, 0));
+            }
+            covered += c.rows();
+            prev = Some(*c);
+        }
+        assert_eq!(covered, l.total_rows());
+        // real-edge bookkeeping is consistent with the buckets
+        assert_eq!(
+            grid.iter().map(|c| l.chunk_real_edges(c)).sum::<usize>(),
+            l.total_real_edges()
+        );
+        let ptr = l.chunk_edge_ptr(&grid);
+        assert_eq!(ptr.len(), grid.len() + 1);
+        assert_eq!(*ptr.last().unwrap(), l.total_real_edges());
     }
 
     #[test]

@@ -62,6 +62,18 @@ impl PhaseTimers {
     }
 }
 
+/// Per-thread CPU time in milliseconds (CLOCK_THREAD_CPUTIME_ID) —
+/// immune to time-slicing with sibling threads on a contended core, so
+/// shard evaluation costs measured with it model what dedicated devices
+/// would take (DESIGN.md §5 Substitutions).
+pub fn thread_cpu_time_ms() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as f64 * 1e3 + ts.tv_nsec as f64 / 1e6
+}
+
 /// Simple stopwatch.
 pub struct Stopwatch(Instant);
 

@@ -1,0 +1,251 @@
+//! Sharded-slab parity (seeded property harness, same style as
+//! `proptests.rs` / `backend_parity.rs`): an S-shard slab solve must be
+//! **bit-identical** to the single-shard slab solve — per evaluation and
+//! over whole AGD trajectories — for S ∈ {2, 3, 4}, across every
+//! registered projection family, including split overwide separable rows
+//! and global rows, on both sharded execution paths (the in-process
+//! `ShardedSlabObjective` and the `WorkerPool` device-thread pool, which
+//! needs no artifacts under the slab strategy).
+
+use std::sync::Arc;
+
+use dualip::backend::{ShardedSlabObjective, SlabCpuObjective};
+use dualip::distributed::{solve_distributed_with, ExecStrategy};
+use dualip::problem::{MatchingLp, ObjectiveFunction};
+use dualip::projection::{registry, ProjectionKind, ProjectionMap};
+use dualip::solver::{Agd, GammaSchedule, Maximizer, SolveOptions};
+use dualip::sparse::slabs::MAX_WIDTH;
+use dualip::sparse::BlockedMatrix;
+use dualip::util::rng::Rng;
+
+/// Random matching LP with the given per-source degrees (distinct dests).
+fn lp_with_degrees(
+    rng: &mut Rng,
+    degrees: &[usize],
+    num_dests: usize,
+    families: usize,
+) -> MatchingLp {
+    let mut src_ptr = vec![0usize];
+    let mut dest_idx: Vec<u32> = Vec::new();
+    for &deg in degrees {
+        assert!(deg <= num_dests, "degree {deg} exceeds dest count {num_dests}");
+        dest_idx.extend(rng.sample_distinct(num_dests, deg));
+        src_ptr.push(dest_idx.len());
+    }
+    let nnz = dest_idx.len();
+    let a: Vec<Vec<f32>> = (0..families)
+        .map(|_| (0..nnz).map(|_| (rng.uniform() * 2.0 + 0.05) as f32).collect())
+        .collect();
+    let cost: Vec<f32> = (0..nnz).map(|_| -(rng.uniform() as f32) - 0.01).collect();
+    let b: Vec<f32> = (0..families * num_dests)
+        .map(|_| (rng.uniform() * 2.0 + 0.01) as f32)
+        .collect();
+    let m = BlockedMatrix {
+        num_sources: degrees.len(),
+        num_dests,
+        num_families: families,
+        src_ptr,
+        dest_idx,
+        a,
+    };
+    let lp = MatchingLp::new_uniform(m, cost, b, ProjectionKind::Simplex);
+    lp.validate().unwrap();
+    lp
+}
+
+fn random_lp(rng: &mut Rng, num_sources: usize, num_dests: usize, families: usize) -> MatchingLp {
+    let deg_cap = 12.min(num_dests);
+    let degrees: Vec<usize> = (0..num_sources).map(|_| rng.below(deg_cap + 1)).collect();
+    lp_with_degrees(rng, &degrees, num_dests, families)
+}
+
+fn random_lam(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.uniform() * 0.3) as f32).collect()
+}
+
+/// One sharded evaluation (calculate + primal) vs the single-shard slab
+/// objective — bit equality of every output.
+fn assert_shard_bitwise(lp: &MatchingLp, lam: &[f32], gamma: f32, ctx: &str) {
+    let mut one = SlabCpuObjective::new(lp, 1)
+        .unwrap_or_else(|e| panic!("{ctx}: slab layout must build, got error: {e}"));
+    let r1 = one.calculate(lam, gamma);
+    let x1 = one.primal(lam, gamma);
+    for shards in [2usize, 3, 4] {
+        let mut sh = ShardedSlabObjective::new(lp, shards, 1).unwrap();
+        let rs = sh.calculate(lam, gamma);
+        assert_eq!(
+            r1.dual_obj.to_bits(),
+            rs.dual_obj.to_bits(),
+            "{ctx}: dual_obj differs at {shards} shards"
+        );
+        assert_eq!(r1.cx.to_bits(), rs.cx.to_bits(), "{ctx}: cx at {shards} shards");
+        assert_eq!(
+            r1.xsq_weighted.to_bits(),
+            rs.xsq_weighted.to_bits(),
+            "{ctx}: xsq at {shards} shards"
+        );
+        for (r, (a, b)) in r1.grad.iter().zip(&rs.grad).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: grad row {r} differs at {shards} shards ({a} vs {b})"
+            );
+        }
+        let xs = sh.primal(lam, gamma);
+        for (e, (a, b)) in x1.iter().zip(&xs).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: primal edge {e} at {shards} shards");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_eval_bitwise_for_every_registered_family() {
+    let mut rng = Rng::new(20260726);
+    for fam in registry::families() {
+        for sample in registry::family_samples(&fam) {
+            let kind = ProjectionKind::parse(&sample)
+                .unwrap_or_else(|| panic!("sample {sample} must parse"));
+            for case in 0..3 {
+                let (ns, nd, nf) = (60 + rng.below(160), 8 + rng.below(24), 1 + rng.below(2));
+                let mut lp = random_lp(&mut rng, ns, nd, nf);
+                lp.projection = ProjectionMap::Uniform(kind);
+                let lam = random_lam(&mut rng, lp.dual_dim());
+                let gamma = if case % 2 == 0 { 0.05 } else { 0.3 };
+                assert_shard_bitwise(&lp, &lam, gamma, &format!("{sample} case {case}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_eval_bitwise_with_overwide_separable_rows() {
+    // box blocks wider than MAX_WIDTH split across slab rows (and the
+    // split rows land in MAX_WIDTH-width chunks that the shard partition
+    // is free to separate) — the sharded merge must still reproduce the
+    // single-shard bits exactly
+    let mut rng = Rng::new(424243);
+    let num_dests = 2 * MAX_WIDTH + 32;
+    for case in 0..3 {
+        let mut degrees = vec![
+            MAX_WIDTH + 30 + rng.below(20),
+            2 * MAX_WIDTH + rng.below(16),
+        ];
+        degrees.extend((0..40).map(|_| 1 + rng.below(10)));
+        let mut lp = lp_with_degrees(&mut rng, &degrees, num_dests, 1);
+        lp.projection = ProjectionMap::Uniform(ProjectionKind::Box);
+        let lam = random_lam(&mut rng, lp.dual_dim());
+        assert_shard_bitwise(&lp, &lam, 0.1, &format!("overwide box case {case}"));
+    }
+}
+
+#[test]
+fn prop_sharded_eval_bitwise_with_global_rows_and_mixed_kinds() {
+    let kinds = [
+        ProjectionKind::Simplex,
+        ProjectionKind::Box,
+        ProjectionKind::capped_simplex(0.5, 1.0),
+    ];
+    let mut rng = Rng::new(777001);
+    for case in 0..3 {
+        let ns = 80 + rng.below(120);
+        let mut lp = random_lp(&mut rng, ns, 14, 2);
+        lp.projection = ProjectionMap::per_block(move |i| kinds[i % kinds.len()]);
+        let nnz = lp.nnz();
+        lp.push_global_row(vec![1.0; nnz], (rng.uniform() * 4.0 + 0.5) as f32);
+        let coeffs: Vec<f32> = (0..nnz).map(|_| (rng.uniform() * 0.8) as f32).collect();
+        lp.push_global_row(coeffs, (rng.uniform() * 2.0 + 0.1) as f32);
+        lp.validate().unwrap();
+        let lam = random_lam(&mut rng, lp.dual_dim());
+        assert_shard_bitwise(&lp, &lam, 0.15, &format!("global rows case {case}"));
+    }
+}
+
+#[test]
+fn prop_whole_solves_bitwise_identical_across_shard_counts() {
+    // whole AGD trajectories, not just single evaluations: the adaptive
+    // step-size search amplifies any stray bit into divergent iterates,
+    // so λ equality after a real solve is the end-to-end contract
+    let mut rng = Rng::new(9090);
+    let opts = SolveOptions {
+        max_iters: 40,
+        gamma: GammaSchedule::Fixed(0.05),
+        max_step_size: 1e-2,
+        initial_step_size: 1e-4,
+        ..Default::default()
+    };
+    for case in 0..2 {
+        let lp = random_lp(&mut rng, 200 + rng.below(200), 20, 1);
+        let mut one = SlabCpuObjective::new(&lp, 1).unwrap();
+        let mut agd = Agd::default();
+        let r1 = agd.maximize(&mut one, &vec![0.0; lp.dual_dim()], &opts);
+        for shards in [2usize, 3, 4] {
+            let mut sh = ShardedSlabObjective::new(&lp, shards, 1).unwrap();
+            let mut agd_s = Agd::default();
+            let rs = agd_s.maximize(&mut sh, &vec![0.0; lp.dual_dim()], &opts);
+            assert_eq!(r1.iterations, rs.iterations, "case {case}, {shards} shards");
+            for (i, (a, b)) in r1.lam.iter().zip(&rs.lam).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case}: λ[{i}] differs at {shards} shards"
+                );
+            }
+            assert_eq!(
+                r1.trajectory.last().unwrap().dual_obj.to_bits(),
+                rs.trajectory.last().unwrap().dual_obj.to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_pool_slab_strategy_matches_in_process_sharding_bitwise() {
+    // the device-thread path (persistent workers + channels) and the
+    // in-process path must agree with each other and with single-shard —
+    // all three are the same chunk grid merged in the same order
+    let mut rng = Rng::new(31415);
+    let lp = Arc::new(random_lp(&mut rng, 350, 24, 2));
+    let opts = SolveOptions {
+        max_iters: 30,
+        gamma: GammaSchedule::Fixed(0.05),
+        max_step_size: 1e-2,
+        initial_step_size: 1e-4,
+        ..Default::default()
+    };
+    let mut one = SlabCpuObjective::new(&lp, 1).unwrap();
+    let mut agd = Agd::default();
+    let r1 = agd.maximize(&mut one, &vec![0.0; lp.dual_dim()], &opts);
+    for shards in [2usize, 3] {
+        let pool = solve_distributed_with(
+            lp.clone(),
+            ExecStrategy::Slab { threads: 1 },
+            shards,
+            &opts,
+        )
+        .unwrap();
+        let mut inproc = ShardedSlabObjective::new(&lp, shards, 1).unwrap();
+        let mut agd_i = Agd::default();
+        let ri = agd_i.maximize(&mut inproc, &vec![0.0; lp.dual_dim()], &opts);
+        for ((a, b), c) in r1.lam.iter().zip(&pool.result.lam).zip(&ri.lam) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pool path diverged at {shards} shards");
+            assert_eq!(a.to_bits(), c.to_bits(), "in-process path diverged at {shards} shards");
+        }
+    }
+}
+
+#[test]
+fn per_shard_thread_width_never_changes_bits() {
+    let mut rng = Rng::new(5150);
+    let lp = random_lp(&mut rng, 400, 20, 1);
+    let lam = random_lam(&mut rng, lp.dual_dim());
+    let mut base = ShardedSlabObjective::new(&lp, 3, 1).unwrap();
+    let r0 = base.calculate(&lam, 0.1);
+    for threads in [2usize, 5] {
+        let mut wide = ShardedSlabObjective::new(&lp, 3, threads).unwrap();
+        let rt = wide.calculate(&lam, 0.1);
+        assert_eq!(r0.dual_obj.to_bits(), rt.dual_obj.to_bits());
+        for (a, b) in r0.grad.iter().zip(&rt.grad) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads/shard changed bits");
+        }
+    }
+}

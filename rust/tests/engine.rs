@@ -54,6 +54,7 @@ fn engine(threads: usize, cache_capacity: usize) -> SolveEngine {
         cache_capacity,
         backend: dualip::backend::CpuBackend::Slab,
         objective_threads: 1,
+        shards: 1,
     })
 }
 
