@@ -1,0 +1,310 @@
+//! Experiment E16 — steppable-driver overhead + cooperative-executor
+//! throughput.
+//!
+//! Three measurements, emitted to `results/BENCH_driver_overhead.json`:
+//!
+//! 1. **Driver overhead**: `Agd::maximize` (the `SolveDriver` path) vs a
+//!    frozen inline copy of the pre-driver `run_loop` + AGD closure, on
+//!    the same instance and schedule. The two must be bit-identical in λ;
+//!    the per-iteration wall-clock difference is the price of the state
+//!    machine. CI (fast mode) fails if it exceeds 3%.
+//! 2. **Cooperative executor vs run-to-completion**: `solve_batch_coop`
+//!    (round-robin quanta) vs `solve_batch` at 1/4/16 concurrent jobs on
+//!    a 4-thread pool, with bit-identity asserted between the two paths.
+//! 3. **Deadline-primed warm start**: a solve killed by a wall-clock
+//!    deadline publishes its anytime λ; the follow-up solve of the same
+//!    pattern starts warm — the warm-iteration reduction is reported.
+//!
+//! Run: cargo bench --bench bench_driver_overhead
+//!      [DUALIP_BENCH_FAST=1 for CI size + the 3% overhead gate]
+
+use dualip::backend::CpuBackend;
+use dualip::engine::{EngineConfig, SolveEngine, SolveJob};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::metrics::{BenchJson, JsonValue};
+use dualip::problem::{jacobi_row_normalize, MatchingLp, ObjectiveFunction, ObjectiveResult};
+use dualip::solver::{
+    Agd, GammaSchedule, IterRecord, Maximizer, SolveOptions, SolveResult, StopReason,
+    StoppingCriteria,
+};
+use dualip::util::mathvec;
+use dualip::util::timer::Stopwatch;
+
+/// Frozen copy of the seed repo's run-to-completion loop (`run_loop` +
+/// the AGD closure, momentum never restarted) — the overhead comparator.
+/// Deliberately NOT routed through the driver.
+fn legacy_agd_solve(
+    obj: &mut dyn ObjectiveFunction,
+    initial: &[f32],
+    opts: &SolveOptions,
+) -> SolveResult {
+    let sw = Stopwatch::start();
+    let mut lam = initial.to_vec();
+    let mut y = initial.to_vec();
+    let mut lam_prev = initial.to_vec();
+    let mut y_prev: Vec<f32> = Vec::new();
+    let mut grad_prev: Vec<f32> = Vec::new();
+    let mut trajectory = Vec::new();
+    let mut last: Option<ObjectiveResult> = None;
+    let mut iters = 0usize;
+
+    for t in 0..opts.max_iters {
+        let gamma = opts.gamma.gamma_at(t);
+        let eta_cap = opts.max_step_size * opts.gamma.step_cap_scale(t) as f64;
+        let res = obj.calculate(&y, gamma);
+        let eta = if t == 0 || y_prev.is_empty() {
+            opts.initial_step_size.min(eta_cap)
+        } else {
+            let dy = mathvec::dist2(&y, &y_prev);
+            let dg = mathvec::dist2(&res.grad, &grad_prev);
+            if dy > 0.0 && dg > 0.0 {
+                (dy / dg).min(eta_cap)
+            } else {
+                eta_cap
+            }
+        };
+        lam_prev.copy_from_slice(&lam);
+        lam.copy_from_slice(&y);
+        mathvec::axpy(eta as f32, &res.grad, &mut lam);
+        mathvec::clamp_nonneg(&mut lam);
+        let momentum_t = t + 1;
+        let beta = momentum_t as f32 / (momentum_t as f32 + 3.0);
+        y_prev = y.clone();
+        grad_prev = res.grad.clone();
+        let mut y_next = vec![0.0f32; y.len()];
+        mathvec::extrapolate(&lam, &lam_prev, beta, &mut y_next);
+        mathvec::clamp_nonneg(&mut y_next);
+        y = y_next;
+
+        iters = t + 1;
+        let grad_norm = mathvec::norm2(&res.grad);
+        if t % opts.record_every == 0 || t + 1 == opts.max_iters {
+            trajectory.push(IterRecord {
+                iter: t,
+                dual_obj: res.dual_obj,
+                grad_norm,
+                infeas_pos_norm: res.infeas_pos_norm,
+                cx: res.cx,
+                gamma,
+                step_size: eta,
+                wall_ms: sw.elapsed_ms(),
+            });
+        }
+        last = Some(res);
+    }
+
+    SolveResult {
+        lam,
+        final_obj: last.expect("bench runs at least one iteration"),
+        trajectory,
+        stop_reason: StopReason::MaxIters,
+        iterations: iters,
+        total_wall_ms: sw.elapsed_ms(),
+        final_gamma: opts.gamma.gamma_at(iters.saturating_sub(1)),
+    }
+}
+
+fn instance(sources: usize, dests: usize, seed: u64) -> MatchingLp {
+    let mut lp = generate(&SyntheticConfig {
+        num_requests: sources,
+        num_resources: dests,
+        avg_nnz_per_row: 8.0,
+        seed,
+        ..Default::default()
+    });
+    jacobi_row_normalize(&mut lp);
+    lp
+}
+
+fn engine_cfg(threads: usize, cache: usize, iters: usize) -> EngineConfig {
+    EngineConfig {
+        opts: SolveOptions {
+            max_iters: iters,
+            max_step_size: 1.0,
+            initial_step_size: 1e-4,
+            gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 10 },
+            stopping: StoppingCriteria {
+                stall_tol: Some(1e-6),
+                stall_patience: 10,
+                ..Default::default()
+            },
+            record_every: 200,
+        },
+        warm_tail: 5,
+        threads,
+        cache_capacity: cache,
+        backend: CpuBackend::Slab,
+        objective_threads: 1,
+        shards: 1,
+        deadline_ms: None,
+        quantum: 16,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let (sources, dests, iters, reps) =
+        if fast { (4_000, 64, 200, 3) } else { (20_000, 256, 400, 5) };
+
+    println!(
+        "E16 — driver overhead + cooperative executor: I={sources} J={dests} \
+         iters={iters} reps={reps}{}",
+        if fast { " (fast)" } else { "" }
+    );
+    let mut bench = BenchJson::new("driver_overhead");
+    bench
+        .meta("sources", JsonValue::UInt(sources as u64))
+        .meta("dests", JsonValue::UInt(dests as u64))
+        .meta("iters", JsonValue::UInt(iters as u64))
+        .meta("reps", JsonValue::UInt(reps as u64))
+        .meta("fast", JsonValue::Bool(fast));
+
+    // ---- 1. per-iteration driver overhead vs the frozen legacy loop ----
+    let lp = instance(sources, dests, 0);
+    let opts = SolveOptions {
+        max_iters: iters,
+        max_step_size: 1.0,
+        initial_step_size: 1e-4,
+        gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 25 },
+        record_every: 1, // worst case for the driver's recording path
+        ..Default::default()
+    };
+    let init = vec![0.0f32; lp.dual_dim()];
+
+    let mut obj = CpuBackend::Slab.objective(&lp, 1);
+    // warm scratch + page-in before timing
+    let _ = legacy_agd_solve(&mut obj, &init, &opts);
+
+    let mut legacy_best_us = f64::INFINITY;
+    let mut driver_best_us = f64::INFINITY;
+    let mut legacy_last = None;
+    let mut driver_last = None;
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        let r = legacy_agd_solve(&mut obj, &init, &opts);
+        legacy_best_us = legacy_best_us.min(sw.elapsed_ms() * 1e3 / r.iterations as f64);
+        legacy_last = Some(r);
+
+        let sw = Stopwatch::start();
+        let r = Agd::default().maximize(&mut obj, &init, &opts);
+        driver_best_us = driver_best_us.min(sw.elapsed_ms() * 1e3 / r.iterations as f64);
+        driver_last = Some(r);
+    }
+    let (legacy_r, driver_r) = (legacy_last.unwrap(), driver_last.unwrap());
+
+    // bit-identity: the state machine must reproduce the legacy loop
+    anyhow::ensure!(legacy_r.lam.len() == driver_r.lam.len());
+    for (i, (a, b)) in legacy_r.lam.iter().zip(&driver_r.lam).enumerate() {
+        anyhow::ensure!(
+            a.to_bits() == b.to_bits(),
+            "driver λ[{i}] diverged from the legacy loop: {a} vs {b}"
+        );
+    }
+    anyhow::ensure!(legacy_r.trajectory.len() == driver_r.trajectory.len());
+    anyhow::ensure!(
+        legacy_r.final_obj.dual_obj.to_bits() == driver_r.final_obj.dual_obj.to_bits(),
+        "driver final objective diverged"
+    );
+
+    let overhead_pct = (driver_best_us / legacy_best_us - 1.0) * 100.0;
+    println!(
+        "per-iteration: legacy {legacy_best_us:.2}µs vs driver {driver_best_us:.2}µs \
+         → overhead {overhead_pct:+.2}%"
+    );
+    bench
+        .meta("legacy_iter_us", JsonValue::Num(legacy_best_us))
+        .meta("driver_iter_us", JsonValue::Num(driver_best_us))
+        .meta("driver_overhead_pct", JsonValue::Num(overhead_pct));
+
+    // ---- 2. cooperative executor vs run-to-completion scheduler --------
+    let (job_sources, job_iters) = if fast { (1_500, 150) } else { (6_000, 300) };
+    for &jobs in &[1usize, 4, 16] {
+        let make_jobs = || -> Vec<SolveJob> {
+            (0..jobs)
+                .map(|k| SolveJob::new(k as u64, instance(job_sources, 48, 10 + k as u64)))
+                .collect()
+        };
+        // zero-capacity caches: both paths solve the identical cold work
+        let rtc_engine = SolveEngine::new(engine_cfg(4, 0, job_iters));
+        let sw = Stopwatch::start();
+        let (rtc, _) = rtc_engine.solve_batch(make_jobs());
+        let rtc_ms = sw.elapsed_ms();
+
+        let coop_engine = SolveEngine::new(engine_cfg(4, 0, job_iters));
+        let sw = Stopwatch::start();
+        let (coop, report) = coop_engine.solve_batch_coop(make_jobs());
+        let coop_ms = sw.elapsed_ms();
+
+        for (a, b) in rtc.iter().zip(&coop) {
+            anyhow::ensure!(
+                a.dual_obj.to_bits() == b.dual_obj.to_bits()
+                    && a.iterations == b.iterations
+                    && a.lam.iter().zip(&b.lam).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "cooperative job {} diverged from run-to-completion",
+                a.id
+            );
+        }
+        let ratio = rtc_ms / coop_ms.max(1e-9);
+        println!(
+            "{jobs:>3} jobs: run-to-completion {rtc_ms:.1}ms vs cooperative {coop_ms:.1}ms \
+             ({} rounds, throughput ratio {ratio:.2})",
+            report.rounds
+        );
+        bench.row(&[
+            ("section", JsonValue::Str("executor".into())),
+            ("jobs", JsonValue::UInt(jobs as u64)),
+            ("run_to_completion_ms", JsonValue::Num(rtc_ms)),
+            ("cooperative_ms", JsonValue::Num(coop_ms)),
+            ("coop_rounds", JsonValue::UInt(report.rounds as u64)),
+            ("throughput_ratio", JsonValue::Num(ratio)),
+        ]);
+    }
+
+    // ---- 3. deadline-killed solve warms its successor ------------------
+    let warm_lp = || instance(job_sources, 48, 77);
+    let cold_engine = SolveEngine::new(engine_cfg(1, 16, job_iters));
+    let cold = cold_engine.submit(SolveJob::new(0, warm_lp()));
+
+    let engine = SolveEngine::new(engine_cfg(2, 16, job_iters));
+    // aim the deadline mid-solve; even if the machine outruns it the
+    // follow-up still measures the warm-start path
+    let deadline = (cold.wall_ms * 0.4).max(1.0);
+    let (killed, kreport) =
+        engine.solve_batch_coop(vec![SolveJob::new(1, warm_lp()).with_deadline_ms(deadline)]);
+    let warm = engine.submit(SolveJob::new(2, warm_lp()));
+    anyhow::ensure!(warm.warm, "killed/primed solve must publish a warm start");
+    let reduction = cold.iterations as f64 / warm.iterations.max(1) as f64;
+    println!(
+        "deadline priming: cold {} iters; killed stop {:?} after {} iters \
+         (deadline {deadline:.1}ms, {} deadline stops); warm re-solve {} iters \
+         ({reduction:.2}x fewer)",
+        cold.iterations,
+        killed[0].stop_reason,
+        killed[0].iterations,
+        kreport.deadline_stops,
+        warm.iterations,
+    );
+    bench
+        .meta("cold_iters", JsonValue::UInt(cold.iterations as u64))
+        .meta("deadline_ms", JsonValue::Num(deadline))
+        .meta("killed_iters", JsonValue::UInt(killed[0].iterations as u64))
+        .meta(
+            "killed_stop",
+            JsonValue::Str(format!("{:?}", killed[0].stop_reason)),
+        )
+        .meta("warm_iters", JsonValue::UInt(warm.iterations as u64))
+        .meta("warm_iter_reduction", JsonValue::Num(reduction));
+
+    let path = bench.write("results")?;
+    println!("wrote {}", path.display());
+
+    // CI smoke gate: the steppable driver must stay within 3% of the
+    // legacy loop per iteration (ISSUE 5 acceptance)
+    if fast {
+        anyhow::ensure!(
+            overhead_pct <= 3.0,
+            "driver overhead {overhead_pct:.2}% exceeds the 3% gate"
+        );
+    }
+    Ok(())
+}

@@ -9,7 +9,7 @@ use anyhow::{anyhow, Result};
 use super::args::Args;
 use crate::backend::{CpuBackend, ShardedSlabObjective, SlabCpuObjective};
 use crate::distributed::{
-    solve_distributed, solve_distributed_with, DistributedSolve, ExecStrategy, LinkModel,
+    solve_distributed, solve_distributed_driver, DistributedSolve, ExecStrategy, LinkModel,
 };
 use crate::gen::{generate, workloads, SyntheticConfig};
 use crate::metrics::{comm_report, shard_report, solve_report};
@@ -17,7 +17,9 @@ use crate::problem::{check_primal, jacobi_row_normalize, MatchingLp, ObjectiveFu
 use crate::projection::{registry, ProjectionKind, ProjectionMap};
 use crate::reference::CpuObjective;
 use crate::runtime::{default_artifacts_dir, HloObjective};
-use crate::solver::{Agd, GammaSchedule, Maximizer, SolveOptions, SolveResult};
+use crate::solver::{
+    maximize_with, Agd, DriverOptions, GammaSchedule, Maximizer, SolveOptions, SolveResult,
+};
 use crate::util::csv::CsvWriter;
 
 pub fn usage() -> &'static str {
@@ -38,6 +40,11 @@ pub fn usage() -> &'static str {
          --obj-threads N    slab objective pool width per shard (results\n\
                             are bit-identical at any width; default 1)\n\
          --gamma F | --gamma-decay init,floor,factor,every\n\
+         --max-wall-ms F    wall-clock deadline enforced by the solve\n\
+                            driver between iterations (stop reason\n\
+                            Deadline; the anytime λ is still returned)\n\
+         --record-every N   trajectory record cadence (the stopping\n\
+                            iteration is always recorded)\n\
          --projection SPEC  blockwise polytope from the operator registry\n\
                             (simplex | box | capped_simplex:c:t |\n\
                              weighted_simplex:s:w1,w2,.. | box_vec:u1,u2,..;\n\
@@ -49,8 +56,10 @@ pub fn usage() -> &'static str {
        distributed       E15: sharded execution through the device-thread\n\
                          worker pool, with λ-only comm accounting\n\
          --shards S --exec slab|hlo --obj-threads N --iters N\n\
+         --max-wall-ms F    per-solve deadline (driver-enforced)\n\
          --verify           assert the sharded solve is bit-identical to\n\
-                            the single-shard slab solve (slab exec only)\n\
+                            the single-shard slab solve (slab exec only,\n\
+                            incompatible with --max-wall-ms)\n\
          (+ the solve workload/schedule/conditioning flags)\n\
        parity            E1/E2: baseline-vs-accelerated trajectories (Fig 1/2)\n\
          --sources N --iters N --out-dir results/\n\
@@ -59,11 +68,18 @@ pub fn usage() -> &'static str {
        ablation-gamma    E6: γ continuation vs fixed (Fig 5)\n\
          --sources N --iters N --ref-iters N --out-dir results/\n\
        engine-batch      E12: warm-started repeated-solve engine on a\n\
-                         perturbation stream (cold vs warm, matched stop)\n\
+                         perturbation stream (cold vs warm, matched stop);\n\
+                         the warm stream runs on the cooperative executor\n\
+                         (time-sliced drivers, round-robin quanta)\n\
          --sources N --dests N --nnz-per-row F --seed S\n\
          --jobs N --threads N --perturb F --warm-tail N\n\
          --backend slab|sharded-slab|reference --obj-threads N --shards S\n\
-         --iters N --stall-tol F --out-dir results/\n\
+         --iters N --stall-tol F --record-every N --out-dir results/\n\
+         --max-wall-ms F    per-job deadline for the warm stream (the\n\
+                            engine_report line counts deadline/cancel\n\
+                            stops per batch)\n\
+         --quantum N        driver iterations per job per round (default\n\
+                            16; results are quantum-invariant)\n\
        info              artifact + environment report\n\
      \n\
      Artifacts default to ./artifacts ($DUALIP_ARTIFACTS overrides)."
@@ -94,6 +110,21 @@ fn solve_options(args: &Args) -> Result<SolveOptions> {
         gamma: gamma_schedule(args)?,
         record_every: args.usize_or("record-every", 1)?,
         ..Default::default()
+    })
+}
+
+/// Driver policy from `--max-wall-ms` (shared by `solve`, `distributed`
+/// and `engine-batch`): a wall-clock deadline enforced by the steppable
+/// solve driver between iterations. Deadline-stopped solves report
+/// `StopReason::Deadline` and still carry their anytime λ.
+fn driver_options(args: &Args) -> Result<DriverOptions> {
+    Ok(match args.get("max-wall-ms") {
+        None => DriverOptions::default(),
+        Some(v) => {
+            let ms: f64 =
+                v.parse().map_err(|_| anyhow!("--max-wall-ms: bad float {v:?}"))?;
+            DriverOptions::with_deadline_ms(ms)
+        }
     })
 }
 
@@ -197,7 +228,10 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
     );
 
     let init = vec![0.0f32; lp.dual_dim()];
-    let mut agd = Agd::default();
+    let dopts = driver_options(args)?;
+    let solve = |obj: &mut dyn ObjectiveFunction, dopts: DriverOptions| {
+        maximize_with(Box::new(Agd::default().stepper()), obj, &init, &opts, dopts)
+    };
     let shards = args.usize_or("shards", 1)?;
     let obj_threads = args.usize_or("obj-threads", 1)?;
     let (label, result) = match backend.as_str() {
@@ -222,7 +256,7 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
                     obj.num_chunks(),
                     obj.imbalance(),
                 );
-                let r = agd.maximize(&mut obj, &init, &opts);
+                let r = solve(&mut obj, dopts.clone());
                 println!("{}", comm_report(&obj.comm(), r.iterations as u64));
                 println!(
                     "{}",
@@ -239,17 +273,17 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
                     obj.threads(),
                     obj.layout().padding_factor()
                 );
-                ("slab", agd.maximize(&mut obj, &init, &opts))
+                ("slab", solve(&mut obj, dopts.clone()))
             }
         }
         "cpu" | "reference" => {
             let mut obj = CpuObjective::new(&lp);
-            ("reference", agd.maximize(&mut obj, &init, &opts))
+            ("reference", solve(&mut obj, dopts.clone()))
         }
         "hlo" => {
             let mut obj = HloObjective::new(&lp, &art)?;
             obj.warmup()?;
-            let r = agd.maximize(&mut obj, &init, &opts);
+            let r = solve(&mut obj, dopts.clone());
             eprintln!("phase timers: {}", obj.timers.report());
             ("hlo", r)
         }
@@ -259,7 +293,8 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
             let workers = if args.get("shards").is_some() { shards.max(1) } else { workers };
             let strategy = exec_strategy(args, obj_threads)?;
             let lp_arc = Arc::new(lp);
-            let out = solve_distributed_with(lp_arc.clone(), strategy, workers, &opts)?;
+            let out =
+                solve_distributed_driver(lp_arc.clone(), strategy, workers, &opts, dopts.clone())?;
             print_distributed_reports(&out, lp_arc.dual_dim());
             println!("{}", solve_report("dist", &out.result));
             if let Some(csv) = args.get("csv") {
@@ -311,13 +346,20 @@ pub fn cmd_distributed(args: &Args) -> Result<()> {
     );
 
     let strategy = exec_strategy(args, obj_threads)?;
-    let out = solve_distributed_with(lp.clone(), strategy, shards, &opts)?;
+    let dopts = driver_options(args)?;
+    let out = solve_distributed_driver(lp.clone(), strategy, shards, &opts, dopts.clone())?;
     println!("{}", solve_report(&format!("dist-{exec}-{shards}shard"), &out.result));
     print_distributed_reports(&out, lp.dual_dim());
 
     if args.flag("verify") {
         if exec != "slab" {
             return Err(anyhow!("--verify requires --exec slab (the bit-identity contract)"));
+        }
+        if dopts.deadline_ms.is_some() {
+            return Err(anyhow!(
+                "--verify is incompatible with --max-wall-ms (a wall-clock deadline \
+                 stops at a timing-dependent iteration, so bit-identity is undefined)"
+            ));
         }
         let mut one = SlabCpuObjective::new(&lp, obj_threads).map_err(anyhow::Error::msg)?;
         let mut agd = Agd::default();
@@ -621,7 +663,7 @@ pub fn cmd_ablation_gamma(args: &Args) -> Result<()> {
 pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     use crate::engine::{EngineConfig, SolveEngine, SolveJob};
     use crate::gen::workloads::{perturbation_sequence, PerturbSpec};
-    use crate::metrics::{batch_report, engine_report, BenchJson, JsonValue};
+    use crate::metrics::{coop_report, engine_report, BenchJson, JsonValue};
     use crate::solver::StoppingCriteria;
 
     let cfg = workload(args)?;
@@ -631,6 +673,7 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     let perturb = args.f64_or("perturb", 0.05)?;
     let stall_tol = args.f64_or("stall-tol", 1e-7)?;
     let max_iters = args.usize_or("iters", 2_000)?;
+    let record_every = args.usize_or("record-every", 1_000)?;
     let out_dir = args.get_or("out-dir", "results").to_string();
     let backend_spec = args.get_or("backend", "slab");
     let backend = CpuBackend::parse(backend_spec).ok_or_else(|| {
@@ -638,6 +681,8 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     })?;
     let obj_threads = args.usize_or("obj-threads", 1)?;
     let shards = args.usize_or("shards", 1)?;
+    let quantum = args.usize_or("quantum", 16)?;
+    let deadline_ms = driver_options(args)?.deadline_ms;
 
     eprintln!(
         "engine-batch: I={} J={} ν={} seed={} jobs={jobs} threads={threads} perturb={perturb} \
@@ -665,12 +710,13 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
             stall_patience: 10,
             ..Default::default()
         },
-        record_every: 1_000,
+        record_every,
     };
     let spec = PerturbSpec { c_rel: perturb, b_rel: perturb };
     let seq_seed = cfg.seed.wrapping_add(1);
 
     // --- cold baseline: every instance from scratch ----------------------
+    // (no deadline: the cold column is the undisturbed iteration count)
     let cold_engine = SolveEngine::new(EngineConfig {
         opts: opts.clone(),
         warm_tail,
@@ -679,6 +725,8 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         backend,
         objective_threads: obj_threads,
         shards,
+        deadline_ms: None,
+        quantum,
     });
     let cold_results: Vec<_> = perturbation_sequence(&base, &spec, jobs, seq_seed)
         .into_iter()
@@ -686,7 +734,12 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         .map(|(k, lp)| cold_engine.submit(SolveJob::new(k as u64, lp)))
         .collect();
 
-    // --- warm engine: primed once, then the stream as one batch ----------
+    // --- warm engine: primed once, then the stream through the
+    // cooperative executor (time-sliced drivers, per-job deadlines,
+    // γ-checkpoint warm-start publication). The deadline is attached
+    // per STREAM job, not to the engine config, so the priming solve is
+    // exempt — a deadline-truncated primer would make iter_speedup
+    // measure primer truncation instead of warm-starting. -----------------
     let warm_engine = SolveEngine::new(EngineConfig {
         opts: opts.clone(),
         warm_tail,
@@ -695,18 +748,26 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         backend,
         objective_threads: obj_threads,
         shards,
+        deadline_ms: None,
+        quantum,
     });
     let warm_jobs: Vec<SolveJob> = perturbation_sequence(&base, &spec, jobs, seq_seed)
         .into_iter()
         .enumerate()
-        .map(|(k, lp)| SolveJob::new(k as u64, lp))
+        .map(|(k, lp)| {
+            let job = SolveJob::new(k as u64, lp);
+            match deadline_ms {
+                Some(ms) => job.with_deadline_ms(ms),
+                None => job,
+            }
+        })
         .collect();
     let primer = warm_engine.submit(SolveJob::new(u64::MAX, base));
     eprintln!(
         "primed cache from base solve: {} iters, stop {:?}",
         primer.iterations, primer.stop_reason
     );
-    let (warm_results, breport) = warm_engine.solve_batch(warm_jobs);
+    let (warm_results, creport) = warm_engine.solve_batch_coop(warm_jobs);
 
     // --- report ----------------------------------------------------------
     let mut bench = BenchJson::new("engine_warmstart");
@@ -722,6 +783,11 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         .meta("backend", JsonValue::Str(backend.name().into()))
         .meta("objective_threads", JsonValue::UInt(obj_threads as u64))
         .meta("shards", JsonValue::UInt(shards as u64))
+        .meta("quantum", JsonValue::UInt(quantum as u64))
+        .meta(
+            "deadline_ms",
+            deadline_ms.map(JsonValue::Num).unwrap_or_else(|| JsonValue::Str("none".into())),
+        )
         .meta("seed", JsonValue::UInt(cfg.seed));
 
     println!(
@@ -766,7 +832,10 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     bench
         .meta("mean_cold_iters", JsonValue::Num(cold_iter_sum as f64 / n))
         .meta("mean_warm_iters", JsonValue::Num(warm_iter_sum as f64 / n))
-        .meta("iter_speedup", JsonValue::Num(iter_speedup));
+        .meta("iter_speedup", JsonValue::Num(iter_speedup))
+        .meta("deadline_stops", JsonValue::UInt(creport.deadline_stops as u64))
+        .meta("cancelled", JsonValue::UInt(creport.cancelled as u64))
+        .meta("coop_rounds", JsonValue::UInt(creport.rounds as u64));
     let path = bench.write(&out_dir)?;
 
     println!(
@@ -786,7 +855,7 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
         );
     }
     println!("{}", engine_report(&warm_engine.stats()));
-    println!("{}", batch_report(&breport));
+    println!("{}", coop_report(&creport));
     println!("wrote {}", path.display());
     Ok(())
 }

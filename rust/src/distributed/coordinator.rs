@@ -19,7 +19,7 @@ use anyhow::Result;
 use super::collective::CommSnapshot;
 use super::worker::{ExecStrategy, WorkerPool};
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
-use crate::solver::{Agd, Maximizer, SolveOptions, SolveResult};
+use crate::solver::{maximize_with, Agd, DriverOptions, SolveOptions, SolveResult};
 
 pub struct DistributedObjective {
     pool: WorkerPool,
@@ -152,10 +152,25 @@ pub fn solve_distributed_with(
     num_workers: usize,
     opts: &SolveOptions,
 ) -> Result<DistributedSolve> {
+    solve_distributed_driver(lp, strategy, num_workers, opts, DriverOptions::default())
+}
+
+/// Distributed solve with an explicit driver policy: the same steppable
+/// `SolveDriver` the engine uses drives the worker pool, so per-job
+/// wall-clock deadlines and cancellation apply to multi-shard solves too
+/// (CLI: `solve --backend dist --max-wall-ms`, `distributed
+/// --max-wall-ms`). A deadline-stopped distributed solve reports
+/// `StopReason::Deadline` with its anytime λ.
+pub fn solve_distributed_driver(
+    lp: Arc<MatchingLp>,
+    strategy: ExecStrategy,
+    num_workers: usize,
+    opts: &SolveOptions,
+    dopts: DriverOptions,
+) -> Result<DistributedSolve> {
     let mut obj = DistributedObjective::new_with(lp, strategy, num_workers)?;
     let init = vec![0.0f32; obj.dual_dim()];
-    let mut agd = Agd::default();
-    let result = agd.maximize(&mut obj, &init, opts);
+    let result = maximize_with(Box::new(Agd::default().stepper()), &mut obj, &init, opts, dopts);
     let comm = obj.comm();
     let num_workers = obj.num_workers();
     Ok(DistributedSolve {
@@ -174,7 +189,7 @@ mod tests {
     use super::*;
     use crate::gen::{generate, SyntheticConfig};
     use crate::runtime::HloObjective;
-    use crate::solver::GammaSchedule;
+    use crate::solver::{GammaSchedule, Maximizer};
 
     fn artifacts_dir() -> std::path::PathBuf {
         crate::runtime::default_artifacts_dir()
@@ -411,6 +426,33 @@ mod tests {
         let lam = vec![0.0f32; lp.dual_dim()];
         let r = dist.calculate(&lam, 0.1);
         assert_eq!(r.grad.len(), lp.dual_dim());
+    }
+
+    #[test]
+    fn slab_strategy_deadline_stops_with_anytime_dual() {
+        // deadline 0 stops deterministically after exactly one iteration;
+        // the distributed solve still reports a usable λ and a real
+        // final evaluation
+        let lp = Arc::new(small_lp());
+        let opts = SolveOptions {
+            max_iters: 10_000,
+            gamma: GammaSchedule::Fixed(0.05),
+            max_step_size: 1e-2,
+            initial_step_size: 1e-4,
+            ..Default::default()
+        };
+        let out = solve_distributed_driver(
+            lp.clone(),
+            ExecStrategy::Slab { threads: 1 },
+            2,
+            &opts,
+            DriverOptions::with_deadline_ms(0.0),
+        )
+        .unwrap();
+        assert_eq!(out.result.stop_reason, crate::solver::StopReason::Deadline);
+        assert_eq!(out.result.iterations, 1);
+        assert_eq!(out.result.lam.len(), lp.dual_dim());
+        assert!(out.result.final_obj.dual_obj.is_finite());
     }
 
     #[test]

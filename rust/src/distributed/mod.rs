@@ -31,7 +31,8 @@ pub mod worker;
 
 pub use collective::{reduce_chunk_partials, CommSnapshot, CommStats, LinkModel};
 pub use coordinator::{
-    solve_distributed, solve_distributed_with, DistributedObjective, DistributedSolve,
+    solve_distributed, solve_distributed_driver, solve_distributed_with, DistributedObjective,
+    DistributedSolve,
 };
 pub use partition::{balanced_partition, imbalance, shard_nnz};
 pub use worker::{ExecStrategy, WorkerMsg, WorkerPool};

@@ -14,14 +14,18 @@
 //!   γ-continuation tail instead of from zero. First-order LP solvers are
 //!   iteration-count bound (D-PDLP, cuPDLP.jl report the same), which is
 //!   exactly what dual warm-starting attacks;
-//! - [`scheduler`] — a bounded-concurrency batch scheduler running N
-//!   independent jobs across a thread pool, deterministically (batch
-//!   results are bit-identical to sequential execution);
+//! - [`scheduler`] — the fixed-width thread pool, in two modes: the
+//!   run-to-completion batch scheduler and the **cooperative executor**
+//!   that time-slices steppable solve drivers in round-robin quanta —
+//!   both deterministic (results are bit-identical to sequential
+//!   execution at any pool width);
 //! - [`session`] — the [`SolveEngine`] API: `submit`, `solve_batch`,
-//!   `stats`.
+//!   `solve_batch_coop` (deadlines, cancellation, mid-solve warm-start
+//!   checkpoints), `stats`.
 //!
 //! Driven end-to-end by the `engine-batch` CLI subcommand and the
-//! `bench_engine_warmstart` bench (experiment E12).
+//! `bench_engine_warmstart` / `bench_driver_overhead` benches
+//! (experiments E12, E16).
 
 pub mod fingerprint;
 pub mod scheduler;
@@ -29,6 +33,6 @@ pub mod session;
 pub mod warmstart;
 
 pub use fingerprint::Fingerprint;
-pub use scheduler::{BatchReport, Scheduler};
+pub use scheduler::{BatchReport, CoopReport, Scheduler};
 pub use session::{EngineConfig, EngineStats, JobResult, SolveEngine, SolveJob};
 pub use warmstart::{warm_options, WarmStart, WarmStartCache};

@@ -10,6 +10,16 @@
 //!   apply cache updates in job order. Lookup-then-update at batch
 //!   granularity makes the batch bit-identical to running the same jobs
 //!   through a 1-thread scheduler — no dependence on completion order.
+//! - `solve_batch_coop` — same snapshot semantics, but jobs run as
+//!   steppable drivers time-sliced over the pool in round-robin quanta
+//!   (DESIGN.md §8): per-job deadlines and cancellation are enforced
+//!   between iterations, and anytime duals are published to the
+//!   warm-start cache at every γ-decay checkpoint — not just at
+//!   completion — so deadline-killed solves still warm their successors.
+//!
+//! Every path solves through the steppable `SolveDriver`
+//! (`solver::driver`), so a `submit` is bit-identical to the same job
+//! stepped manually or cooperatively.
 //!
 //! Jobs are solved on a named CPU backend (`backend::CpuBackend`) — the
 //! slab-native batched objective by default, promoted to the chunk-sharded
@@ -25,24 +35,46 @@
 use std::sync::Mutex;
 
 use super::fingerprint::Fingerprint;
-use super::scheduler::{BatchReport, Scheduler};
+use super::scheduler::{BatchReport, CoopReport, Scheduler};
 use super::warmstart::{warm_options, WarmStart, WarmStartCache};
-use crate::backend::{CpuBackend, TimedObjective};
+use crate::backend::{AnyObjective, CpuBackend, TimedObjective};
 use crate::problem::{LpSpec, MatchingLp, ObjectiveFunction};
-use crate::solver::{Agd, Maximizer, SolveOptions, StopReason};
+use crate::solver::{
+    Agd, CancelToken, DriverOptions, SolveDriver, SolveOptions, StepEvent, StopReason,
+};
 
-/// One unit of work: an instance plus an optional per-job options override
-/// (defaults to the engine's cold-solve template).
+/// One unit of work: an instance plus optional per-job overrides — solve
+/// options (defaults to the engine's cold-solve template), a wall-clock
+/// deadline, and a cancellation token.
 pub struct SolveJob {
     /// Caller-chosen id, echoed in the result.
     pub id: u64,
     pub lp: MatchingLp,
     pub opts: Option<SolveOptions>,
+    /// Per-job wall-clock deadline in ms (overrides
+    /// `EngineConfig::deadline_ms`). A deadline-stopped job still runs at
+    /// least one iteration and publishes its anytime λ to the warm-start
+    /// cache, so killed solves warm their successors.
+    pub deadline_ms: Option<f64>,
+    /// Cooperative cancellation: keep a clone, `cancel()` any time.
+    pub cancel: Option<CancelToken>,
 }
 
 impl SolveJob {
     pub fn new(id: u64, lp: MatchingLp) -> SolveJob {
-        SolveJob { id, lp, opts: None }
+        SolveJob { id, lp, opts: None, deadline_ms: None, cancel: None }
+    }
+
+    /// Builder: per-job wall-clock deadline in milliseconds.
+    pub fn with_deadline_ms(mut self, ms: f64) -> SolveJob {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Builder: attach a cancellation token (keep a clone to fire it).
+    pub fn with_cancel(mut self, token: CancelToken) -> SolveJob {
+        self.cancel = Some(token);
+        self
     }
 
     /// Build the job's instance from a declarative [`LpSpec`] — the
@@ -111,6 +143,15 @@ pub struct EngineConfig {
     /// execution knob: it is folded into stats (`JobResult::shards`), not
     /// into the fingerprint, and warm starts cross shard configurations.
     pub shards: usize,
+    /// Default per-job wall-clock deadline in ms (None = unbounded);
+    /// `SolveJob::deadline_ms` overrides per job. Enforced by the solve
+    /// driver on every execution path (`submit`, `solve_batch`,
+    /// `solve_batch_coop`).
+    pub deadline_ms: Option<f64>,
+    /// Cooperative-executor time slice: driver iterations per job per
+    /// round-robin round (`solve_batch_coop`). Purely an execution knob —
+    /// results are bit-identical at any quantum and any pool width.
+    pub quantum: usize,
 }
 
 impl Default for EngineConfig {
@@ -125,6 +166,8 @@ impl Default for EngineConfig {
             backend: CpuBackend::Slab,
             objective_threads: 1,
             shards: 1,
+            deadline_ms: None,
+            quantum: 16,
         }
     }
 }
@@ -143,6 +186,10 @@ pub struct EngineStats {
     pub objective_eval_ms: f64,
     pub batches: u64,
     pub peak_in_flight: usize,
+    /// Solves stopped by the wall-clock deadline (`StopReason::Deadline`).
+    pub deadline_stops: u64,
+    /// Solves stopped by a cancellation token (`StopReason::Cancelled`).
+    pub cancelled: u64,
 }
 
 impl EngineStats {
@@ -192,10 +239,31 @@ impl SolveEngine {
         opts
     }
 
-    /// Solve one resolved job. Pure function of its inputs — the scheduler
-    /// fans this out without affecting values. `fp` is the job's
-    /// fingerprint, computed once at resolution time (hashing the full
-    /// sparsity pattern is not free on serving-sized instances).
+    /// Resolve a job's driver inputs: initial dual + options (warm or
+    /// cold) and the driver policy (deadline, cancellation).
+    fn driver_inputs(
+        job: &SolveJob,
+        cold: &SolveOptions,
+        warm: Option<&WarmStart>,
+        tail: usize,
+        default_deadline_ms: Option<f64>,
+    ) -> (Vec<f32>, SolveOptions, bool, DriverOptions) {
+        let (init, opts, is_warm) = match warm {
+            Some(ws) => (ws.lam.clone(), warm_options(cold, tail), true),
+            None => (vec![0.0f32; job.lp.dual_dim()], cold.clone(), false),
+        };
+        let dopts = DriverOptions {
+            deadline_ms: job.deadline_ms.or(default_deadline_ms),
+            cancel: job.cancel.clone(),
+        };
+        (init, opts, is_warm, dopts)
+    }
+
+    /// Solve one resolved job through the driver. Pure function of its
+    /// inputs — the scheduler fans this out without affecting values.
+    /// `fp` is the job's fingerprint, computed once at resolution time
+    /// (hashing the full sparsity pattern is not free on serving-sized
+    /// instances).
     fn solve_resolved(
         job: &SolveJob,
         fp: Fingerprint,
@@ -205,18 +273,17 @@ impl SolveEngine {
         backend: CpuBackend,
         objective_threads: usize,
         shards: usize,
+        default_deadline_ms: Option<f64>,
     ) -> JobResult {
-        let (init, opts, is_warm) = match warm {
-            Some(ws) => (ws.lam.clone(), warm_options(cold, tail), true),
-            None => (vec![0.0f32; job.lp.dual_dim()], cold.clone(), false),
-        };
+        let (init, opts, is_warm, dopts) =
+            Self::driver_inputs(job, cold, warm, tail, default_deadline_ms);
         let mut obj =
             TimedObjective::new(backend.objective_with(&job.lp, objective_threads, shards));
         // actual, not requested: a layout-ineligible instance falls back
         // to the (unsharded) reference objective
         let ran_shards = obj.inner.shards();
-        let mut agd = Agd::default();
-        let r = agd.maximize(&mut obj, &init, &opts);
+        let mut driver = SolveDriver::new(Box::new(Agd::default().stepper()), &init, opts, dopts);
+        let r = driver.run(&mut obj);
         JobResult {
             id: job.id,
             fingerprint: fp,
@@ -247,6 +314,11 @@ impl SolveEngine {
             s.cold_solves += 1;
             s.cold_iters += r.iterations as u64;
         }
+        match r.stop_reason {
+            StopReason::Deadline => s.deadline_stops += 1,
+            StopReason::Cancelled => s.cancelled += 1,
+            _ => {}
+        }
     }
 
     /// Solve one job immediately (lookup → solve → cache update).
@@ -263,11 +335,16 @@ impl SolveEngine {
             self.cfg.backend,
             self.cfg.objective_threads,
             self.cfg.shards,
+            self.cfg.deadline_ms,
         );
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(fp, r.lam.clone(), r.final_gamma);
+        // zero-iteration λ is just the initial value (cancelled before the
+        // first step, or a zero budget) — never cache it
+        if r.iterations > 0 {
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(fp, r.lam.clone(), r.final_gamma);
+        }
         self.record(&r);
         r
     }
@@ -292,16 +369,31 @@ impl SolveEngine {
         let backend = self.cfg.backend;
         let obj_threads = self.cfg.objective_threads;
         let shards = self.cfg.shards;
+        let deadline = self.cfg.deadline_ms;
         let sched = Scheduler::new(self.cfg.threads);
         let (results, report) = sched.run(resolved.len(), |i| {
             let (job, fp, cold, warm) = &resolved[i];
-            Self::solve_resolved(job, *fp, cold, warm.as_ref(), tail, backend, obj_threads, shards)
+            Self::solve_resolved(
+                job,
+                *fp,
+                cold,
+                warm.as_ref(),
+                tail,
+                backend,
+                obj_threads,
+                shards,
+                deadline,
+            )
         });
 
         {
             let mut cache = self.cache.lock().unwrap();
             for r in &results {
-                cache.insert(r.fingerprint, r.lam.clone(), r.final_gamma);
+                // same guard as the coop path: a zero-iteration λ is just
+                // the initial value and must not poison the cache
+                if r.iterations > 0 {
+                    cache.insert(r.fingerprint, r.lam.clone(), r.final_gamma);
+                }
             }
         }
         for r in &results {
@@ -315,9 +407,144 @@ impl SolveEngine {
         (results, report)
     }
 
+    /// Solve a batch on the **cooperative executor**: all jobs' drivers
+    /// are time-sliced over the thread pool in fixed round-robin quanta
+    /// (`EngineConfig::quantum` iterations per job per round), instead of
+    /// each job monopolizing a worker to completion.
+    ///
+    /// Semantics vs [`Self::solve_batch`]:
+    /// - warm starts still resolve against the cache snapshot at batch
+    ///   entry, and per-job results are **bit-identical** to `solve_batch`
+    ///   (same driver math) at any pool width and any quantum;
+    /// - per-job deadlines/cancellation are enforced between iterations,
+    ///   with latency bounded by one quantum rather than a full solve;
+    /// - each job's anytime λ is published to the warm-start cache at
+    ///   **every γ-decay checkpoint** (the last one is the γ-floor
+    ///   arrival) — applied at round barriers in job order — and again at
+    ///   completion, so even a deadline-killed or cancelled job warms its
+    ///   successors. Zero-iteration jobs publish nothing (their λ is just
+    ///   the initial value).
+    pub fn solve_batch_coop(&self, jobs: Vec<SolveJob>) -> (Vec<JobResult>, CoopReport) {
+        let tail = self.cfg.warm_tail;
+        let resolved: Vec<(SolveJob, Fingerprint, SolveOptions, Option<WarmStart>)> = {
+            let mut cache = self.cache.lock().unwrap();
+            jobs.into_iter()
+                .map(|job| {
+                    let fp = Fingerprint::of(&job.lp);
+                    let warm = cache.lookup(&fp);
+                    let cold = self.cold_options(&job);
+                    (job, fp, cold, warm)
+                })
+                .collect()
+        };
+
+        struct CoopTask<'a> {
+            driver: SolveDriver<'static>,
+            obj: TimedObjective<AnyObjective<'a>>,
+            ran_shards: usize,
+        }
+
+        let quantum = self.cfg.quantum.max(1);
+        let tasks: Vec<CoopTask> = resolved
+            .iter()
+            .map(|(job, _fp, cold, warm)| {
+                let (init, opts, _is_warm, dopts) =
+                    Self::driver_inputs(job, cold, warm.as_ref(), tail, self.cfg.deadline_ms);
+                let obj = TimedObjective::new(self.cfg.backend.objective_with(
+                    &job.lp,
+                    self.cfg.objective_threads,
+                    self.cfg.shards,
+                ));
+                let ran_shards = obj.inner.shards();
+                let driver =
+                    SolveDriver::new(Box::new(Agd::default().stepper()), &init, opts, dopts);
+                CoopTask { driver, obj, ran_shards }
+            })
+            .collect();
+
+        let sched = Scheduler::new(self.cfg.threads);
+        let (tasks, _reasons, report) = sched.run_coop(
+            tasks,
+            |i, task: &mut CoopTask<'_>| {
+                let mut events: Vec<(Fingerprint, Vec<f32>, f32)> = Vec::new();
+                for _ in 0..quantum {
+                    match task.driver.step(&mut task.obj) {
+                        StepEvent::Stopped { reason } => return (events, Some(reason)),
+                        StepEvent::GammaDecayed { record, .. } => {
+                            // γ checkpoint: publish the λ optimized at the
+                            // γ that just ended (record.gamma)
+                            events.push((
+                                resolved[i].1,
+                                task.driver.current_lam().to_vec(),
+                                record.gamma,
+                            ));
+                        }
+                        StepEvent::Continue { .. } => {}
+                    }
+                }
+                (events, None)
+            },
+            |_i, events| {
+                let mut cache = self.cache.lock().unwrap();
+                for (fp, lam, gamma) in events {
+                    cache.insert(fp, lam, gamma);
+                }
+            },
+        );
+
+        let mut results = Vec::with_capacity(tasks.len());
+        for (k, mut task) in tasks.into_iter().enumerate() {
+            let (job, fp, _cold, warm) = &resolved[k];
+            let r = task.driver.result(&mut task.obj);
+            results.push(JobResult {
+                id: job.id,
+                fingerprint: *fp,
+                warm: warm.is_some(),
+                iterations: r.iterations,
+                stop_reason: r.stop_reason,
+                dual_obj: r.final_obj.dual_obj,
+                cx: r.final_obj.cx,
+                infeas_pos_norm: r.final_obj.infeas_pos_norm,
+                final_gamma: r.final_gamma,
+                wall_ms: r.total_wall_ms,
+                backend: task.obj.name(),
+                shards: task.ran_shards,
+                objective_eval_ms: task.obj.eval_ms,
+                lam: r.lam,
+            });
+        }
+
+        {
+            let mut cache = self.cache.lock().unwrap();
+            for r in &results {
+                // zero-iteration λ is just the initial value — never
+                // publish it (a cancelled cold job would poison the cache
+                // with zeros)
+                if r.iterations > 0 {
+                    cache.insert(r.fingerprint, r.lam.clone(), r.final_gamma);
+                }
+            }
+        }
+        for r in &results {
+            self.record(r);
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.batches += 1;
+            s.peak_in_flight = s.peak_in_flight.max(report.threads);
+        }
+        (results, report)
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> EngineStats {
         *self.stats.lock().unwrap()
+    }
+
+    /// Non-mutating view of the cached warm start for a fingerprint
+    /// (diagnostics; no LRU or hit-counter effects).
+    pub fn peek_warm(&self, fp: &Fingerprint) -> Option<WarmStart> {
+        self.cache.lock().unwrap().peek(fp).cloned()
     }
 
     /// (hits, misses) of the warm-start cache.
@@ -383,6 +610,8 @@ mod tests {
             backend: CpuBackend::Slab,
             objective_threads: 1,
             shards: 1,
+            deadline_ms: None,
+            quantum: 8,
         }
     }
 
@@ -498,6 +727,94 @@ mod tests {
         // pattern under shards=3 must run warm
         let c = sharded.submit(SolveJob::new(1, instance(6)));
         assert!(c.warm, "same fingerprint must warm-start across shard configs");
+    }
+
+    #[test]
+    fn coop_batch_is_bit_identical_to_run_to_completion_batch() {
+        // same jobs, same primed cache: the cooperative executor must
+        // reproduce solve_batch exactly, at any pool width and quantum
+        let a_engine = SolveEngine::new(test_config(4));
+        let mut cfg = test_config(1);
+        cfg.quantum = 3;
+        let b_engine = SolveEngine::new(cfg);
+        let _ = a_engine.submit(SolveJob::new(99, instance(3)));
+        let _ = b_engine.submit(SolveJob::new(99, instance(3)));
+
+        let jobs = |off: u64| -> Vec<SolveJob> {
+            (0..5).map(|k| SolveJob::new(off + k, instance(3))).collect()
+        };
+        let (a, _) = a_engine.solve_batch(jobs(0));
+        let (b, creport) = b_engine.solve_batch_coop(jobs(0));
+        assert_eq!(creport.jobs, 5);
+        assert!(creport.rounds >= 1);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.iterations, rb.iterations, "job {}", ra.id);
+            assert_eq!(ra.stop_reason, rb.stop_reason);
+            assert_eq!(ra.dual_obj.to_bits(), rb.dual_obj.to_bits(), "job {}", ra.id);
+            for (x, y) in ra.lam.iter().zip(&rb.lam) {
+                assert_eq!(x.to_bits(), y.to_bits(), "job {} λ diverged", ra.id);
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_stops_are_reported_and_still_warm_the_cache() {
+        let mut cfg = test_config(2);
+        cfg.quantum = 4;
+        let engine = SolveEngine::new(cfg);
+        // deadline 0: stops deterministically after exactly one iteration
+        let job = SolveJob::new(0, instance(5)).with_deadline_ms(0.0);
+        let (results, report) = engine.solve_batch_coop(vec![job]);
+        assert_eq!(results[0].stop_reason, StopReason::Deadline);
+        assert_eq!(results[0].iterations, 1);
+        assert!(results[0].dual_obj.is_finite());
+        assert_eq!(report.deadline_stops, 1);
+        let s = engine.stats();
+        assert_eq!(s.deadline_stops, 1);
+        // the killed solve still published its anytime λ
+        assert_eq!(engine.cache_len(), 1);
+        let again = engine.submit(SolveJob::new(1, instance(5)));
+        assert!(again.warm, "deadline-killed solve must warm its successor");
+    }
+
+    #[test]
+    fn cancelled_job_reports_cancelled_and_publishes_nothing() {
+        use crate::solver::CancelToken;
+        let engine = SolveEngine::new(test_config(2));
+        let token = CancelToken::new();
+        token.cancel(); // cancelled before the batch even starts
+        let job = SolveJob::new(0, instance(7)).with_cancel(token);
+        let (results, report) = engine.solve_batch_coop(vec![job]);
+        assert_eq!(results[0].stop_reason, StopReason::Cancelled);
+        assert_eq!(results[0].iterations, 0);
+        // satellite guarantee: even a zero-iteration solve reports a real
+        // evaluation, not a −∞ placeholder
+        assert!(results[0].dual_obj.is_finite());
+        assert_eq!(report.cancelled, 1);
+        assert_eq!(engine.stats().cancelled, 1);
+        assert_eq!(engine.cache_len(), 0, "zero-iteration λ must not be cached");
+    }
+
+    #[test]
+    fn coop_mid_solve_gamma_checkpoints_reach_the_cache() {
+        // one decay solve: γ checkpoints publish BEFORE the job completes.
+        // The test schedule (0.08→0.02, halved every 10) has exactly 2
+        // decay transitions, so the cache entry must show 2 checkpoint
+        // inserts + 1 completion insert = 3 refreshes.
+        let engine = SolveEngine::new(test_config(1));
+        let (results, _) = engine.solve_batch_coop(vec![SolveJob::new(0, instance(8))]);
+        assert!(!results[0].warm);
+        let ws = engine.peek_warm(&results[0].fingerprint).expect("cached");
+        assert!(
+            ws.refreshes >= 2,
+            "γ checkpoints must publish before the completion insert (refreshes {})",
+            ws.refreshes
+        );
+        assert_eq!(ws.gamma, results[0].final_gamma);
+        for (a, b) in ws.lam.iter().zip(&results[0].lam) {
+            assert_eq!(a.to_bits(), b.to_bits(), "final insert wins");
+        }
     }
 
     #[test]

@@ -15,14 +15,20 @@ use std::collections::HashMap;
 use super::fingerprint::Fingerprint;
 use crate::solver::{GammaSchedule, SolveOptions};
 
-/// Cached dual state from a completed solve.
+/// Cached dual state from a completed solve — or from a mid-solve
+/// γ-decay checkpoint: the cooperative executor publishes each job's
+/// anytime λ at every continuation transition, so a deadline-killed or
+/// cancelled solve still leaves a usable entry behind.
 #[derive(Clone, Debug)]
 pub struct WarmStart {
-    /// Final dual iterate λ (in the solved system's row scaling).
+    /// Latest published dual iterate λ (in the solved system's row
+    /// scaling).
     pub lam: Vec<f32>,
-    /// γ the cached λ was optimized at (the producing schedule's floor).
+    /// γ the cached λ was optimized at (the producing schedule's floor,
+    /// or the pre-decay γ of a mid-solve checkpoint).
     pub gamma: f32,
-    /// How many solves have refreshed this entry.
+    /// How many inserts have touched this entry (checkpoint publications
+    /// count).
     pub refreshes: u64,
 }
 

@@ -8,7 +8,7 @@ pub mod bench_json;
 pub use bench_json::{BenchJson, JsonValue};
 
 use crate::distributed::CommSnapshot;
-use crate::engine::{BatchReport, EngineStats};
+use crate::engine::{BatchReport, CoopReport, EngineStats};
 use crate::solver::SolveResult;
 
 /// Sample statistics for bench timing series.
@@ -74,7 +74,7 @@ pub fn engine_report(s: &EngineStats) -> String {
     format!(
         "engine: {} solves ({} cold / {} warm), mean iters cold={:.1} warm={:.1}, \
          {:.1}ms total ({:.1}ms / {eval_share:.0}% in objective eval), \
-         {} batches (peak {} in flight)",
+         {} batches (peak {} in flight), {} deadline-stopped, {} cancelled",
         s.submitted,
         s.cold_solves,
         s.warm_solves,
@@ -84,6 +84,24 @@ pub fn engine_report(s: &EngineStats) -> String {
         s.objective_eval_ms,
         s.batches,
         s.peak_in_flight,
+        s.deadline_stops,
+        s.cancelled,
+    )
+}
+
+/// One-line cooperative-executor report: round-robin rounds, throughput,
+/// and the deadline/cancel mix of the batch.
+pub fn coop_report(r: &CoopReport) -> String {
+    format!(
+        "coop: {} jobs time-sliced on {} threads, {} rounds in {:.1}ms \
+         ({:.1} jobs/s), {} deadline-stopped, {} cancelled",
+        r.jobs,
+        r.threads,
+        r.rounds,
+        r.wall_ms,
+        r.throughput(),
+        r.deadline_stops,
+        r.cancelled,
     )
 }
 
@@ -157,6 +175,26 @@ mod tests {
     #[should_panic]
     fn stats_rejects_empty() {
         stats(&[]);
+    }
+
+    #[test]
+    fn engine_and_coop_reports_name_deadline_and_cancel_counts() {
+        let s = EngineStats { deadline_stops: 3, cancelled: 1, ..Default::default() };
+        let rep = engine_report(&s);
+        assert!(rep.contains("3 deadline-stopped") && rep.contains("1 cancelled"), "{rep}");
+        let c = CoopReport {
+            jobs: 4,
+            threads: 2,
+            rounds: 9,
+            deadline_stops: 2,
+            cancelled: 1,
+            wall_ms: 10.0,
+        };
+        let rep = coop_report(&c);
+        assert!(
+            rep.contains("4 jobs") && rep.contains("9 rounds") && rep.contains("2 deadline-stopped"),
+            "{rep}"
+        );
     }
 
     #[test]

@@ -8,13 +8,18 @@
 //! - Nesterov momentum pair (λ, y): y_{t+1} = λ_{t+1} + β_t(λ_{t+1} − λ_t)
 //!   with β_t = t/(t+3);
 //! - η_max is scaled with γ at continuation transition points (handled by
-//!   the shared loop via `step_cap_scale`).
+//!   the shared driver via `step_cap_scale`).
 //!
-//! The (λ₁, λ₂) = (λ_{t+1}, y_{t+1}) pair is exactly the momentum state the
-//! distributed pattern broadcasts each iteration (paper §6 step 4).
+//! The update rule lives in [`AgdStepper`], a [`DualStepper`] plugged into
+//! the shared [`crate::solver::driver::SolveDriver`]; [`Agd`] is the
+//! one-shot `Maximizer` wrapper over it. The (λ₁, λ₂) = (λ_{t+1}, y_{t+1})
+//! pair is exactly the momentum state the distributed pattern broadcasts
+//! each iteration (paper §6 step 4), and exactly what a driver checkpoint
+//! snapshots.
 
-use super::maximizer::{run_loop, Maximizer, SolveOptions, SolveResult};
-use crate::problem::ObjectiveFunction;
+use super::driver::{maximize_with, DriverOptions, DualStepper};
+use super::maximizer::{Maximizer, SolveOptions, SolveResult};
+use crate::problem::{ObjectiveFunction, ObjectiveResult};
 use crate::util::mathvec;
 
 pub struct Agd {
@@ -31,6 +36,120 @@ impl Default for Agd {
     }
 }
 
+impl Agd {
+    /// The update rule as a driver-pluggable stepper.
+    pub fn stepper(&self) -> AgdStepper {
+        AgdStepper::new(self.restart_on_decrease)
+    }
+}
+
+/// AGD iterates + momentum as an explicit, checkpointable state machine
+/// step rule.
+#[derive(Clone, Debug)]
+pub struct AgdStepper {
+    restart_on_decrease: bool,
+    /// λ — the primal-dual candidate (the anytime dual).
+    lam: Vec<f32>,
+    /// y — the extrapolated query point.
+    y: Vec<f32>,
+    lam_prev: Vec<f32>,
+    /// Curvature memory (empty until the first step has run).
+    y_prev: Vec<f32>,
+    grad_prev: Vec<f32>,
+    prev_obj: f64,
+    /// Restartable momentum clock.
+    momentum_t: usize,
+}
+
+impl AgdStepper {
+    pub fn new(restart_on_decrease: bool) -> AgdStepper {
+        AgdStepper {
+            restart_on_decrease,
+            lam: Vec::new(),
+            y: Vec::new(),
+            lam_prev: Vec::new(),
+            y_prev: Vec::new(),
+            grad_prev: Vec::new(),
+            prev_obj: f64::NEG_INFINITY,
+            momentum_t: 0,
+        }
+    }
+}
+
+impl DualStepper for AgdStepper {
+    fn init(&mut self, initial_value: &[f32]) {
+        self.lam = initial_value.to_vec();
+        self.y = initial_value.to_vec();
+        self.lam_prev = initial_value.to_vec();
+        self.y_prev.clear();
+        self.grad_prev.clear();
+        self.prev_obj = f64::NEG_INFINITY;
+        self.momentum_t = 0;
+    }
+
+    fn step(
+        &mut self,
+        obj: &mut dyn ObjectiveFunction,
+        t: usize,
+        gamma: f32,
+        eta_cap: f64,
+        initial_step_size: f64,
+    ) -> (ObjectiveResult, f64) {
+        // ∇g at the extrapolated point y_t
+        let res = obj.calculate(&self.y, gamma);
+
+        // adaptive step size
+        let eta = if t == 0 || self.y_prev.is_empty() {
+            initial_step_size.min(eta_cap)
+        } else {
+            let dy = mathvec::dist2(&self.y, &self.y_prev);
+            let dg = mathvec::dist2(&res.grad, &self.grad_prev);
+            if dy > 0.0 && dg > 0.0 {
+                (dy / dg).min(eta_cap)
+            } else {
+                eta_cap
+            }
+        };
+
+        // λ_{t+1} = Π_{≥0}(y_t + η ∇g(y_t))   (ascent)
+        self.lam_prev.copy_from_slice(&self.lam);
+        self.lam.copy_from_slice(&self.y);
+        mathvec::axpy(eta as f32, &res.grad, &mut self.lam);
+        mathvec::clamp_nonneg(&mut self.lam);
+
+        // momentum restart on objective decrease
+        if self.restart_on_decrease && res.dual_obj < self.prev_obj {
+            self.momentum_t = 0;
+        } else {
+            self.momentum_t += 1;
+        }
+        self.prev_obj = res.dual_obj;
+
+        // y_{t+1} = λ_{t+1} + β(λ_{t+1} − λ_t)
+        let beta = self.momentum_t as f32 / (self.momentum_t as f32 + 3.0);
+        self.y_prev = self.y.clone();
+        self.grad_prev = res.grad.clone();
+        let mut y_next = vec![0.0f32; self.y.len()];
+        mathvec::extrapolate(&self.lam, &self.lam_prev, beta, &mut y_next);
+        mathvec::clamp_nonneg(&mut y_next);
+        self.y = y_next;
+
+        (res, eta)
+    }
+
+    fn lam(&self) -> &[f32] {
+        &self.lam
+    }
+
+    fn name(&self) -> &'static str {
+        "agd"
+    }
+
+    fn try_clone(&self) -> Option<Box<dyn DualStepper>> {
+        Some(Box::new(self.clone()))
+    }
+}
+
 impl Maximizer for Agd {
     fn maximize(
         &mut self,
@@ -38,73 +157,7 @@ impl Maximizer for Agd {
         initial_value: &[f32],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let n = obj.dual_dim();
-        assert_eq!(initial_value.len(), n);
-
-        // iterates: λ (primal-dual candidate), y (extrapolated query point)
-        let mut lam = initial_value.to_vec();
-        let mut y = initial_value.to_vec();
-        let mut lam_prev = initial_value.to_vec();
-
-        // curvature memory
-        let mut y_prev: Vec<f32> = Vec::new();
-        let mut grad_prev: Vec<f32> = Vec::new();
-
-        let mut prev_obj = f64::NEG_INFINITY;
-        let mut momentum_t = 0usize; // restartable momentum clock
-
-        let lam_out = std::rc::Rc::new(std::cell::RefCell::new(lam.clone()));
-        let lam_out2 = lam_out.clone();
-
-        let result = run_loop(
-            n,
-            opts,
-            move |t, gamma, eta_cap| {
-                // ∇g at the extrapolated point y_t
-                let res = obj.calculate(&y, gamma);
-
-                // adaptive step size
-                let eta = if t == 0 || y_prev.is_empty() {
-                    opts.initial_step_size.min(eta_cap)
-                } else {
-                    let dy = mathvec::dist2(&y, &y_prev);
-                    let dg = mathvec::dist2(&res.grad, &grad_prev);
-                    if dy > 0.0 && dg > 0.0 {
-                        (dy / dg).min(eta_cap)
-                    } else {
-                        eta_cap
-                    }
-                };
-
-                // λ_{t+1} = Π_{≥0}(y_t + η ∇g(y_t))   (ascent)
-                lam_prev.copy_from_slice(&lam);
-                lam.copy_from_slice(&y);
-                mathvec::axpy(eta as f32, &res.grad, &mut lam);
-                mathvec::clamp_nonneg(&mut lam);
-
-                // momentum restart on objective decrease
-                if self.restart_on_decrease && res.dual_obj < prev_obj {
-                    momentum_t = 0;
-                } else {
-                    momentum_t += 1;
-                }
-                prev_obj = res.dual_obj;
-
-                // y_{t+1} = λ_{t+1} + β(λ_{t+1} − λ_t)
-                let beta = momentum_t as f32 / (momentum_t as f32 + 3.0);
-                y_prev = y.clone();
-                grad_prev = res.grad.clone();
-                let mut y_next = vec![0.0f32; y.len()];
-                mathvec::extrapolate(&lam, &lam_prev, beta, &mut y_next);
-                mathvec::clamp_nonneg(&mut y_next);
-                y = y_next;
-
-                *lam_out2.borrow_mut() = lam.clone();
-                (res, eta)
-            },
-            move || lam_out.borrow().clone(),
-        );
-        result
+        maximize_with(Box::new(self.stepper()), obj, initial_value, opts, DriverOptions::default())
     }
 
     fn name(&self) -> &'static str {

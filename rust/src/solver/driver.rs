@@ -1,0 +1,742 @@
+//! The steppable solve driver — the shared dual-ascent loop as an explicit
+//! state machine.
+//!
+//! The seed stack's loop was a private run-to-completion closure: callers
+//! got control back only after the solve ended, so the serving layer could
+//! not enforce deadlines, stream diagnostics, checkpoint long solves, or
+//! interleave tenants on one thread pool. [`SolveDriver`] turns the loop
+//! inside out:
+//!
+//! ```text
+//!            ┌──────────────────────────────────────────────┐
+//!            │                 SolveDriver                  │
+//!            │  SolveState: t, stall window, last result,   │
+//!            │  trajectory, stop reason, wall-clock offset  │
+//!            │  DualStepper: iterate + momentum (AGD/PGD)   │
+//!            └──────────────────────────────────────────────┘
+//!   step(obj) ──▶ Continue { record }          (one more iteration ran)
+//!            ──▶ GammaDecayed { record, gamma } (γ transition next iter —
+//!                                               the warm-start checkpoint)
+//!            ──▶ Stopped { reason }            (terminal; idempotent)
+//! ```
+//!
+//! - One `step` runs exactly one iteration: the [`DualStepper`] evaluates
+//!   the objective at its query point and advances its iterates; the
+//!   driver owns everything the steppers share — γ-schedule position,
+//!   step-size cap scaling, stall window, trajectory recording, stopping,
+//!   deadline and cancellation checks.
+//! - `checkpoint()` / [`SolveDriver::resume`] snapshot and restore the
+//!   full solve (stepper momentum included): resuming at iteration k is
+//!   bit-identical to never having paused.
+//! - [`IterObserver`] hooks stream per-iteration diagnostics without
+//!   waiting for the solve to end; the built-in trajectory recorder
+//!   follows the same per-iteration contract (kept inside [`SolveState`]
+//!   so checkpoints carry it).
+//! - `current_lam()` is the *anytime dual*: valid after every step, which
+//!   is what lets a deadline-killed solve still warm its successors.
+//!
+//! Driver-stepped solves are bit-identical to the legacy `maximize()`
+//! path — `Maximizer` is now a thin compat wrapper over this driver (see
+//! `tests/driver_parity.rs`), mirroring the pause/inspect/re-parameterize
+//! loops of restarted first-order LP methods (cuPDLP.jl; Lu & Yang's
+//! GPU-LP survey).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::maximizer::{IterRecord, SolveOptions, SolveResult};
+use super::stopping::StopReason;
+use crate::problem::{ObjectiveFunction, ObjectiveResult};
+use crate::util::timer::Stopwatch;
+
+/// Optimizer-specific update rule plugged into the shared driver: the
+/// stepper owns its iterates (λ and any momentum pair) and advances them
+/// by one iteration per `step`; the driver owns schedule, stopping,
+/// recording, and deadline/cancel policy.
+pub trait DualStepper: Send {
+    /// (Re)set the iterates to the given initial dual.
+    fn init(&mut self, initial_value: &[f32]);
+
+    /// Run ONE iteration at iteration index `t`: evaluate `obj` at the
+    /// stepper's query point, advance the iterates, and return the
+    /// evaluation plus the step size actually used. `eta_cap` is the
+    /// γ-scaled maximum step size; `initial_step_size` the cold first-step
+    /// size (both resolved by the driver from [`SolveOptions`]).
+    fn step(
+        &mut self,
+        obj: &mut dyn ObjectiveFunction,
+        t: usize,
+        gamma: f32,
+        eta_cap: f64,
+        initial_step_size: f64,
+    ) -> (ObjectiveResult, f64);
+
+    /// The current dual candidate λ — valid after any number of steps
+    /// (the anytime iterate; for AGD this is λ, not the extrapolated y).
+    fn lam(&self) -> &[f32];
+
+    fn name(&self) -> &'static str;
+
+    /// Clone the full stepper state for a checkpoint. `None` means this
+    /// stepper cannot be checkpointed (e.g. the legacy closure shim).
+    fn try_clone(&self) -> Option<Box<dyn DualStepper>> {
+        None
+    }
+}
+
+/// Cooperative cancellation handle: clone it, hand one clone to the job,
+/// keep the other, `cancel()` at any time. The driver checks it before
+/// each iteration and stops with [`StopReason::Cancelled`].
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Driver-level execution policy, orthogonal to the optimization settings
+/// in [`SolveOptions`]: how long the job may run and whether it can be
+/// cancelled from outside.
+#[derive(Clone, Debug, Default)]
+pub struct DriverOptions {
+    /// Wall-clock budget in milliseconds, measured from the driver's
+    /// FIRST `step` (not from construction, so queued cooperative jobs
+    /// don't burn budget before they run; checkpoint/resume segments
+    /// accumulate). Checked AFTER each completed iteration, so a solve
+    /// with `max_iters ≥ 1` always performs at least one iteration and
+    /// stops with a usable λ.
+    pub deadline_ms: Option<f64>,
+    /// Cooperative cancellation, checked BEFORE each iteration.
+    pub cancel: Option<CancelToken>,
+}
+
+impl DriverOptions {
+    pub fn with_deadline_ms(ms: f64) -> DriverOptions {
+        DriverOptions { deadline_ms: Some(ms), ..Default::default() }
+    }
+}
+
+/// Everything the loop tracks besides the stepper's iterates. Cloneable,
+/// so a [`Checkpoint`] is just this plus the stepper state.
+#[derive(Clone, Debug, Default)]
+pub struct SolveState {
+    /// Iterations completed so far (= the next iteration index).
+    pub t: usize,
+    /// Consecutive small-objective-step count (stall window).
+    pub stall_run: usize,
+    /// Most recent objective evaluation.
+    pub last: Option<ObjectiveResult>,
+    /// Records kept per `SolveOptions::record_every`, PLUS the stopping
+    /// iteration (always recorded — the trajectory never ends before the
+    /// reported final objective).
+    pub trajectory: Vec<IterRecord>,
+    /// Set exactly once, when the solve reaches a terminal state.
+    pub stop_reason: Option<StopReason>,
+    /// Wall-clock accumulated by earlier run segments (checkpoint/resume
+    /// restarts the stopwatch; this keeps `wall_ms` monotone).
+    pub wall_offset_ms: f64,
+}
+
+/// One step outcome. `record` is the iteration's [`IterRecord`] whether or
+/// not it was kept in the trajectory — callers can stream it without
+/// configuring `record_every: 1`.
+#[derive(Clone, Debug)]
+pub enum StepEvent {
+    /// The iteration ran and the solve continues.
+    Continue { record: IterRecord },
+    /// The iteration ran, the solve continues, and the NEXT iteration
+    /// starts at a decayed γ (`gamma`). This is the warm-start checkpoint
+    /// signal: `current_lam()` is the λ optimized at `record.gamma`, and
+    /// the last such event is the γ-floor arrival. The cooperative
+    /// executor publishes λ to the warm-start cache on every one.
+    GammaDecayed { record: IterRecord, gamma: f32 },
+    /// Terminal. The call that first returns this may have run the
+    /// stopping iteration (its record is in the trajectory); every
+    /// subsequent `step` returns the same event and does no work. Call
+    /// [`SolveDriver::result`] to assemble the `SolveResult`.
+    Stopped { reason: StopReason },
+}
+
+/// Per-iteration diagnostics hooks — the streaming replacement for
+/// "wait for `SolveResult.trajectory`". Observers are NOT part of a
+/// checkpoint; re-attach after `resume`.
+pub trait IterObserver: Send {
+    /// Called after every iteration. `recorded` tells whether the record
+    /// was also kept in the state trajectory (`record_every` cadence or
+    /// the stopping iteration).
+    fn on_iter(&mut self, record: &IterRecord, recorded: bool);
+
+    /// Called when the NEXT iteration starts at a decayed γ.
+    fn on_gamma_decay(&mut self, _t: usize, _gamma: f32) {}
+
+    /// Called exactly once, when the solve reaches a terminal state.
+    fn on_stop(&mut self, _reason: StopReason, _iterations: usize) {}
+}
+
+/// Snapshot of a solve in flight: stepper iterates + loop state + the
+/// options it ran under. `SolveDriver::resume` continues bit-identically.
+/// Always `'static` — a checkpoint owns its stepper clone outright.
+pub struct Checkpoint {
+    stepper: Box<dyn DualStepper>,
+    state: SolveState,
+    opts: SolveOptions,
+    dopts: DriverOptions,
+}
+
+impl Clone for Checkpoint {
+    fn clone(&self) -> Self {
+        Checkpoint {
+            stepper: self
+                .stepper
+                .try_clone()
+                .expect("checkpointed steppers are always cloneable"),
+            state: self.state.clone(),
+            opts: self.opts.clone(),
+            dopts: self.dopts.clone(),
+        }
+    }
+}
+
+impl Checkpoint {
+    /// Iterations completed at snapshot time.
+    pub fn iterations(&self) -> usize {
+        self.state.t
+    }
+}
+
+/// The resumable dual-ascent state machine. See the module docs for the
+/// event protocol.
+pub struct SolveDriver<'s> {
+    stepper: Box<dyn DualStepper + 's>,
+    opts: SolveOptions,
+    dopts: DriverOptions,
+    state: SolveState,
+    observers: Vec<Box<dyn IterObserver + 's>>,
+    /// Started lazily at the first `step` and frozen (folded into
+    /// `state.wall_offset_ms`) at the terminal transition, so `wall_ms`
+    /// measures the solve's active span — a cooperatively scheduled job
+    /// does not accrue setup time before its first iteration or idle
+    /// time after it stopped.
+    sw: Option<Stopwatch>,
+}
+
+impl<'s> SolveDriver<'s> {
+    pub fn new(
+        mut stepper: Box<dyn DualStepper + 's>,
+        initial_value: &[f32],
+        opts: SolveOptions,
+        dopts: DriverOptions,
+    ) -> SolveDriver<'s> {
+        stepper.init(initial_value);
+        SolveDriver {
+            stepper,
+            opts,
+            dopts,
+            state: SolveState::default(),
+            observers: Vec::new(),
+            sw: None,
+        }
+    }
+
+    /// Continue a checkpointed solve. The restored driver is bit-identical
+    /// to one that never paused (observers excepted — re-attach them).
+    pub fn resume(ck: Checkpoint) -> SolveDriver<'static> {
+        SolveDriver {
+            stepper: ck.stepper,
+            opts: ck.opts,
+            dopts: ck.dopts,
+            state: ck.state,
+            observers: Vec::new(),
+            sw: None,
+        }
+    }
+
+    /// Snapshot the solve. `None` if the stepper cannot be cloned (the
+    /// legacy closure shim); every shipped stepper (AGD, PGD) can.
+    pub fn checkpoint(&self) -> Option<Checkpoint> {
+        let stepper = self.stepper.try_clone()?;
+        let mut state = self.state.clone();
+        state.wall_offset_ms = self.elapsed_ms();
+        Some(Checkpoint { stepper, state, opts: self.opts.clone(), dopts: self.dopts.clone() })
+    }
+
+    pub fn add_observer(&mut self, obs: Box<dyn IterObserver + 's>) {
+        self.observers.push(obs);
+    }
+
+    /// The anytime dual candidate λ.
+    pub fn current_lam(&self) -> &[f32] {
+        self.stepper.lam()
+    }
+
+    /// Loop state (iteration count, stall window, trajectory so far).
+    pub fn state(&self) -> &SolveState {
+        &self.state
+    }
+
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    pub fn stepper_name(&self) -> &'static str {
+        self.stepper.name()
+    }
+
+    /// Total wall-clock attributed to this solve across run segments:
+    /// active time only (first step → terminal transition), excluding
+    /// pre-start setup and post-stop idling.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.state.wall_offset_ms + self.sw.as_ref().map_or(0.0, |sw| sw.elapsed_ms())
+    }
+
+    fn stop(&mut self, reason: StopReason) -> StepEvent {
+        // freeze the clock: wall_ms must not keep growing while a
+        // finished cooperative job waits for the rest of its batch
+        self.state.wall_offset_ms = self.elapsed_ms();
+        self.sw = None;
+        self.state.stop_reason = Some(reason);
+        for obs in &mut self.observers {
+            obs.on_stop(reason, self.state.t);
+        }
+        StepEvent::Stopped { reason }
+    }
+
+    /// Run ONE iteration (or report the terminal state).
+    pub fn step(&mut self, obj: &mut dyn ObjectiveFunction) -> StepEvent {
+        if let Some(reason) = self.state.stop_reason {
+            return StepEvent::Stopped { reason };
+        }
+        if self.sw.is_none() {
+            self.sw = Some(Stopwatch::start());
+        }
+        if self.state.t >= self.opts.max_iters {
+            return self.stop(StopReason::MaxIters);
+        }
+        if let Some(c) = &self.dopts.cancel {
+            if c.is_cancelled() {
+                return self.stop(StopReason::Cancelled);
+            }
+        }
+
+        let t = self.state.t;
+        let gamma = self.opts.gamma.gamma_at(t);
+        let eta_cap = self.opts.max_step_size * self.opts.gamma.step_cap_scale(t) as f64;
+        let (res, eta_used) =
+            self.stepper.step(obj, t, gamma, eta_cap, self.opts.initial_step_size);
+        self.state.t = t + 1;
+
+        let grad_norm = crate::util::mathvec::norm2(&res.grad);
+        let record = IterRecord {
+            iter: t,
+            dual_obj: res.dual_obj,
+            grad_norm,
+            infeas_pos_norm: res.infeas_pos_norm,
+            cx: res.cx,
+            gamma,
+            step_size: eta_used,
+            wall_ms: self.elapsed_ms(),
+        };
+
+        let prev_obj = self.state.last.as_ref().map(|r| r.dual_obj);
+        if self.opts.stopping.is_stall_step(prev_obj, res.dual_obj) {
+            self.state.stall_run += 1;
+        } else {
+            self.state.stall_run = 0;
+        }
+        self.state.last = Some(res);
+
+        let mut stop = self.opts.stopping.check(t, grad_norm, self.state.stall_run);
+        if stop.is_none() && t + 1 >= self.opts.max_iters {
+            stop = Some(StopReason::MaxIters);
+        }
+        if stop.is_none() {
+            if let Some(deadline) = self.dopts.deadline_ms {
+                if self.elapsed_ms() >= deadline {
+                    stop = Some(StopReason::Deadline);
+                }
+            }
+        }
+
+        // The stopping iteration is ALWAYS recorded, so the trajectory
+        // never ends before the reported final objective.
+        let recorded = t % self.opts.record_every.max(1) == 0 || stop.is_some();
+        if recorded {
+            self.state.trajectory.push(record.clone());
+        }
+        for obs in &mut self.observers {
+            obs.on_iter(&record, recorded);
+        }
+
+        if let Some(reason) = stop {
+            return self.stop(reason);
+        }
+        if self.opts.gamma.decays_at(t + 1) {
+            let next = self.opts.gamma.gamma_at(t + 1);
+            for obs in &mut self.observers {
+                obs.on_gamma_decay(t + 1, next);
+            }
+            return StepEvent::GammaDecayed { record, gamma: next };
+        }
+        StepEvent::Continue { record }
+    }
+
+    /// Assemble the solve outcome. A zero-iteration solve (zero budget, or
+    /// cancelled before the first step) evaluates the objective at the
+    /// initial λ so `final_obj` is always a real evaluation — never a −∞
+    /// placeholder.
+    pub fn result(&mut self, obj: &mut dyn ObjectiveFunction) -> SolveResult {
+        let final_obj = match self.state.last.clone() {
+            Some(r) => r,
+            None => obj.calculate(self.stepper.lam(), self.opts.gamma.gamma_at(0)),
+        };
+        SolveResult {
+            lam: self.stepper.lam().to_vec(),
+            final_obj,
+            trajectory: self.state.trajectory.clone(),
+            stop_reason: self.state.stop_reason.unwrap_or(StopReason::MaxIters),
+            iterations: self.state.t,
+            total_wall_ms: self.elapsed_ms(),
+            final_gamma: self.opts.gamma.gamma_at(self.state.t.saturating_sub(1)),
+        }
+    }
+
+    /// Step to a terminal state, then assemble the result — the
+    /// run-to-completion convenience every `Maximizer` wraps.
+    pub fn run(&mut self, obj: &mut dyn ObjectiveFunction) -> SolveResult {
+        loop {
+            if let StepEvent::Stopped { .. } = self.step(obj) {
+                return self.result(obj);
+            }
+        }
+    }
+}
+
+/// Run-to-completion over an explicit stepper and driver policy — the one
+/// entry point `Maximizer::maximize`, the engine, and the CLI deadline
+/// path all share.
+pub fn maximize_with<'s>(
+    stepper: Box<dyn DualStepper + 's>,
+    obj: &mut dyn ObjectiveFunction,
+    initial_value: &[f32],
+    opts: &SolveOptions,
+    dopts: DriverOptions,
+) -> SolveResult {
+    assert_eq!(
+        initial_value.len(),
+        obj.dual_dim(),
+        "initial dual length must match the objective's dual dimension"
+    );
+    let mut driver = SolveDriver::new(stepper, initial_value, opts.clone(), dopts);
+    driver.run(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::agd::AgdStepper;
+    use crate::solver::continuation::GammaSchedule;
+    use crate::solver::stopping::StoppingCriteria;
+
+    /// Concave quadratic: ∇g = target − λ.
+    struct Quadratic {
+        target: Vec<f32>,
+        evals: usize,
+    }
+
+    impl ObjectiveFunction for Quadratic {
+        fn dual_dim(&self) -> usize {
+            self.target.len()
+        }
+        fn calculate(&mut self, lam: &[f32], _gamma: f32) -> ObjectiveResult {
+            self.evals += 1;
+            let grad: Vec<f32> = self.target.iter().zip(lam).map(|(t, l)| t - l).collect();
+            let obj = -0.5 * grad.iter().map(|&g| (g as f64).powi(2)).sum::<f64>();
+            ObjectiveResult {
+                grad,
+                dual_obj: obj,
+                cx: obj,
+                xsq_weighted: 0.0,
+                infeas_pos_norm: 0.0,
+            }
+        }
+        fn primal(&mut self, _lam: &[f32], _gamma: f32) -> Vec<f32> {
+            vec![]
+        }
+        fn name(&self) -> &'static str {
+            "quadratic"
+        }
+    }
+
+    fn quad(n: usize) -> Quadratic {
+        Quadratic { target: (0..n).map(|i| 0.5 + i as f32).collect(), evals: 0 }
+    }
+
+    fn driver(obj: &Quadratic, opts: SolveOptions, dopts: DriverOptions) -> SolveDriver<'static> {
+        SolveDriver::new(Box::new(AgdStepper::new(false)), &vec![0.0; obj.dual_dim()], opts, dopts)
+    }
+
+    #[test]
+    fn stepping_until_stopped_matches_run() {
+        let opts = SolveOptions { max_iters: 60, max_step_size: 0.5, ..Default::default() };
+        let mut o1 = quad(4);
+        let mut d1 = driver(&o1, opts.clone(), DriverOptions::default());
+        let r1 = d1.run(&mut o1);
+
+        let mut o2 = quad(4);
+        let mut d2 = driver(&o2, opts, DriverOptions::default());
+        let mut calls = 0usize;
+        loop {
+            calls += 1;
+            if let StepEvent::Stopped { reason } = d2.step(&mut o2) {
+                assert_eq!(reason, StopReason::MaxIters);
+                break;
+            }
+        }
+        let r2 = d2.result(&mut o2);
+        // the stopping call itself runs the final iteration, so calls ==
+        // iterations (59 Continue events + 1 working Stopped)
+        assert_eq!(calls, 60);
+        assert_eq!(r1.iterations, r2.iterations);
+        assert_eq!(r1.lam, r2.lam);
+        assert_eq!(r1.trajectory.len(), r2.trajectory.len());
+    }
+
+    #[test]
+    fn stopped_is_terminal_and_idempotent() {
+        let opts = SolveOptions { max_iters: 3, ..Default::default() };
+        let mut o = quad(2);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        let r = d.run(&mut o);
+        assert_eq!(r.iterations, 3);
+        let evals = o.evals;
+        for _ in 0..4 {
+            match d.step(&mut o) {
+                StepEvent::Stopped { reason } => assert_eq!(reason, StopReason::MaxIters),
+                other => panic!("expected Stopped, got {other:?}"),
+            }
+        }
+        assert_eq!(o.evals, evals, "terminal steps must not evaluate");
+    }
+
+    #[test]
+    fn gamma_decay_events_fire_at_transitions() {
+        let opts = SolveOptions {
+            max_iters: 30,
+            gamma: GammaSchedule::Decay { init: 0.16, floor: 0.04, factor: 0.5, every: 10 },
+            ..Default::default()
+        };
+        let mut o = quad(3);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        let mut decays = Vec::new();
+        loop {
+            match d.step(&mut o) {
+                StepEvent::GammaDecayed { record, gamma } => decays.push((record.iter, gamma)),
+                StepEvent::Stopped { .. } => break,
+                StepEvent::Continue { .. } => {}
+            }
+        }
+        // transitions into iterations 10 (γ 0.08) and 20 (γ 0.04 = floor)
+        assert_eq!(decays, vec![(9, 0.08), (19, 0.04)]);
+    }
+
+    #[test]
+    fn stopping_iteration_is_always_recorded() {
+        // stall stop at an iteration that record_every would skip
+        let opts = SolveOptions {
+            max_iters: 1000,
+            max_step_size: 0.5,
+            record_every: 7,
+            stopping: StoppingCriteria {
+                stall_tol: Some(1e-12),
+                stall_patience: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut o = quad(2);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        let r = d.run(&mut o);
+        assert_eq!(r.stop_reason, StopReason::ObjectiveStall);
+        let last = r.trajectory.last().expect("trajectory non-empty");
+        assert_eq!(last.iter, r.iterations - 1, "stopping iteration must be recorded");
+        assert_eq!(last.dual_obj.to_bits(), r.final_obj.dual_obj.to_bits());
+    }
+
+    #[test]
+    fn zero_budget_solve_evaluates_at_init() {
+        let opts = SolveOptions { max_iters: 0, ..Default::default() };
+        let mut o = quad(3);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        let r = d.run(&mut o);
+        assert_eq!(r.iterations, 0);
+        assert!(r.trajectory.is_empty());
+        assert!(r.final_obj.dual_obj.is_finite(), "no −∞ placeholder");
+        assert_eq!(r.final_obj.grad.len(), 3);
+        assert_eq!(o.evals, 1, "exactly one evaluation at the initial λ");
+    }
+
+    #[test]
+    fn deadline_stops_after_at_least_one_iteration() {
+        let opts = SolveOptions { max_iters: 10_000, max_step_size: 0.5, ..Default::default() };
+        let mut o = quad(4);
+        let mut d = driver(&o, opts, DriverOptions::with_deadline_ms(0.0));
+        let r = d.run(&mut o);
+        assert_eq!(r.stop_reason, StopReason::Deadline);
+        assert_eq!(r.iterations, 1, "zero deadline still runs one iteration");
+        assert_eq!(r.trajectory.last().unwrap().iter, 0);
+        assert!(r.final_obj.dual_obj.is_finite());
+    }
+
+    #[test]
+    fn cancel_token_stops_before_next_iteration() {
+        let token = CancelToken::new();
+        let opts = SolveOptions { max_iters: 1000, max_step_size: 0.5, ..Default::default() };
+        let mut o = quad(2);
+        let mut d = driver(
+            &o,
+            opts,
+            DriverOptions { cancel: Some(token.clone()), ..Default::default() },
+        );
+        for _ in 0..5 {
+            d.step(&mut o);
+        }
+        token.cancel();
+        match d.step(&mut o) {
+            StepEvent::Stopped { reason } => assert_eq!(reason, StopReason::Cancelled),
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        let evals = o.evals;
+        let r = d.result(&mut o);
+        assert_eq!(o.evals, evals, "cancellation must not pay for another eval");
+        assert_eq!(r.iterations, 5);
+        assert_eq!(r.stop_reason, StopReason::Cancelled);
+    }
+
+    #[test]
+    fn cancelled_before_first_step_still_yields_finite_result() {
+        let token = CancelToken::new();
+        token.cancel();
+        let opts = SolveOptions { max_iters: 100, ..Default::default() };
+        let mut o = quad(2);
+        let mut d = driver(&o, opts, DriverOptions { cancel: Some(token), ..Default::default() });
+        let r = d.run(&mut o);
+        assert_eq!(r.stop_reason, StopReason::Cancelled);
+        assert_eq!(r.iterations, 0);
+        assert!(r.final_obj.dual_obj.is_finite());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical_to_uninterrupted() {
+        let opts = SolveOptions {
+            max_iters: 80,
+            max_step_size: 0.5,
+            gamma: GammaSchedule::Decay { init: 0.16, floor: 0.02, factor: 0.5, every: 9 },
+            ..Default::default()
+        };
+        let mut o1 = quad(5);
+        let mut straight = driver(&o1, opts.clone(), DriverOptions::default());
+        let r1 = straight.run(&mut o1);
+
+        let mut o2 = quad(5);
+        let mut d = driver(&o2, opts, DriverOptions::default());
+        for _ in 0..33 {
+            d.step(&mut o2);
+        }
+        let ck = d.checkpoint().expect("AGD steppers are checkpointable");
+        assert_eq!(ck.iterations(), 33);
+        drop(d);
+        let mut resumed = SolveDriver::resume(ck);
+        let r2 = resumed.run(&mut o2);
+
+        assert_eq!(r1.iterations, r2.iterations);
+        assert_eq!(r1.stop_reason, r2.stop_reason);
+        assert_eq!(r1.lam.len(), r2.lam.len());
+        for (a, b) in r1.lam.iter().zip(&r2.lam) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r1.trajectory.len(), r2.trajectory.len());
+        for (a, b) in r1.trajectory.iter().zip(&r2.trajectory) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+            assert_eq!(a.step_size.to_bits(), b.step_size.to_bits());
+        }
+    }
+
+    #[test]
+    fn observers_see_every_iteration_and_the_stop() {
+        use std::sync::Mutex;
+
+        #[derive(Default)]
+        struct Log {
+            iters: Vec<usize>,
+            recorded: usize,
+            decays: Vec<usize>,
+            stops: Vec<(StopReason, usize)>,
+        }
+        struct Probe(Arc<Mutex<Log>>);
+        impl IterObserver for Probe {
+            fn on_iter(&mut self, record: &IterRecord, recorded: bool) {
+                let mut log = self.0.lock().unwrap();
+                log.iters.push(record.iter);
+                if recorded {
+                    log.recorded += 1;
+                }
+            }
+            fn on_gamma_decay(&mut self, t: usize, _gamma: f32) {
+                self.0.lock().unwrap().decays.push(t);
+            }
+            fn on_stop(&mut self, reason: StopReason, iterations: usize) {
+                self.0.lock().unwrap().stops.push((reason, iterations));
+            }
+        }
+
+        let opts = SolveOptions {
+            max_iters: 20,
+            record_every: 6,
+            gamma: GammaSchedule::Decay { init: 0.08, floor: 0.04, factor: 0.5, every: 10 },
+            ..Default::default()
+        };
+        let mut o = quad(2);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        let log = Arc::new(Mutex::new(Log::default()));
+        d.add_observer(Box::new(Probe(log.clone())));
+        let r = d.run(&mut o);
+        assert_eq!(r.iterations, 20);
+        assert_eq!(
+            r.trajectory.iter().map(|t| t.iter).collect::<Vec<_>>(),
+            vec![0, 6, 12, 18, 19],
+            "record cadence plus the stopping iteration"
+        );
+        let log = log.lock().unwrap();
+        assert_eq!(log.iters, (0..20).collect::<Vec<_>>(), "observer sees EVERY iteration");
+        assert_eq!(log.recorded, r.trajectory.len());
+        assert_eq!(log.decays, vec![10], "one γ transition at iteration 10");
+        assert_eq!(log.stops, vec![(StopReason::MaxIters, 20)]);
+    }
+
+    #[test]
+    fn wall_clock_accumulates_across_resume() {
+        let opts = SolveOptions { max_iters: 10, ..Default::default() };
+        let mut o = quad(2);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        for _ in 0..4 {
+            d.step(&mut o);
+        }
+        let before = d.elapsed_ms();
+        let ck = d.checkpoint().unwrap();
+        let mut resumed = SolveDriver::resume(ck);
+        assert!(resumed.elapsed_ms() >= before, "resume carries the wall offset");
+        let r = resumed.run(&mut o);
+        assert!(r.total_wall_ms >= before);
+    }
+}

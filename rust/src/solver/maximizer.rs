@@ -1,12 +1,19 @@
-//! The `Maximizer` contract (paper Table 1) and the shared solve loop:
-//! trajectory recording, γ-continuation, stopping, and diagnostics are
-//! identical across optimizers — an optimizer only supplies its update
-//! rule.
+//! The `Maximizer` contract (paper Table 1) and the shared solve types.
+//!
+//! Since the steppable-driver redesign the shared loop lives in
+//! [`super::driver::SolveDriver`] — an explicit state machine with
+//! `step`/`checkpoint`/`resume`, per-iteration observers, deadlines and
+//! cancellation. `Maximizer::maximize` is a thin run-to-completion wrapper
+//! over that driver (bit-identical to stepping it manually), kept so the
+//! one-shot call sites — engine, coordinator, CLI, examples — stay a
+//! single line. Trajectory recording, γ-continuation, stopping, and
+//! diagnostics remain identical across optimizers; an optimizer supplies
+//! only its update rule (a [`super::driver::DualStepper`]).
 
 use super::continuation::GammaSchedule;
+use super::driver::{DriverOptions, DualStepper, SolveDriver};
 use super::stopping::{StopReason, StoppingCriteria};
 use crate::problem::{ObjectiveFunction, ObjectiveResult};
-use crate::util::timer::Stopwatch;
 
 /// One recorded iteration (feeds Fig 1/2/4/5-style CSV series).
 #[derive(Clone, Debug)]
@@ -26,6 +33,9 @@ pub struct IterRecord {
 pub struct SolveResult {
     /// Final dual iterate λ (in the solved — possibly row-scaled — system).
     pub lam: Vec<f32>,
+    /// Last objective evaluation. For a zero-iteration solve (zero budget
+    /// or cancelled before the first step) this is a real evaluation at
+    /// the initial λ — never a placeholder.
     pub final_obj: ObjectiveResult,
     pub trajectory: Vec<IterRecord>,
     pub stop_reason: StopReason,
@@ -44,7 +54,8 @@ pub struct SolveOptions {
     pub initial_step_size: f64,
     pub gamma: GammaSchedule,
     pub stopping: StoppingCriteria,
-    /// Record every k-th iteration (1 = all).
+    /// Record every k-th iteration (1 = all). The stopping iteration is
+    /// always recorded regardless of cadence.
     pub record_every: usize,
 }
 
@@ -61,7 +72,10 @@ impl Default for SolveOptions {
     }
 }
 
-/// Paper Table 1, row "Maximizer": single required method.
+/// Paper Table 1, row "Maximizer": single required method. One-shot
+/// convenience over the steppable [`SolveDriver`] — for deadlines,
+/// checkpointing, observers, or cooperative scheduling, build the driver
+/// directly (or go through [`super::driver::maximize_with`]).
 pub trait Maximizer {
     fn maximize(
         &mut self,
@@ -73,70 +87,143 @@ pub trait Maximizer {
     fn name(&self) -> &'static str;
 }
 
-/// Drive the shared solve loop given an optimizer-specific step closure.
+/// Adapter that runs a legacy update closure as a [`DualStepper`]. The
+/// closure owns its objective capture and iterates, so `lam()` only knows
+/// the initial value — `run_loop` patches the final λ afterwards. Not
+/// checkpointable (`try_clone` → `None`).
+struct ClosureStepper<F> {
+    step_fn: F,
+    lam: Vec<f32>,
+}
+
+impl<F> DualStepper for ClosureStepper<F>
+where
+    F: FnMut(usize, f32, f64) -> (ObjectiveResult, f64) + Send,
+{
+    fn init(&mut self, initial_value: &[f32]) {
+        self.lam = initial_value.to_vec();
+    }
+
+    fn step(
+        &mut self,
+        _obj: &mut dyn ObjectiveFunction,
+        t: usize,
+        gamma: f32,
+        eta_cap: f64,
+        _initial_step_size: f64,
+    ) -> (ObjectiveResult, f64) {
+        (self.step_fn)(t, gamma, eta_cap)
+    }
+
+    fn lam(&self) -> &[f32] {
+        &self.lam
+    }
+
+    fn name(&self) -> &'static str {
+        "closure"
+    }
+}
+
+/// Objective stand-in for the legacy closure path, where evaluation
+/// happens inside the caller's closure. Never evaluated: `run_loop`
+/// requires `max_iters ≥ 1`, so the driver always has a real last result.
+struct NullObjective {
+    dim: usize,
+}
+
+impl ObjectiveFunction for NullObjective {
+    fn dual_dim(&self) -> usize {
+        self.dim
+    }
+    fn calculate(&mut self, _lam: &[f32], _gamma: f32) -> ObjectiveResult {
+        unreachable!("legacy run_loop evaluates through its step closure")
+    }
+    fn primal(&mut self, _lam: &[f32], _gamma: f32) -> Vec<f32> {
+        unreachable!("legacy run_loop has no primal path")
+    }
+    fn name(&self) -> &'static str {
+        "null"
+    }
+}
+
+/// Legacy closure-based entry to the shared loop, kept as a thin compat
+/// wrapper over [`SolveDriver`] (same recording, stopping, and γ handling
+/// — including the always-record-the-stopping-iteration fix).
 ///
 /// `step(t, gamma, eta_cap) -> (ObjectiveResult, step_used)` must evaluate
 /// the objective at its query point and advance its internal iterates.
-pub(crate) fn run_loop(
+/// Limitations of the shim: `max_iters` must be ≥ 1, and mid-solve
+/// `current_lam`/checkpointing are unavailable (the closure owns the
+/// iterates) — new code should implement [`DualStepper`] instead.
+pub fn run_loop(
     dual_dim: usize,
     opts: &SolveOptions,
-    mut step: impl FnMut(usize, f32, f64) -> (ObjectiveResult, f64),
+    step: impl FnMut(usize, f32, f64) -> (ObjectiveResult, f64) + Send,
     final_lam: impl FnOnce() -> Vec<f32>,
 ) -> SolveResult {
-    let sw = Stopwatch::start();
-    let mut trajectory = Vec::new();
-    let mut stop_reason = StopReason::MaxIters;
-    let mut last: Option<ObjectiveResult> = None;
-    let mut iters = 0usize;
-    let mut stall_run = 0usize; // consecutive small objective steps
+    assert!(
+        opts.max_iters >= 1,
+        "run_loop requires max_iters >= 1; zero-budget solves go through SolveDriver"
+    );
+    let stepper = ClosureStepper { step_fn: step, lam: Vec::new() };
+    let mut driver = SolveDriver::new(
+        Box::new(stepper),
+        &vec![0.0f32; dual_dim],
+        opts.clone(),
+        DriverOptions::default(),
+    );
+    let mut result = driver.run(&mut NullObjective { dim: dual_dim });
+    result.lam = final_lam();
+    result
+}
 
-    for t in 0..opts.max_iters {
-        let gamma = opts.gamma.gamma_at(t);
-        let eta_cap = opts.max_step_size * opts.gamma.step_cap_scale(t) as f64;
-        let (res, eta_used) = step(t, gamma, eta_cap);
-        iters = t + 1;
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-        let grad_norm = crate::util::mathvec::norm2(&res.grad);
-        if t % opts.record_every == 0 || t + 1 == opts.max_iters {
-            trajectory.push(IterRecord {
-                iter: t,
-                dual_obj: res.dual_obj,
-                grad_norm,
-                infeas_pos_norm: res.infeas_pos_norm,
-                cx: res.cx,
-                gamma,
-                step_size: eta_used,
-                wall_ms: sw.elapsed_ms(),
-            });
-        }
-
-        let prev_obj = last.as_ref().map(|r| r.dual_obj);
-        if opts.stopping.is_stall_step(prev_obj, res.dual_obj) {
-            stall_run += 1;
-        } else {
-            stall_run = 0;
-        }
-        last = Some(res);
-        if let Some(reason) = opts.stopping.check(t, grad_norm, stall_run) {
-            stop_reason = reason;
-            break;
-        }
+    #[test]
+    fn run_loop_shim_matches_driver_semantics() {
+        // a hand-rolled gradient ascent on g(λ) = −½(λ−2)² through the
+        // legacy closure entry: records every iteration, stops on budget
+        let mut lam = vec![0.0f32];
+        let lam_out = std::sync::Arc::new(std::sync::Mutex::new(lam.clone()));
+        let lam_out2 = lam_out.clone();
+        let r = run_loop(
+            1,
+            &SolveOptions { max_iters: 50, max_step_size: 0.5, ..Default::default() },
+            move |_t, _gamma, eta_cap| {
+                let grad = vec![2.0 - lam[0]];
+                let obj = -0.5 * (grad[0] as f64).powi(2);
+                lam[0] += eta_cap as f32 * grad[0];
+                *lam_out2.lock().unwrap() = lam.clone();
+                (
+                    ObjectiveResult {
+                        grad,
+                        dual_obj: obj,
+                        cx: obj,
+                        xsq_weighted: 0.0,
+                        infeas_pos_norm: 0.0,
+                    },
+                    eta_cap,
+                )
+            },
+            move || lam_out.lock().unwrap().clone(),
+        );
+        assert_eq!(r.iterations, 50);
+        assert_eq!(r.stop_reason, StopReason::MaxIters);
+        assert_eq!(r.trajectory.len(), 50);
+        assert!((r.lam[0] - 2.0).abs() < 1e-3, "λ={:?}", r.lam);
+        assert!(r.final_obj.dual_obj > -1e-6);
     }
 
-    let final_obj = last.unwrap_or_else(|| ObjectiveResult {
-        grad: vec![0.0; dual_dim],
-        dual_obj: f64::NEG_INFINITY,
-        cx: 0.0,
-        xsq_weighted: 0.0,
-        infeas_pos_norm: 0.0,
-    });
-    SolveResult {
-        lam: final_lam(),
-        final_obj,
-        trajectory,
-        stop_reason,
-        iterations: iters,
-        total_wall_ms: sw.elapsed_ms(),
-        final_gamma: opts.gamma.gamma_at(iters.saturating_sub(1)),
+    #[test]
+    #[should_panic]
+    fn run_loop_rejects_zero_budget() {
+        let _ = run_loop(
+            1,
+            &SolveOptions { max_iters: 0, ..Default::default() },
+            |_, _, _| unreachable!(),
+            Vec::new,
+        );
     }
 }

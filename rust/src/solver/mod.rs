@@ -1,15 +1,23 @@
-//! Optimization stack (paper §5): the `Maximizer` contract, Nesterov AGD
-//! with adaptive Lipschitz step sizing (the production optimizer), a plain
-//! PGD baseline, γ-continuation, and stopping criteria.
+//! Optimization stack (paper §5): the steppable [`driver::SolveDriver`]
+//! state machine that owns the shared dual-ascent loop (step events,
+//! checkpoints, observers, deadlines, cancellation), the `Maximizer`
+//! one-shot contract wrapped over it, Nesterov AGD with adaptive Lipschitz
+//! step sizing (the production optimizer), a plain PGD baseline,
+//! γ-continuation, and stopping criteria.
 
 pub mod agd;
 pub mod continuation;
+pub mod driver;
 pub mod maximizer;
 pub mod pgd;
 pub mod stopping;
 
-pub use agd::Agd;
+pub use agd::{Agd, AgdStepper};
 pub use continuation::GammaSchedule;
-pub use maximizer::{IterRecord, Maximizer, SolveOptions, SolveResult};
-pub use pgd::Pgd;
+pub use driver::{
+    maximize_with, CancelToken, Checkpoint, DriverOptions, DualStepper, IterObserver,
+    SolveDriver, SolveState, StepEvent,
+};
+pub use maximizer::{run_loop, IterRecord, Maximizer, SolveOptions, SolveResult};
+pub use pgd::{Pgd, PgdStepper};
 pub use stopping::{StopReason, StoppingCriteria};

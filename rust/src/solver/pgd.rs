@@ -1,14 +1,86 @@
 //! Plain projected gradient ascent — the non-accelerated baseline
 //! Maximizer. Same adaptive step sizing as AGD but no momentum; used by
 //! ablations to isolate the contribution of acceleration, and as the
-//! simplest reference implementation of the `Maximizer` contract.
+//! simplest reference implementation of the `Maximizer` contract — and,
+//! as [`PgdStepper`], of the driver's [`DualStepper`] update-rule
+//! contract.
 
-use super::maximizer::{run_loop, Maximizer, SolveOptions, SolveResult};
-use crate::problem::ObjectiveFunction;
+use super::driver::{maximize_with, DriverOptions, DualStepper};
+use super::maximizer::{Maximizer, SolveOptions, SolveResult};
+use crate::problem::{ObjectiveFunction, ObjectiveResult};
 use crate::util::mathvec;
 
 #[derive(Default)]
 pub struct Pgd;
+
+impl Pgd {
+    /// The update rule as a driver-pluggable stepper.
+    pub fn stepper(&self) -> PgdStepper {
+        PgdStepper::new()
+    }
+}
+
+/// PGD iterate + curvature memory as a checkpointable step rule.
+#[derive(Clone, Debug, Default)]
+pub struct PgdStepper {
+    lam: Vec<f32>,
+    /// Curvature memory (empty until the first step has run).
+    lam_prev: Vec<f32>,
+    grad_prev: Vec<f32>,
+}
+
+impl PgdStepper {
+    pub fn new() -> PgdStepper {
+        PgdStepper::default()
+    }
+}
+
+impl DualStepper for PgdStepper {
+    fn init(&mut self, initial_value: &[f32]) {
+        self.lam = initial_value.to_vec();
+        self.lam_prev.clear();
+        self.grad_prev.clear();
+    }
+
+    fn step(
+        &mut self,
+        obj: &mut dyn ObjectiveFunction,
+        t: usize,
+        gamma: f32,
+        eta_cap: f64,
+        initial_step_size: f64,
+    ) -> (ObjectiveResult, f64) {
+        let res = obj.calculate(&self.lam, gamma);
+        let eta = if t == 0 || self.lam_prev.is_empty() {
+            initial_step_size.min(eta_cap)
+        } else {
+            let dl = mathvec::dist2(&self.lam, &self.lam_prev);
+            let dg = mathvec::dist2(&res.grad, &self.grad_prev);
+            if dl > 0.0 && dg > 0.0 {
+                (dl / dg).min(eta_cap)
+            } else {
+                eta_cap
+            }
+        };
+        self.lam_prev = self.lam.clone();
+        self.grad_prev = res.grad.clone();
+        mathvec::axpy(eta as f32, &res.grad, &mut self.lam);
+        mathvec::clamp_nonneg(&mut self.lam);
+        (res, eta)
+    }
+
+    fn lam(&self) -> &[f32] {
+        &self.lam
+    }
+
+    fn name(&self) -> &'static str {
+        "pgd"
+    }
+
+    fn try_clone(&self) -> Option<Box<dyn DualStepper>> {
+        Some(Box::new(self.clone()))
+    }
+}
 
 impl Maximizer for Pgd {
     fn maximize(
@@ -17,35 +89,7 @@ impl Maximizer for Pgd {
         initial_value: &[f32],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let n = obj.dual_dim();
-        let mut lam = initial_value.to_vec();
-        let mut lam_prev: Vec<f32> = Vec::new();
-        let mut grad_prev: Vec<f32> = Vec::new();
-
-        let lam_out = std::rc::Rc::new(std::cell::RefCell::new(lam.clone()));
-        let lam_out2 = lam_out.clone();
-
-        run_loop(
-            n,
-            opts,
-            move |t, gamma, eta_cap| {
-                let res = obj.calculate(&lam, gamma);
-                let eta = if t == 0 || lam_prev.is_empty() {
-                    opts.initial_step_size.min(eta_cap)
-                } else {
-                    let dl = mathvec::dist2(&lam, &lam_prev);
-                    let dg = mathvec::dist2(&res.grad, &grad_prev);
-                    if dl > 0.0 && dg > 0.0 { (dl / dg).min(eta_cap) } else { eta_cap }
-                };
-                lam_prev = lam.clone();
-                grad_prev = res.grad.clone();
-                mathvec::axpy(eta as f32, &res.grad, &mut lam);
-                mathvec::clamp_nonneg(&mut lam);
-                *lam_out2.borrow_mut() = lam.clone();
-                (res, eta)
-            },
-            move || lam_out.borrow().clone(),
-        )
+        maximize_with(Box::new(self.stepper()), obj, initial_value, opts, DriverOptions::default())
     }
 
     fn name(&self) -> &'static str {

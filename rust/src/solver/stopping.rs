@@ -7,6 +7,13 @@ pub enum StopReason {
     MaxIters,
     GradNormTol,
     ObjectiveStall,
+    /// The driver's per-job wall-clock deadline expired
+    /// (`DriverOptions::deadline_ms`). The final iterate is still a valid
+    /// anytime dual — the engine publishes it to the warm-start cache.
+    Deadline,
+    /// The job's `CancelToken` fired. Checked before each iteration, so a
+    /// cancelled solve never pays for another objective evaluation.
+    Cancelled,
 }
 
 #[derive(Clone, Debug)]

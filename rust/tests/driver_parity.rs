@@ -1,0 +1,351 @@
+//! Driver parity — the api_redesign acceptance suite.
+//!
+//! The steppable `SolveDriver` replaced the private run-to-completion
+//! loop, with `Maximizer::maximize` now a thin wrapper over it. These
+//! tests pin the contract:
+//!
+//! - manually stepping the driver is **bit-identical** (λ, trajectory,
+//!   stop reason, iteration count) to `maximize()` for both optimizers
+//!   (AGD, PGD), across EVERY registered projection family's conformance
+//!   samples, warm- and cold-started;
+//! - checkpoint at iteration k + resume ≡ an uninterrupted run;
+//! - a 16-job cooperative batch with per-job deadlines is deterministic
+//!   across pool widths, deadline-stopped jobs report
+//!   `StopReason::Deadline`, and their published anytime duals warm
+//!   subsequent solves.
+
+use dualip::backend::CpuBackend;
+use dualip::engine::{EngineConfig, SolveEngine, SolveJob};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::problem::{jacobi_row_normalize, MatchingLp, ObjectiveFunction};
+use dualip::projection::{registry, ProjectionKind, ProjectionMap};
+use dualip::solver::{
+    Agd, DriverOptions, DualStepper, GammaSchedule, Maximizer, Pgd, SolveDriver, SolveOptions,
+    SolveResult, StepEvent, StopReason, StoppingCriteria,
+};
+
+/// Small conditioned instance with the given blockwise polytope.
+fn family_lp(kind: ProjectionKind, seed: u64) -> MatchingLp {
+    let mut lp = generate(&SyntheticConfig {
+        num_requests: 240,
+        num_resources: 24,
+        avg_nnz_per_row: 5.0,
+        seed,
+        ..Default::default()
+    });
+    lp.projection = ProjectionMap::Uniform(kind);
+    jacobi_row_normalize(&mut lp);
+    lp
+}
+
+/// Mixed continuation + stall options exercising γ decay, the record
+/// cadence (≠ 1, so the stopping-iteration fix matters), and early stops.
+fn parity_options() -> SolveOptions {
+    SolveOptions {
+        max_iters: 400,
+        max_step_size: 1.0,
+        initial_step_size: 1e-4,
+        gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 10 },
+        stopping: StoppingCriteria {
+            stall_tol: Some(1e-6),
+            stall_patience: 8,
+            min_iters: 21, // past the γ descent
+            ..Default::default()
+        },
+        record_every: 3,
+    }
+}
+
+fn objective(lp: &MatchingLp) -> impl ObjectiveFunction + '_ {
+    CpuBackend::Slab.objective(lp, 1)
+}
+
+fn assert_bit_identical(a: &SolveResult, b: &SolveResult, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(a.stop_reason, b.stop_reason, "{ctx}: stop reason");
+    assert_eq!(a.final_gamma.to_bits(), b.final_gamma.to_bits(), "{ctx}: final γ");
+    assert_eq!(a.lam.len(), b.lam.len(), "{ctx}: λ length");
+    for (i, (x, y)) in a.lam.iter().zip(&b.lam).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: λ[{i}]");
+    }
+    assert_eq!(a.final_obj.dual_obj.to_bits(), b.final_obj.dual_obj.to_bits(), "{ctx}: g");
+    assert_eq!(a.trajectory.len(), b.trajectory.len(), "{ctx}: trajectory length");
+    for (ta, tb) in a.trajectory.iter().zip(&b.trajectory) {
+        assert_eq!(ta.iter, tb.iter, "{ctx}: record iter");
+        assert_eq!(ta.dual_obj.to_bits(), tb.dual_obj.to_bits(), "{ctx}: record g");
+        assert_eq!(ta.grad_norm.to_bits(), tb.grad_norm.to_bits(), "{ctx}: record ‖∇g‖");
+        assert_eq!(ta.step_size.to_bits(), tb.step_size.to_bits(), "{ctx}: record η");
+        assert_eq!(ta.gamma.to_bits(), tb.gamma.to_bits(), "{ctx}: record γ");
+    }
+}
+
+/// Manual `step()` loop vs one-shot `maximize()` on fresh objectives.
+fn assert_stepping_matches_maximize(
+    lp: &MatchingLp,
+    init: &[f32],
+    opts: &SolveOptions,
+    legacy: &SolveResult,
+    stepper: Box<dyn DualStepper>,
+    ctx: &str,
+) {
+    let mut obj = objective(lp);
+    let mut driver = SolveDriver::new(stepper, init, opts.clone(), DriverOptions::default());
+    loop {
+        match driver.step(&mut obj) {
+            StepEvent::Stopped { .. } => break,
+            StepEvent::Continue { .. } | StepEvent::GammaDecayed { .. } => {}
+        }
+    }
+    let stepped = driver.result(&mut obj);
+    assert_bit_identical(legacy, &stepped, ctx);
+}
+
+/// Checkpoint at iteration k, resume, finish: must equal the straight run.
+fn assert_resume_matches_straight(
+    lp: &MatchingLp,
+    init: &[f32],
+    opts: &SolveOptions,
+    legacy: &SolveResult,
+    k: usize,
+    ctx: &str,
+) {
+    let mut obj = objective(lp);
+    let mut d = SolveDriver::new(
+        Box::new(Agd::default().stepper()),
+        init,
+        opts.clone(),
+        DriverOptions::default(),
+    );
+    for _ in 0..k {
+        if let StepEvent::Stopped { .. } = d.step(&mut obj) {
+            break;
+        }
+    }
+    let ck = d.checkpoint().expect("AGD steppers are checkpointable");
+    drop(d);
+    let mut resumed = SolveDriver::resume(ck);
+    let r = resumed.run(&mut obj);
+    assert_bit_identical(legacy, &r, &format!("{ctx} (resume at {k})"));
+}
+
+#[test]
+fn driver_stepping_is_bit_identical_for_every_registered_family() {
+    let opts = parity_options();
+    for (f, fam) in registry::families().into_iter().enumerate() {
+        for (s, sample) in registry::family_samples(&fam).into_iter().enumerate() {
+            let kind = ProjectionKind::parse(&sample)
+                .unwrap_or_else(|| panic!("sample {sample} must parse"));
+            let lp = family_lp(kind, 100 + (f * 10 + s) as u64);
+            let cold_init = vec![0.0f32; lp.dual_dim()];
+
+            // --- AGD, cold ------------------------------------------------
+            let mut agd = Agd::default();
+            let cold = agd.maximize(&mut objective(&lp), &cold_init, &opts);
+            assert!(
+                cold.iterations > 0 && cold.iterations <= opts.max_iters,
+                "{sample}: degenerate cold solve"
+            );
+            assert_stepping_matches_maximize(
+                &lp,
+                &cold_init,
+                &opts,
+                &cold,
+                Box::new(Agd::default().stepper()),
+                &format!("{sample}/agd/cold"),
+            );
+
+            // --- AGD, warm (restart from the cold λ, engine-style tail) ---
+            let warm_opts = dualip::engine::warm_options(&opts, 4);
+            let warm = agd.maximize(&mut objective(&lp), &cold.lam, &warm_opts);
+            assert_stepping_matches_maximize(
+                &lp,
+                &cold.lam,
+                &warm_opts,
+                &warm,
+                Box::new(Agd::default().stepper()),
+                &format!("{sample}/agd/warm"),
+            );
+
+            // --- PGD, cold + warm ----------------------------------------
+            let mut pgd = Pgd;
+            let pcold = pgd.maximize(&mut objective(&lp), &cold_init, &opts);
+            assert_stepping_matches_maximize(
+                &lp,
+                &cold_init,
+                &opts,
+                &pcold,
+                Box::new(Pgd.stepper()),
+                &format!("{sample}/pgd/cold"),
+            );
+            let pwarm = pgd.maximize(&mut objective(&lp), &pcold.lam, &warm_opts);
+            assert_stepping_matches_maximize(
+                &lp,
+                &pcold.lam,
+                &warm_opts,
+                &pwarm,
+                Box::new(Pgd.stepper()),
+                &format!("{sample}/pgd/warm"),
+            );
+
+            // --- checkpoint/resume mid-schedule (first sample per family,
+            // paused inside the γ descent) --------------------------------
+            if s == 0 {
+                assert_resume_matches_straight(&lp, &cold_init, &opts, &cold, 17, &fam);
+            }
+        }
+    }
+}
+
+#[test]
+fn stopping_iteration_is_recorded_even_off_cadence() {
+    // satellite: an early stall stop at t % record_every != 0 used to drop
+    // the final record — the trajectory ended before final_obj
+    let lp = family_lp(ProjectionKind::Simplex, 7);
+    let opts = SolveOptions { record_every: 50, ..parity_options() };
+    let r = Agd::default().maximize(&mut objective(&lp), &vec![0.0; lp.dual_dim()], &opts);
+    let last = r.trajectory.last().expect("non-empty trajectory");
+    assert_eq!(last.iter, r.iterations - 1, "stopping iteration must be recorded");
+    assert_eq!(last.dual_obj.to_bits(), r.final_obj.dual_obj.to_bits());
+    // and off-cadence stops are not double-recorded on cadence hits
+    let iters: Vec<usize> = r.trajectory.iter().map(|t| t.iter).collect();
+    let mut dedup = iters.clone();
+    dedup.dedup();
+    assert_eq!(iters, dedup, "no duplicate records");
+}
+
+#[test]
+fn zero_budget_solve_reports_a_real_evaluation() {
+    // satellite: max_iters == 0 used to leak dual_obj = −∞ into engine
+    // stats and BENCH JSON
+    let lp = family_lp(ProjectionKind::Simplex, 9);
+    let opts = SolveOptions { max_iters: 0, ..parity_options() };
+    let r = Agd::default().maximize(&mut objective(&lp), &vec![0.0; lp.dual_dim()], &opts);
+    assert_eq!(r.iterations, 0);
+    assert_eq!(r.stop_reason, StopReason::MaxIters);
+    assert!(r.trajectory.is_empty());
+    assert!(r.final_obj.dual_obj.is_finite(), "evaluation-at-init, not −∞");
+    assert_eq!(r.final_obj.grad.len(), lp.dual_dim());
+
+    // and through the engine: no −∞ in JobResult either
+    let engine = SolveEngine::new(EngineConfig {
+        opts,
+        cache_capacity: 4,
+        threads: 1,
+        ..Default::default()
+    });
+    let jr = engine.submit(SolveJob::new(0, lp));
+    assert!(jr.dual_obj.is_finite());
+}
+
+fn coop_cfg(threads: usize) -> EngineConfig {
+    EngineConfig {
+        opts: SolveOptions {
+            max_iters: 600,
+            max_step_size: 1.0,
+            initial_step_size: 1e-4,
+            gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 8 },
+            stopping: StoppingCriteria {
+                stall_tol: Some(1e-6),
+                stall_patience: 8,
+                ..Default::default()
+            },
+            record_every: 100,
+        },
+        warm_tail: 4,
+        threads,
+        cache_capacity: 16,
+        backend: CpuBackend::Slab,
+        objective_threads: 1,
+        shards: 1,
+        deadline_ms: None,
+        quantum: 5,
+    }
+}
+
+/// 16 jobs over 4 distinct patterns; every 4th job carries a zero
+/// deadline (deterministic: exactly one iteration, then Deadline).
+fn coop_jobs() -> Vec<SolveJob> {
+    (0..16u64)
+        .map(|k| {
+            let job = SolveJob::new(k, family_lp(ProjectionKind::Simplex, 200 + k % 4));
+            if k % 4 == 3 {
+                job.with_deadline_ms(0.0)
+            } else {
+                job
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn coop_16_job_deadline_batch_is_deterministic_across_pool_widths() {
+    let run = |threads: usize| {
+        let engine = SolveEngine::new(coop_cfg(threads));
+        let (results, report) = engine.solve_batch_coop(coop_jobs());
+        (results, report, engine)
+    };
+    let (base, base_report, base_engine) = run(1);
+    assert_eq!(base.len(), 16);
+    assert_eq!(base_report.deadline_stops, 4);
+    for r in &base {
+        if r.id % 4 == 3 {
+            assert_eq!(r.stop_reason, StopReason::Deadline, "job {}", r.id);
+            assert_eq!(r.iterations, 1, "job {}", r.id);
+        } else {
+            assert_ne!(r.stop_reason, StopReason::Deadline, "job {}", r.id);
+        }
+        assert!(r.dual_obj.is_finite());
+    }
+
+    for threads in [4usize, 8] {
+        let (other, report, _engine) = run(threads);
+        assert_eq!(report.deadline_stops, 4);
+        for (a, b) in base.iter().zip(&other) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.iterations, b.iterations, "job {} at {threads} threads", a.id);
+            assert_eq!(a.stop_reason, b.stop_reason, "job {} at {threads} threads", a.id);
+            assert_eq!(
+                a.dual_obj.to_bits(),
+                b.dual_obj.to_bits(),
+                "job {} at {threads} threads",
+                a.id
+            );
+            for (x, y) in a.lam.iter().zip(&b.lam) {
+                assert_eq!(x.to_bits(), y.to_bits(), "job {} λ at {threads} threads", a.id);
+            }
+        }
+    }
+
+    // the deadline-killed pattern (seed 203) still warmed the cache: a
+    // re-solve of the same pattern starts warm
+    let again = base_engine.submit(SolveJob::new(99, family_lp(ProjectionKind::Simplex, 203)));
+    assert!(again.warm, "deadline-stopped job must warm its successor");
+    assert!(base_engine.stats().deadline_stops >= 4);
+}
+
+#[test]
+fn deadline_stop_publishes_usable_warm_start_duals() {
+    // run a full cold solve for the iteration baseline, then a
+    // deadline-killed solve of the same pattern on a fresh engine, then a
+    // full re-solve: the re-solve must start warm from the killed job's
+    // published λ and reach the matched stopping criterion
+    let cold_engine = SolveEngine::new(coop_cfg(1));
+    let cold = cold_engine.submit(SolveJob::new(0, family_lp(ProjectionKind::Simplex, 300)));
+    assert!(!cold.warm);
+
+    let engine = SolveEngine::new(coop_cfg(2));
+    let job = SolveJob::new(1, family_lp(ProjectionKind::Simplex, 300)).with_deadline_ms(0.0);
+    let (killed, report) = engine.solve_batch_coop(vec![job]);
+    assert_eq!(report.deadline_stops, 1);
+    assert_eq!(killed[0].stop_reason, StopReason::Deadline);
+    assert!(killed[0].iterations >= 1);
+
+    let warm = engine.submit(SolveJob::new(2, family_lp(ProjectionKind::Simplex, 300)));
+    assert!(warm.warm, "killed solve must have published a warm start");
+    assert_ne!(warm.stop_reason, StopReason::Deadline, "no deadline on the re-solve");
+    assert!(warm.dual_obj.is_finite());
+    // same pattern ⇒ same optimum: the re-solve lands on the cold answer,
+    // which is what makes the published dual "usable"
+    let rel = (warm.dual_obj - cold.dual_obj).abs() / cold.dual_obj.abs().max(1.0);
+    assert!(rel < 1e-2, "warm {} vs cold {} (rel {rel})", warm.dual_obj, cold.dual_obj);
+}

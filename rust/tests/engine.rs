@@ -55,6 +55,8 @@ fn engine(threads: usize, cache_capacity: usize) -> SolveEngine {
         backend: dualip::backend::CpuBackend::Slab,
         objective_threads: 1,
         shards: 1,
+        deadline_ms: None,
+        quantum: 16,
     })
 }
 
