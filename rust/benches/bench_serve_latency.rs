@@ -1,0 +1,216 @@
+//! Experiment E17 — resident serve daemon: steady-state latency, warm-hit
+//! rate, and the delta-vs-rebuild speedup.
+//!
+//! Three measurements, emitted to `results/BENCH_serve_latency.json`:
+//!
+//! 1. **Steady-state stream latency**: a drifting request stream
+//!    (`gen::workloads::drift_stream`) played through `ServeDaemon` in
+//!    bursts — p50/p99 solve wall-clock, warm-hit rate, and the shed
+//!    counters. The drain must be clean: every submitted request resolves
+//!    to exactly one outcome, none of them `Failed`, and the resident slab
+//!    absorbs the whole stream with **zero repacks** (pure c/b drift) —
+//!    both asserted.
+//! 2. **Delta vs rebuild**: absorbing a same-pattern drifted instance into
+//!    the resident slab (`absorb_planes` — cost-plane patch, zero
+//!    structural work) vs building the slab layout from scratch
+//!    (`ResidentInstance::new`), with the patched slab's parity against a
+//!    rebuild asserted.
+//! 3. **Snapshot round-trip**: the daemon's durable warm-start state is
+//!    encoded, decoded, and re-encoded — byte-identical the second time —
+//!    and the written JSON is read back to check the `schema_version`
+//!    stamp and the headline metrics (the CI smoke gate).
+//!
+//! Run: cargo bench --bench bench_serve_latency
+//!      [DUALIP_BENCH_FAST=1 for CI sizes]
+
+use dualip::gen::workloads::{drift_stream, perturb_instance, DriftStreamSpec, PerturbSpec};
+use dualip::gen::{generate, SyntheticConfig};
+use dualip::metrics::{stats, BenchJson, JsonValue};
+use dualip::problem::{jacobi_row_normalize, MatchingLp};
+use dualip::serve::{Outcome, ResidentInstance, ServeConfig, ServeDaemon};
+use dualip::solver::{GammaSchedule, SolveOptions, StoppingCriteria};
+use dualip::util::timer::Stopwatch;
+
+fn instance(sources: usize, dests: usize, seed: u64) -> MatchingLp {
+    let mut lp = generate(&SyntheticConfig {
+        num_requests: sources,
+        num_resources: dests,
+        avg_nnz_per_row: 8.0,
+        seed,
+        ..Default::default()
+    });
+    jacobi_row_normalize(&mut lp);
+    lp
+}
+
+fn serve_cfg(threads: usize, iters: usize) -> ServeConfig {
+    ServeConfig {
+        opts: SolveOptions {
+            max_iters: iters,
+            max_step_size: 1.0,
+            initial_step_size: 1e-4,
+            gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 10 },
+            stopping: StoppingCriteria {
+                stall_tol: Some(1e-6),
+                stall_patience: 10,
+                ..Default::default()
+            },
+            record_every: 200,
+        },
+        warm_tail: 5,
+        threads,
+        cache_capacity: 16,
+        objective_threads: 1,
+        quantum: 16,
+        max_queue: 64,
+        default_slo_ms: None,
+        audit_parity: false,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let (sources, dests, iters, requests, burst, reps) =
+        if fast { (4_000, 64, 200, 10, 4, 3) } else { (20_000, 256, 400, 24, 6, 5) };
+
+    println!(
+        "E17 — serve daemon latency: I={sources} J={dests} iters={iters} \
+         requests={requests} burst={burst}{}",
+        if fast { " (fast)" } else { "" }
+    );
+    let mut bench = BenchJson::new("serve_latency");
+    bench
+        .meta("sources", JsonValue::UInt(sources as u64))
+        .meta("dests", JsonValue::UInt(dests as u64))
+        .meta("iters", JsonValue::UInt(iters as u64))
+        .meta("requests", JsonValue::UInt(requests as u64))
+        .meta("burst", JsonValue::UInt(burst as u64))
+        .meta("fast", JsonValue::Bool(fast));
+
+    // ---- 1. steady-state latency over a drifting stream ----------------
+    let base = instance(sources, dests, 0);
+    let spec = DriftStreamSpec {
+        n: requests,
+        drift: PerturbSpec { c_rel: 0.05, b_rel: 0.05 },
+        ..Default::default()
+    };
+    let stream = drift_stream(&base, &spec, 1);
+    let mut daemon = ServeDaemon::new(serve_cfg(4, iters));
+    let outcomes = daemon.run_stream(&stream, burst);
+
+    // clean drain: one terminal outcome per request, nothing failed,
+    // nothing left queued
+    anyhow::ensure!(daemon.pending() == 0, "drain left {} requests queued", daemon.pending());
+    anyhow::ensure!(
+        outcomes.len() == requests,
+        "{} outcomes for {requests} requests",
+        outcomes.len()
+    );
+    let mut wall = Vec::new();
+    let mut warm_solves = 0usize;
+    let mut shed = 0usize;
+    for o in &outcomes {
+        match &o.outcome {
+            Outcome::Solved(r) => {
+                wall.push(r.wall_ms);
+                warm_solves += r.warm as usize;
+            }
+            Outcome::Shed(_) => shed += 1,
+            Outcome::Failed(e) => anyhow::bail!("request {} failed: {e}", o.id),
+        }
+    }
+    anyhow::ensure!(!wall.is_empty(), "no request solved");
+    // pure c/b drift: the whole stream must be absorbed as plane patches
+    let patch = daemon.resident().expect("resident after stream").report;
+    anyhow::ensure!(patch.repacked == 0, "c/b drift stream repacked {} buckets", patch.repacked);
+    anyhow::ensure!(daemon.stats().instance_loads == 1, "stream must reuse the resident slab");
+
+    let st = stats(&wall);
+    let hit_rate = warm_solves as f64 / wall.len() as f64;
+    println!(
+        "stream: {} solved / {shed} shed — p50 {:.1}ms p99 {:.1}ms (mean {:.1}ms); \
+         warm-hit rate {:.0}%",
+        st.n,
+        st.median,
+        st.p99,
+        st.mean,
+        100.0 * hit_rate
+    );
+    println!("{}", daemon.report());
+    bench
+        .meta("solved", JsonValue::UInt(st.n as u64))
+        .meta("shed", JsonValue::UInt(shed as u64))
+        .meta("p50_wall_ms", JsonValue::Num(st.median))
+        .meta("p99_wall_ms", JsonValue::Num(st.p99))
+        .meta("mean_wall_ms", JsonValue::Num(st.mean))
+        .meta("warm_hit_rate", JsonValue::Num(hit_rate))
+        .meta("plane_absorbs", JsonValue::UInt(daemon.stats().plane_absorbs));
+    for (k, r) in outcomes.iter().enumerate() {
+        if let Outcome::Solved(r) = &r.outcome {
+            bench.row(&[
+                ("req", JsonValue::UInt(k as u64)),
+                ("warm", JsonValue::Bool(r.warm)),
+                ("iterations", JsonValue::UInt(r.iterations as u64)),
+                ("wall_ms", JsonValue::Num(r.wall_ms)),
+            ]);
+        }
+    }
+
+    // ---- 2. delta absorb vs from-scratch rebuild ------------------------
+    let drifted = perturb_instance(&base, &PerturbSpec { c_rel: 0.05, b_rel: 0.05 }, 7);
+    let mut resident = ResidentInstance::new(base.clone()).map_err(anyhow::Error::msg)?;
+    let mut absorb_best_ms = f64::INFINITY;
+    let mut rebuild_best_ms = f64::INFINITY;
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        resident.absorb_planes(&drifted).map_err(anyhow::Error::msg)?;
+        absorb_best_ms = absorb_best_ms.min(sw.elapsed_ms());
+
+        let sw = Stopwatch::start();
+        let fresh = ResidentInstance::new(drifted.clone()).map_err(anyhow::Error::msg)?;
+        rebuild_best_ms = rebuild_best_ms.min(sw.elapsed_ms());
+        std::hint::black_box(fresh.grid().len());
+    }
+    // the shortcut must not cost correctness: patched slab == rebuilt slab
+    resident.parity_check().map_err(anyhow::Error::msg)?;
+    let speedup = rebuild_best_ms / absorb_best_ms.max(1e-9);
+    println!(
+        "delta vs rebuild: absorb_planes {absorb_best_ms:.3}ms vs rebuild \
+         {rebuild_best_ms:.3}ms → {speedup:.1}x"
+    );
+    bench
+        .meta("absorb_ms", JsonValue::Num(absorb_best_ms))
+        .meta("rebuild_ms", JsonValue::Num(rebuild_best_ms))
+        .meta("delta_speedup", JsonValue::Num(speedup));
+
+    // ---- 3. snapshot round-trip + emitted-schema smoke ------------------
+    let bytes = daemon.snapshot_bytes().map_err(anyhow::Error::msg)?;
+    let restored = ServeDaemon::restore(serve_cfg(4, iters), &bytes)
+        .map_err(anyhow::Error::msg)?;
+    let again = restored.snapshot_bytes().map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(bytes == again, "snapshot re-encode is not byte-identical");
+    anyhow::ensure!(
+        restored.cache().tick() == daemon.cache().tick(),
+        "restored cache clock drifted"
+    );
+    println!("snapshot: {} bytes, byte-stable across decode/encode", bytes.len());
+    bench.meta("snapshot_bytes", JsonValue::UInt(bytes.len() as u64));
+
+    let path = bench.write("results")?;
+    println!("wrote {}", path.display());
+
+    // CI smoke gate: the emitted JSON must carry the versioned schema and
+    // the headline metrics this bench exists to track
+    let text = std::fs::read_to_string(&path)?;
+    let schema = [
+        "\"schema_version\"",
+        "\"p50_wall_ms\"",
+        "\"p99_wall_ms\"",
+        "\"warm_hit_rate\"",
+        "\"delta_speedup\"",
+    ];
+    for needle in schema {
+        anyhow::ensure!(text.contains(needle), "{} missing {needle}", path.display());
+    }
+    Ok(())
+}

@@ -80,6 +80,25 @@ pub fn usage() -> &'static str {
                             stops per batch)\n\
          --quantum N        driver iterations per job per round (default\n\
                             16; results are quantum-invariant)\n\
+       serve             E17: resident daemon — bounded request queue with\n\
+                         admission control over the cooperative executor,\n\
+                         serving a drifting instance stream through\n\
+                         in-place plane deltas (zero slab rebuilds)\n\
+         --sources N --dests N --nnz-per-row F --seed S\n\
+         --requests N --burst N   stream length and submit burst size\n\
+                            (burst > --max-queue exercises shedding)\n\
+         --drift F --heavy-frac F   per-request c/b drift magnitude and\n\
+                            heavy-request (drift ×4) fraction\n\
+         --slo-light-ms F --slo-heavy-ms F   SLO budgets; the remaining\n\
+                            budget at solve time becomes the driver\n\
+                            deadline, exhausted budgets are shed\n\
+         --threads N --obj-threads N --quantum N --max-queue N\n\
+         --warm-tail N --cache-cap N --iters N --stall-tol F\n\
+         --snapshot PATH    write the durable warm-start snapshot (dual\n\
+                            cache + parked checkpoints) after the drain\n\
+         --audit-parity     delta parity gate per mutation + a final\n\
+                            patched-slab vs rebuild bit comparison\n\
+         --out-dir results/\n\
        info              artifact + environment report\n\
      \n\
      Artifacts default to ./artifacts ($DUALIP_ARTIFACTS overrides)."
@@ -856,6 +875,203 @@ pub fn cmd_engine_batch(args: &Args) -> Result<()> {
     }
     println!("{}", engine_report(&warm_engine.stats()));
     println!("{}", coop_report(&creport));
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `dualip serve` — E17: the resident serve daemon on a drifting request
+/// stream.
+///
+/// Generates a base instance, conditions it (§5.1), derives a drifting
+/// request stream (`gen::workloads::drift_stream` — per-request `c`/`b`
+/// drift, occasional heavy requests, per-request SLO budgets) and plays it
+/// through [`crate::serve::ServeDaemon`] in bursts. Every request after
+/// the first is absorbed as an in-place plane delta against the resident
+/// slab (zero rebuilds) and warm-started from the fingerprint cache.
+///
+/// Reports p50/p99 solve latency, the warm-hit rate and the daemon's
+/// operational counters, and writes `BENCH_serve_latency.json` for
+/// cross-PR perf tracking.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::gen::workloads::{drift_stream, DriftStreamSpec, PerturbSpec};
+    use crate::metrics::{stats, BenchJson, JsonValue};
+    use crate::serve::{Outcome, ServeConfig, ServeDaemon};
+    use crate::solver::StoppingCriteria;
+
+    let cfg = workload(args)?;
+    let requests = args.usize_or("requests", 12)?;
+    let burst = args.usize_or("burst", 4)?;
+    let drift = args.f64_or("drift", 0.05)?;
+    let heavy_frac = args.f64_or("heavy-frac", 0.2)?;
+    let slo_light_ms = args.f64_or("slo-light-ms", 250.0)?;
+    let slo_heavy_ms = args.f64_or("slo-heavy-ms", 2_000.0)?;
+    let threads = args.usize_or("threads", 8)?;
+    let obj_threads = args.usize_or("obj-threads", 1)?;
+    let quantum = args.usize_or("quantum", 16)?;
+    let max_queue = args.usize_or("max-queue", 64)?;
+    let warm_tail = args.usize_or("warm-tail", 5)?;
+    let cache_cap = args.usize_or("cache-cap", 64)?;
+    let stall_tol = args.f64_or("stall-tol", 1e-7)?;
+    let max_iters = args.usize_or("iters", 2_000)?;
+    let record_every = args.usize_or("record-every", 1_000)?;
+    let audit = args.flag("audit-parity");
+    let out_dir = args.get_or("out-dir", "results").to_string();
+
+    eprintln!(
+        "serve: I={} J={} ν={} seed={} requests={requests} burst={burst} drift={drift} \
+         heavy-frac={heavy_frac} threads={threads} max-queue={max_queue}",
+        cfg.num_requests, cfg.num_resources, cfg.avg_nnz_per_row, cfg.seed
+    );
+    let mut base = generate(&cfg);
+    jacobi_row_normalize(&mut base);
+    let base_nnz = base.nnz();
+
+    // Matched stopping criterion, as in engine-batch: objective stall at
+    // the floor γ.
+    let opts = SolveOptions {
+        max_iters,
+        max_step_size: 1.0,
+        initial_step_size: 1e-4,
+        gamma: GammaSchedule::paper_fig5(),
+        stopping: StoppingCriteria {
+            stall_tol: Some(stall_tol),
+            stall_patience: 10,
+            ..Default::default()
+        },
+        record_every,
+    };
+    let spec = DriftStreamSpec {
+        n: requests,
+        drift: PerturbSpec { c_rel: drift, b_rel: drift },
+        heavy_frac,
+        slo_light_ms,
+        slo_heavy_ms,
+        ..Default::default()
+    };
+    let stream = drift_stream(&base, &spec, cfg.seed.wrapping_add(1));
+    let heavy_of: std::collections::HashMap<u64, bool> =
+        stream.iter().map(|r| (r.id, r.heavy)).collect();
+
+    let mut daemon = ServeDaemon::new(ServeConfig {
+        opts,
+        warm_tail,
+        threads,
+        cache_capacity: cache_cap,
+        objective_threads: obj_threads,
+        quantum,
+        max_queue,
+        default_slo_ms: None,
+        audit_parity: audit,
+    });
+    let outcomes = daemon.run_stream(&stream, burst);
+
+    // --- report ----------------------------------------------------------
+    let mut bench = BenchJson::new("serve_latency");
+    bench
+        .meta("sources", JsonValue::UInt(cfg.num_requests as u64))
+        .meta("dests", JsonValue::UInt(cfg.num_resources as u64))
+        .meta("nnz", JsonValue::UInt(base_nnz as u64))
+        .meta("requests", JsonValue::UInt(requests as u64))
+        .meta("burst", JsonValue::UInt(burst as u64))
+        .meta("drift", JsonValue::Num(drift))
+        .meta("heavy_frac", JsonValue::Num(heavy_frac))
+        .meta("threads", JsonValue::UInt(threads as u64))
+        .meta("quantum", JsonValue::UInt(quantum as u64))
+        .meta("max_queue", JsonValue::UInt(max_queue as u64))
+        .meta("warm_tail", JsonValue::UInt(warm_tail as u64))
+        .meta("stall_tol", JsonValue::Num(stall_tol))
+        .meta("seed", JsonValue::UInt(cfg.seed));
+
+    println!(
+        "{:>4} {:>6} {:>5} {:>7} {:>10} {:>14}  outcome",
+        "req", "heavy", "warm", "iters", "wall ms", "stop"
+    );
+    let mut wall = Vec::new();
+    let mut warm_solves = 0usize;
+    for o in &outcomes {
+        let heavy = heavy_of.get(&o.id).copied().unwrap_or(false);
+        match &o.outcome {
+            Outcome::Solved(r) => {
+                println!(
+                    "{:>4} {:>6} {:>5} {:>7} {:>10.1} {:>14}  solved",
+                    o.id,
+                    heavy,
+                    r.warm,
+                    r.iterations,
+                    r.wall_ms,
+                    format!("{:?}", r.stop_reason),
+                );
+                bench.row(&[
+                    ("req", JsonValue::UInt(o.id)),
+                    ("heavy", JsonValue::Bool(heavy)),
+                    ("outcome", JsonValue::Str("solved".into())),
+                    ("warm", JsonValue::Bool(r.warm)),
+                    ("iterations", JsonValue::UInt(r.iterations as u64)),
+                    ("wall_ms", JsonValue::Num(r.wall_ms)),
+                    ("obj_eval_ms", JsonValue::Num(r.objective_eval_ms)),
+                    ("dual_obj", JsonValue::Num(r.dual_obj)),
+                    ("stop", JsonValue::Str(format!("{:?}", r.stop_reason))),
+                ]);
+                wall.push(r.wall_ms);
+                warm_solves += r.warm as usize;
+            }
+            Outcome::Shed(reason) => {
+                let label = format!("shed:{reason:?}");
+                println!(
+                    "{:>4} {:>6} {:>5} {:>7} {:>10} {:>14}  {label}",
+                    o.id, heavy, "-", "-", "-", "-"
+                );
+                bench.row(&[
+                    ("req", JsonValue::UInt(o.id)),
+                    ("heavy", JsonValue::Bool(heavy)),
+                    ("outcome", JsonValue::Str(label)),
+                ]);
+            }
+            Outcome::Failed(e) => {
+                println!(
+                    "{:>4} {:>6} {:>5} {:>7} {:>10} {:>14}  failed: {e}",
+                    o.id, heavy, "-", "-", "-", "-"
+                );
+                bench.row(&[
+                    ("req", JsonValue::UInt(o.id)),
+                    ("heavy", JsonValue::Bool(heavy)),
+                    ("outcome", JsonValue::Str(format!("failed:{e}"))),
+                ]);
+            }
+        }
+    }
+    if !wall.is_empty() {
+        let st = stats(&wall);
+        let hit_rate = warm_solves as f64 / wall.len() as f64;
+        println!(
+            "latency over {} solves: p50 {:.1}ms p99 {:.1}ms (mean {:.1}ms, max {:.1}ms); \
+             warm-hit rate {:.0}%",
+            st.n,
+            st.median,
+            st.p99,
+            st.mean,
+            st.max,
+            100.0 * hit_rate,
+        );
+        bench
+            .meta("solved", JsonValue::UInt(st.n as u64))
+            .meta("p50_wall_ms", JsonValue::Num(st.median))
+            .meta("p99_wall_ms", JsonValue::Num(st.p99))
+            .meta("mean_wall_ms", JsonValue::Num(st.mean))
+            .meta("warm_hit_rate", JsonValue::Num(hit_rate));
+    }
+    println!("{}", daemon.report());
+    if audit {
+        if let Some(r) = daemon.resident() {
+            r.parity_check().map_err(|e| anyhow!("parity gate failed: {e}"))?;
+            println!("parity: patched resident slab is bit-identical to a from-scratch rebuild");
+        }
+    }
+    if let Some(path) = args.get("snapshot") {
+        daemon.save_snapshot(path).map_err(|e| anyhow!("snapshot: {e}"))?;
+        println!("wrote warm-start snapshot to {path}");
+    }
+    let path = bench.write(&out_dir)?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -20,6 +20,7 @@ pub fn run(args: Args) -> Result<()> {
         "ablation-precond" => commands::cmd_ablation_precond(&args),
         "ablation-gamma" => commands::cmd_ablation_gamma(&args),
         "engine-batch" => commands::cmd_engine_batch(&args),
+        "serve" => commands::cmd_serve(&args),
         "info" => commands::cmd_info(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n");

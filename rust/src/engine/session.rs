@@ -190,6 +190,14 @@ pub struct EngineStats {
     pub deadline_stops: u64,
     /// Solves stopped by a cancellation token (`StopReason::Cancelled`).
     pub cancelled: u64,
+    /// Warm-start cache hits (merged from the cache at snapshot time).
+    pub cache_hits: u64,
+    /// Warm-start cache misses (merged from the cache at snapshot time).
+    pub cache_misses: u64,
+    /// Warm-start cache LRU evictions — a nonzero rate means the cache is
+    /// undersized for the fingerprint working set and re-solves that
+    /// should run warm are running cold.
+    pub cache_evictions: u64,
 }
 
 impl EngineStats {
@@ -205,6 +213,24 @@ impl EngineStats {
             return f64::NAN;
         }
         self.warm_iters as f64 / self.warm_solves as f64
+    }
+
+    /// Warm-start cache hit rate in [0, 1] (NaN before any lookup).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            return f64::NAN;
+        }
+        self.cache_hits as f64 / total as f64
+    }
+
+    /// Evictions per insert-causing solve — rough pressure signal
+    /// (evictions over all completed solves).
+    pub fn cache_evict_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return f64::NAN;
+        }
+        self.cache_evictions as f64 / self.submitted as f64
     }
 }
 
@@ -536,9 +562,17 @@ impl SolveEngine {
         (results, report)
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot. Warm-start cache counters (hits/misses/evictions)
+    /// are merged in from the cache at snapshot time — they live on the
+    /// cache itself so every lookup path (including future direct cache
+    /// users) is counted.
     pub fn stats(&self) -> EngineStats {
-        *self.stats.lock().unwrap()
+        let mut s = *self.stats.lock().unwrap();
+        let c = self.cache.lock().unwrap();
+        s.cache_hits = c.hits;
+        s.cache_misses = c.misses;
+        s.cache_evictions = c.evictions;
+        s
     }
 
     /// Non-mutating view of the cached warm start for a fingerprint
@@ -627,6 +661,9 @@ mod tests {
         let s = engine.stats();
         assert_eq!((s.cold_solves, s.warm_solves), (1, 1));
         assert_eq!(engine.cache_counters(), (1, 1));
+        // cache counters surface in the stats snapshot too
+        assert_eq!((s.cache_hits, s.cache_misses, s.cache_evictions), (1, 1, 0));
+        assert_eq!(s.cache_hit_rate(), 0.5);
         // warm restart of the SAME instance finishes almost immediately
         assert!(
             b.iterations < a.iterations,
@@ -826,6 +863,18 @@ mod tests {
         let b = engine.submit(SolveJob::new(1, instance(1)));
         assert!(!b.warm);
         assert_eq!(engine.stats().cold_solves, 2);
+    }
+
+    #[test]
+    fn cache_evictions_surface_in_stats() {
+        let mut cfg = test_config(1);
+        cfg.cache_capacity = 1;
+        let engine = SolveEngine::new(cfg);
+        let _ = engine.submit(SolveJob::new(0, instance(1)));
+        let _ = engine.submit(SolveJob::new(1, instance(2))); // evicts seed-1 entry
+        let s = engine.stats();
+        assert_eq!(s.cache_evictions, 1);
+        assert_eq!(s.cache_evict_rate(), 0.5);
     }
 
     #[test]

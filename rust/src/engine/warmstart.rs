@@ -39,6 +39,11 @@ pub struct WarmStartCache {
     tick: u64,
     pub hits: u64,
     pub misses: u64,
+    /// LRU evictions performed by `insert` (capacity pressure). Silent
+    /// evictions would mask an undersized cache — or an undersized
+    /// snapshot after a daemon restart — so the engine and serve layers
+    /// surface this in their reports.
+    pub evictions: u64,
 }
 
 impl WarmStartCache {
@@ -51,7 +56,17 @@ impl WarmStartCache {
             tick: 0,
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Monotonic LRU clock (bumped by every `lookup` and `insert`).
+    pub fn tick(&self) -> u64 {
+        self.tick
     }
 
     pub fn len(&self) -> usize {
@@ -110,10 +125,49 @@ impl WarmStartCache {
                 .map(|(k, _)| *k)
             {
                 self.entries.remove(&oldest);
+                self.evictions += 1;
             }
         }
         self.entries
             .insert(fp, (WarmStart { lam, gamma, refreshes: 1 }, tick));
+    }
+
+    /// Snapshot view of every entry with its LRU tick, ordered oldest →
+    /// newest. Ticks are unique (every `lookup`/`insert` consumes one), so
+    /// the order is total and a restored cache evicts in exactly the same
+    /// sequence the live one would have.
+    pub fn export_entries(&self) -> Vec<(Fingerprint, WarmStart, u64)> {
+        let mut out: Vec<(Fingerprint, WarmStart, u64)> = self
+            .entries
+            .iter()
+            .map(|(fp, (ws, used))| (*fp, ws.clone(), *used))
+            .collect();
+        out.sort_by_key(|(_, _, used)| *used);
+        out
+    }
+
+    /// Rebuild a cache from snapshot parts (inverse of `export_entries`
+    /// plus the counters), preserving exact LRU ticks so eviction order
+    /// and hit accounting continue bit-identically after a restart.
+    pub fn from_parts(
+        capacity: usize,
+        tick: u64,
+        hits: u64,
+        misses: u64,
+        evictions: u64,
+        entries: Vec<(Fingerprint, WarmStart, u64)>,
+    ) -> WarmStartCache {
+        WarmStartCache {
+            entries: entries
+                .into_iter()
+                .map(|(fp, ws, used)| (fp, (ws, used)))
+                .collect(),
+            capacity,
+            tick,
+            hits,
+            misses,
+            evictions,
+        }
     }
 }
 
@@ -211,6 +265,55 @@ mod tests {
         assert!(c.peek(&fp(1)).is_some());
         assert!(c.peek(&fp(2)).is_none());
         assert!(c.peek(&fp(3)).is_some());
+    }
+
+    #[test]
+    fn eviction_counter_tallies() {
+        let mut c = WarmStartCache::new(2);
+        c.insert(fp(1), vec![0.0; 4], 0.01);
+        c.insert(fp(2), vec![0.0; 4], 0.01);
+        assert_eq!(c.evictions, 0);
+        c.insert(fp(3), vec![0.0; 4], 0.01);
+        c.insert(fp(4), vec![0.0; 4], 0.01);
+        assert_eq!(c.evictions, 2);
+        c.insert(fp(4), vec![1.0; 4], 0.01); // refresh, not an eviction
+        assert_eq!(c.evictions, 2);
+    }
+
+    #[test]
+    fn export_and_from_parts_round_trip_preserves_lru() {
+        let mut c = WarmStartCache::new(2);
+        c.insert(fp(1), vec![0.1; 4], 0.04);
+        c.insert(fp(2), vec![0.2; 4], 0.02);
+        let _ = c.lookup(&fp(1)); // 1 newer than 2
+        let _ = c.lookup(&fp(9)); // miss
+        let entries = c.export_entries();
+        assert_eq!(entries.len(), 2);
+        // oldest → newest: fp(2) then fp(1)
+        assert_eq!(entries[0].0, fp(2));
+        assert_eq!(entries[1].0, fp(1));
+        assert!(entries[0].2 < entries[1].2, "ticks strictly ordered");
+
+        let mut r = WarmStartCache::from_parts(
+            c.capacity(),
+            c.tick(),
+            c.hits,
+            c.misses,
+            c.evictions,
+            entries,
+        );
+        assert_eq!((r.hits, r.misses, r.evictions), (1, 1, 0));
+        assert_eq!(r.tick(), c.tick());
+        // same next eviction victim as the live cache: fp(2)
+        r.insert(fp(3), vec![0.3; 4], 0.01);
+        c.insert(fp(3), vec![0.3; 4], 0.01);
+        for cache in [&r, &c] {
+            assert!(cache.peek(&fp(1)).is_some());
+            assert!(cache.peek(&fp(2)).is_none());
+            assert!(cache.peek(&fp(3)).is_some());
+        }
+        assert_eq!(r.evictions, 1);
+        assert_eq!(r.tick(), c.tick());
     }
 
     #[test]

@@ -122,6 +122,97 @@ pub fn perturb_instance(base: &MatchingLp, spec: &PerturbSpec, seed: u64) -> Mat
     }
 }
 
+/// One request in a drifting serve stream: a perturbed instance plus its
+/// arrival offset and SLO budget — the input shape `serve::ServeDaemon`
+/// and `bench_serve_latency` consume.
+#[derive(Clone)]
+pub struct StreamRequest {
+    pub id: u64,
+    pub lp: MatchingLp,
+    /// Arrival offset from stream start (ms), non-decreasing.
+    pub arrival_ms: f64,
+    /// SLO budget from arrival (ms): tight for light refreshes, loose for
+    /// heavy campaign refreshes.
+    pub slo_ms: f64,
+    /// Heavy campaign refresh (larger perturbation, loose SLO).
+    pub heavy: bool,
+}
+
+/// Drifting request-stream shape: per-step drift magnitude, skewed
+/// (lognormal) inter-arrival gaps, and a light/heavy request mix.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftStreamSpec {
+    /// Number of requests.
+    pub n: usize,
+    /// Per-step drift (applied cumulatively — see [`drift_stream`]).
+    pub drift: PerturbSpec,
+    /// Heavy requests scale the per-step drift by this factor.
+    pub heavy_drift_mult: f64,
+    /// Fraction of requests that are heavy campaign refreshes.
+    pub heavy_frac: f64,
+    /// Median inter-arrival gap (ms).
+    pub median_gap_ms: f64,
+    /// Lognormal σ of the gap skew (0 = uniform spacing).
+    pub gap_sigma: f64,
+    /// SLO budget for light requests (ms).
+    pub slo_light_ms: f64,
+    /// SLO budget for heavy requests (ms).
+    pub slo_heavy_ms: f64,
+}
+
+impl Default for DriftStreamSpec {
+    fn default() -> Self {
+        DriftStreamSpec {
+            n: 32,
+            drift: PerturbSpec { c_rel: 0.02, b_rel: 0.02 },
+            heavy_drift_mult: 4.0,
+            heavy_frac: 0.2,
+            median_gap_ms: 5.0,
+            gap_sigma: 1.0,
+            slo_light_ms: 250.0,
+            slo_heavy_ms: 2000.0,
+        }
+    }
+}
+
+/// A drifting request stream off a base instance. Unlike
+/// [`perturbation_sequence`] (iid jitter around the base), each request
+/// perturbs the *previous* instance, so `c`/`b` random-walk away from the
+/// base over time — the serving regime where yesterday's λ slowly stops
+/// being a good start. The sparsity pattern is untouched, so every
+/// request keeps the base fingerprint and exercises the warm-start path.
+/// Inter-arrival gaps are lognormal (bursts + long tails) and a
+/// `heavy_frac` of requests are heavy campaign refreshes with
+/// `heavy_drift_mult`× the drift and a looser SLO. Deterministic per
+/// (base, spec, seed).
+pub fn drift_stream(base: &MatchingLp, spec: &DriftStreamSpec, seed: u64) -> Vec<StreamRequest> {
+    let mut arrivals = Rng::new(seed ^ 0x7D31_F7_5E4E_5EED);
+    let mut current = base.clone();
+    let mut clock = 0.0f64;
+    (0..spec.n as u64)
+        .map(|k| {
+            let heavy = arrivals.uniform() < spec.heavy_frac;
+            let step = if heavy {
+                PerturbSpec {
+                    c_rel: spec.drift.c_rel * spec.heavy_drift_mult,
+                    b_rel: spec.drift.b_rel * spec.heavy_drift_mult,
+                }
+            } else {
+                spec.drift
+            };
+            current = perturb_instance(&current, &step, seed.wrapping_add(k));
+            clock += spec.median_gap_ms * arrivals.lognormal(0.0, spec.gap_sigma);
+            StreamRequest {
+                id: k,
+                lp: current.clone(),
+                arrival_ms: clock,
+                slo_ms: if heavy { spec.slo_heavy_ms } else { spec.slo_light_ms },
+                heavy,
+            }
+        })
+        .collect()
+}
+
 /// A length-`n` re-solve stream off a base instance; element k is
 /// `perturb_instance(base, spec, seed + k)`.
 pub fn perturbation_sequence(
@@ -190,6 +281,50 @@ mod tests {
         assert_eq!(a.b, b.b);
         let c = perturb_instance(&base, &spec, 12);
         assert_ne!(a.cost, c.cost);
+    }
+
+    #[test]
+    fn drift_stream_random_walks_with_fixed_pattern() {
+        use crate::engine::Fingerprint;
+        let base = crate::gen::generate(&smoke(5));
+        let spec = DriftStreamSpec { n: 24, ..Default::default() };
+        let stream = drift_stream(&base, &spec, 42);
+        assert_eq!(stream.len(), 24);
+        let base_fp = Fingerprint::of(&base);
+        let mut prev_arrival = 0.0;
+        for r in &stream {
+            // drift never touches structure: every request is a warm
+            // re-solve of the base fingerprint
+            assert_eq!(Fingerprint::of(&r.lp), base_fp, "request {}", r.id);
+            assert!(r.arrival_ms > prev_arrival, "arrivals strictly increase");
+            prev_arrival = r.arrival_ms;
+            assert_eq!(r.slo_ms, if r.heavy { spec.slo_heavy_ms } else { spec.slo_light_ms });
+        }
+        // cumulative drift: later instances sit farther from base than
+        // early ones (random walk, not iid jitter around base)
+        let dist = |lp: &MatchingLp| -> f64 {
+            lp.cost
+                .iter()
+                .zip(&base.cost)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(
+            dist(&stream[23].lp) > dist(&stream[0].lp),
+            "drift must accumulate: d0={} d23={}",
+            dist(&stream[0].lp),
+            dist(&stream[23].lp)
+        );
+        // mix contains both classes at 20% heavy over 24 draws (seed-stable)
+        assert!(stream.iter().any(|r| r.heavy) && stream.iter().any(|r| !r.heavy));
+        // deterministic per seed
+        let again = drift_stream(&base, &spec, 42);
+        for (a, b) in stream.iter().zip(&again) {
+            assert_eq!(a.lp.cost, b.lp.cost);
+            assert_eq!(a.arrival_ms, b.arrival_ms);
+        }
+        assert_ne!(drift_stream(&base, &spec, 43)[0].lp.cost, stream[0].lp.cost);
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //!   the production repeated-solve pattern, running on the slab-native
 //!   batched CPU objective (`backend/`) by default — chunk-sharded
 //!   across workers on request (`--shards`, `EngineConfig::shards`),
-//!   with S-shard solves bit-identical to 1-shard solves.
+//!   with S-shard solves bit-identical to 1-shard solves; and the
+//!   resident serving layer (`serve/`): a request queue with admission
+//!   control over the cooperative executor, in-place instance deltas
+//!   against a hot slab, and durable warm-start snapshots.
 //! - **L2/L1 (python/compile, build-time only)**: the batched slab dual
 //!   step (scale → blockwise projection → reduce) as a Pallas kernel inside
 //!   a JAX graph, AOT-lowered to HLO text artifacts.
@@ -52,6 +55,7 @@ pub mod problem;
 pub mod runtime;
 pub mod projection;
 pub mod reference;
+pub mod serve;
 pub mod solver;
 pub mod sparse;
 pub mod util;

@@ -3,15 +3,22 @@
 //! need:
 //!
 //! ```json
-//! {"bench": "engine_warmstart", "meta": {...}, "rows": [{...}, ...]}
+//! {"bench": "engine_warmstart", "schema_version": 1, "meta": {...}, "rows": [{...}, ...]}
 //! ```
 //!
 //! Emitted files are named `BENCH_<name>.json` so the PR driver can diff
-//! perf trajectories across commits. Values are numbers, strings or bools;
-//! non-finite floats serialize as `null` (valid JSON, unlike `NaN`).
+//! perf trajectories across commits; every document carries a top-level
+//! `schema_version` ([`SCHEMA_VERSION`]) so downstream tooling can detect
+//! shape changes instead of silently misparsing old artifacts. Values are
+//! numbers, strings or bools; non-finite floats serialize as `null`
+//! (valid JSON, unlike `NaN`).
 
 use std::io::Write;
 use std::path::Path;
+
+/// Version of the `BENCH_*.json` document shape. Bump when the top-level
+/// layout (not the per-bench row fields) changes incompatibly.
+pub const SCHEMA_VERSION: u32 = 1;
 
 /// One JSON scalar.
 #[derive(Clone, Debug)]
@@ -103,7 +110,7 @@ impl BenchJson {
             .map(|(k, v)| format!("{}: {}", escape(k), v.render()))
             .collect();
         format!(
-            "{{\"bench\": {}, \"meta\": {{{}}}, \"rows\": [\n  {}\n]}}\n",
+            "{{\"bench\": {}, \"schema_version\": {SCHEMA_VERSION}, \"meta\": {{{}}}, \"rows\": [\n  {}\n]}}\n",
             escape(&self.name),
             meta_fields.join(", "),
             self.rows.join(",\n  "),
@@ -138,7 +145,7 @@ mod tests {
             ("warm", JsonValue::Bool(false)),
         ]);
         let s = b.render();
-        assert!(s.starts_with("{\"bench\": \"engine_warmstart\""));
+        assert!(s.starts_with("{\"bench\": \"engine_warmstart\", \"schema_version\": 1"));
         assert!(s.contains("\"meta\": {\"sources\": 1000}"));
         assert!(s.contains("\"mode\": \"cold\""));
         assert!(s.contains("\"warm\": false"));

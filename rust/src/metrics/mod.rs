@@ -5,7 +5,7 @@
 
 pub mod bench_json;
 
-pub use bench_json::{BenchJson, JsonValue};
+pub use bench_json::{BenchJson, JsonValue, SCHEMA_VERSION};
 
 use crate::distributed::CommSnapshot;
 use crate::engine::{BatchReport, CoopReport, EngineStats};
@@ -20,6 +20,7 @@ pub struct Stats {
     pub min: f64,
     pub max: f64,
     pub p95: f64,
+    pub p99: f64,
     pub stddev: f64,
 }
 
@@ -43,6 +44,7 @@ pub fn stats(samples: &[f64]) -> Stats {
         min: s[0],
         max: s[n - 1],
         p95: q(0.95),
+        p99: q(0.99),
         stddev: var.sqrt(),
     }
 }
@@ -64,17 +66,25 @@ pub fn solve_report(label: &str, r: &SolveResult) -> String {
 }
 
 /// One-paragraph engine report: warm/cold solve mix, mean iterations per
-/// class, objective-eval share of wall-clock, batch concurrency.
+/// class, objective-eval share of wall-clock, batch concurrency, and
+/// warm-start cache behavior (hit rate + evictions — a nonzero eviction
+/// rate flags an undersized cache).
 pub fn engine_report(s: &EngineStats) -> String {
     let eval_share = if s.total_wall_ms > 0.0 {
         100.0 * s.objective_eval_ms / s.total_wall_ms
     } else {
         0.0
     };
+    let hit_pct = if s.cache_hits + s.cache_misses > 0 {
+        100.0 * s.cache_hit_rate()
+    } else {
+        0.0
+    };
     format!(
         "engine: {} solves ({} cold / {} warm), mean iters cold={:.1} warm={:.1}, \
          {:.1}ms total ({:.1}ms / {eval_share:.0}% in objective eval), \
-         {} batches (peak {} in flight), {} deadline-stopped, {} cancelled",
+         {} batches (peak {} in flight), {} deadline-stopped, {} cancelled, \
+         cache {hit_pct:.0}% hit ({}/{} lookups, {} evictions)",
         s.submitted,
         s.cold_solves,
         s.warm_solves,
@@ -86,6 +96,9 @@ pub fn engine_report(s: &EngineStats) -> String {
         s.peak_in_flight,
         s.deadline_stops,
         s.cancelled,
+        s.cache_hits,
+        s.cache_hits + s.cache_misses,
+        s.cache_evictions,
     )
 }
 
@@ -169,6 +182,16 @@ mod tests {
         let s = stats(&[7.5]);
         assert_eq!(s.mean, 7.5);
         assert_eq!(s.p95, 7.5);
+        assert_eq!(s.p99, 7.5);
+    }
+
+    #[test]
+    fn p99_sits_between_p95_and_max() {
+        let samples: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = stats(&samples);
+        assert_eq!(s.p95, 949.0);
+        assert_eq!(s.p99, 989.0);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]
@@ -179,9 +202,20 @@ mod tests {
 
     #[test]
     fn engine_and_coop_reports_name_deadline_and_cancel_counts() {
-        let s = EngineStats { deadline_stops: 3, cancelled: 1, ..Default::default() };
+        let s = EngineStats {
+            deadline_stops: 3,
+            cancelled: 1,
+            cache_hits: 3,
+            cache_misses: 1,
+            cache_evictions: 2,
+            ..Default::default()
+        };
         let rep = engine_report(&s);
         assert!(rep.contains("3 deadline-stopped") && rep.contains("1 cancelled"), "{rep}");
+        assert!(
+            rep.contains("cache 75% hit (3/4 lookups, 2 evictions)"),
+            "{rep}"
+        );
         let c = CoopReport {
             jobs: 4,
             threads: 2,

@@ -116,6 +116,76 @@ impl MatchingLp {
         }
     }
 
+    /// Splice one edge into the CSR at the end of `source`'s range (all
+    /// planes: matrix coefficients, cost, and global-row coefficients,
+    /// which get 0). Returns the new edge's global position — the input
+    /// the slab delta path (`SlabLayout::patch_edge`) needs. Errors leave
+    /// the instance untouched.
+    pub fn insert_edge(
+        &mut self,
+        source: usize,
+        dest: u32,
+        a: &[f32],
+        cost: f32,
+    ) -> Result<usize, String> {
+        if source >= self.num_sources() {
+            return Err(format!("source {source} out of range"));
+        }
+        if dest as usize >= self.num_dests() {
+            return Err(format!("dest {dest} out of range"));
+        }
+        if a.len() != self.num_families() {
+            return Err(format!(
+                "{} family coefficients for {} families",
+                a.len(),
+                self.num_families()
+            ));
+        }
+        let (e0, e1) = (self.a.src_ptr[source], self.a.src_ptr[source + 1]);
+        if self.a.dest_idx[e0..e1].contains(&dest) {
+            return Err(format!("source {source} already has an edge to dest {dest}"));
+        }
+        let p = e1;
+        self.a.dest_idx.insert(p, dest);
+        for (k, plane) in self.a.a.iter_mut().enumerate() {
+            plane.insert(p, a[k]);
+        }
+        self.cost.insert(p, cost);
+        for g in &mut self.global_rows {
+            g.coeffs.insert(p, 0.0);
+        }
+        for ptr in &mut self.a.src_ptr[source + 1..] {
+            *ptr += 1;
+        }
+        Ok(p)
+    }
+
+    /// Remove the edge `(source, dest)` from every plane, returning its
+    /// old global position. Errors leave the instance untouched.
+    pub fn remove_edge(&mut self, source: usize, dest: u32) -> Result<usize, String> {
+        if source >= self.num_sources() {
+            return Err(format!("source {source} out of range"));
+        }
+        let (e0, e1) = (self.a.src_ptr[source], self.a.src_ptr[source + 1]);
+        let p = self.a.dest_idx[e0..e1]
+            .iter()
+            .position(|&d| d == dest)
+            .map(|off| e0 + off)
+            .ok_or_else(|| format!("source {source} has no edge to dest {dest}"))?;
+        self.a.dest_idx.remove(p);
+        for plane in &mut self.a.a {
+            plane.remove(p);
+        }
+        self.cost.remove(p);
+        for g in &mut self.global_rows {
+            g.coeffs.remove(p);
+        }
+        for ptr in &mut self.a.src_ptr[source + 1..] {
+            *ptr -= 1;
+        }
+        Ok(p)
+    }
+
     /// Structural sanity checks.
     pub fn validate(&self) -> Result<(), String> {
         self.a.validate()?;
@@ -202,6 +272,40 @@ mod tests {
         lp.primal_scale = Some(vec![2.0, 0.5]);
         assert_eq!(lp.gamma_scale(0), 4.0);
         assert_eq!(lp.gamma_scale(1), 0.25);
+        lp.validate().unwrap();
+    }
+
+    #[test]
+    fn insert_and_remove_edge_round_trip() {
+        let mut lp = tiny();
+        lp.push_global_row(vec![1.0; 4], 2.0);
+        let before = lp.clone();
+        let p = lp.insert_edge(0, 2, &[7.0], -9.0).unwrap();
+        assert_eq!(p, 2, "inserted at the end of source 0's range");
+        assert_eq!(lp.nnz(), 5);
+        assert_eq!(lp.a.src_ptr, vec![0, 3, 5]);
+        assert_eq!(lp.cost[2], -9.0);
+        assert_eq!(lp.a.a[0][2], 7.0);
+        assert_eq!(lp.global_rows[0].coeffs[2], 0.0);
+        lp.validate().unwrap();
+        let q = lp.remove_edge(0, 2).unwrap();
+        assert_eq!(q, 2);
+        assert_eq!(lp.a.src_ptr, before.a.src_ptr);
+        assert_eq!(lp.a.dest_idx, before.a.dest_idx);
+        assert_eq!(lp.cost, before.cost);
+        lp.validate().unwrap();
+    }
+
+    #[test]
+    fn edge_edits_reject_bad_input_untouched() {
+        let mut lp = tiny();
+        let before_nnz = lp.nnz();
+        assert!(lp.insert_edge(9, 0, &[1.0], 0.0).is_err(), "source range");
+        assert!(lp.insert_edge(0, 9, &[1.0], 0.0).is_err(), "dest range");
+        assert!(lp.insert_edge(0, 2, &[1.0, 2.0], 0.0).is_err(), "family arity");
+        assert!(lp.insert_edge(0, 1, &[1.0], 0.0).is_err(), "duplicate dest");
+        assert!(lp.remove_edge(0, 2).is_err(), "no such edge");
+        assert_eq!(lp.nnz(), before_nnz);
         lp.validate().unwrap();
     }
 

@@ -1,0 +1,834 @@
+//! The resident serve daemon (DESIGN.md §9): an in-process request queue
+//! in front of the cooperative executor, run as a long-lived host for one
+//! hot instance.
+//!
+//! **Queue lifecycle.** `submit` admits a request (or sheds it immediately
+//! when the queue is at capacity); `drain` processes the queue in order.
+//! Requests that change the instance — a full [`LpSpec`]/[`MatchingLp`]
+//! or an [`InstanceDelta`] — are barriers: the pending wave of solve
+//! requests is flushed through [`Scheduler::run_coop`] first, then the
+//! mutation is applied to the [`ResidentInstance`] in place (a shipped
+//! instance whose fingerprint matches the resident one is absorbed as a
+//! plane delta — zero rebuild). Every request, mutating or not, then
+//! solves the resident instance and yields one [`ServeOutcome`].
+//!
+//! **Admission control.** Queue depth is bounded (`ServeConfig::max_queue`
+//! → [`ShedReason::QueueFull`] at submit). Each request carries an SLO
+//! budget measured from admission; at solve time the remaining budget
+//! becomes the driver deadline (`DriverOptions::deadline_ms`, enforced
+//! between iterations exactly as `SolveEngine::solve_batch_coop` does) and
+//! a request whose budget is already exhausted is shed
+//! ([`ShedReason::SloExpired`]) without spending a single iteration.
+//!
+//! **Durable warm-start state.** `snapshot_bytes`/`restore` round-trip the
+//! daemon's LRU dual cache and the checkpoints of parked in-flight solves
+//! through the versioned on-disk format in [`crate::serve::snapshot`]. A
+//! bounded `drain_budget` parks unfinished solves (checkpointed by
+//! fingerprint, re-queued at the front); a restored daemon, given the same
+//! resident instance, finishes them **bit-identically** to a daemon that
+//! never stopped — λ is published to the cache at every γ-decay checkpoint
+//! either way, so even the cache's LRU clock matches tick for tick.
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use crate::backend::slab_cpu::SlabCpuObjective;
+use crate::backend::TimedObjective;
+use crate::engine::{warm_options, Fingerprint, JobResult, Scheduler, WarmStartCache};
+use crate::gen::workloads::StreamRequest;
+use crate::problem::{LpSpec, MatchingLp};
+use crate::serve::delta::{InstanceDelta, ResidentInstance};
+use crate::serve::snapshot::{self, CheckpointEntry};
+use crate::solver::{
+    Agd, Checkpoint, DriverOptions, SolveDriver, SolveOptions, StepEvent, StopReason,
+};
+use crate::util::timer::Stopwatch;
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Cold-solve option template (min_iters is pushed past the
+    /// γ-continuation descent, as in `SolveEngine`).
+    pub opts: SolveOptions,
+    /// Tail decay steps for warm starts (`warm_options`).
+    pub warm_tail: usize,
+    /// Executor worker threads per wave.
+    pub threads: usize,
+    /// Warm-start cache capacity (entries).
+    pub cache_capacity: usize,
+    /// Threads per objective evaluation.
+    pub objective_threads: usize,
+    /// Iterations per job per cooperative round.
+    pub quantum: usize,
+    /// Admission bound: submits beyond this queue depth are shed.
+    pub max_queue: usize,
+    /// Default SLO budget (ms from admission) for requests that carry
+    /// none. `None` = unbounded.
+    pub default_slo_ms: Option<f64>,
+    /// Run the O(nnz) delta parity gate after every applied delta
+    /// (tests / smoke runs; not for the hot path).
+    pub audit_parity: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            opts: SolveOptions::default(),
+            warm_tail: 5,
+            threads: std::thread::available_parallelism().map_or(1, |n| n.get()),
+            cache_capacity: 64,
+            objective_threads: 1,
+            quantum: 16,
+            max_queue: 64,
+            default_slo_ms: None,
+            audit_parity: false,
+        }
+    }
+}
+
+/// What a request carries.
+#[derive(Debug)]
+pub enum Payload {
+    /// Build this spec and make it the resident instance (or absorb it as
+    /// a plane delta if its fingerprint matches), then solve it.
+    Spec(Box<LpSpec>),
+    /// Same, for an already-built instance.
+    Instance(Box<MatchingLp>),
+    /// Apply a delta to the resident instance, then solve it.
+    Delta(InstanceDelta),
+    /// Solve the resident instance as-is.
+    Solve,
+}
+
+impl Payload {
+    fn mutates(&self) -> bool {
+        !matches!(self, Payload::Solve)
+    }
+}
+
+/// One queued request.
+#[derive(Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub payload: Payload,
+    /// SLO budget in ms, measured from admission. `None` falls back to
+    /// `ServeConfig::default_slo_ms`.
+    pub slo_ms: Option<f64>,
+}
+
+impl ServeRequest {
+    pub fn solve(id: u64) -> ServeRequest {
+        ServeRequest { id, payload: Payload::Solve, slo_ms: None }
+    }
+
+    pub fn instance(id: u64, lp: MatchingLp) -> ServeRequest {
+        ServeRequest { id, payload: Payload::Instance(Box::new(lp)), slo_ms: None }
+    }
+
+    pub fn spec(id: u64, spec: LpSpec) -> ServeRequest {
+        ServeRequest { id, payload: Payload::Spec(Box::new(spec)), slo_ms: None }
+    }
+
+    pub fn delta(id: u64, delta: InstanceDelta) -> ServeRequest {
+        ServeRequest { id, payload: Payload::Delta(delta), slo_ms: None }
+    }
+
+    pub fn with_slo_ms(mut self, ms: f64) -> ServeRequest {
+        self.slo_ms = Some(ms);
+        self
+    }
+}
+
+/// Why a request was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Admission bound hit at submit time.
+    QueueFull,
+    /// SLO budget exhausted before the solve could start.
+    SloExpired,
+}
+
+/// Terminal outcome of one request.
+#[derive(Debug)]
+pub enum Outcome {
+    Solved(Box<JobResult>),
+    Shed(ShedReason),
+    Failed(String),
+}
+
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub id: u64,
+    pub outcome: Outcome,
+}
+
+/// Daemon counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed_queue_full: u64,
+    pub shed_slo: u64,
+    pub parked: u64,
+    pub resumed: u64,
+    pub deadline_stops: u64,
+    pub cancelled: u64,
+    pub drains: u64,
+    pub waves: u64,
+    pub instance_loads: u64,
+    pub plane_absorbs: u64,
+    pub deltas: u64,
+}
+
+struct QueuedEntry {
+    id: u64,
+    payload: Payload,
+    slo_ms: Option<f64>,
+    admitted: Stopwatch,
+    /// Parked solve to resume instead of starting fresh: the checkpoint
+    /// plus the fingerprint of the instance it was solving.
+    resume: Option<(Fingerprint, Checkpoint)>,
+}
+
+/// The resident daemon. Single-threaded control loop (submit/drain from
+/// one owner); solves fan out over the cooperative executor inside
+/// `drain`.
+pub struct ServeDaemon {
+    cfg: ServeConfig,
+    resident: Option<ResidentInstance>,
+    cache: WarmStartCache,
+    queue: VecDeque<QueuedEntry>,
+    stats: ServeStats,
+}
+
+impl ServeDaemon {
+    pub fn new(cfg: ServeConfig) -> ServeDaemon {
+        assert!(cfg.threads >= 1, "daemon needs at least one thread");
+        let cache = WarmStartCache::new(cfg.cache_capacity);
+        ServeDaemon {
+            cfg,
+            resident: None,
+            cache,
+            queue: VecDeque::new(),
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// Rebuild a daemon from snapshot bytes: the warm-start cache is
+    /// restored exactly (entries, LRU ticks, counters — the snapshot's
+    /// capacity wins over `cfg.cache_capacity`), and parked solves are
+    /// re-queued at the front. The operator must `load_instance` the
+    /// matching instance before draining; a parked solve whose fingerprint
+    /// no longer matches fails cleanly instead of resuming on wrong bits.
+    pub fn restore(cfg: ServeConfig, bytes: &[u8]) -> Result<ServeDaemon, String> {
+        Ok(Self::from_snapshot(cfg, snapshot::decode(bytes)?))
+    }
+
+    /// `restore` from a file written by [`Self::save_snapshot`].
+    pub fn restore_from(cfg: ServeConfig, path: impl AsRef<Path>) -> Result<ServeDaemon, String> {
+        Ok(Self::from_snapshot(cfg, snapshot::load(path)?))
+    }
+
+    fn from_snapshot(cfg: ServeConfig, snap: snapshot::ServeSnapshot) -> ServeDaemon {
+        let mut d = ServeDaemon::new(cfg);
+        d.cache = snap.cache;
+        for e in snap.checkpoints {
+            d.queue.push_back(QueuedEntry {
+                id: e.request_id,
+                payload: Payload::Solve,
+                slo_ms: None,
+                admitted: Stopwatch::start(),
+                resume: Some((e.fingerprint, e.checkpoint)),
+            });
+        }
+        d
+    }
+
+    /// Serialize the durable state: the warm-start cache plus checkpoints
+    /// of every parked solve currently queued.
+    pub fn snapshot_bytes(&self) -> Result<Vec<u8>, String> {
+        let entries: Vec<CheckpointEntry> = self
+            .queue
+            .iter()
+            .filter_map(|e| {
+                e.resume.as_ref().map(|(fp, ck)| CheckpointEntry {
+                    request_id: e.id,
+                    fingerprint: *fp,
+                    checkpoint: ck.clone(),
+                })
+            })
+            .collect();
+        snapshot::encode(&self.cache, &entries)
+    }
+
+    /// Write the snapshot to disk (atomic rename).
+    pub fn save_snapshot(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let entries: Vec<CheckpointEntry> = self
+            .queue
+            .iter()
+            .filter_map(|e| {
+                e.resume.as_ref().map(|(fp, ck)| CheckpointEntry {
+                    request_id: e.id,
+                    fingerprint: *fp,
+                    checkpoint: ck.clone(),
+                })
+            })
+            .collect();
+        snapshot::save(path, &self.cache, &entries)
+    }
+
+    /// Make `lp` resident without queuing a solve (operator path, e.g.
+    /// right after `restore`). Matching fingerprint → plane absorb.
+    pub fn load_instance(&mut self, lp: MatchingLp) -> Result<Fingerprint, String> {
+        self.install_instance(lp)?;
+        Ok(self.resident.as_ref().unwrap().fingerprint())
+    }
+
+    pub fn resident(&self) -> Option<&ResidentInstance> {
+        self.resident.as_ref()
+    }
+
+    pub fn cache(&self) -> &WarmStartCache {
+        &self.cache
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats
+    }
+
+    /// Requests admitted but not yet resolved (includes parked solves).
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admission control: bounded queue depth.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<(), ShedReason> {
+        if self.queue.len() >= self.cfg.max_queue {
+            self.stats.shed_queue_full += 1;
+            return Err(ShedReason::QueueFull);
+        }
+        self.stats.submitted += 1;
+        self.queue.push_back(QueuedEntry {
+            id: req.id,
+            payload: req.payload,
+            slo_ms: req.slo_ms,
+            admitted: Stopwatch::start(),
+            resume: None,
+        });
+        Ok(())
+    }
+
+    /// Process the whole queue to completion.
+    pub fn drain(&mut self) -> Vec<ServeOutcome> {
+        self.drain_budget(None)
+    }
+
+    /// Process the queue, but park any solve that exceeds `iter_budget`
+    /// iterations this drain: its driver is checkpointed and the request
+    /// re-queued (front, original order) to continue next drain — or after
+    /// a snapshot/restore cycle. `None` = run every solve to completion.
+    pub fn drain_budget(&mut self, iter_budget: Option<usize>) -> Vec<ServeOutcome> {
+        let work: Vec<QueuedEntry> = self.queue.drain(..).collect();
+        let mut outcomes = Vec::new();
+        let mut parked: Vec<QueuedEntry> = Vec::new();
+        let mut wave: Vec<QueuedEntry> = Vec::new();
+        for entry in work {
+            if entry.payload.mutates() {
+                if !wave.is_empty() {
+                    let w = std::mem::take(&mut wave);
+                    self.run_wave(w, iter_budget, &mut outcomes, &mut parked);
+                }
+                let id = entry.id;
+                match self.apply_mutation(entry) {
+                    Ok(solved_entry) => wave.push(solved_entry),
+                    Err(e) => {
+                        self.stats.failed += 1;
+                        outcomes.push(ServeOutcome { id, outcome: Outcome::Failed(e) });
+                    }
+                }
+            } else {
+                wave.push(entry);
+            }
+        }
+        if !wave.is_empty() {
+            let w = std::mem::take(&mut wave);
+            self.run_wave(w, iter_budget, &mut outcomes, &mut parked);
+        }
+        for p in parked {
+            self.queue.push_back(p);
+        }
+        self.stats.drains += 1;
+        outcomes
+    }
+
+    /// Submit-and-drain a generated request stream in bursts of `burst`
+    /// (burst > queue bound exercises admission shedding). Shared by the
+    /// `serve` CLI command and the E17 bench.
+    pub fn run_stream(&mut self, stream: &[StreamRequest], burst: usize) -> Vec<ServeOutcome> {
+        let mut out = Vec::new();
+        for chunk in stream.chunks(burst.max(1)) {
+            for r in chunk {
+                let req = ServeRequest::instance(r.id, r.lp.clone()).with_slo_ms(r.slo_ms);
+                if let Err(reason) = self.submit(req) {
+                    out.push(ServeOutcome { id: r.id, outcome: Outcome::Shed(reason) });
+                }
+            }
+            out.extend(self.drain());
+        }
+        out
+    }
+
+    /// One-paragraph operational report.
+    pub fn report(&self) -> String {
+        let s = &self.stats;
+        let lookups = self.cache.hits + self.cache.misses;
+        let hit_pct = if lookups > 0 {
+            100.0 * self.cache.hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        let patch = self.resident.as_ref().map(|r| r.report).unwrap_or_default();
+        format!(
+            "serve: {} submitted, {} completed ({} resumed, {} deadline-stopped), \
+             {} shed ({} queue-full, {} slo-expired), {} parked, {} waves / {} drains, \
+             instance: {} loads, {} plane-absorbs, {} deltas \
+             ({} in-place, {} repacked, {} cost-patches), \
+             cache {hit_pct:.0}% hit ({}/{lookups} lookups, {} evictions)",
+            s.submitted,
+            s.completed,
+            s.resumed,
+            s.deadline_stops,
+            s.shed_queue_full + s.shed_slo,
+            s.shed_queue_full,
+            s.shed_slo,
+            s.parked,
+            s.waves,
+            s.drains,
+            s.instance_loads,
+            s.plane_absorbs,
+            s.deltas,
+            patch.in_place,
+            patch.repacked,
+            patch.cost_patches,
+            self.cache.hits,
+            self.cache.evictions,
+        )
+    }
+
+    fn install_instance(&mut self, lp: MatchingLp) -> Result<(), String> {
+        let fp = Fingerprint::of(&lp);
+        match &mut self.resident {
+            Some(r) if r.fingerprint() == fp => {
+                r.absorb_planes(&lp)?;
+                self.stats.plane_absorbs += 1;
+            }
+            _ => {
+                self.resident = Some(ResidentInstance::new(lp)?);
+                self.stats.instance_loads += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a mutating request's payload; returns the entry downgraded to
+    /// a plain solve of the (now updated) resident instance.
+    fn apply_mutation(&mut self, mut entry: QueuedEntry) -> Result<QueuedEntry, String> {
+        let payload = std::mem::replace(&mut entry.payload, Payload::Solve);
+        match payload {
+            Payload::Spec(spec) => self.install_instance(spec.build()?)?,
+            Payload::Instance(lp) => self.install_instance(*lp)?,
+            Payload::Delta(d) => {
+                let resident = self
+                    .resident
+                    .as_mut()
+                    .ok_or_else(|| "delta request with no resident instance".to_string())?;
+                resident.apply(&d)?;
+                self.stats.deltas += 1;
+                if self.cfg.audit_parity {
+                    self.resident.as_ref().unwrap().parity_check()?;
+                }
+            }
+            Payload::Solve => {}
+        }
+        Ok(entry)
+    }
+
+    /// Solve one wave of requests against the current resident instance on
+    /// the cooperative executor.
+    fn run_wave(
+        &mut self,
+        entries: Vec<QueuedEntry>,
+        iter_budget: Option<usize>,
+        outcomes: &mut Vec<ServeOutcome>,
+        parked_out: &mut Vec<QueuedEntry>,
+    ) {
+        let Some(resident) = self.resident.as_ref() else {
+            for e in entries {
+                self.stats.failed += 1;
+                outcomes.push(ServeOutcome {
+                    id: e.id,
+                    outcome: Outcome::Failed("no resident instance".to_string()),
+                });
+            }
+            return;
+        };
+        let fp = resident.fingerprint();
+        let quantum = self.cfg.quantum.max(1);
+        let tail = self.cfg.warm_tail;
+
+        struct WaveTask<'a> {
+            driver: SolveDriver<'static>,
+            obj: TimedObjective<SlabCpuObjective<'a>>,
+            stepped: usize,
+            parked: bool,
+        }
+        struct Meta {
+            id: u64,
+            warm: bool,
+            resumed: bool,
+            slo_ms: Option<f64>,
+            admitted: Stopwatch,
+        }
+
+        let mut tasks: Vec<WaveTask> = Vec::new();
+        let mut metas: Vec<Meta> = Vec::new();
+        for e in entries {
+            // admission: shed work whose SLO budget is already gone
+            let slo = e.slo_ms.or(self.cfg.default_slo_ms);
+            let remaining = slo.map(|s| s - e.admitted.elapsed_ms());
+            if let Some(rem) = remaining {
+                if rem <= 0.0 {
+                    self.stats.shed_slo += 1;
+                    outcomes.push(ServeOutcome {
+                        id: e.id,
+                        outcome: Outcome::Shed(ShedReason::SloExpired),
+                    });
+                    continue;
+                }
+            }
+            let (driver, warm, resumed) = match e.resume {
+                Some((ck_fp, ck)) => {
+                    if ck_fp != fp {
+                        self.stats.failed += 1;
+                        outcomes.push(ServeOutcome {
+                            id: e.id,
+                            outcome: Outcome::Failed(
+                                "resident instance changed since checkpoint".to_string(),
+                            ),
+                        });
+                        continue;
+                    }
+                    // no cache lookup on resume: the restored run must do
+                    // exactly the cache ops the uninterrupted run would
+                    (SolveDriver::resume(ck), true, true)
+                }
+                None => {
+                    let warm = self.cache.lookup(&fp);
+                    let mut cold = self.cfg.opts.clone();
+                    cold.stopping.min_iters =
+                        cold.stopping.min_iters.max(cold.gamma.iters_to_floor() + 1);
+                    let (init, opts, is_warm) = match &warm {
+                        Some(ws) => (ws.lam.clone(), warm_options(&cold, tail), true),
+                        None => (vec![0.0f32; resident.lp().dual_dim()], cold, false),
+                    };
+                    let dopts = DriverOptions { deadline_ms: remaining, cancel: None };
+                    (
+                        SolveDriver::new(Box::new(Agd::default().stepper()), &init, opts, dopts),
+                        is_warm,
+                        false,
+                    )
+                }
+            };
+            let obj = TimedObjective::new(resident.objective(self.cfg.objective_threads));
+            tasks.push(WaveTask { driver, obj, stepped: 0, parked: false });
+            metas.push(Meta { id: e.id, warm, resumed, slo_ms: e.slo_ms, admitted: e.admitted });
+        }
+        if tasks.is_empty() {
+            return;
+        }
+
+        let sched = Scheduler::new(self.cfg.threads);
+        let cache = &mut self.cache;
+        let (tasks, _reasons, _report) = sched.run_coop(
+            tasks,
+            |_i, task: &mut WaveTask<'_>| {
+                let mut events: Vec<(Fingerprint, Vec<f32>, f32)> = Vec::new();
+                for _ in 0..quantum {
+                    if let Some(b) = iter_budget {
+                        if task.stepped >= b {
+                            // drain budget hit: stop scheduling this task
+                            // WITHOUT stopping its driver — it gets
+                            // checkpointed below. The reason is a
+                            // scheduler-only sentinel.
+                            task.parked = true;
+                            return (events, Some(StopReason::Cancelled));
+                        }
+                    }
+                    match task.driver.step(&mut task.obj) {
+                        StepEvent::Stopped { reason } => return (events, Some(reason)),
+                        StepEvent::GammaDecayed { record, .. } => {
+                            task.stepped += 1;
+                            // γ checkpoint: publish anytime λ, same
+                            // protocol as solve_batch_coop
+                            events.push((fp, task.driver.current_lam().to_vec(), record.gamma));
+                        }
+                        StepEvent::Continue { .. } => task.stepped += 1,
+                    }
+                }
+                (events, None)
+            },
+            |_i, events| {
+                for (f, lam, gamma) in events {
+                    cache.insert(f, lam, gamma);
+                }
+            },
+        );
+
+        let mut publish: Vec<(Vec<f32>, f32)> = Vec::new();
+        for (mut task, meta) in tasks.into_iter().zip(metas) {
+            if task.parked {
+                let ck = task.driver.checkpoint().expect("AGD steppers always checkpoint");
+                self.stats.parked += 1;
+                parked_out.push(QueuedEntry {
+                    id: meta.id,
+                    payload: Payload::Solve,
+                    slo_ms: meta.slo_ms,
+                    admitted: meta.admitted,
+                    resume: Some((fp, ck)),
+                });
+                continue;
+            }
+            let r = task.driver.result(&mut task.obj);
+            self.stats.completed += 1;
+            if meta.resumed {
+                self.stats.resumed += 1;
+            }
+            match r.stop_reason {
+                StopReason::Deadline => self.stats.deadline_stops += 1,
+                StopReason::Cancelled => self.stats.cancelled += 1,
+                _ => {}
+            }
+            if r.iterations > 0 {
+                // zero-iteration λ is just the initial value — never cache
+                publish.push((r.lam.clone(), r.final_gamma));
+            }
+            outcomes.push(ServeOutcome {
+                id: meta.id,
+                outcome: Outcome::Solved(Box::new(JobResult {
+                    id: meta.id,
+                    fingerprint: fp,
+                    warm: meta.warm,
+                    iterations: r.iterations,
+                    stop_reason: r.stop_reason,
+                    dual_obj: r.final_obj.dual_obj,
+                    cx: r.final_obj.cx,
+                    infeas_pos_norm: r.final_obj.infeas_pos_norm,
+                    final_gamma: r.final_gamma,
+                    wall_ms: r.total_wall_ms,
+                    backend: "slab",
+                    shards: 1,
+                    objective_eval_ms: task.obj.eval_ms,
+                    lam: r.lam,
+                })),
+            });
+        }
+        for (lam, gamma) in publish {
+            self.cache.insert(fp, lam, gamma);
+        }
+        self.stats.waves += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::workloads::{drift_stream, DriftStreamSpec};
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::solver::GammaSchedule;
+
+    fn test_cfg() -> ServeConfig {
+        ServeConfig {
+            opts: SolveOptions {
+                max_iters: 60,
+                gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 9 },
+                ..Default::default()
+            },
+            threads: 2,
+            quantum: 4,
+            audit_parity: true,
+            ..Default::default()
+        }
+    }
+
+    fn base_lp(seed: u64) -> MatchingLp {
+        generate(&SyntheticConfig {
+            num_requests: 140,
+            num_resources: 12,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    fn solved(outcomes: &[ServeOutcome]) -> Vec<&JobResult> {
+        outcomes
+            .iter()
+            .filter_map(|o| match &o.outcome {
+                Outcome::Solved(r) => Some(r.as_ref()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn drift_stream_serves_warm_with_zero_rebuilds() {
+        let base = base_lp(3);
+        let stream = drift_stream(&base, &DriftStreamSpec { n: 6, ..Default::default() }, 11);
+        let mut d = ServeDaemon::new(test_cfg());
+        let outcomes = d.run_stream(&stream, 3);
+        assert_eq!(solved(&outcomes).len(), 6, "{:?}", outcomes);
+        let s = d.stats();
+        // one structural load, every later request absorbed as planes
+        assert_eq!(s.instance_loads, 1);
+        assert_eq!(s.plane_absorbs, 5);
+        let rep = d.resident().unwrap().report;
+        assert_eq!(rep.repacked, 0, "pure c/b drift must never repack");
+        assert_eq!(rep.cost_patches, 5);
+        // same fingerprint throughout → first solve cold, rest warm
+        assert_eq!((d.cache().hits, d.cache().misses), (5, 1));
+        assert!(solved(&outcomes)[1..].iter().all(|r| r.warm));
+        let text = d.report();
+        assert!(text.contains("5 plane-absorbs"), "{text}");
+        d.resident().unwrap().parity_check().unwrap();
+    }
+
+    #[test]
+    fn admission_sheds_queue_overflow_and_expired_slo() {
+        let mut cfg = test_cfg();
+        cfg.max_queue = 2;
+        let mut d = ServeDaemon::new(cfg);
+        assert!(d.submit(ServeRequest::instance(0, base_lp(4))).is_ok());
+        assert!(d.submit(ServeRequest::solve(1)).is_ok());
+        assert_eq!(d.submit(ServeRequest::solve(2)), Err(ShedReason::QueueFull));
+        // a request whose SLO budget is already spent is shed at solve time
+        // (queue has room again after accounting — still depth 2 here, so
+        // drain first)
+        let first = d.drain();
+        assert_eq!(solved(&first).len(), 2);
+        d.submit(ServeRequest::solve(3).with_slo_ms(0.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let out = d.drain();
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0].outcome, Outcome::Shed(ShedReason::SloExpired)));
+        let s = d.stats();
+        assert_eq!((s.shed_queue_full, s.shed_slo), (1, 1));
+    }
+
+    #[test]
+    fn solve_without_resident_instance_fails_cleanly() {
+        let mut d = ServeDaemon::new(test_cfg());
+        d.submit(ServeRequest::solve(9)).unwrap();
+        let out = d.drain();
+        assert!(matches!(&out[0].outcome, Outcome::Failed(e) if e.contains("resident")));
+        // delta without a resident instance likewise
+        d.submit(ServeRequest::delta(10, InstanceDelta::Budgets(vec![0.5]))).unwrap();
+        let out = d.drain();
+        assert!(matches!(&out[0].outcome, Outcome::Failed(e) if e.contains("resident")));
+    }
+
+    #[test]
+    fn delta_requests_are_barriers_and_keep_parity() {
+        let base = base_lp(5);
+        let nnz = base.nnz();
+        let mut costs = base.cost.clone();
+        for c in &mut costs {
+            *c *= 1.01;
+        }
+        let mut d = ServeDaemon::new(test_cfg());
+        d.submit(ServeRequest::instance(0, base)).unwrap();
+        d.submit(ServeRequest::solve(1)).unwrap();
+        d.submit(ServeRequest::delta(2, InstanceDelta::Costs(costs))).unwrap();
+        d.submit(ServeRequest::solve(3)).unwrap();
+        let out = d.drain();
+        assert_eq!(solved(&out).len(), 4);
+        let s = d.stats();
+        // wave boundaries: [0,1] then [2,3] — the delta is a barrier
+        assert_eq!(s.waves, 2);
+        assert_eq!(s.deltas, 1);
+        assert_eq!(d.resident().unwrap().lp().nnz(), nnz);
+        d.resident().unwrap().parity_check().unwrap();
+        // the cost delta keeps the fingerprint → later solves stay warm
+        assert!(solved(&out)[3].warm);
+    }
+
+    #[test]
+    fn park_snapshot_restore_resumes_bit_identically() {
+        let cfg = test_cfg();
+        let lp = base_lp(6);
+
+        // uninterrupted daemon
+        let mut a = ServeDaemon::new(cfg.clone());
+        a.submit(ServeRequest::instance(7, lp.clone())).unwrap();
+        let ra = a.drain();
+        let ja = solved(&ra)[0].clone();
+
+        // parked daemon: 13 iterations, then snapshot mid-solve
+        let mut b = ServeDaemon::new(cfg.clone());
+        b.submit(ServeRequest::instance(7, lp.clone())).unwrap();
+        let rb = b.drain_budget(Some(13));
+        assert!(solved(&rb).is_empty(), "must have parked, not finished");
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.stats().parked, 1);
+        let bytes = b.snapshot_bytes().unwrap();
+
+        // restored daemon: reload the instance, finish the solve
+        let mut c = ServeDaemon::restore(cfg, &bytes).unwrap();
+        assert_eq!(c.pending(), 1);
+        c.load_instance(lp).unwrap();
+        let rc = c.drain();
+        let jc = &solved(&rc)[0];
+        assert_eq!(jc.id, 7);
+        assert_eq!(c.stats().resumed, 1);
+
+        // bit-identical to the run that never stopped
+        assert_eq!(ja.iterations, jc.iterations);
+        assert_eq!(ja.stop_reason, jc.stop_reason);
+        assert_eq!(ja.dual_obj.to_bits(), jc.dual_obj.to_bits());
+        assert_eq!(ja.final_gamma.to_bits(), jc.final_gamma.to_bits());
+        assert_eq!(ja.lam.len(), jc.lam.len());
+        for (x, y) in ja.lam.iter().zip(&jc.lam) {
+            assert_eq!(x.to_bits(), y.to_bits(), "λ diverged across restart");
+        }
+
+        // and the durable cache state matches tick for tick
+        assert_eq!(a.cache().tick(), c.cache().tick());
+        let ea = a.cache().export_entries();
+        let ec = c.cache().export_entries();
+        assert_eq!(ea.len(), ec.len());
+        for ((fa, wa, ta), (fc, wc, tc)) in ea.iter().zip(&ec) {
+            assert_eq!(fa, fc);
+            assert_eq!(ta, tc);
+            assert_eq!(wa.gamma.to_bits(), wc.gamma.to_bits());
+            for (x, y) in wa.lam.iter().zip(&wc.lam) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn restored_checkpoint_rejects_changed_instance() {
+        let cfg = test_cfg();
+        let mut b = ServeDaemon::new(cfg.clone());
+        b.submit(ServeRequest::instance(1, base_lp(6))).unwrap();
+        b.drain_budget(Some(5));
+        let bytes = b.snapshot_bytes().unwrap();
+        let mut c = ServeDaemon::restore(cfg, &bytes).unwrap();
+        c.load_instance(base_lp(7)).unwrap(); // different instance
+        let out = c.drain();
+        assert!(
+            matches!(&out[0].outcome, Outcome::Failed(e) if e.contains("changed")),
+            "{:?}",
+            out
+        );
+    }
+}

@@ -1,0 +1,458 @@
+//! In-place instance deltas against a resident slab (DESIGN.md §9): the
+//! serve daemon keeps one instance hot — the [`MatchingLp`] plus its built
+//! [`SlabLayout`] and canonical chunk grid — and absorbs request-stream
+//! drift without ever rebuilding the layout from scratch:
+//!
+//! * **Plane deltas** (perturbed `c` / `b` / global RHS, same sparsity
+//!   pattern): `c` is rewritten through [`SlabLayout::patch_costs`], `b`
+//!   and global RHS live only on the LP (the objective reads them at
+//!   construction). Zero structural work.
+//! * **Edge deltas** (bounded insert/delete): spliced into the LP and then
+//!   patched into the slab via [`SlabLayout::patch_edge`] — absorbed by
+//!   padding headroom when the source stays in its bucket row
+//!   ([`EdgePatch::InPlace`]), else a single-bucket repack
+//!   ([`EdgePatch::Repacked`], grid refreshed). Never a full rebuild.
+//!
+//! The invariant — test-gated here and re-checked by the daemon's parity
+//! gate — is that a patched resident layout is **bit-identical** to a
+//! from-scratch [`SlabLayout::build`] of the edited LP, so the delta path
+//! solves on exactly the bits a rebuild would have produced.
+
+use std::sync::Arc;
+
+use crate::backend::slab_cpu::SlabCpuObjective;
+use crate::engine::Fingerprint;
+use crate::problem::MatchingLp;
+use crate::sparse::slabs::{EdgePatch, PatchReport, MAX_WIDTH};
+use crate::sparse::{SlabChunk, SlabLayout};
+
+/// One edit against the resident instance.
+#[derive(Clone, Debug)]
+pub enum InstanceDelta {
+    /// Replace the full cost plane (length must equal `nnz`).
+    Costs(Vec<f32>),
+    /// Replace the full matching budget plane (length must equal the
+    /// resident `b` length, i.e. families × dests).
+    Budgets(Vec<f32>),
+    /// Replace the global-row right-hand sides (length must equal the
+    /// number of global rows).
+    GlobalRhs(Vec<f32>),
+    /// Insert edge `(source, dest)` with per-family coefficients and cost.
+    InsertEdge { source: usize, dest: u32, a: Vec<f32>, cost: f32 },
+    /// Remove edge `(source, dest)`.
+    RemoveEdge { source: usize, dest: u32 },
+}
+
+/// A hot instance: the LP, its built slab layout (shared with any
+/// outstanding objective via `Arc` — patching uses copy-on-write, so an
+/// in-flight solve keeps reading the bits it started with), and the
+/// canonical chunk grid.
+pub struct ResidentInstance {
+    lp: MatchingLp,
+    layout: Arc<SlabLayout>,
+    grid: Vec<SlabChunk>,
+    fingerprint: Fingerprint,
+    /// Running tally of how edits were absorbed (in-place vs repack) —
+    /// the daemon surfaces this; `repacked == 0` under a pure c/b drift
+    /// stream is the "zero rebuild" acceptance signal.
+    pub report: PatchReport,
+}
+
+impl ResidentInstance {
+    /// Build the resident slab for `lp`. Errors if the LP is invalid or
+    /// the layout is unbuildable (overwide non-separable block).
+    pub fn new(lp: MatchingLp) -> Result<ResidentInstance, String> {
+        lp.validate()?;
+        let layout = Arc::new(SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
+            lp.projection.kind_of(i)
+        })?);
+        let grid = layout.fixed_chunk_grid();
+        let fingerprint = Fingerprint::of(&lp);
+        Ok(ResidentInstance { lp, layout, grid, fingerprint, report: PatchReport::default() })
+    }
+
+    pub fn lp(&self) -> &MatchingLp {
+        &self.lp
+    }
+
+    pub fn fingerprint(&self) -> Fingerprint {
+        self.fingerprint
+    }
+
+    pub fn layout(&self) -> &Arc<SlabLayout> {
+        &self.layout
+    }
+
+    pub fn grid(&self) -> &[SlabChunk] {
+        &self.grid
+    }
+
+    /// A full-range objective over the resident slab. Construction is
+    /// O(buckets) — no layout build — so per-request objective setup stays
+    /// cheap even as deltas accumulate.
+    pub fn objective(&self, threads: usize) -> SlabCpuObjective<'_> {
+        SlabCpuObjective::new_shard(
+            &self.lp,
+            self.layout.clone(),
+            &self.grid,
+            0,
+            self.grid.len(),
+            threads,
+        )
+    }
+
+    /// Absorb another instance with the **same fingerprint** as a plane
+    /// delta: its `c`, `b` and global RHS replace the resident planes with
+    /// zero structural work. This is how the daemon treats a request that
+    /// ships a full (drifted) instance whose pattern matches the resident
+    /// one. Errors (resident untouched) on fingerprint mismatch.
+    pub fn absorb_planes(&mut self, other: &MatchingLp) -> Result<(), String> {
+        let fp = Fingerprint::of(other);
+        if fp != self.fingerprint {
+            return Err(
+                "instance fingerprint does not match resident instance; \
+                 load it as a new resident instance instead"
+                    .to_string(),
+            );
+        }
+        self.lp.cost.copy_from_slice(&other.cost);
+        self.lp.b.copy_from_slice(&other.b);
+        for (row, new) in self.lp.global_rows.iter_mut().zip(&other.global_rows) {
+            row.rhs = new.rhs;
+        }
+        Arc::make_mut(&mut self.layout).patch_costs(&self.lp.cost);
+        self.report.cost_patches += 1;
+        Ok(())
+    }
+
+    /// Apply one delta in place. Plane deltas return `Ok(None)`; edge
+    /// deltas return how the slab absorbed them. On `Err` the resident
+    /// instance is untouched.
+    pub fn apply(&mut self, delta: &InstanceDelta) -> Result<Option<EdgePatch>, String> {
+        match delta {
+            InstanceDelta::Costs(c) => {
+                if c.len() != self.lp.nnz() {
+                    return Err(format!(
+                        "cost delta length {} != nnz {}",
+                        c.len(),
+                        self.lp.nnz()
+                    ));
+                }
+                self.lp.cost.copy_from_slice(c);
+                Arc::make_mut(&mut self.layout).patch_costs(&self.lp.cost);
+                self.report.cost_patches += 1;
+                Ok(None)
+            }
+            InstanceDelta::Budgets(b) => {
+                if b.len() != self.lp.b.len() {
+                    return Err(format!(
+                        "budget delta length {} != b length {}",
+                        b.len(),
+                        self.lp.b.len()
+                    ));
+                }
+                self.lp.b.copy_from_slice(b);
+                Ok(None)
+            }
+            InstanceDelta::GlobalRhs(rhs) => {
+                if rhs.len() != self.lp.global_rows.len() {
+                    return Err(format!(
+                        "global rhs delta length {} != {} global rows",
+                        rhs.len(),
+                        self.lp.global_rows.len()
+                    ));
+                }
+                for (row, &v) in self.lp.global_rows.iter_mut().zip(rhs) {
+                    row.rhs = v;
+                }
+                Ok(None)
+            }
+            InstanceDelta::InsertEdge { source, dest, a, cost } => {
+                self.edge_edit(*source, |lp| lp.insert_edge(*source, *dest, a, *cost), true, 1)
+            }
+            InstanceDelta::RemoveEdge { source, dest } => {
+                self.edge_edit(*source, |lp| lp.remove_edge(*source, *dest), false, -1)
+            }
+        }
+    }
+
+    fn edge_edit(
+        &mut self,
+        source: usize,
+        splice: impl FnOnce(&mut MatchingLp) -> Result<usize, String>,
+        insert: bool,
+        deg_delta: isize,
+    ) -> Result<Option<EdgePatch>, String> {
+        // Global constraint rows index edges by position — a splice would
+        // invalidate every coefficient vector. Reject rather than rebuild.
+        if !self.lp.global_rows.is_empty() {
+            return Err(
+                "edge deltas are not supported while global constraint rows are resident \
+                 (their coefficient planes are edge-indexed)"
+                    .to_string(),
+            );
+        }
+        // Pre-check the one failure `patch_edge` can hit AFTER the LP
+        // splice, so an error never leaves LP and layout out of sync.
+        let kind = self.lp.projection.kind_of(source);
+        if source >= self.lp.num_sources() {
+            return Err(format!("source {source} out of range"));
+        }
+        let new_deg = self.lp.a.degree(source) as isize + deg_delta;
+        if new_deg > MAX_WIDTH as isize && !kind.separable() {
+            return Err(format!(
+                "source {source} degree {new_deg} would exceed slab width for a \
+                 non-separable projection"
+            ));
+        }
+        let edge = splice(&mut self.lp)?;
+        let patch = Arc::make_mut(&mut self.layout)
+            .patch_edge(&self.lp.a, &self.lp.cost, source, edge, insert, kind)
+            .expect("patch_edge failure modes are pre-checked");
+        if matches!(patch, EdgePatch::Repacked) {
+            self.grid = self.layout.fixed_chunk_grid();
+        }
+        self.fingerprint = Fingerprint::of(&self.lp);
+        self.report.note(patch);
+        Ok(Some(patch))
+    }
+
+    /// Parity gate: assert the patched resident layout (and grid) is
+    /// bit-identical to a from-scratch rebuild of the current LP. O(nnz) —
+    /// meant for tests and the daemon's opt-in audit mode, not the hot
+    /// path.
+    pub fn parity_check(&self) -> Result<(), String> {
+        let fresh = SlabLayout::build(&self.lp.a, &self.lp.cost, 0, self.lp.num_sources(), &|i| {
+            self.lp.projection.kind_of(i)
+        })?;
+        layouts_identical(&self.layout, &fresh)?;
+        let fresh_grid = fresh.fixed_chunk_grid();
+        if self.grid.len() != fresh_grid.len() {
+            return Err(format!(
+                "grid has {} chunks, rebuild has {}",
+                self.grid.len(),
+                fresh_grid.len()
+            ));
+        }
+        for (i, (a, b)) in self.grid.iter().zip(&fresh_grid).enumerate() {
+            if (a.bucket, a.row_lo, a.row_hi) != (b.bucket, b.row_lo, b.row_hi) {
+                return Err(format!("grid chunk {i} differs from rebuild"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bit-exact layout comparison (f32 planes compared as raw bits).
+fn layouts_identical(a: &SlabLayout, b: &SlabLayout) -> Result<(), String> {
+    if a.num_families != b.num_families || a.num_dests != b.num_dests {
+        return Err("layout dims differ from rebuild".to_string());
+    }
+    if a.buckets.len() != b.buckets.len() {
+        return Err(format!(
+            "patched layout has {} buckets, rebuild has {}",
+            a.buckets.len(),
+            b.buckets.len()
+        ));
+    }
+    for (i, (x, y)) in a.buckets.iter().zip(&b.buckets).enumerate() {
+        if x.kind != y.kind || x.width != y.width {
+            return Err(format!("bucket {i}: shape differs from rebuild"));
+        }
+        if x.sources != y.sources {
+            return Err(format!("bucket {i}: source rows differ from rebuild"));
+        }
+        if x.dest_idx != y.dest_idx || x.edge_id != y.edge_id {
+            return Err(format!("bucket {i}: index planes differ from rebuild"));
+        }
+        if x.real_edge_count != y.real_edge_count {
+            return Err(format!("bucket {i}: real edge count differs from rebuild"));
+        }
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        if bits(&x.cost) != bits(&y.cost) || bits(&x.mask) != bits(&y.mask) {
+            return Err(format!("bucket {i}: cost/mask planes differ from rebuild"));
+        }
+        if x.a.len() != y.a.len()
+            || x.a.iter().zip(&y.a).any(|(p, q)| bits(p) != bits(q))
+        {
+            return Err(format!("bucket {i}: coefficient planes differ from rebuild"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::workloads::{perturb_instance, PerturbSpec};
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::problem::ObjectiveFunction;
+    use crate::solver::{Agd, DriverOptions, SolveDriver, SolveOptions, StepEvent};
+
+    fn base_lp(seed: u64) -> MatchingLp {
+        generate(&SyntheticConfig {
+            num_requests: 160,
+            num_resources: 14,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    fn solve_bits(obj: &mut dyn ObjectiveFunction, dual_dim: usize, iters: usize) -> Vec<u32> {
+        let opts = SolveOptions { max_iters: iters, ..Default::default() };
+        let init = vec![0.0f32; dual_dim];
+        let mut d = SolveDriver::new(
+            Box::new(Agd::default().stepper()),
+            &init,
+            opts,
+            DriverOptions::default(),
+        );
+        loop {
+            if let StepEvent::Stopped { .. } = d.step(obj) {
+                break;
+            }
+        }
+        d.current_lam().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn plane_delta_patches_in_place_and_solves_like_rebuild() {
+        let base = base_lp(5);
+        let drifted = perturb_instance(&base, &PerturbSpec::default(), 99);
+        let mut resident = ResidentInstance::new(base).unwrap();
+        let before_ptr = Arc::as_ptr(resident.layout());
+        resident.absorb_planes(&drifted).unwrap();
+        // no outstanding objective → copy-on-write patched the same
+        // allocation: literally zero rebuild, zero copy
+        assert_eq!(Arc::as_ptr(resident.layout()), before_ptr);
+        assert_eq!(resident.report.cost_patches, 1);
+        resident.parity_check().unwrap();
+
+        let dim = drifted.dual_dim();
+        let mut patched = resident.objective(1);
+        let mut fresh = SlabCpuObjective::new(&drifted, 1).unwrap();
+        assert_eq!(solve_bits(&mut patched, dim, 30), solve_bits(&mut fresh, dim, 30));
+    }
+
+    #[test]
+    fn absorb_planes_rejects_different_pattern() {
+        let base = base_lp(5);
+        let other = base_lp(6); // different seed → different sparsity
+        let mut resident = ResidentInstance::new(base).unwrap();
+        assert!(resident.absorb_planes(&other).is_err());
+        assert_eq!(resident.report.cost_patches, 0);
+        resident.parity_check().unwrap();
+    }
+
+    #[test]
+    fn edge_deltas_patch_without_rebuild_and_keep_parity() {
+        let mut resident = ResidentInstance::new(base_lp(7)).unwrap();
+        let fam = resident.lp().num_families();
+        let fp0 = resident.fingerprint();
+
+        // find a source with a missing dest to insert
+        let lp = resident.lp();
+        let (src, dest) = (0..lp.num_sources())
+            .find_map(|s| {
+                let (e0, e1) = (lp.a.src_ptr[s], lp.a.src_ptr[s + 1]);
+                let have: Vec<u32> = lp.a.dest_idx[e0..e1].to_vec();
+                (0..lp.num_dests() as u32).find(|d| !have.contains(d)).map(|d| (s, d))
+            })
+            .expect("some source has a free dest");
+
+        let ins = InstanceDelta::InsertEdge {
+            source: src,
+            dest,
+            a: vec![0.5; fam],
+            cost: -0.25,
+        };
+        resident.apply(&ins).unwrap().expect("edge patch");
+        assert_ne!(resident.fingerprint(), fp0, "pattern edit must re-fingerprint");
+        resident.parity_check().unwrap();
+
+        let rm = InstanceDelta::RemoveEdge { source: src, dest };
+        resident.apply(&rm).unwrap().expect("edge patch");
+        resident.parity_check().unwrap();
+        assert_eq!(resident.report.in_place + resident.report.repacked, 2);
+
+        // and the patched slab still solves exactly like a rebuild
+        let dim = resident.lp().dual_dim();
+        let lp_copy = resident.lp().clone();
+        let mut patched = resident.objective(1);
+        let mut fresh = SlabCpuObjective::new(&lp_copy, 1).unwrap();
+        assert_eq!(solve_bits(&mut patched, dim, 25), solve_bits(&mut fresh, dim, 25));
+    }
+
+    #[test]
+    fn repack_refreshes_grid() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 120,
+            num_resources: 64,
+            seed: 8,
+            ..Default::default()
+        });
+        let mut resident = ResidentInstance::new(lp).unwrap();
+        let fam = resident.lp().num_families();
+        // pick the thinnest (non-isolated) source and fill its row: its
+        // bucket width must cross a power-of-two boundary on the way up,
+        // forcing at least one repack
+        let src = (0..resident.lp().num_sources())
+            .filter(|&s| resident.lp().a.degree(s) > 0)
+            .min_by_key(|&s| resident.lp().a.degree(s))
+            .unwrap();
+        for d in 0..resident.lp().num_dests() as u32 {
+            let (e0, e1) = (resident.lp().a.src_ptr[src], resident.lp().a.src_ptr[src + 1]);
+            if resident.lp().a.dest_idx[e0..e1].contains(&d) {
+                continue;
+            }
+            let delta = InstanceDelta::InsertEdge {
+                source: src,
+                dest: d,
+                a: vec![1.0; fam],
+                cost: -0.5,
+            };
+            resident.apply(&delta).unwrap();
+        }
+        assert!(resident.report.repacked > 0, "filling a row must widen its bucket");
+        resident.parity_check().unwrap(); // parity includes the grid
+    }
+
+    #[test]
+    fn bad_deltas_leave_resident_untouched() {
+        let mut resident = ResidentInstance::new(base_lp(9)).unwrap();
+        let nnz = resident.lp().nnz();
+        assert!(resident.apply(&InstanceDelta::Costs(vec![0.0; nnz + 1])).is_err());
+        assert!(resident.apply(&InstanceDelta::Budgets(vec![0.0; 1])).is_err());
+        assert!(resident
+            .apply(&InstanceDelta::GlobalRhs(vec![1.0]))
+            .is_err());
+        // duplicate-dest insert: LP splice rejects, layout must not change
+        let e0 = resident.lp().a.src_ptr[0];
+        let existing = resident.lp().a.dest_idx[e0];
+        let fam = resident.lp().num_families();
+        let dup = InstanceDelta::InsertEdge {
+            source: 0,
+            dest: existing,
+            a: vec![1.0; fam],
+            cost: 0.0,
+        };
+        assert!(resident.apply(&dup).is_err());
+        assert_eq!(resident.lp().nnz(), nnz);
+        resident.parity_check().unwrap();
+    }
+
+    #[test]
+    fn edge_deltas_rejected_with_global_rows() {
+        let mut lp = base_lp(10);
+        let nnz = lp.nnz();
+        lp.push_global_row(vec![1.0; nnz], 5.0);
+        let mut resident = ResidentInstance::new(lp).unwrap();
+        let fam = resident.lp().num_families();
+        let d = InstanceDelta::InsertEdge { source: 0, dest: 0, a: vec![1.0; fam], cost: 0.0 };
+        let err = resident.apply(&d).unwrap_err();
+        assert!(err.contains("global"), "{err}");
+        // but plane deltas (incl. global rhs) still work
+        resident.apply(&InstanceDelta::GlobalRhs(vec![6.0])).unwrap();
+        assert_eq!(resident.lp().global_rows[0].rhs, 6.0);
+    }
+}

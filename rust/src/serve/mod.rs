@@ -1,0 +1,27 @@
+//! Resident serving subsystem (DESIGN.md §9): a long-lived daemon that
+//! keeps one instance hot and turns the batch engine's cooperative
+//! executor into a request-serving loop.
+//!
+//! Three pieces:
+//!
+//! * [`daemon`] — the request queue with admission control (bounded depth,
+//!   SLO-budget shedding, per-request deadlines) and the wave loop over
+//!   [`crate::engine::Scheduler::run_coop`];
+//! * [`delta`] — in-place instance deltas against the resident slab
+//!   (c/b/RHS plane patches with zero rebuild, bounded edge insert/delete
+//!   via bucket patching) plus the bit-parity gate against a from-scratch
+//!   rebuild;
+//! * [`snapshot`] — the versioned on-disk codec for durable warm-start
+//!   state (LRU dual cache + parked solve checkpoints) that lets a
+//!   restarted daemon resume bit-identically.
+
+pub mod daemon;
+pub mod delta;
+pub mod snapshot;
+
+pub use daemon::{
+    Outcome, Payload, ServeConfig, ServeDaemon, ServeOutcome, ServeRequest, ServeStats,
+    ShedReason,
+};
+pub use delta::{InstanceDelta, ResidentInstance};
+pub use snapshot::{CheckpointEntry, ServeSnapshot};

@@ -1,0 +1,731 @@
+//! Durable warm-start state (DESIGN.md §9): a versioned on-disk snapshot
+//! of the serve daemon's LRU dual cache plus the checkpoints of any
+//! in-flight (parked) solves, so a restarted daemon resumes warm and
+//! continues parked solves **bit-identically** to a process that never
+//! stopped.
+//!
+//! The codec is a hand-rolled little-endian binary format (no serde
+//! offline, same constraint as `metrics::bench_json`): magic `DLPS`, a
+//! `u32` version, then the cache section and the checkpoint section.
+//! Floats travel as raw IEEE bits (`to_bits`/`from_bits`), never through
+//! text — bit-identity is the contract, not approximate equality. Cache
+//! entries are written oldest-first with their exact LRU ticks (ticks are
+//! unique — see `WarmStartCache::export_entries`), so a restored cache
+//! evicts in exactly the order the live one would have.
+//!
+//! What is NOT in a snapshot: the instances themselves (the daemon's
+//! resident instance is reloaded by the operator; fingerprints are the
+//! join key), observers (never part of a checkpoint), and cancellation
+//! tokens (`DriverOptions::cancel` is a live process handle — a restored
+//! checkpoint carries the deadline budget only).
+
+use std::path::Path;
+
+use crate::engine::{Fingerprint, WarmStart, WarmStartCache};
+use crate::problem::ObjectiveResult;
+use crate::solver::{
+    restore_stepper, Checkpoint, DriverOptions, GammaSchedule, IterRecord, SolveOptions,
+    SolveState, StepperState, StopReason, StoppingCriteria,
+};
+
+const MAGIC: &[u8; 4] = b"DLPS";
+const VERSION: u32 = 1;
+
+/// One parked solve in a snapshot: which request it was, which instance
+/// (by fingerprint) it was solving, and the full driver checkpoint.
+pub struct CheckpointEntry {
+    pub request_id: u64,
+    pub fingerprint: Fingerprint,
+    pub checkpoint: Checkpoint,
+}
+
+/// A decoded snapshot.
+pub struct ServeSnapshot {
+    pub cache: WarmStartCache,
+    pub checkpoints: Vec<CheckpointEntry>,
+}
+
+// ---------------------------------------------------------------------------
+// byte stream primitives
+
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+        }
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A u64 that must fit a usize and be a sane element count for the
+    /// remaining bytes (corrupt snapshots must error, not OOM). Use ONLY
+    /// for lengths of data that follows in the stream — counters and
+    /// dimensions (a fingerprint's `nnz`, a checkpoint's iteration count)
+    /// legitimately dwarf the snapshot itself and go through [`Self::idx`].
+    fn len(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        let n = usize::try_from(v).map_err(|_| format!("snapshot length {v} overflows usize"))?;
+        if n > self.buf.len() {
+            return Err(format!(
+                "snapshot length {n} exceeds remaining payload ({} bytes total)",
+                self.buf.len()
+            ));
+        }
+        Ok(n)
+    }
+
+    /// A u64 that must fit a usize: plain data (dimension / counter), not
+    /// an allocation length — no payload bound applies.
+    fn idx(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("snapshot value {v} overflows usize"))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.len()?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| "snapshot string is not UTF-8".to_string())
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, String> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            t => Err(format!("bad Option tag {t}")),
+        }
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "snapshot has {} trailing bytes after decode",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stop-reason codes (stable wire values — NOT the enum's declaration order
+// contractually, so spell the mapping out both ways)
+
+fn stop_code(r: StopReason) -> u8 {
+    match r {
+        StopReason::MaxIters => 0,
+        StopReason::GradNormTol => 1,
+        StopReason::ObjectiveStall => 2,
+        StopReason::Deadline => 3,
+        StopReason::Cancelled => 4,
+    }
+}
+
+fn stop_from(code: u8) -> Result<StopReason, String> {
+    Ok(match code {
+        0 => StopReason::MaxIters,
+        1 => StopReason::GradNormTol,
+        2 => StopReason::ObjectiveStall,
+        3 => StopReason::Deadline,
+        4 => StopReason::Cancelled,
+        t => return Err(format!("bad StopReason code {t}")),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// section codecs
+
+fn write_fingerprint(w: &mut ByteWriter, fp: &Fingerprint) {
+    w.u64(fp.num_sources as u64);
+    w.u64(fp.num_dests as u64);
+    w.u64(fp.num_families as u64);
+    w.u64(fp.num_global_rows as u64);
+    w.u64(fp.nnz as u64);
+    w.u64(fp.pattern_hash);
+    w.u64(fp.projection_hash);
+    w.u64(fp.global_coeff_hash);
+    w.u64(fp.coeff_hash);
+}
+
+fn read_fingerprint(r: &mut ByteReader) -> Result<Fingerprint, String> {
+    Ok(Fingerprint {
+        num_sources: r.idx()?,
+        num_dests: r.idx()?,
+        num_families: r.idx()?,
+        num_global_rows: r.idx()?,
+        nnz: r.idx()?,
+        pattern_hash: r.u64()?,
+        projection_hash: r.u64()?,
+        global_coeff_hash: r.u64()?,
+        coeff_hash: r.u64()?,
+    })
+}
+
+fn write_f32s(w: &mut ByteWriter, v: &[f32]) {
+    w.u64(v.len() as u64);
+    for &x in v {
+        w.f32(x);
+    }
+}
+
+fn read_f32s(r: &mut ByteReader) -> Result<Vec<f32>, String> {
+    let n = r.len()?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.f32()?);
+    }
+    Ok(out)
+}
+
+fn write_cache(w: &mut ByteWriter, cache: &WarmStartCache) {
+    w.u64(cache.capacity() as u64);
+    w.u64(cache.tick());
+    w.u64(cache.hits);
+    w.u64(cache.misses);
+    w.u64(cache.evictions);
+    let entries = cache.export_entries();
+    w.u64(entries.len() as u64);
+    for (fp, ws, last_used) in &entries {
+        write_fingerprint(w, fp);
+        w.u64(*last_used);
+        w.f32(ws.gamma);
+        w.u64(ws.refreshes);
+        write_f32s(w, &ws.lam);
+    }
+}
+
+fn read_cache(r: &mut ByteReader) -> Result<WarmStartCache, String> {
+    let capacity = r.idx()?;
+    let tick = r.u64()?;
+    let hits = r.u64()?;
+    let misses = r.u64()?;
+    let evictions = r.u64()?;
+    let n = r.len()?;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let fp = read_fingerprint(r)?;
+        let last_used = r.u64()?;
+        let gamma = r.f32()?;
+        let refreshes = r.u64()?;
+        let lam = read_f32s(r)?;
+        if lam.len() != fp.dual_dim() {
+            return Err(format!(
+                "cache entry λ length {} does not match fingerprint dual dim {}",
+                lam.len(),
+                fp.dual_dim()
+            ));
+        }
+        entries.push((fp, WarmStart { lam, gamma, refreshes }, last_used));
+    }
+    Ok(WarmStartCache::from_parts(capacity, tick, hits, misses, evictions, entries))
+}
+
+fn write_stepper(w: &mut ByteWriter, s: &StepperState) {
+    w.str(&s.name);
+    w.u64(s.flags.len() as u64);
+    for &f in &s.flags {
+        w.u8(f as u8);
+    }
+    w.u64(s.vecs.len() as u64);
+    for v in &s.vecs {
+        write_f32s(w, v);
+    }
+    w.u64(s.scalars.len() as u64);
+    for &x in &s.scalars {
+        w.f64(x);
+    }
+    w.u64(s.counters.len() as u64);
+    for &c in &s.counters {
+        w.u64(c);
+    }
+}
+
+fn read_stepper(r: &mut ByteReader) -> Result<StepperState, String> {
+    let name = r.str()?;
+    let nf = r.len()?;
+    let mut flags = Vec::with_capacity(nf);
+    for _ in 0..nf {
+        flags.push(match r.u8()? {
+            0 => false,
+            1 => true,
+            t => return Err(format!("bad bool byte {t}")),
+        });
+    }
+    let nv = r.len()?;
+    let mut vecs = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        vecs.push(read_f32s(r)?);
+    }
+    let ns = r.len()?;
+    let mut scalars = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        scalars.push(r.f64()?);
+    }
+    let nc = r.len()?;
+    let mut counters = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        counters.push(r.u64()?);
+    }
+    Ok(StepperState { name, flags, vecs, scalars, counters })
+}
+
+fn write_objective_result(w: &mut ByteWriter, o: &ObjectiveResult) {
+    write_f32s(w, &o.grad);
+    w.f64(o.dual_obj);
+    w.f64(o.cx);
+    w.f64(o.xsq_weighted);
+    w.f64(o.infeas_pos_norm);
+}
+
+fn read_objective_result(r: &mut ByteReader) -> Result<ObjectiveResult, String> {
+    Ok(ObjectiveResult {
+        grad: read_f32s(r)?,
+        dual_obj: r.f64()?,
+        cx: r.f64()?,
+        xsq_weighted: r.f64()?,
+        infeas_pos_norm: r.f64()?,
+    })
+}
+
+fn write_state(w: &mut ByteWriter, s: &SolveState) {
+    w.u64(s.t as u64);
+    w.u64(s.stall_run as u64);
+    match &s.last {
+        None => w.u8(0),
+        Some(o) => {
+            w.u8(1);
+            write_objective_result(w, o);
+        }
+    }
+    w.u64(s.trajectory.len() as u64);
+    for t in &s.trajectory {
+        w.u64(t.iter as u64);
+        w.f64(t.dual_obj);
+        w.f64(t.grad_norm);
+        w.f64(t.infeas_pos_norm);
+        w.f64(t.cx);
+        w.f32(t.gamma);
+        w.f64(t.step_size);
+        w.f64(t.wall_ms);
+    }
+    match s.stop_reason {
+        None => w.u8(255),
+        Some(r) => w.u8(stop_code(r)),
+    }
+    w.f64(s.wall_offset_ms);
+}
+
+fn read_state(r: &mut ByteReader) -> Result<SolveState, String> {
+    let t = r.idx()?;
+    let stall_run = r.idx()?;
+    let last = match r.u8()? {
+        0 => None,
+        1 => Some(read_objective_result(r)?),
+        tag => return Err(format!("bad Option tag {tag}")),
+    };
+    let n = r.len()?;
+    let mut trajectory = Vec::with_capacity(n);
+    for _ in 0..n {
+        trajectory.push(IterRecord {
+            iter: r.idx()?,
+            dual_obj: r.f64()?,
+            grad_norm: r.f64()?,
+            infeas_pos_norm: r.f64()?,
+            cx: r.f64()?,
+            gamma: r.f32()?,
+            step_size: r.f64()?,
+            wall_ms: r.f64()?,
+        });
+    }
+    let stop_reason = match r.u8()? {
+        255 => None,
+        code => Some(stop_from(code)?),
+    };
+    let wall_offset_ms = r.f64()?;
+    Ok(SolveState { t, stall_run, last, trajectory, stop_reason, wall_offset_ms })
+}
+
+fn write_options(w: &mut ByteWriter, o: &SolveOptions) {
+    w.u64(o.max_iters as u64);
+    w.f64(o.max_step_size);
+    w.f64(o.initial_step_size);
+    match o.gamma {
+        GammaSchedule::Fixed(g) => {
+            w.u8(0);
+            w.f32(g);
+        }
+        GammaSchedule::Decay { init, floor, factor, every } => {
+            w.u8(1);
+            w.f32(init);
+            w.f32(floor);
+            w.f32(factor);
+            w.u64(every as u64);
+        }
+    }
+    w.opt_f64(o.stopping.grad_norm_tol);
+    w.opt_f64(o.stopping.stall_tol);
+    w.u64(o.stopping.stall_patience as u64);
+    w.u64(o.stopping.min_iters as u64);
+    w.u64(o.record_every as u64);
+}
+
+fn read_options(r: &mut ByteReader) -> Result<SolveOptions, String> {
+    let max_iters = r.idx()?;
+    let max_step_size = r.f64()?;
+    let initial_step_size = r.f64()?;
+    let gamma = match r.u8()? {
+        0 => GammaSchedule::Fixed(r.f32()?),
+        1 => GammaSchedule::Decay {
+            init: r.f32()?,
+            floor: r.f32()?,
+            factor: r.f32()?,
+            every: r.idx()?,
+        },
+        t => return Err(format!("bad GammaSchedule tag {t}")),
+    };
+    let stopping = StoppingCriteria {
+        grad_norm_tol: r.opt_f64()?,
+        stall_tol: r.opt_f64()?,
+        stall_patience: r.idx()?,
+        min_iters: r.idx()?,
+    };
+    let record_every = r.idx()?;
+    Ok(SolveOptions {
+        max_iters,
+        max_step_size,
+        initial_step_size,
+        gamma,
+        stopping,
+        record_every,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// public API
+
+/// Serialize the daemon's durable state. Errors if a checkpoint's stepper
+/// does not support export (every shipped stepper does).
+pub fn encode(cache: &WarmStartCache, checkpoints: &[CheckpointEntry]) -> Result<Vec<u8>, String> {
+    let mut w = ByteWriter::new();
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(VERSION);
+    write_cache(&mut w, cache);
+    w.u64(checkpoints.len() as u64);
+    for e in checkpoints {
+        let stepper = e
+            .checkpoint
+            .export_stepper()
+            .ok_or_else(|| "checkpoint stepper does not support state export".to_string())?;
+        w.u64(e.request_id);
+        write_fingerprint(&mut w, &e.fingerprint);
+        write_stepper(&mut w, &stepper);
+        write_state(&mut w, e.checkpoint.state());
+        write_options(&mut w, e.checkpoint.options());
+        w.opt_f64(e.checkpoint.driver_options().deadline_ms);
+    }
+    Ok(w.buf)
+}
+
+/// Decode a snapshot. Rejects bad magic, unknown versions, malformed
+/// records, truncation and trailing garbage.
+pub fn decode(bytes: &[u8]) -> Result<ServeSnapshot, String> {
+    let mut r = ByteReader::new(bytes);
+    if r.take(4)? != MAGIC {
+        return Err("not a dualip snapshot (bad magic)".to_string());
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported snapshot version {version} (expected {VERSION})"));
+    }
+    let cache = read_cache(&mut r)?;
+    let n = r.len()?;
+    let mut checkpoints = Vec::with_capacity(n);
+    for _ in 0..n {
+        let request_id = r.u64()?;
+        let fingerprint = read_fingerprint(&mut r)?;
+        let stepper_state = read_stepper(&mut r)?;
+        let state = read_state(&mut r)?;
+        let opts = read_options(&mut r)?;
+        let deadline_ms = r.opt_f64()?;
+        let stepper = restore_stepper(&stepper_state).ok_or_else(|| {
+            format!("cannot restore stepper {:?} from snapshot", stepper_state.name)
+        })?;
+        let checkpoint = Checkpoint::from_parts(
+            stepper,
+            state,
+            opts,
+            DriverOptions { deadline_ms, cancel: None },
+        );
+        checkpoints.push(CheckpointEntry { request_id, fingerprint, checkpoint });
+    }
+    r.done()?;
+    Ok(ServeSnapshot { cache, checkpoints })
+}
+
+/// Write a snapshot to disk (via a sibling temp file + rename, so a crash
+/// mid-write never leaves a truncated snapshot at the target path).
+pub fn save(
+    path: impl AsRef<Path>,
+    cache: &WarmStartCache,
+    checkpoints: &[CheckpointEntry],
+) -> Result<(), String> {
+    let path = path.as_ref();
+    let bytes = encode(cache, checkpoints)?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Read a snapshot from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<ServeSnapshot, String> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{generate, SyntheticConfig};
+    use crate::reference::CpuObjective;
+    use crate::solver::{Agd, SolveDriver, StepEvent};
+
+    fn fp(n: usize) -> Fingerprint {
+        Fingerprint {
+            num_sources: n,
+            num_dests: 4,
+            num_families: 1,
+            num_global_rows: 0,
+            nnz: 4 * n,
+            pattern_hash: 0x1234_5678_9abc_def0 ^ n as u64,
+            projection_hash: 7,
+            global_coeff_hash: 0,
+            coeff_hash: 99,
+        }
+    }
+
+    fn primed_cache() -> WarmStartCache {
+        let mut c = WarmStartCache::new(4);
+        c.insert(fp(1), vec![0.25, -0.5, 1.5e-9, f32::MIN_POSITIVE], 0.04);
+        c.insert(fp(2), vec![0.0; 4], 0.01);
+        let _ = c.lookup(&fp(1));
+        let _ = c.lookup(&fp(9)); // miss
+        c
+    }
+
+    #[test]
+    fn cache_round_trip_is_bit_identical() {
+        let cache = primed_cache();
+        let bytes = encode(&cache, &[]).unwrap();
+        let snap = decode(&bytes).unwrap();
+        assert_eq!(snap.cache.capacity(), cache.capacity());
+        assert_eq!(snap.cache.tick(), cache.tick());
+        assert_eq!(
+            (snap.cache.hits, snap.cache.misses, snap.cache.evictions),
+            (cache.hits, cache.misses, cache.evictions)
+        );
+        let a = cache.export_entries();
+        let b = snap.cache.export_entries();
+        assert_eq!(a.len(), b.len());
+        for ((fa, wa, ta), (fb, wb, tb)) in a.iter().zip(&b) {
+            assert_eq!(fa, fb);
+            assert_eq!(ta, tb, "LRU ticks must restore exactly");
+            assert_eq!(wa.gamma.to_bits(), wb.gamma.to_bits());
+            assert_eq!(wa.refreshes, wb.refreshes);
+            assert_eq!(wa.lam.len(), wb.lam.len());
+            for (x, y) in wa.lam.iter().zip(&wb.lam) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // byte-stable: re-encoding the decoded cache reproduces the bytes
+        let bytes2 = encode(&snap.cache, &[]).unwrap();
+        assert_eq!(bytes, bytes2);
+    }
+
+    #[test]
+    fn checkpoint_round_trip_resumes_bit_identically() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 120,
+            num_resources: 12,
+            seed: 31,
+            ..Default::default()
+        });
+        let opts = SolveOptions {
+            max_iters: 60,
+            max_step_size: 1e-3,
+            initial_step_size: 1e-5,
+            gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 9 },
+            ..Default::default()
+        };
+        let init = vec![0.0f32; lp.dual_dim()];
+        let mk = || {
+            let mut obj = CpuObjective::new(&lp);
+            let mut d = SolveDriver::new(
+                Box::new(Agd::default().stepper()),
+                &init,
+                opts.clone(),
+                DriverOptions::default(),
+            );
+            for _ in 0..21 {
+                if let StepEvent::Stopped { .. } = d.step(&mut obj) {
+                    panic!("stopped too early");
+                }
+            }
+            d.checkpoint().expect("AGD checkpoints")
+        };
+        let ck = mk();
+        let bytes = encode(
+            &WarmStartCache::new(0),
+            &[CheckpointEntry { request_id: 7, fingerprint: fp(3), checkpoint: ck }],
+        )
+        .unwrap();
+        let snap = decode(&bytes).unwrap();
+        assert_eq!(snap.checkpoints.len(), 1);
+        assert_eq!(snap.checkpoints[0].request_id, 7);
+        assert_eq!(snap.checkpoints[0].fingerprint, fp(3));
+
+        // resume the DECODED checkpoint and an in-memory clone of the same
+        // solve; both must finish on identical bits
+        let restored = snap.checkpoints.into_iter().next().unwrap().checkpoint;
+        let mut obj_a = CpuObjective::new(&lp);
+        let mut obj_b = CpuObjective::new(&lp);
+        let mut da = SolveDriver::resume(mk());
+        let mut db = SolveDriver::resume(restored);
+        let ra = da.run(&mut obj_a);
+        let rb = db.run(&mut obj_b);
+        assert_eq!(ra.iterations, rb.iterations);
+        assert_eq!(ra.stop_reason, rb.stop_reason);
+        assert_eq!(ra.final_obj.dual_obj.to_bits(), rb.final_obj.dual_obj.to_bits());
+        for (x, y) in ra.lam.iter().zip(&rb.lam) {
+            assert_eq!(x.to_bits(), y.to_bits(), "resumed λ diverged");
+        }
+        assert_eq!(ra.trajectory.len(), rb.trajectory.len());
+        for (ta, tb) in ra.trajectory.iter().zip(&rb.trajectory) {
+            assert_eq!(ta.iter, tb.iter);
+            assert_eq!(ta.dual_obj.to_bits(), tb.dual_obj.to_bits());
+            assert_eq!(ta.gamma.to_bits(), tb.gamma.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let cache = primed_cache();
+        let bytes = encode(&cache, &[]).unwrap();
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().contains("magic"));
+        // unknown version
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(decode(&bad).unwrap_err().contains("version"));
+        // truncation
+        assert!(decode(&bytes[..bytes.len() - 3]).is_err());
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode(&bad).unwrap_err().contains("trailing"));
+        // absurd length prefix must error, not allocate
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let dir = std::env::temp_dir().join("dualip_snapshot_test");
+        let path = dir.join("state.dlps");
+        let cache = primed_cache();
+        save(&path, &cache, &[]).unwrap();
+        let snap = load(&path).unwrap();
+        assert_eq!(snap.cache.tick(), cache.tick());
+        assert_eq!(snap.cache.len(), cache.len());
+        assert!(snap.checkpoints.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -17,7 +17,7 @@
 //! each iteration (paper §6 step 4), and exactly what a driver checkpoint
 //! snapshots.
 
-use super::driver::{maximize_with, DriverOptions, DualStepper};
+use super::driver::{maximize_with, DriverOptions, DualStepper, StepperState};
 use super::maximizer::{Maximizer, SolveOptions, SolveResult};
 use crate::problem::{ObjectiveFunction, ObjectiveResult};
 use crate::util::mathvec;
@@ -73,6 +73,42 @@ impl AgdStepper {
             prev_obj: f64::NEG_INFINITY,
             momentum_t: 0,
         }
+    }
+
+    /// Restore from an exported [`StepperState`] (inverse of
+    /// `export_state`). `None` if the record isn't a well-formed AGD
+    /// export: wrong name, wrong arity, or inconsistent iterate lengths.
+    pub fn from_state(state: &StepperState) -> Option<AgdStepper> {
+        if state.name != "agd"
+            || state.flags.len() != 1
+            || state.vecs.len() != 5
+            || state.scalars.len() != 1
+            || state.counters.len() != 1
+        {
+            return None;
+        }
+        let [lam, y, lam_prev, y_prev, grad_prev] = &state.vecs[..] else {
+            return None;
+        };
+        let n = lam.len();
+        if y.len() != n || lam_prev.len() != n {
+            return None;
+        }
+        // Curvature memory is empty until the first step; afterwards both
+        // planes are full-length.
+        if y_prev.len() != grad_prev.len() || !(y_prev.is_empty() || y_prev.len() == n) {
+            return None;
+        }
+        Some(AgdStepper {
+            restart_on_decrease: state.flags[0],
+            lam: lam.clone(),
+            y: y.clone(),
+            lam_prev: lam_prev.clone(),
+            y_prev: y_prev.clone(),
+            grad_prev: grad_prev.clone(),
+            prev_obj: state.scalars[0],
+            momentum_t: state.counters[0] as usize,
+        })
     }
 }
 
@@ -147,6 +183,22 @@ impl DualStepper for AgdStepper {
 
     fn try_clone(&self) -> Option<Box<dyn DualStepper>> {
         Some(Box::new(self.clone()))
+    }
+
+    fn export_state(&self) -> Option<StepperState> {
+        Some(StepperState {
+            name: "agd".to_string(),
+            flags: vec![self.restart_on_decrease],
+            vecs: vec![
+                self.lam.clone(),
+                self.y.clone(),
+                self.lam_prev.clone(),
+                self.y_prev.clone(),
+                self.grad_prev.clone(),
+            ],
+            scalars: vec![self.prev_obj],
+            counters: vec![self.momentum_t as u64],
+        })
     }
 }
 

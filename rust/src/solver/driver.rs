@@ -82,6 +82,40 @@ pub trait DualStepper: Send {
     fn try_clone(&self) -> Option<Box<dyn DualStepper>> {
         None
     }
+
+    /// Export the full iterate/momentum state as plain data for durable
+    /// snapshots (`serve::snapshot`). `None` means this stepper is not
+    /// serializable; every shipped stepper (AGD, PGD) is. The layout of
+    /// `flags`/`vecs`/`scalars`/`counters` is stepper-specific — only the
+    /// matching `from_state` restore constructor interprets it.
+    fn export_state(&self) -> Option<StepperState> {
+        None
+    }
+}
+
+/// Plain-data export of a [`DualStepper`]'s internal state, keyed by the
+/// stepper's `name()` for restore. Field meaning is private to each
+/// stepper; the snapshot codec treats this as an opaque record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepperState {
+    pub name: String,
+    pub flags: Vec<bool>,
+    pub vecs: Vec<Vec<f32>>,
+    pub scalars: Vec<f64>,
+    pub counters: Vec<u64>,
+}
+
+/// Rebuild a stepper from an exported [`StepperState`] (name-keyed
+/// dispatch over the shipped steppers). `None` for unknown names or a
+/// state record whose shape doesn't match the named stepper.
+pub fn restore_stepper(state: &StepperState) -> Option<Box<dyn DualStepper>> {
+    match state.name.as_str() {
+        "agd" => super::agd::AgdStepper::from_state(state)
+            .map(|s| Box::new(s) as Box<dyn DualStepper>),
+        "pgd" => super::pgd::PgdStepper::from_state(state)
+            .map(|s| Box::new(s) as Box<dyn DualStepper>),
+        _ => None,
+    }
 }
 
 /// Cooperative cancellation handle: clone it, hand one clone to the job,
@@ -211,6 +245,41 @@ impl Checkpoint {
     /// Iterations completed at snapshot time.
     pub fn iterations(&self) -> usize {
         self.state.t
+    }
+
+    /// Reassemble a checkpoint from its parts — the restore half of the
+    /// durable-snapshot round trip (`serve::snapshot`). The caller is
+    /// responsible for the stepper matching the state it ran under;
+    /// `SolveDriver::resume` on the result is then bit-identical to
+    /// resuming the original in-memory checkpoint.
+    pub fn from_parts(
+        stepper: Box<dyn DualStepper>,
+        state: SolveState,
+        opts: SolveOptions,
+        dopts: DriverOptions,
+    ) -> Checkpoint {
+        Checkpoint { stepper, state, opts, dopts }
+    }
+
+    /// Loop state at snapshot time.
+    pub fn state(&self) -> &SolveState {
+        &self.state
+    }
+
+    /// Optimization settings the solve ran under.
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    /// Driver policy the solve ran under.
+    pub fn driver_options(&self) -> &DriverOptions {
+        &self.dopts
+    }
+
+    /// Export the stepper's iterates as plain data (`None` for steppers
+    /// without serialization support).
+    pub fn export_stepper(&self) -> Option<StepperState> {
+        self.stepper.export_state()
     }
 }
 
@@ -722,6 +791,56 @@ mod tests {
         assert_eq!(log.recorded, r.trajectory.len());
         assert_eq!(log.decays, vec![10], "one γ transition at iteration 10");
         assert_eq!(log.stops, vec![(StopReason::MaxIters, 20)]);
+    }
+
+    #[test]
+    fn exported_stepper_state_restores_bit_identically() {
+        let opts = SolveOptions {
+            max_iters: 60,
+            max_step_size: 0.5,
+            gamma: GammaSchedule::Decay { init: 0.16, floor: 0.02, factor: 0.5, every: 9 },
+            ..Default::default()
+        };
+        let mut o = quad(5);
+        let mut d = driver(&o, opts, DriverOptions::default());
+        for _ in 0..21 {
+            d.step(&mut o);
+        }
+        let ck = d.checkpoint().unwrap();
+        let exported = ck.export_stepper().expect("AGD exports its state");
+        assert_eq!(exported.name, "agd");
+        let restored = restore_stepper(&exported).expect("AGD restores from export");
+        let ck2 = Checkpoint::from_parts(
+            restored,
+            ck.state().clone(),
+            ck.options().clone(),
+            ck.driver_options().clone(),
+        );
+        let r1 = SolveDriver::resume(ck).run(&mut o);
+        let r2 = SolveDriver::resume(ck2).run(&mut o);
+        assert_eq!(r1.iterations, r2.iterations);
+        for (a, b) in r1.lam.iter().zip(&r2.lam) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in r1.trajectory.iter().zip(&r2.trajectory) {
+            assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+            assert_eq!(a.step_size.to_bits(), b.step_size.to_bits());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_malformed_state() {
+        let good = AgdStepper::new(false).export_state().unwrap();
+        assert!(restore_stepper(&good).is_some());
+        let mut bad = good.clone();
+        bad.name = "no_such_stepper".into();
+        assert!(restore_stepper(&bad).is_none());
+        let mut bad = good.clone();
+        bad.vecs.pop();
+        assert!(restore_stepper(&bad).is_none());
+        let mut bad = good;
+        bad.name = "pgd".into(); // AGD-shaped record under PGD's name
+        assert!(restore_stepper(&bad).is_none());
     }
 
     #[test]

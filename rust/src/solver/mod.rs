@@ -15,8 +15,8 @@ pub mod stopping;
 pub use agd::{Agd, AgdStepper};
 pub use continuation::GammaSchedule;
 pub use driver::{
-    maximize_with, CancelToken, Checkpoint, DriverOptions, DualStepper, IterObserver,
-    SolveDriver, SolveState, StepEvent,
+    maximize_with, restore_stepper, CancelToken, Checkpoint, DriverOptions, DualStepper,
+    IterObserver, SolveDriver, SolveState, StepEvent, StepperState,
 };
 pub use maximizer::{run_loop, IterRecord, Maximizer, SolveOptions, SolveResult};
 pub use pgd::{Pgd, PgdStepper};

@@ -5,7 +5,7 @@
 //! as [`PgdStepper`], of the driver's [`DualStepper`] update-rule
 //! contract.
 
-use super::driver::{maximize_with, DriverOptions, DualStepper};
+use super::driver::{maximize_with, DriverOptions, DualStepper, StepperState};
 use super::maximizer::{Maximizer, SolveOptions, SolveResult};
 use crate::problem::{ObjectiveFunction, ObjectiveResult};
 use crate::util::mathvec;
@@ -32,6 +32,33 @@ pub struct PgdStepper {
 impl PgdStepper {
     pub fn new() -> PgdStepper {
         PgdStepper::default()
+    }
+
+    /// Restore from an exported [`StepperState`] (inverse of
+    /// `export_state`). `None` if the record isn't a well-formed PGD
+    /// export.
+    pub fn from_state(state: &StepperState) -> Option<PgdStepper> {
+        if state.name != "pgd"
+            || !state.flags.is_empty()
+            || state.vecs.len() != 3
+            || !state.scalars.is_empty()
+            || !state.counters.is_empty()
+        {
+            return None;
+        }
+        let [lam, lam_prev, grad_prev] = &state.vecs[..] else {
+            return None;
+        };
+        if lam_prev.len() != grad_prev.len()
+            || !(lam_prev.is_empty() || lam_prev.len() == lam.len())
+        {
+            return None;
+        }
+        Some(PgdStepper {
+            lam: lam.clone(),
+            lam_prev: lam_prev.clone(),
+            grad_prev: grad_prev.clone(),
+        })
     }
 }
 
@@ -79,6 +106,16 @@ impl DualStepper for PgdStepper {
 
     fn try_clone(&self) -> Option<Box<dyn DualStepper>> {
         Some(Box::new(self.clone()))
+    }
+
+    fn export_state(&self) -> Option<StepperState> {
+        Some(StepperState {
+            name: "pgd".to_string(),
+            flags: Vec::new(),
+            vecs: vec![self.lam.clone(), self.lam_prev.clone(), self.grad_prev.clone()],
+            scalars: Vec::new(),
+            counters: Vec::new(),
+        })
     }
 }
 

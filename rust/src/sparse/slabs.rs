@@ -113,6 +113,96 @@ pub fn bucket_width(degree: usize) -> usize {
     degree.next_power_of_two().clamp(MIN_WIDTH, MAX_WIDTH)
 }
 
+/// How an edge insert/delete was absorbed by [`SlabLayout::patch_edge`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgePatch {
+    /// The edited source stayed in its bucket row — padding headroom
+    /// absorbed the edit and only that row was rewritten. Row counts are
+    /// unchanged, so an existing chunk grid remains valid.
+    InPlace,
+    /// The edit moved the source across buckets (width transition, bucket
+    /// creation/removal, or a split source): the affected buckets were
+    /// repacked. Row counts may have changed — recompute the chunk grid.
+    Repacked,
+}
+
+/// Tally of delta operations applied to a resident layout (serve-path
+/// diagnostics: the in-place / repack ratio is the headroom-hit rate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PatchReport {
+    /// Cost-plane rewrites (`patch_costs`).
+    pub cost_patches: usize,
+    /// Edge edits absorbed by padding headroom.
+    pub in_place: usize,
+    /// Edge edits that repacked at least one bucket.
+    pub repacked: usize,
+}
+
+impl PatchReport {
+    pub fn note(&mut self, patch: EdgePatch) {
+        match patch {
+            EdgePatch::InPlace => self.in_place += 1,
+            EdgePatch::Repacked => self.repacked += 1,
+        }
+    }
+}
+
+/// Fill one bucket's slabs from the matrix — pass 2 of [`SlabLayout::build`],
+/// shared with the patch path so a repacked bucket is bit-identical to the
+/// same bucket in a from-scratch build. `sources` must be ascending, with a
+/// split (> width · 1) source's copies contiguous.
+fn fill_bucket(
+    kind: ProjectionKind,
+    width: usize,
+    sources: Vec<u32>,
+    m: &BlockedMatrix,
+    cost: &[f32],
+) -> Bucket {
+    let rows = sources.len();
+    let n = rows * width;
+    let mut bk = Bucket {
+        kind,
+        width,
+        sources: Vec::with_capacity(rows),
+        dest_idx: vec![0u32; n],
+        edge_id: vec![u32::MAX; n],
+        cost: vec![0.0f32; n],
+        a: vec![vec![0.0f32; n]; m.num_families],
+        mask: vec![0.0f32; n],
+        real_edge_count: 0,
+    };
+    let mut row = 0usize;
+    let mut cursor: Option<(u32, usize)> = None; // (source, next edge offset) for splits
+    for &src in &sources {
+        let i = src as usize;
+        let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
+        let start = match cursor {
+            Some((s, off)) if s == src => e0 + off,
+            _ => e0,
+        };
+        let take = (e1 - start).min(width);
+        let base = row * width;
+        for (col, e) in (start..start + take).enumerate() {
+            bk.dest_idx[base + col] = m.dest_idx[e];
+            bk.edge_id[base + col] = e as u32;
+            bk.cost[base + col] = cost[e];
+            for k in 0..m.num_families {
+                bk.a[k][base + col] = m.a[k][e];
+            }
+            bk.mask[base + col] = 1.0;
+        }
+        bk.sources.push(src);
+        bk.real_edge_count += take;
+        cursor = if start + take < e1 {
+            Some((src, start + take - e0))
+        } else {
+            None
+        };
+        row += 1;
+    }
+    bk
+}
+
 impl SlabLayout {
     /// Build the layout for sources `[src_lo, src_hi)` of `m` with costs
     /// `cost` (per edge, global indexing) and per-source projection kinds
@@ -164,49 +254,7 @@ impl SlabLayout {
         // Pass 2: fill slabs.
         let mut buckets = Vec::with_capacity(groups.len());
         for ((kind, width), sources) in groups {
-            let rows = sources.len();
-            let n = rows * width;
-            let mut bk = Bucket {
-                kind,
-                width,
-                sources: Vec::with_capacity(rows),
-                dest_idx: vec![0u32; n],
-                edge_id: vec![u32::MAX; n],
-                cost: vec![0.0f32; n],
-                a: vec![vec![0.0f32; n]; m.num_families],
-                mask: vec![0.0f32; n],
-                real_edge_count: 0,
-            };
-            let mut row = 0usize;
-            let mut cursor: Option<(u32, usize)> = None; // (source, next edge offset) for splits
-            for &src in &sources {
-                let i = src as usize;
-                let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
-                let start = match cursor {
-                    Some((s, off)) if s == src => e0 + off,
-                    _ => e0,
-                };
-                let take = (e1 - start).min(width);
-                let base = row * width;
-                for (col, e) in (start..start + take).enumerate() {
-                    bk.dest_idx[base + col] = m.dest_idx[e];
-                    bk.edge_id[base + col] = e as u32;
-                    bk.cost[base + col] = cost[e];
-                    for k in 0..m.num_families {
-                        bk.a[k][base + col] = m.a[k][e];
-                    }
-                    bk.mask[base + col] = 1.0;
-                }
-                bk.sources.push(src);
-                bk.real_edge_count += take;
-                cursor = if start + take < e1 {
-                    Some((src, start + take - e0))
-                } else {
-                    None
-                };
-                row += 1;
-            }
-            buckets.push(bk);
+            buckets.push(fill_bucket(kind, width, sources, m, cost));
         }
         Ok(SlabLayout {
             buckets,
@@ -280,6 +328,185 @@ impl SlabLayout {
             ptr.push(ptr.last().unwrap() + self.chunk_real_edges(c));
         }
         ptr
+    }
+
+    /// Rewrite the cost plane in place from a perturbed per-edge cost
+    /// vector (global edge indexing) — the c-delta path. Structure (edge
+    /// pattern, a-planes, masks, grid) is untouched, so this never
+    /// invalidates anything derived from the layout.
+    pub fn patch_costs(&mut self, cost: &[f32]) {
+        for bk in &mut self.buckets {
+            for (c, &eid) in bk.cost.iter_mut().zip(&bk.edge_id) {
+                if eid != u32::MAX {
+                    *c = cost[eid as usize];
+                }
+            }
+        }
+    }
+
+    /// Shift stored global edge ids after a CSR splice: ids `>= from` move
+    /// by `delta` (+1 after an insert at `from`, −1 after a delete, where
+    /// the deleted id itself lives in the edited source's row and is
+    /// rewritten by the caller).
+    fn renumber_edges(&mut self, from: u32, delta: i32) {
+        for bk in &mut self.buckets {
+            for eid in &mut bk.edge_id {
+                if *eid != u32::MAX && *eid >= from {
+                    *eid = eid.wrapping_add(delta as u32);
+                }
+            }
+        }
+    }
+
+    /// Rewrite one bucket row from the (post-edit) matrix: the in-place
+    /// fast path of `patch_edge`, valid only when the source occupies a
+    /// single row and its new degree still fits the bucket width.
+    fn refill_row(&mut self, bucket: usize, row: usize, m: &BlockedMatrix, cost: &[f32]) {
+        let bk = &mut self.buckets[bucket];
+        let w = bk.width;
+        let base = row * w;
+        let i = bk.sources[row] as usize;
+        let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
+        let deg = e1 - e0;
+        debug_assert!(deg <= w);
+        let old_real =
+            bk.mask[base..base + w].iter().filter(|&&v| v > 0.0).count();
+        for col in 0..w {
+            if col < deg {
+                let e = e0 + col;
+                bk.dest_idx[base + col] = m.dest_idx[e];
+                bk.edge_id[base + col] = e as u32;
+                bk.cost[base + col] = cost[e];
+                for k in 0..m.num_families {
+                    bk.a[k][base + col] = m.a[k][e];
+                }
+                bk.mask[base + col] = 1.0;
+            } else {
+                bk.dest_idx[base + col] = 0;
+                bk.edge_id[base + col] = u32::MAX;
+                bk.cost[base + col] = 0.0;
+                for k in 0..m.num_families {
+                    bk.a[k][base + col] = 0.0;
+                }
+                bk.mask[base + col] = 0.0;
+            }
+        }
+        bk.real_edge_count = bk.real_edge_count + deg - old_real;
+    }
+
+    /// Apply one edge insert or delete to the resident layout.
+    ///
+    /// `m`/`cost` are the POST-edit matrix and cost planes; `edge` is the
+    /// spliced global position (the new edge's index after an insert, the
+    /// removed edge's old index after a delete); `source` is the edited
+    /// source block and `kind` its projection kind. The patched layout is
+    /// bit-identical — plane by plane, bucket by bucket — to
+    /// `SlabLayout::build` of the post-edit matrix (the parity gate the
+    /// serve tests assert), without ever re-laying-out untouched sources:
+    ///
+    /// 1. a renumber sweep shifts stored edge ids past the splice point,
+    /// 2. if the source keeps its (kind, width) bucket and occupies one
+    ///    row, that row alone is rewritten using the padding headroom
+    ///    ([`EdgePatch::InPlace`]),
+    /// 3. otherwise the source's old and new buckets are repacked
+    ///    (created/removed as needed, in the build's (kind, width) order)
+    ///    and the caller must refresh its chunk grid
+    ///    ([`EdgePatch::Repacked`]).
+    pub fn patch_edge(
+        &mut self,
+        m: &BlockedMatrix,
+        cost: &[f32],
+        source: usize,
+        edge: usize,
+        insert: bool,
+        kind: ProjectionKind,
+    ) -> Result<EdgePatch, String> {
+        assert_eq!(cost.len(), m.nnz());
+        assert_eq!(m.num_families, self.num_families);
+        let new_deg = m.degree(source);
+        // Reject before touching anything: an error must leave the
+        // resident layout exactly as it was.
+        if new_deg > MAX_WIDTH && !kind.separable() {
+            return Err(format!(
+                "source {source} degree {new_deg} exceeds MAX_WIDTH {MAX_WIDTH} \
+                 for non-separable {} projection",
+                kind.name()
+            ));
+        }
+        if insert {
+            self.renumber_edges(edge as u32, 1);
+        } else {
+            self.renumber_edges(edge as u32 + 1, -1);
+        }
+
+        // Locate the source's current rows (all in one bucket: kind is
+        // fixed per source and width is a function of its degree).
+        let old = self.buckets.iter().enumerate().find_map(|(bi, bk)| {
+            let lo = bk.sources.partition_point(|&s| s < source as u32);
+            let hi = bk.sources.partition_point(|&s| s <= source as u32);
+            (lo < hi).then_some((bi, hi - lo))
+        });
+
+        // In-place fast path: same bucket, one row, degree still fits.
+        if let Some((bi, rows)) = old {
+            if rows == 1
+                && new_deg > 0
+                && new_deg <= MAX_WIDTH
+                && self.buckets[bi].kind == kind
+                && self.buckets[bi].width == bucket_width(new_deg)
+            {
+                let row = self.buckets[bi]
+                    .sources
+                    .partition_point(|&s| s < source as u32);
+                self.refill_row(bi, row, m, cost);
+                return Ok(EdgePatch::InPlace);
+            }
+        }
+
+        // Repack: pull the source out of its old bucket, re-insert it at
+        // its new (kind, width) position. Buckets stay in build order
+        // ((kind, width) ascending), so plane parity with a fresh build
+        // is preserved.
+        if let Some((bi, _)) = old {
+            let (k, w) = (self.buckets[bi].kind, self.buckets[bi].width);
+            let sources: Vec<u32> = self.buckets[bi]
+                .sources
+                .iter()
+                .copied()
+                .filter(|&s| s != source as u32)
+                .collect();
+            if sources.is_empty() {
+                self.buckets.remove(bi);
+            } else {
+                self.buckets[bi] = fill_bucket(k, w, sources, m, cost);
+            }
+        }
+        if new_deg > 0 {
+            // overwide + non-separable was rejected up front
+            let (width, copies) = if new_deg > MAX_WIDTH {
+                (MAX_WIDTH, new_deg.div_ceil(MAX_WIDTH))
+            } else {
+                (bucket_width(new_deg), 1)
+            };
+            match self
+                .buckets
+                .binary_search_by(|b| (b.kind, b.width).cmp(&(kind, width)))
+            {
+                Ok(bi) => {
+                    let mut sources = std::mem::take(&mut self.buckets[bi].sources);
+                    let at = sources.partition_point(|&s| s < source as u32);
+                    for _ in 0..copies {
+                        sources.insert(at, source as u32);
+                    }
+                    self.buckets[bi] = fill_bucket(kind, width, sources, m, cost);
+                }
+                Err(bi) => {
+                    let sources = vec![source as u32; copies];
+                    self.buckets.insert(bi, fill_bucket(kind, width, sources, m, cost));
+                }
+            }
+        }
+        Ok(EdgePatch::Repacked)
     }
 }
 
@@ -457,5 +684,196 @@ mod tests {
         let l = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
         assert_eq!(l.total_rows(), 1);
         assert_eq!(l.buckets[0].sources, vec![1]);
+    }
+
+    /// Splice one edge into the CSR at the end of `source`'s range,
+    /// returning its global position — the test mirror of the serve host's
+    /// delta application.
+    fn insert_edge(
+        m: &mut BlockedMatrix,
+        cost: &mut Vec<f32>,
+        source: usize,
+        dest: u32,
+        aval: f32,
+        cval: f32,
+    ) -> usize {
+        let p = m.src_ptr[source + 1];
+        m.dest_idx.insert(p, dest);
+        for plane in &mut m.a {
+            plane.insert(p, aval);
+        }
+        cost.insert(p, cval);
+        for ptr in &mut m.src_ptr[source + 1..] {
+            *ptr += 1;
+        }
+        p
+    }
+
+    /// Remove `source`'s `col`-th edge from the CSR, returning its old
+    /// global position.
+    fn remove_edge(
+        m: &mut BlockedMatrix,
+        cost: &mut Vec<f32>,
+        source: usize,
+        col: usize,
+    ) -> usize {
+        let p = m.src_ptr[source] + col;
+        m.dest_idx.remove(p);
+        for plane in &mut m.a {
+            plane.remove(p);
+        }
+        cost.remove(p);
+        for ptr in &mut m.src_ptr[source + 1..] {
+            *ptr -= 1;
+        }
+        p
+    }
+
+    /// Plane-by-plane bit equality — the delta-path parity gate.
+    fn assert_layout_bit_eq(a: &SlabLayout, b: &SlabLayout) {
+        assert_eq!(a.num_families, b.num_families);
+        assert_eq!(a.num_dests, b.num_dests);
+        assert_eq!(a.buckets.len(), b.buckets.len(), "bucket count");
+        for (i, (x, y)) in a.buckets.iter().zip(&b.buckets).enumerate() {
+            assert_eq!(x.kind, y.kind, "bucket {i} kind");
+            assert_eq!(x.width, y.width, "bucket {i} width");
+            assert_eq!(x.sources, y.sources, "bucket {i} sources");
+            assert_eq!(x.dest_idx, y.dest_idx, "bucket {i} dest_idx");
+            assert_eq!(x.edge_id, y.edge_id, "bucket {i} edge_id");
+            assert_eq!(x.real_edge_count, y.real_edge_count, "bucket {i} real edges");
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&x.cost), bits(&y.cost), "bucket {i} cost");
+            assert_eq!(bits(&x.mask), bits(&y.mask), "bucket {i} mask");
+            for k in 0..x.a.len() {
+                assert_eq!(bits(&x.a[k]), bits(&y.a[k]), "bucket {i} family {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn patch_costs_matches_rebuild() {
+        let (m, mut cost) = matrix(&[3, 4, 5, 9, 17, 2], 32);
+        let mut l = SlabLayout::build(&m, &cost, 0, 6, &|_| ProjectionKind::Simplex).unwrap();
+        for (e, c) in cost.iter_mut().enumerate() {
+            *c += 0.001 * e as f32;
+        }
+        l.patch_costs(&cost);
+        let rebuilt = SlabLayout::build(&m, &cost, 0, 6, &|_| ProjectionKind::Simplex).unwrap();
+        assert_layout_bit_eq(&l, &rebuilt);
+    }
+
+    #[test]
+    fn insert_within_headroom_is_in_place() {
+        // source 0 has degree 3 in a width-4 bucket: one edge of headroom
+        let (mut m, mut cost) = matrix(&[3, 4, 5], 32);
+        let mut l = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        let grid_before = l.fixed_chunk_grid();
+        let p = insert_edge(&mut m, &mut cost, 0, 30, 2.5, -0.9);
+        let patch = l.patch_edge(&m, &cost, 0, p, true, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::InPlace);
+        assert_eq!(l.fixed_chunk_grid(), grid_before, "in-place keeps the grid");
+        let rebuilt = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        assert_layout_bit_eq(&l, &rebuilt);
+    }
+
+    #[test]
+    fn insert_overflowing_bucket_repacks() {
+        // source 1 has degree 4 = full width-4 row: the insert overflows
+        // into the width-8 bucket (which already holds source 2)
+        let (mut m, mut cost) = matrix(&[3, 4, 5], 32);
+        let mut l = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        let p = insert_edge(&mut m, &mut cost, 1, 31, 1.25, -0.45);
+        let patch = l.patch_edge(&m, &cost, 1, p, true, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::Repacked);
+        let rebuilt = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        assert_layout_bit_eq(&l, &rebuilt);
+    }
+
+    #[test]
+    fn delete_in_place_and_across_widths() {
+        let (mut m, mut cost) = matrix(&[4, 5, 9], 32);
+        let mut l = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        // 4 → 3 stays in the width-4 bucket
+        let p = remove_edge(&mut m, &mut cost, 0, 1);
+        let patch = l.patch_edge(&m, &cost, 0, p, false, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::InPlace);
+        assert_layout_bit_eq(
+            &l,
+            &SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap(),
+        );
+        // 5 → 4 crosses width 8 → 4
+        let p = remove_edge(&mut m, &mut cost, 1, 0);
+        let patch = l.patch_edge(&m, &cost, 1, p, false, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::Repacked);
+        assert_layout_bit_eq(
+            &l,
+            &SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap(),
+        );
+    }
+
+    #[test]
+    fn edge_patch_creates_and_removes_sources_and_buckets() {
+        // source 1 starts isolated (degree 0); source 2's width-16 bucket
+        // exists only because of source 2
+        let (mut m, mut cost) = matrix(&[3, 0, 9], 32);
+        let mut l = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        assert_eq!(l.num_launches(), 2);
+        // 0 → 1: the isolated source enters the width-4 bucket
+        let p = insert_edge(&mut m, &mut cost, 1, 7, 0.5, -0.2);
+        let patch = l.patch_edge(&m, &cost, 1, p, true, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::Repacked);
+        assert_layout_bit_eq(
+            &l,
+            &SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap(),
+        );
+        assert_eq!(l.buckets[0].sources, vec![0, 1]);
+        // 1 → 0: and leaves it again
+        let p = remove_edge(&mut m, &mut cost, 1, 0);
+        let patch = l.patch_edge(&m, &cost, 1, p, false, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::Repacked);
+        assert_layout_bit_eq(
+            &l,
+            &SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap(),
+        );
+        // 9 → 8 (width 16 → 8): the width-16 bucket disappears entirely
+        let p = remove_edge(&mut m, &mut cost, 2, 4);
+        let patch = l.patch_edge(&m, &cost, 2, p, false, ProjectionKind::Simplex).unwrap();
+        assert_eq!(patch, EdgePatch::Repacked);
+        let rebuilt = SlabLayout::build(&m, &cost, 0, 3, &|_| ProjectionKind::Simplex).unwrap();
+        assert_layout_bit_eq(&l, &rebuilt);
+        assert!(l.buckets.iter().all(|b| b.width != 16));
+    }
+
+    #[test]
+    fn split_source_edits_repack_with_parity() {
+        let deg = MAX_WIDTH + 10;
+        let (mut m, mut cost) = matrix(&[3, deg], MAX_WIDTH + 16);
+        let mut l = SlabLayout::build(&m, &cost, 0, 2, &|_| ProjectionKind::Box).unwrap();
+        let p = insert_edge(&mut m, &mut cost, 1, (MAX_WIDTH + 12) as u32, 1.0, -0.3);
+        let patch = l.patch_edge(&m, &cost, 1, p, true, ProjectionKind::Box).unwrap();
+        assert_eq!(patch, EdgePatch::Repacked);
+        assert_layout_bit_eq(
+            &l,
+            &SlabLayout::build(&m, &cost, 0, 2, &|_| ProjectionKind::Box).unwrap(),
+        );
+        assert_eq!(l.total_real_edges(), 3 + deg + 1);
+    }
+
+    #[test]
+    fn patch_rejects_overwide_non_separable() {
+        let (mut m, mut cost) = matrix(&[MAX_WIDTH], MAX_WIDTH + 4);
+        let mut l = SlabLayout::build(&m, &cost, 0, 1, &|_| ProjectionKind::Simplex).unwrap();
+        let p = insert_edge(&mut m, &mut cost, 0, (MAX_WIDTH + 1) as u32, 1.0, -0.1);
+        assert!(l.patch_edge(&m, &cost, 0, p, true, ProjectionKind::Simplex).is_err());
+    }
+
+    #[test]
+    fn patch_report_tallies() {
+        let mut r = PatchReport::default();
+        r.note(EdgePatch::InPlace);
+        r.note(EdgePatch::InPlace);
+        r.note(EdgePatch::Repacked);
+        r.cost_patches += 1;
+        assert_eq!((r.in_place, r.repacked, r.cost_patches), (2, 1, 1));
     }
 }

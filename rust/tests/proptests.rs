@@ -290,6 +290,120 @@ fn prop_row_scaling_preserves_primal_and_scales_dual() {
 }
 
 #[test]
+fn prop_serve_snapshot_round_trips_across_all_projection_families() {
+    // The durable warm-start snapshot (serve/snapshot.rs) must round-trip
+    // bit-identically for every registered projection family: the encoded
+    // bytes re-encode byte-for-byte after a decode, the cache entries keep
+    // their exact λ/γ bits and LRU ticks, and a decoded mid-solve
+    // checkpoint resumes to the same iteration count, stop reason,
+    // trajectory and final λ as the in-memory checkpoint it was copied
+    // from.
+    use dualip::engine::{Fingerprint, WarmStartCache};
+    use dualip::projection::registry;
+    use dualip::serve::snapshot::{self, CheckpointEntry};
+    use dualip::solver::{
+        Agd, DriverOptions, GammaSchedule, SolveDriver, SolveOptions, StepEvent,
+    };
+
+    let families = registry::families();
+    assert!(!families.is_empty());
+    let mut rng = Rng::new(1111);
+    for family in families {
+        // bare name → family defaults; parameterized families fall back to
+        // their registered conformance sample
+        let kind = ProjectionKind::parse(&family)
+            .or_else(|| {
+                registry::family_samples(&family)
+                    .first()
+                    .and_then(|s| ProjectionKind::parse(s))
+            })
+            .unwrap_or_else(|| panic!("family {family} has no parseable spec"));
+        for case in 0u64..3 {
+            let lp = generate(&SyntheticConfig {
+                num_requests: 60 + rng.below(60),
+                num_resources: 8 + rng.below(8),
+                avg_nnz_per_row: 3.0 + rng.uniform() * 3.0,
+                kind,
+                seed: 3000 + case,
+                ..Default::default()
+            });
+            let fp = Fingerprint::of(&lp);
+            let opts = SolveOptions {
+                max_iters: 30 + rng.below(20),
+                gamma: GammaSchedule::Decay { init: 0.08, floor: 0.02, factor: 0.5, every: 7 },
+                ..Default::default()
+            };
+            let init = vec![0.0f32; lp.dual_dim()];
+            let mut obj = CpuObjective::new(&lp);
+            let mut driver = SolveDriver::new(
+                Box::new(Agd::default().stepper()),
+                &init,
+                opts,
+                DriverOptions::default(),
+            );
+            for _ in 0..5 + rng.below(10) {
+                if let StepEvent::Stopped { .. } = driver.step(&mut obj) {
+                    panic!("family {family}: solve stopped before the pause point");
+                }
+            }
+            let ck = driver.checkpoint().expect("AGD steppers always checkpoint");
+
+            let mut cache = WarmStartCache::new(4);
+            cache.insert(fp, driver.current_lam().to_vec(), 0.05);
+            let _ = cache.lookup(&fp);
+
+            let entry =
+                CheckpointEntry { request_id: case, fingerprint: fp, checkpoint: ck.clone() };
+            let bytes = snapshot::encode(&cache, &[entry]).unwrap();
+            let snap = snapshot::decode(&bytes).unwrap();
+            let again = snapshot::encode(&snap.cache, &snap.checkpoints).unwrap();
+            assert_eq!(bytes, again, "family {family}: re-encode not byte-identical");
+
+            assert_eq!(snap.cache.tick(), cache.tick(), "family {family}");
+            let (ea, eb) = (cache.export_entries(), snap.cache.export_entries());
+            assert_eq!(ea.len(), eb.len());
+            for ((fa, wa, ta), (fb, wb, tb)) in ea.iter().zip(&eb) {
+                assert_eq!((fa, ta), (fb, tb), "family {family}");
+                assert_eq!(wa.gamma.to_bits(), wb.gamma.to_bits());
+                assert_eq!(wa.refreshes, wb.refreshes);
+                assert_eq!(wa.lam.len(), wb.lam.len());
+                for (x, y) in wa.lam.iter().zip(&wb.lam) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "family {family}: cached λ bits");
+                }
+            }
+
+            // finish the solve twice: from the in-memory checkpoint and
+            // from the decoded one — they must be indistinguishable
+            let decoded = snap.checkpoints.into_iter().next().unwrap();
+            assert_eq!(decoded.request_id, case);
+            assert_eq!(decoded.fingerprint, fp);
+            let mut obj_a = CpuObjective::new(&lp);
+            let mut obj_b = CpuObjective::new(&lp);
+            let mut da = SolveDriver::resume(ck);
+            let mut db = SolveDriver::resume(decoded.checkpoint);
+            while !matches!(da.step(&mut obj_a), StepEvent::Stopped { .. }) {}
+            while !matches!(db.step(&mut obj_b), StepEvent::Stopped { .. }) {}
+            let (ra, rb) = (da.result(&mut obj_a), db.result(&mut obj_b));
+            assert_eq!(ra.iterations, rb.iterations, "family {family}");
+            assert_eq!(ra.stop_reason, rb.stop_reason, "family {family}");
+            assert_eq!(
+                ra.final_obj.dual_obj.to_bits(),
+                rb.final_obj.dual_obj.to_bits(),
+                "family {family}: objective diverged after decode"
+            );
+            assert_eq!(ra.trajectory.len(), rb.trajectory.len());
+            for (x, y) in ra.trajectory.iter().zip(&rb.trajectory) {
+                assert_eq!(x.iter, y.iter);
+                assert_eq!(x.dual_obj.to_bits(), y.dual_obj.to_bits());
+            }
+            for (x, y) in ra.lam.iter().zip(&rb.lam) {
+                assert_eq!(x.to_bits(), y.to_bits(), "family {family}: λ diverged");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_rng_distribution_sanity() {
     // Kolmogorov-style coarse checks to catch seeding regressions.
     let mut rng = Rng::new(808);
