@@ -1,0 +1,22 @@
+// Known-good snippet: the suppression paths must NOT fire. A justified
+// waiver covers the hash container; a SAFETY comment covers the unsafe
+// block; the integer turbofish blesses the threaded sum. Zero expected
+// findings — over-firing fails the self-check just like under-firing.
+// audit:path(src/solver/fixture.rs)
+
+pub struct S {
+    // audit:allow(unordered-iter): scratch map is drained into a sorted Vec before any ordered use
+    pub m: std::collections::HashMap<u32, u32>,
+}
+
+pub fn count(parts: &[Vec<u32>]) -> usize {
+    std::thread::scope(|s| {
+        let _ = s;
+    });
+    parts.iter().map(|p| p.len()).sum::<usize>()
+}
+
+pub fn pid() -> i32 {
+    // SAFETY: getpid reads no memory and cannot fail
+    unsafe { libc::getpid() }
+}

@@ -1,0 +1,8 @@
+// Known-bad snippet for D1 tier 1: a hash container declared in a
+// determinism-critical module. Not compiled — consumed by the audit
+// self-check (`cargo run --bin audit -- --self-check`).
+// audit:path(src/solver/fixture.rs)
+// audit:expect(D1)
+pub struct Scratch {
+    pub by_row: std::collections::HashMap<u32, f32>,
+}

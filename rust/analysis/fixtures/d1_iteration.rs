@@ -1,0 +1,15 @@
+// Known-bad snippet for D1 tier 2: iterating a bound hash container in a
+// determinism-critical module. The declaration line fires tier 1, the
+// `.keys()` site fires the sharper tier-2 message.
+// audit:path(src/engine/fixture.rs)
+// audit:expect(D1)
+// audit:expect(D1)
+pub struct Cache {
+    entries: std::collections::HashMap<u64, f32>,
+}
+
+impl Cache {
+    pub fn dump(&self) -> Vec<u64> {
+        self.entries.keys().copied().collect()
+    }
+}

@@ -1,0 +1,11 @@
+// Known-bad snippet for D2: ambient wall-clock reads outside
+// util/timer.rs. `Instant::now` and `SystemTime` each fire once.
+// audit:path(src/solver/fixture.rs)
+// audit:expect(D2)
+// audit:expect(D2)
+pub fn elapsed_since_epoch_ms() -> (std::time::Instant, u64) {
+    let t = std::time::Instant::now();
+    let e = std::time::SystemTime::UNIX_EPOCH;
+    let _ = e;
+    (t, 0)
+}

@@ -1,0 +1,12 @@
+// Known-bad snippet for D3: a bare float `.sum()` in a file that spawns
+// threads — the reduction order depends on interleaving, breaking
+// N-thread ≡ 1-thread. The fix is reduce_chunk_partials (chunk-index
+// order) or an integer turbofish when the sum is integral.
+// audit:path(src/backend/fixture.rs)
+// audit:expect(D3)
+pub fn eval(parts: &[f32]) -> f32 {
+    std::thread::scope(|s| {
+        let _ = s;
+    });
+    parts.iter().sum()
+}

@@ -1,0 +1,9 @@
+// Known-bad snippet for R1: a projection family registered in src/ that
+// neither test tier references — one finding per missing tier
+// (tests/conformance.rs and tests/backend_parity.rs).
+// audit:path(src/projection/fixture.rs)
+// audit:expect(R1)
+// audit:expect(R1)
+pub fn install(r: &mut Registry) {
+    r.add_family("ghost_family", &["ghost_family:1"], parse_ghost);
+}

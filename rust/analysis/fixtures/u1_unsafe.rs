@@ -1,0 +1,8 @@
+// Known-bad snippet for U1: an `unsafe` block with no adjacent
+// `// SAFETY:` argument (must appear on the same line or within the three
+// lines above).
+// audit:path(src/util/fixture.rs)
+// audit:expect(U1)
+pub fn thread_id() -> i32 {
+    unsafe { libc::getpid() }
+}

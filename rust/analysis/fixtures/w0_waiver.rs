@@ -1,0 +1,14 @@
+// Known-bad snippet for W0: a waiver naming an unknown rule, and a
+// waiver with no justification — which is itself W0 AND leaves the D1 it
+// tried to cover standing.
+// audit:path(src/sparse/fixture.rs)
+// audit:expect(W0)
+// audit:expect(W0)
+// audit:expect(D1)
+// audit:allow(no-such-rule): slug typo — does not match any catalog entry
+pub fn a() {}
+
+// audit:allow(unordered-iter):
+pub struct S {
+    pub m: std::collections::HashMap<u32, u32>,
+}

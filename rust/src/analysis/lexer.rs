@@ -1,0 +1,379 @@
+//! Minimal Rust token scanner for the audit pass (DESIGN.md §10).
+//!
+//! Deliberately NOT a parser: the vendored-shim build must stay offline,
+//! so there is no `syn`/`proc-macro2` here — just a hand-rolled scanner
+//! that is exact about the three things that make naive `grep` lie:
+//!
+//! * **string/char literals** (including raw strings `r#"…"#` and byte
+//!   strings) — pattern text inside a literal is not code;
+//! * **comments** (line, doc, nested block) — kept as a side channel,
+//!   because waivers (`// audit:allow(rule): why`) and `// SAFETY:`
+//!   obligations live there;
+//! * **`#[cfg(test)]` regions** — the invariants target production code;
+//!   test modules may iterate hash maps and `unwrap()` freely.
+//!
+//! Numbers never swallow `.` (`1.5` lexes as three tokens), which keeps
+//! method-call detection (`.sum`, `.unwrap`) purely positional, and `::`
+//! is fused into one token so path patterns (`Instant::now`) are a flat
+//! ident/punct sequence.
+
+/// Token class. Only the distinctions the rules need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// String literal (normal, raw, or byte); `text` is the *inner*
+    /// content, delimiters stripped.
+    Str,
+    /// Char literal, inner content.
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line or block) anchored at its starting line; `text` is
+/// the inner content without `//`/`/*` delimiters.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Scanner output: code tokens plus the comment side channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Scan `src` into tokens and comments. Never fails: unterminated
+/// literals/comments run to end-of-file (the real compiler rejects those
+/// files anyway; the auditor should not panic on them).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    // Helper: number of '\n' in b[from..to).
+    let count_newlines = |from: usize, to: usize| -> u32 {
+        b[from..to].iter().filter(|&&c| c == '\n').count() as u32
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                text: b[start..j].iter().collect::<String>().trim().to_string(),
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            // nested block comment
+            let start = i + 2;
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = start;
+            while j < n && depth > 0 {
+                if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = if depth == 0 { j - 2 } else { j };
+            line += count_newlines(i, j);
+            out.comments.push(Comment {
+                line: start_line,
+                text: b[start..end].iter().collect::<String>().trim().to_string(),
+            });
+            i = j;
+            continue;
+        }
+        // identifiers and prefixed literals (r"", r#""#, b"", br"", b'')
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            let word: String = b[start..j].iter().collect();
+            let is_raw_prefix = matches!(word.as_str(), "r" | "br" | "rb");
+            let is_byte_prefix = word == "b";
+            if (is_raw_prefix && j < n && (b[j] == '"' || b[j] == '#'))
+                || (is_byte_prefix && j < n && b[j] == '"')
+            {
+                // raw/byte string: consume `#`*, then `"` … `"` `#`*
+                let before_hashes = j;
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    j += 1;
+                    let lit_start = j;
+                    'scan: while j < n {
+                        if b[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    let lit_end = j.min(n);
+                    let tok_line = line;
+                    line += count_newlines(start, lit_end);
+                    out.toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: b[lit_start..lit_end].iter().collect(),
+                        line: tok_line,
+                    });
+                    i = (lit_end + 1 + hashes).min(n);
+                    continue;
+                }
+                // `r#ident` raw identifier: rewind and fall through as ident
+                j = before_hashes;
+            }
+            if is_byte_prefix && j < n && b[j] == '\'' {
+                // byte char literal b'x'
+                let (tok, nj, nl) = scan_char_lit(&b, j, line);
+                out.toks.push(tok);
+                line = nl;
+                i = nj;
+                continue;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text: word, line });
+            i = j;
+            continue;
+        }
+        // numbers (dot-free by design; see module docs)
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Num,
+                text: b[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // strings
+        if c == '"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < n {
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '"' {
+                    break;
+                }
+                j += 1;
+            }
+            let end = j.min(n);
+            let tok_line = line;
+            line += count_newlines(i, end);
+            out.toks.push(Tok {
+                kind: TokKind::Str,
+                text: b[start..end.min(n)].iter().collect(),
+                line: tok_line,
+            });
+            i = (end + 1).min(n);
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            // lifetime: 'ident not closed by another quote
+            let mut j = i + 1;
+            if j < n && (b[j].is_alphabetic() || b[j] == '_') && b[j] != '\\' {
+                let ls = j;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' {
+                    // 'a' — a one-char literal
+                    out.toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: b[ls..j].iter().collect(),
+                        line,
+                    });
+                    i = j + 1;
+                    continue;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[ls..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            let (tok, nj, nl) = scan_char_lit(&b, i, line);
+            out.toks.push(tok);
+            line = nl;
+            i = nj;
+            continue;
+        }
+        // `::` fused
+        if c == ':' && i + 1 < n && b[i + 1] == ':' {
+            out.toks.push(Tok { kind: TokKind::Punct, text: "::".to_string(), line });
+            i += 2;
+            continue;
+        }
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// Scan a char literal starting at the opening `'` (index `i`); returns
+/// (token, next index, next line).
+fn scan_char_lit(b: &[char], i: usize, line: u32) -> (Tok, usize, u32) {
+    let n = b.len();
+    let start = i + 1;
+    let mut j = start;
+    while j < n {
+        if b[j] == '\\' {
+            j += 2;
+            continue;
+        }
+        if b[j] == '\'' {
+            break;
+        }
+        j += 1;
+    }
+    let end = j.min(n);
+    let tok = Tok {
+        kind: TokKind::Char,
+        text: b[start..end.min(n)].iter().collect(),
+        line,
+    };
+    (tok, (end + 1).min(n), line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_pattern_text() {
+        let l = lex(r#"let s = "HashMap::iter() Instant::now()"; s.len();"#);
+        assert!(!idents(&l).contains(&"HashMap"));
+        assert!(idents(&l).contains(&"len"));
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let l = lex(r###"let s = r#"unsafe "quoted" HashMap"#; t.sum();"###);
+        assert!(!idents(&l).contains(&"HashMap"));
+        assert!(!idents(&l).contains(&"unsafe"));
+        assert!(idents(&l).contains(&"sum"));
+    }
+
+    #[test]
+    fn comments_are_side_channel() {
+        let l = lex("// audit:allow(wall-clock): bench driver\nlet x = 1; /* SAFETY: nope */");
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.starts_with("audit:allow"));
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[1].text.contains("SAFETY:"));
+        assert!(!idents(&l).contains(&"SAFETY"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("/* outer /* inner */ still comment */ fn x() {}");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(idents(&l), vec!["fn", "x"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) -> char { 'y' }");
+        let lifetimes: Vec<_> =
+            l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars: Vec<_> = l.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 1);
+        assert_eq!(chars[0].text, "y");
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let l = lex(r"let q = '\''; let b = '\\'; let nl = '\n';");
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 3);
+        assert!(idents(&l).contains(&"nl"));
+    }
+
+    #[test]
+    fn double_colon_is_fused() {
+        let l = lex("Instant::now()");
+        let texts: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["Instant", "::", "now", "(", ")"]);
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let l = lex("let a = \"x\ny\";\nlet b = 2;");
+        let b_tok = l.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_dots() {
+        let l = lex("let x = 1.5; v.sum();");
+        let texts: Vec<_> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"1"));
+        assert!(texts.contains(&"5"));
+        assert!(texts.contains(&"sum"));
+    }
+}

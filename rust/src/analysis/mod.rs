@@ -1,0 +1,236 @@
+//! `dualip-audit` — the in-repo static-analysis pass (DESIGN.md §10).
+//!
+//! Every guarantee this repo ships — N-thread ≡ 1-thread evaluation
+//! (`backend/`), S-shard ≡ 1-shard solves (`distributed/`),
+//! checkpoint/resume ≡ straight runs (`solver/driver.rs`), byte-stable
+//! snapshots (`serve/snapshot.rs`) — is a *determinism invariant* that
+//! lives in tests and reviewers' heads. The patterns that silently break
+//! those invariants (unordered hash-map iteration, ambient wall-clock
+//! reads, unordered float reductions, panics on the serve hot path) are
+//! all *statically visible*, so this module makes them machine-checked:
+//! a dependency-free token scan ([`lexer`]) feeds a rule catalog
+//! ([`rules`]) over `src/`, `benches/`, and `examples/`, with a
+//! panic-budget ratchet ([`ratchet`]) that CI only lets go down, and a
+//! fixture self-check ([`selfcheck`]) so the auditor cannot rot.
+//!
+//! Run it as `cargo run --bin audit` (`--format json` for machines,
+//! `--update-ratchet` after removing panic sites, `--self-check` for the
+//! fixtures). Exit code 0 means every invariant holds or carries a
+//! justified `// audit:allow(rule): why` waiver.
+
+pub mod lexer;
+pub mod ratchet;
+pub mod report;
+pub mod rules;
+pub mod selfcheck;
+pub mod walk;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub use ratchet::Ratchet;
+pub use report::{AuditReport, Finding};
+pub use rules::{check_file, check_registry, panic_counts, AnalyzedFile};
+pub use selfcheck::{run_fixtures, FixtureResult};
+
+/// Resolve the directories of one audit root. `root` is the crate root
+/// (the directory holding `src/`); `examples/` may live beside it or one
+/// level up (this repo shares `examples/` with the python side).
+struct Layout {
+    src: PathBuf,
+    benches: PathBuf,
+    examples: PathBuf,
+    tests: PathBuf,
+    ratchet: PathBuf,
+}
+
+impl Layout {
+    fn of(root: &Path) -> Layout {
+        let examples = if root.join("examples").exists() {
+            root.join("examples")
+        } else {
+            root.join("../examples")
+        };
+        Layout {
+            src: root.join("src"),
+            benches: root.join("benches"),
+            examples,
+            tests: root.join("tests"),
+            ratchet: root.join("analysis/ratchet.toml"),
+        }
+    }
+}
+
+/// Load and analyze every `.rs` file under `dir`, rel-prefixed `prefix/`.
+fn load_dir(dir: &Path, prefix: &str) -> Result<Vec<AnalyzedFile>, String> {
+    let mut out = Vec::new();
+    for p in walk::rs_files(dir)? {
+        let rel = format!("{prefix}/{}", walk::rel_path(dir, &p));
+        let src = walk::read_to_string(&p)?;
+        out.push(AnalyzedFile::parse(&rel, &src));
+    }
+    Ok(out)
+}
+
+/// Audit the tree rooted at `root` (the crate root). Walks `src/`,
+/// `benches/`, and `examples/`, runs the full rule catalog, counts the
+/// P1 panic budget, and compares it against `analysis/ratchet.toml`
+/// (budget 0 everywhere if the file is absent).
+pub fn audit_tree(root: &Path) -> Result<AuditReport, String> {
+    let layout = Layout::of(root);
+    let src = load_dir(&layout.src, "src")?;
+    let benches = load_dir(&layout.benches, "benches")?;
+    let examples = load_dir(&layout.examples, "examples")?;
+    let tests = load_dir(&layout.tests, "tests")?;
+
+    let mut report = AuditReport {
+        files: src.len() + benches.len() + examples.len(),
+        ..Default::default()
+    };
+
+    // in-file rules over every walked file
+    for f in src.iter().chain(&benches).chain(&examples) {
+        report.findings.extend(check_file(f));
+    }
+
+    // R1: registry three-tier coverage
+    let (r1, notes) = check_registry(&src, &tests);
+    report.findings.extend(r1);
+    report.notes.extend(notes);
+
+    // P1: per-module counts vs the ratchet
+    let mut totals: BTreeMap<String, rules::PanicCounts> = BTreeMap::new();
+    for f in &src {
+        if let Some(module) = f.module() {
+            let c = panic_counts(f);
+            let t = totals.entry(module).or_default();
+            t.unwrap += c.unwrap;
+            t.expect += c.expect;
+            t.panics += c.panics;
+            t.index += c.index;
+        }
+    }
+    for (module, c) in &totals {
+        for (metric, count) in c.metrics() {
+            report.counts.insert(format!("{module}.{metric}"), count);
+        }
+    }
+    let ratchet = if layout.ratchet.exists() {
+        Ratchet::parse(&walk::read_to_string(&layout.ratchet)?)?
+    } else {
+        report
+            .notes
+            .push("no analysis/ratchet.toml — every panic budget defaults to 0".to_string());
+        Ratchet::default()
+    };
+    let (p1, notes) = ratchet.compare(&report.counts);
+    report.findings.extend(p1);
+    report.notes.extend(notes);
+
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+/// Rewrite `analysis/ratchet.toml` to the actual counts (after an audit).
+pub fn update_ratchet(root: &Path, report: &AuditReport) -> Result<(), String> {
+    let path = Layout::of(root).ratchet;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    }
+    std::fs::write(&path, Ratchet::render(&report.counts))
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Run the fixture self-check for the tree rooted at `root`.
+pub fn self_check(root: &Path) -> Result<Vec<FixtureResult>, String> {
+    let layout = Layout::of(root);
+    run_fixtures(&root.join("analysis/fixtures"), &layout.tests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    /// Build a minimal crate layout under a temp dir.
+    fn scaffold(name: &str, files: &[(&str, &str)]) -> PathBuf {
+        let root = std::env::temp_dir().join(format!("dualip_audit_{name}"));
+        let _ = fs::remove_dir_all(&root);
+        for (rel, content) in files {
+            let p = root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(&p, content).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn clean_scaffold_audits_clean() {
+        let root = scaffold(
+            "clean",
+            &[
+                ("src/lib.rs", "pub mod solver;\n"),
+                ("src/solver/mod.rs", "pub fn step(x: f32) -> f32 { x * 2.0 }\n"),
+            ],
+        );
+        let r = audit_tree(&root).unwrap();
+        assert!(r.clean(), "{:?}", r.findings);
+        assert_eq!(r.files, 2);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn injected_violation_is_found_and_located() {
+        let root = scaffold(
+            "inject",
+            &[(
+                "src/solver/bad.rs",
+                "use std::collections::HashMap;\npub fn f(m: &HashMap<u32, u32>) -> u32 {\n    m.values().sum()\n}\n",
+            )],
+        );
+        let r = audit_tree(&root).unwrap();
+        assert!(!r.clean());
+        let d1: Vec<_> = r.findings.iter().filter(|f| f.rule == "D1").collect();
+        assert!(d1.len() >= 2, "{:?}", r.findings);
+        assert_eq!(d1[0].file, "src/solver/bad.rs");
+        assert_eq!(d1[0].line, 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn panic_sites_without_budget_fail_the_ratchet() {
+        let root = scaffold(
+            "nobudget",
+            &[("src/serve/mod.rs", "pub fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n")],
+        );
+        let r = audit_tree(&root).unwrap();
+        assert!(r.findings.iter().any(|f| f.rule == "P1"), "{:?}", r.findings);
+        assert_eq!(r.counts.get("serve.unwrap"), Some(&1));
+        // checking in the budget makes it clean; update_ratchet writes it
+        update_ratchet(&root, &r).unwrap();
+        let r2 = audit_tree(&root).unwrap();
+        assert!(r2.clean(), "{:?}", r2.findings);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn ratchet_decrease_passes_increase_fails() {
+        let src_ok = "pub fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() }\n";
+        let src_more =
+            "pub fn f(v: &[u32]) -> u32 { v.first().copied().unwrap() + v.last().copied().unwrap() }\n";
+        let ratchet = "[panic_budget]\nsolver.unwrap = 1\n";
+        let root = scaffold(
+            "ratchet",
+            &[("src/solver/mod.rs", src_ok), ("analysis/ratchet.toml", ratchet)],
+        );
+        assert!(audit_tree(&root).unwrap().clean());
+        fs::write(root.join("src/solver/mod.rs"), src_more).unwrap();
+        let r = audit_tree(&root).unwrap();
+        assert_eq!(r.findings.len(), 1);
+        assert_eq!(r.findings[0].rule, "P1");
+        assert!(r.findings[0].message.contains("exceeds"));
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,214 @@
+//! The P1 panic-budget ratchet (DESIGN.md §10).
+//!
+//! `analysis/ratchet.toml` pins, per top-level `src/` module, how many
+//! panic-capable sites (`.unwrap()`, `.expect(`, `panic!`-family macros,
+//! direct index expressions) production code currently contains. The
+//! audit recounts on every run and compares:
+//!
+//! * count **above** budget → P1 finding (CI fails): new panic sites
+//!   must be converted to `Result`/shed outcomes, not accumulated;
+//! * count **below** budget → informational note: the budget can be
+//!   lowered (`cargo run --bin audit -- --update-ratchet` rewrites the
+//!   file to the actual counts);
+//! * module absent from the file → budget 0, so brand-new modules start
+//!   panic-free by default and must check in an explicit budget.
+//!
+//! The file is a deliberately tiny TOML subset — comments, one optional
+//! `[panic_budget]` section header, and `module.metric = count` lines —
+//! parsed here so the offline vendored-shim build needs no TOML crate.
+
+use std::collections::BTreeMap;
+
+use super::report::Finding;
+
+/// Parsed ratchet: budgets keyed `module.metric`, with the source line
+/// of each key for finding locations.
+#[derive(Debug, Default)]
+pub struct Ratchet {
+    budgets: BTreeMap<String, (usize, u32)>,
+}
+
+impl Ratchet {
+    /// Parse ratchet text. Unknown syntax is an error — a malformed
+    /// ratchet silently parsed as empty would zero every budget and fail
+    /// CI with misleading findings.
+    pub fn parse(text: &str) -> Result<Ratchet, String> {
+        let mut budgets = BTreeMap::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let lineno = (idx + 1) as u32;
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                if line != "[panic_budget]" {
+                    return Err(format!(
+                        "ratchet.toml:{lineno}: unknown section {line}"
+                    ));
+                }
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(format!("ratchet.toml:{lineno}: expected `key = count`"));
+            };
+            let key = key.trim().trim_matches('"').to_string();
+            let val: usize = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("ratchet.toml:{lineno}: non-integer budget"))?;
+            if !key.contains('.') {
+                return Err(format!(
+                    "ratchet.toml:{lineno}: key must be `module.metric`"
+                ));
+            }
+            if budgets.insert(key.clone(), (val, lineno)).is_some() {
+                return Err(format!("ratchet.toml:{lineno}: duplicate key {key}"));
+            }
+        }
+        Ok(Ratchet { budgets })
+    }
+
+    pub fn budget(&self, key: &str) -> usize {
+        self.budgets.get(key).map(|&(v, _)| v).unwrap_or(0)
+    }
+
+    /// Compare actual counts against budgets. Returns P1 findings for
+    /// exceedances plus slack notes.
+    pub fn compare(
+        &self,
+        counts: &BTreeMap<String, usize>,
+    ) -> (Vec<Finding>, Vec<String>) {
+        let mut findings = Vec::new();
+        let mut notes = Vec::new();
+        for (key, &count) in counts {
+            match self.budgets.get(key) {
+                Some(&(budget, lineno)) if count > budget => {
+                    findings.push(Finding::new(
+                        "analysis/ratchet.toml",
+                        lineno,
+                        "P1",
+                        "panic-budget",
+                        format!(
+                            "{key} = {count} exceeds ratcheted budget {budget} — \
+                             convert the new panic site(s) to Result/shed outcomes; \
+                             budgets only go down"
+                        ),
+                    ));
+                }
+                Some(&(budget, _)) if count < budget => {
+                    notes.push(format!(
+                        "P1 slack: {key} = {count}, budget {budget} — run \
+                         --update-ratchet to lower it"
+                    ));
+                }
+                Some(_) => {}
+                None if count > 0 => {
+                    findings.push(Finding::new(
+                        "analysis/ratchet.toml",
+                        0,
+                        "P1",
+                        "panic-budget",
+                        format!(
+                            "{key} = {count} but module has no checked-in budget — \
+                             new modules start panic-free; add an explicit budget \
+                             line if the sites are justified"
+                        ),
+                    ));
+                }
+                None => {}
+            }
+        }
+        // budgets for metrics that no longer exist (module deleted /
+        // renamed) rot silently — surface them
+        for (key, &(budget, _)) in &self.budgets {
+            if budget > 0 && !counts.contains_key(key) {
+                notes.push(format!(
+                    "P1 stale: {key} budgeted {budget} but no such module.metric \
+                     was counted — delete the line"
+                ));
+            }
+        }
+        (findings, notes)
+    }
+
+    /// Render a fresh ratchet file from actual counts (`--update-ratchet`).
+    pub fn render(counts: &BTreeMap<String, usize>) -> String {
+        let mut out = String::from(
+            "# dualip-audit P1 panic budget — panic-capable sites per src/ module\n\
+             # (unwrap / expect / panic-family macros / direct index expressions),\n\
+             # counted outside #[cfg(test)]. CI only lets these counts go DOWN.\n\
+             # Regenerate after removing panic sites with:\n\
+             #   cargo run --bin audit -- --update-ratchet\n\
+             \n[panic_budget]\n",
+        );
+        for (k, v) in counts {
+            if *v > 0 {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, usize)]) -> BTreeMap<String, usize> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let c = counts(&[("solver.unwrap", 3), ("serve.index", 17), ("gen.expect", 0)]);
+        let text = Ratchet::render(&c);
+        let r = Ratchet::parse(&text).unwrap();
+        assert_eq!(r.budget("solver.unwrap"), 3);
+        assert_eq!(r.budget("serve.index"), 17);
+        // zero counts are omitted → default budget 0
+        assert_eq!(r.budget("gen.expect"), 0);
+        assert_eq!(r.budget("never.seen"), 0);
+    }
+
+    #[test]
+    fn increase_is_a_finding_decrease_is_a_note() {
+        let r = Ratchet::parse("[panic_budget]\nsolver.unwrap = 3\nserve.unwrap = 5\n").unwrap();
+        let (f, notes) = r.compare(&counts(&[("solver.unwrap", 4), ("serve.unwrap", 2)]));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "P1");
+        assert!(f[0].message.contains("solver.unwrap = 4 exceeds"));
+        assert_eq!(f[0].line, 2);
+        assert!(notes.iter().any(|n| n.contains("serve.unwrap = 2")));
+    }
+
+    #[test]
+    fn unbudgeted_module_defaults_to_zero() {
+        let r = Ratchet::parse("[panic_budget]\n").unwrap();
+        let (f, _) = r.compare(&counts(&[("newmod.panic", 1)]));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("no checked-in budget"));
+        // ...but a zero count is fine
+        let (f2, _) = r.compare(&counts(&[("newmod.panic", 0)]));
+        assert!(f2.is_empty());
+    }
+
+    #[test]
+    fn stale_budgets_are_noted() {
+        let r = Ratchet::parse("[panic_budget]\ngone.unwrap = 9\n").unwrap();
+        let (f, notes) = r.compare(&counts(&[]));
+        assert!(f.is_empty());
+        assert!(notes.iter().any(|n| n.contains("stale")));
+    }
+
+    #[test]
+    fn malformed_ratchet_is_an_error_not_empty() {
+        assert!(Ratchet::parse("[wrong_section]\n").is_err());
+        assert!(Ratchet::parse("solver.unwrap: 3\n").is_err());
+        assert!(Ratchet::parse("[panic_budget]\nsolver.unwrap = many\n").is_err());
+        assert!(Ratchet::parse("[panic_budget]\nnodot = 3\n").is_err());
+        assert!(
+            Ratchet::parse("[panic_budget]\na.b = 1\na.b = 2\n").is_err(),
+            "duplicate keys rejected"
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Finding model and rendering (text + machine-readable JSON).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One audit finding: `file:line RULE message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Crate-root-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line (0 when the finding is file- or tree-level).
+    pub line: u32,
+    /// Rule code (`D1`, `D2`, `D3`, `P1`, `U1`, `R1`, `W0`).
+    pub rule: &'static str,
+    /// Waiver slug (`unordered-iter`, ...).
+    pub slug: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        file: &str,
+        line: u32,
+        rule: &'static str,
+        slug: &'static str,
+        message: String,
+    ) -> Finding {
+        Finding { file: file.to_string(), line, rule, slug, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Full result of one audit pass.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    /// P1 raw counts, keyed `module.metric` (always complete, whether or
+    /// not any budget was exceeded) — the input to `--update-ratchet`.
+    pub counts: BTreeMap<String, usize>,
+    /// Informational lines (budget slack, skipped tiers); never fatal.
+    pub notes: Vec<String>,
+    /// Files scanned.
+    pub files: usize,
+}
+
+impl AuditReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable rendering: one finding per line, then a summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out.push_str(&format!(
+            "audit: {} file(s), {} finding(s)\n",
+            self.files,
+            self.findings.len()
+        ));
+        out
+    }
+
+    /// Machine-readable rendering (`--format json`).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"file\": {}, \"line\": {}, \"rule\": {}, \"slug\": {}, \
+                 \"message\": {}}}",
+                json_str(&f.file),
+                f.line,
+                json_str(f.rule),
+                json_str(f.slug),
+                json_str(&f.message),
+            ));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("],\n  \"counts\": {");
+        for (i, (k, v)) in self.counts.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    {}: {}", json_str(k), v));
+        }
+        if !self.counts.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("},\n  \"notes\": [");
+        for (i, n) in self.notes.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    {}", json_str(n)));
+        }
+        if !self.notes.is_empty() {
+            out.push_str("\n  ");
+        }
+        let tail = format!("],\n  \"files\": {},\n  \"clean\": {}\n}}\n", self.files, self.clean());
+        out.push_str(&tail);
+        out
+    }
+}
+
+/// JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_format_is_file_line_rule_message() {
+        let f = Finding::new("src/a.rs", 7, "D1", "unordered-iter", "msg here".into());
+        assert_eq!(f.to_string(), "src/a.rs:7 D1 msg here");
+    }
+
+    #[test]
+    fn json_escapes_and_round_trips_structure() {
+        let mut r = AuditReport::default();
+        r.files = 2;
+        r.findings.push(Finding::new(
+            "src/a.rs",
+            1,
+            "D2",
+            "wall-clock",
+            "quote \" backslash \\ tab\t".into(),
+        ));
+        r.counts.insert("solver.unwrap".into(), 3);
+        r.notes.push("note".into());
+        let j = r.render_json();
+        assert!(j.contains("\\\""));
+        assert!(j.contains("\\\\"));
+        assert!(j.contains("\\t"));
+        assert!(j.contains("\"solver.unwrap\": 3"));
+        assert!(j.contains("\"clean\": false"));
+        // braces/brackets balance
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = j.matches(open).count();
+            let c = j.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close}");
+        }
+    }
+
+    #[test]
+    fn empty_report_is_clean_and_valid() {
+        let r = AuditReport::default();
+        assert!(r.clean());
+        let j = r.render_json();
+        assert!(j.contains("\"findings\": []"));
+        assert!(j.contains("\"clean\": true"));
+        assert!(r.render_text().contains("0 finding(s)"));
+    }
+}

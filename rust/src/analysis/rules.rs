@@ -1,0 +1,763 @@
+//! The audit rule catalog (DESIGN.md §10).
+//!
+//! Every rule enforces an invariant the rest of the repo *documents but
+//! cannot compile-check*: N-thread ≡ 1-thread evaluation, S-shard ≡
+//! 1-shard solves, checkpoint/resume ≡ straight runs, byte-stable
+//! snapshots, and a panic-free serve hot path. The catalog:
+//!
+//! | rule | slug                     | invariant                                      |
+//! |------|--------------------------|------------------------------------------------|
+//! | D1   | `unordered-iter`         | no `HashMap`/`HashSet` in determinism-critical modules (iteration order reaches fingerprints, snapshots, λ) |
+//! | D2   | `wall-clock`             | ambient clocks (`Instant::now`, `SystemTime`) only in `util/timer.rs`; everything else takes injected clocks |
+//! | D3   | `unordered-float-merge`  | float accumulation in threaded code must go through the chunk-index-ordered merge helpers, never a bare `.sum()`/`.fold` |
+//! | U1   | `missing-safety-comment` | every `unsafe` carries an adjacent `// SAFETY:` argument |
+//! | W0   | `bad-waiver`             | waivers must name a known rule and carry a justification |
+//! | P1   | `panic-budget`           | per-module `unwrap`/`expect`/`panic!`/index budget; the checked-in ratchet only goes down (see `ratchet.rs`) |
+//! | R1   | `registry-coverage`      | every registered projection family is wired through all three test tiers (see `check_registry`) |
+//!
+//! A finding at line L is waived by `// audit:allow(<slug>): <why>` on
+//! line L or L−1; the justification is mandatory (empty ⇒ W0).
+
+use std::collections::BTreeSet;
+
+use super::lexer::{lex, Comment, Lexed, Tok, TokKind};
+use super::report::Finding;
+
+/// Directories under `src/` where iteration order, clocks, and reduction
+/// order can reach fingerprints, snapshots, collectives, or cached λ.
+pub const CRITICAL_DIRS: &[&str] = &[
+    "src/solver/",
+    "src/backend/",
+    "src/sparse/",
+    "src/serve/",
+    "src/distributed/",
+    "src/engine/",
+    "src/projection/",
+    "src/runtime/",
+];
+
+/// The only file allowed to read ambient wall clocks (D2).
+pub const CLOCK_HOME: &str = "src/util/timer.rs";
+
+/// Rule slugs accepted by `audit:allow(...)` waivers.
+pub const WAIVABLE_SLUGS: &[&str] = &[
+    "unordered-iter",
+    "wall-clock",
+    "unordered-float-merge",
+    "missing-safety-comment",
+    "registry-coverage",
+];
+
+/// One source file, lexed and classified.
+pub struct AnalyzedFile {
+    /// Path relative to the crate root (`src/...`, `benches/...`,
+    /// `examples/...`, `tests/...`) with `/` separators.
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    /// Lines inside `#[cfg(test)]` items (1-based, inclusive).
+    test_ranges: Vec<(u32, u32)>,
+}
+
+/// A parsed `audit:allow(slug): justification` waiver.
+#[derive(Debug)]
+pub struct Waiver {
+    pub line: u32,
+    pub slug: String,
+    pub justification: String,
+}
+
+impl AnalyzedFile {
+    pub fn parse(rel: &str, src: &str) -> AnalyzedFile {
+        let Lexed { toks, comments } = lex(src);
+        let test_ranges = cfg_test_ranges(&toks);
+        AnalyzedFile { rel: rel.to_string(), toks, comments, test_ranges }
+    }
+
+    /// Whether `line` sits inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    fn is_critical(&self) -> bool {
+        CRITICAL_DIRS.iter().any(|d| self.rel.starts_with(d))
+    }
+
+    /// Top-level module for the panic ratchet: `src/solver/x.rs` →
+    /// `solver`, `src/lib.rs` → `root`, `src/bin/audit.rs` → `bin`.
+    pub fn module(&self) -> Option<String> {
+        let rest = self.rel.strip_prefix("src/")?;
+        Some(match rest.split_once('/') {
+            Some((dir, _)) => dir.to_string(),
+            None => "root".to_string(),
+        })
+    }
+
+    /// Waivers declared in this file's comments. A waiver comment must
+    /// *start with* `audit:allow(` — prose that merely mentions the
+    /// syntax (docs, this module) is not a waiver.
+    pub fn waivers(&self) -> Vec<Waiver> {
+        let mut out = Vec::new();
+        for c in &self.comments {
+            let Some(rest) = c.text.strip_prefix("audit:allow(") else { continue };
+            let (slug, after) = match rest.split_once(')') {
+                Some((s, a)) => (s.trim().to_string(), a),
+                None => (rest.trim().to_string(), ""),
+            };
+            let justification = after.trim_start_matches(':').trim().to_string();
+            out.push(Waiver { line: c.line, slug, justification });
+        }
+        out
+    }
+
+    /// Does any comment in lines `[lo, hi]` contain `needle`?
+    fn comment_in_range(&self, lo: u32, hi: u32, needle: &str) -> bool {
+        self.comments
+            .iter()
+            .any(|c| c.line >= lo && c.line <= hi && c.text.contains(needle))
+    }
+}
+
+/// Find `#[cfg(test)]` item ranges by brace matching from each attribute.
+fn cfg_test_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let is_attr = toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let start_line = toks[i].line;
+        // Scan to the end of the annotated item: the matching `}` of its
+        // first `{`, or a `;` reached before any brace opens.
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        let mut end_line = start_line;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        end_line = toks[j].line;
+                        break;
+                    }
+                }
+                ";" if depth == 0 => {
+                    end_line = toks[j].line;
+                    break;
+                }
+                _ => {}
+            }
+            end_line = toks[j].line;
+            j += 1;
+        }
+        out.push((start_line, end_line));
+        i = j + 1;
+    }
+    out
+}
+
+/// Per-module panic-class counts (P1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanicCounts {
+    pub unwrap: usize,
+    pub expect: usize,
+    /// `panic!` / `unreachable!` / `todo!` / `unimplemented!` invocations.
+    pub panics: usize,
+    /// Direct index expressions (`x[i]`, `f()[i]`, `a[i][j]`) — each can
+    /// panic on out-of-bounds.
+    pub index: usize,
+}
+
+impl PanicCounts {
+    pub fn metrics(&self) -> [(&'static str, usize); 4] {
+        [
+            ("unwrap", self.unwrap),
+            ("expect", self.expect),
+            ("panic", self.panics),
+            ("index", self.index),
+        ]
+    }
+}
+
+/// Count panic-capable sites outside `#[cfg(test)]` (P1 raw input).
+pub fn panic_counts(f: &AnalyzedFile) -> PanicCounts {
+    let mut c = PanicCounts::default();
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if f.in_test(t.line) {
+            continue;
+        }
+        // `.unwrap(` / `.expect(` with the call paren, so struct fields
+        // named `unwrap` (this module's own counters!) don't count
+        match t.text.as_str() {
+            "unwrap" | "expect"
+                if i > 0
+                    && toks[i - 1].text == "."
+                    && i + 1 < toks.len()
+                    && toks[i + 1].text == "(" =>
+            {
+                if t.text == "unwrap" {
+                    c.unwrap += 1
+                } else {
+                    c.expect += 1
+                }
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented"
+                if t.kind == TokKind::Ident
+                    && i + 1 < toks.len()
+                    && toks[i + 1].text == "!" =>
+            {
+                c.panics += 1
+            }
+            "[" if i > 0 => {
+                let p = &toks[i - 1];
+                let indexes = p.kind == TokKind::Ident && !is_keyword(&p.text)
+                    || p.text == ")"
+                    || p.text == "]";
+                if indexes {
+                    c.index += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    c
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "let" | "mut" | "ref" | "in" | "if" | "else" | "match" | "return" | "fn" | "impl"
+            | "pub" | "use" | "mod" | "struct" | "enum" | "trait" | "where" | "for"
+            | "while" | "loop" | "move" | "as" | "dyn" | "box" | "unsafe" | "const"
+            | "static" | "type"
+    )
+}
+
+/// Run the in-file rules (D1, D2, D3, U1, W0) and apply waivers.
+/// P1 (ratchet) and R1 (registry coverage) are tree-level and live in
+/// `ratchet.rs` / `check_registry`.
+pub fn check_file(f: &AnalyzedFile) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    rule_d1_unordered(f, &mut findings);
+    rule_d2_wall_clock(f, &mut findings);
+    rule_d3_float_merge(f, &mut findings);
+    rule_u1_safety(f, &mut findings);
+    apply_waivers(f, findings)
+}
+
+/// Drop findings covered by a same-line or line-above waiver with a
+/// matching slug, then append W0 findings for malformed waivers.
+fn apply_waivers(f: &AnalyzedFile, findings: Vec<Finding>) -> Vec<Finding> {
+    let waivers = f.waivers();
+    let mut out: Vec<Finding> = findings
+        .into_iter()
+        .filter(|fi| {
+            !waivers.iter().any(|w| {
+                w.slug == fi.slug
+                    && !w.justification.is_empty()
+                    && (w.line == fi.line || w.line + 1 == fi.line)
+            })
+        })
+        .collect();
+    for w in waivers {
+        if !WAIVABLE_SLUGS.contains(&w.slug.as_str()) {
+            out.push(Finding::new(
+                &f.rel,
+                w.line,
+                "W0",
+                "bad-waiver",
+                format!("waiver names unknown rule `{}`", w.slug),
+            ));
+        } else if w.justification.is_empty() {
+            out.push(Finding::new(
+                &f.rel,
+                w.line,
+                "W0",
+                "bad-waiver",
+                format!("waiver for `{}` carries no justification", w.slug),
+            ));
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// D1 — unordered containers in determinism-critical modules.
+///
+/// Two tiers: any `HashMap`/`HashSet` token (the declaration is the root
+/// cause — downstream iteration anywhere inherits the unorder), plus
+/// explicit iteration sites over identifiers bound to hash containers in
+/// this file (`.iter()`, `.keys()`, `for _ in &m`, ...), which get a
+/// sharper message.
+fn rule_d1_unordered(f: &AnalyzedFile, findings: &mut Vec<Finding>) {
+    if !f.is_critical() {
+        return;
+    }
+    let hash_names = ["HashMap", "HashSet"];
+    let iter_methods =
+        ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain"];
+    let toks = &f.toks;
+    // bound names: `name: HashMap<...>` fields/args and `name = HashMap::...`,
+    // seeing through path prefixes (`name: std::collections::HashMap<...>`)
+    let mut bound: BTreeSet<&str> = BTreeSet::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident || !hash_names.contains(&toks[i].text.as_str()) {
+            continue;
+        }
+        let mut p = i;
+        while p >= 2 && toks[p - 1].text == "::" && toks[p - 2].kind == TokKind::Ident {
+            p -= 2;
+        }
+        if p >= 2 && (toks[p - 1].text == ":" || toks[p - 1].text == "=") {
+            if toks[p - 2].kind == TokKind::Ident && !is_keyword(&toks[p - 2].text) {
+                bound.insert(toks[p - 2].text.as_str());
+            }
+        }
+    }
+    let mut flagged_lines: BTreeSet<u32> = BTreeSet::new();
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if f.in_test(t.line) {
+            continue;
+        }
+        // tier 1: the container token itself (one finding per line)
+        if t.kind == TokKind::Ident && hash_names.contains(&t.text.as_str()) {
+            if flagged_lines.insert(t.line) {
+                findings.push(Finding::new(
+                    &f.rel,
+                    t.line,
+                    "D1",
+                    "unordered-iter",
+                    format!(
+                        "`{}` in determinism-critical module — iteration order is \
+                         unordered; use BTreeMap/BTreeSet or sorted-key iteration",
+                        t.text
+                    ),
+                ));
+            }
+            continue;
+        }
+        // tier 2: iteration over a bound hash container
+        if t.kind == TokKind::Ident
+            && bound.contains(t.text.as_str())
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "."
+            && iter_methods.contains(&toks[i + 2].text.as_str())
+            && flagged_lines.insert(t.line)
+        {
+            findings.push(Finding::new(
+                &f.rel,
+                t.line,
+                "D1",
+                "unordered-iter",
+                format!(
+                    "iteration over unordered container `{}` in determinism-critical \
+                     module",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// D2 — ambient wall-clock reads outside `util/timer.rs`.
+fn rule_d2_wall_clock(f: &AnalyzedFile, findings: &mut Vec<Finding>) {
+    if f.rel == CLOCK_HOME {
+        return;
+    }
+    let toks = &f.toks;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if f.in_test(t.line) || t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "SystemTime" {
+            findings.push(Finding::new(
+                &f.rel,
+                t.line,
+                "D2",
+                "wall-clock",
+                "ambient `SystemTime` outside util/timer.rs — take an injected clock"
+                    .to_string(),
+            ));
+        }
+        if t.text == "Instant"
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "::"
+            && toks[i + 2].text == "now"
+        {
+            findings.push(Finding::new(
+                &f.rel,
+                t.line,
+                "D2",
+                "wall-clock",
+                "ambient `Instant::now` outside util/timer.rs — use util::timer \
+                 (Stopwatch/PhaseTimers) or an injected clock"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Identifiers that bless a `.sum()`/`.fold` statement as either integer
+/// arithmetic or an explicitly ordered/order-insensitive reduction.
+const D3_BLESSED: &[&str] = &[
+    "len",
+    "count",
+    "is_empty",
+    "max",
+    "min",
+    "rows",
+    "real_edges",
+    "padded_edges",
+    "reduce_chunk",
+    "reduce_chunk_partials",
+    "eval_chunk_partials",
+];
+
+const D3_INT_TYPES: &[&str] = &["usize", "u64", "u32", "u16", "u8", "i64", "i32", "isize"];
+
+/// D3 — bare float accumulation in threaded code.
+///
+/// In a file that spawns threads (`thread::scope` / `spawn`), a
+/// `.sum()`/`.fold(` whose statement neither names a chunk-ordered merge
+/// helper nor is provably integer/ordering-insensitive gets flagged: the
+/// result of an unordered float reduction depends on thread interleaving,
+/// which breaks the N-thread ≡ 1-thread guarantee.
+fn rule_d3_float_merge(f: &AnalyzedFile, findings: &mut Vec<Finding>) {
+    if !f.rel.starts_with("src/") {
+        return;
+    }
+    let toks = &f.toks;
+    let threaded = (0..toks.len()).any(|i| {
+        if f.in_test(toks[i].line) {
+            return false;
+        }
+        (toks[i].text == "thread"
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "::"
+            && toks[i + 2].text == "scope")
+            || toks[i].text == "spawn"
+    });
+    if !threaded {
+        return;
+    }
+    for i in 1..toks.len() {
+        let t = &toks[i];
+        if f.in_test(t.line) || t.kind != TokKind::Ident {
+            continue;
+        }
+        if (t.text != "sum" && t.text != "fold") || toks[i - 1].text != "." {
+            continue;
+        }
+        // statement span: back to the nearest `;` / `{` / `}`
+        let mut s = i;
+        while s > 0 && !matches!(toks[s - 1].text.as_str(), ";" | "{" | "}") {
+            s -= 1;
+        }
+        let stmt = &toks[s..i];
+        let blessed = stmt
+            .iter()
+            .any(|t| t.kind == TokKind::Ident && D3_BLESSED.contains(&t.text.as_str()));
+        // integer turbofish: `.sum::<usize>()`
+        let int_turbofish = i + 3 < toks.len()
+            && toks[i + 1].text == "::"
+            && toks[i + 2].text == "<"
+            && D3_INT_TYPES.contains(&toks[i + 3].text.as_str());
+        if !blessed && !int_turbofish {
+            findings.push(Finding::new(
+                &f.rel,
+                t.line,
+                "D3",
+                "unordered-float-merge",
+                format!(
+                    "bare `.{}` in threaded code — merge per-chunk partials in \
+                     chunk-index order (distributed::collective::reduce_chunk_partials)",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// U1 — `unsafe` without an adjacent `// SAFETY:` argument (within the
+/// three lines above, or on the same line).
+fn rule_u1_safety(f: &AnalyzedFile, findings: &mut Vec<Finding>) {
+    for t in &f.toks {
+        if t.kind != TokKind::Ident || t.text != "unsafe" || f.in_test(t.line) {
+            continue;
+        }
+        let lo = t.line.saturating_sub(3);
+        if !f.comment_in_range(lo, t.line, "SAFETY:") {
+            findings.push(Finding::new(
+                &f.rel,
+                t.line,
+                "U1",
+                "missing-safety-comment",
+                "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+}
+
+/// R1 — registry three-tier coverage.
+///
+/// Statically cross-references every projection family registered in
+/// `src/` (`add_family("name", ...)` / `register_family("name", ...)`)
+/// against the two test tiers the ROADMAP's registry-conformance item
+/// demands: the generic conformance suite (`tests/conformance.rs`, which
+/// pins the required-family list) and the slab `project_rows` parity
+/// tests (`tests/backend_parity.rs`). Registering a family without wiring
+/// both becomes a build-time finding instead of a silent coverage gap.
+///
+/// `test_files` maps rel path → analyzed contents; if a tier file is
+/// absent the check is skipped and a note is returned instead (partial
+/// trees, e.g. the CI injection probe).
+pub fn check_registry(
+    src_files: &[AnalyzedFile],
+    test_files: &[AnalyzedFile],
+) -> (Vec<Finding>, Vec<String>) {
+    const TIERS: [&str; 2] = ["tests/conformance.rs", "tests/backend_parity.rs"];
+    let mut notes = Vec::new();
+    let mut tiers: Vec<&AnalyzedFile> = Vec::new();
+    for t in TIERS {
+        match test_files.iter().find(|f| f.rel == t) {
+            Some(f) => tiers.push(f),
+            None => notes.push(format!("R1: {t} not found — registry coverage not checked")),
+        }
+    }
+    let mut findings = Vec::new();
+    for f in src_files {
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if f.in_test(t.line) || t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text != "add_family" && t.text != "register_family" {
+                continue;
+            }
+            if i + 2 >= toks.len()
+                || toks[i + 1].text != "("
+                || toks[i + 2].kind != TokKind::Str
+            {
+                continue;
+            }
+            let family = toks[i + 2].text.clone();
+            for tier in &tiers {
+                if !mentions(tier, &family) {
+                    findings.push(Finding::new(
+                        &f.rel,
+                        t.line,
+                        "R1",
+                        "registry-coverage",
+                        format!(
+                            "family `{family}` registered here is not referenced by \
+                             {} — wire all three tiers (reference / slab / conformance), \
+                             see DESIGN.md \"Adding a constraint family\"",
+                            tier.rel
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    let waived: Vec<Finding> = src_files
+        .iter()
+        .map(|f| {
+            let mine: Vec<Finding> =
+                findings.iter().filter(|fi| fi.file == f.rel).cloned().collect();
+            apply_waivers(f, mine)
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .flatten()
+        // apply_waivers re-emits W0s per call; check_file already reported
+        // those, so keep only R1 here
+        .filter(|fi| fi.rule == "R1")
+        .collect();
+    (waived, notes)
+}
+
+/// Whether a test file mentions `name` — as an identifier token or inside
+/// any string literal (spec strings like `"weighted_simplex:2:1,2"`).
+fn mentions(f: &AnalyzedFile, name: &str) -> bool {
+    f.toks.iter().any(|t| match t.kind {
+        TokKind::Ident => t.text == name,
+        TokKind::Str => t.text.contains(name),
+        _ => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(rel: &str, src: &str) -> Vec<Finding> {
+        check_file(&AnalyzedFile::parse(rel, src))
+    }
+
+    #[test]
+    fn d1_fires_on_container_and_iteration_in_critical_module() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { m: HashMap<u32, f32> }\n\
+                   impl S { fn go(&self) { for (k, v) in self.m.iter() { let _ = (k, v); } } }\n";
+        let fs = check("src/solver/x.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "D1").count(), 3, "{fs:?}");
+        assert!(fs.iter().any(|f| f.message.contains("iteration over")));
+        // same file outside a critical dir is clean
+        assert!(check("src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_waiver_with_justification_suppresses() {
+        let src = "// audit:allow(unordered-iter): lookup-only artifact cache, never iterated\n\
+                   struct S { m: HashMap<u32, f32> }\n";
+        assert!(check("src/runtime/x.rs", src).is_empty());
+        // empty justification → W0 and the D1 stays
+        let bad = "// audit:allow(unordered-iter):\nstruct S { m: HashMap<u32, f32> }\n";
+        let fs = check("src/runtime/x.rs", bad);
+        assert!(fs.iter().any(|f| f.rule == "D1"));
+        assert!(fs.iter().any(|f| f.rule == "W0"));
+    }
+
+    #[test]
+    fn d1_binding_sees_through_path_prefixes() {
+        let src = "pub struct C { entries: std::collections::HashMap<u64, f32> }\n\
+                   impl C { fn all(&self) -> Vec<u64> { self.entries.keys().collect() } }\n";
+        let fs = check("src/engine/x.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "D1").count(), 2, "{fs:?}");
+        assert!(fs.iter().any(|f| f.message.contains("iteration over")));
+    }
+
+    #[test]
+    fn d1_skips_test_modules() {
+        let src = "pub fn ok() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn f() { let m: HashMap<u32, u32> = HashMap::new(); let _ = m.iter(); }\n}\n";
+        assert!(check("src/solver/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_flags_ambient_clocks_everywhere_but_timer() {
+        let src = "fn f() -> std::time::Instant { std::time::Instant::now() }\n\
+                   fn g() { let _ = std::time::SystemTime::UNIX_EPOCH; }\n";
+        let fs = check("src/engine/x.rs", src);
+        assert_eq!(fs.iter().filter(|f| f.rule == "D2").count(), 2, "{fs:?}");
+        assert!(check("src/util/timer.rs", src).is_empty());
+        // benches are walked too
+        assert!(!check("benches/bench_x.rs", src).is_empty());
+        // type-position Instant without ::now is fine
+        assert!(check("src/engine/y.rs", "struct T { at: Instant }").is_empty());
+    }
+
+    #[test]
+    fn d3_flags_bare_sum_in_threaded_file_only() {
+        let body = "fn eval(xs: &[f32]) -> f32 {\n\
+                    let parts: Vec<f32> = vec![];\n\
+                    std::thread::scope(|s| { s.spawn(|| {}); });\n\
+                    parts.iter().sum()\n}\n";
+        let fs = check("src/backend/x.rs", body);
+        assert_eq!(fs.iter().filter(|f| f.rule == "D3").count(), 1, "{fs:?}");
+        // same accumulation without threads in the file: not flagged
+        let seq = "fn eval(xs: &[f32]) -> f32 { xs.iter().sum() }\n";
+        assert!(check("src/backend/y.rs", seq).is_empty());
+    }
+
+    #[test]
+    fn d3_blesses_integer_sums_and_ordered_merges() {
+        let src = "fn f(by_rank: &[Vec<u32>]) -> usize {\n\
+                   std::thread::scope(|s| { s.spawn(|| {}); });\n\
+                   let segments: usize = by_rank.iter().map(|p| p.len()).sum();\n\
+                   let n = by_rank.iter().map(|p| p.iter().count()).sum::<usize>();\n\
+                   segments + n\n}\n\
+                   fn g(parts: &[Vec<f32>]) -> f32 {\n\
+                   std::thread::scope(|s| { s.spawn(|| {}); });\n\
+                   let (ax, cx, xsq) = reduce_chunk_partials(parts, 4); ax[0] + cx + xsq\n}\n";
+        assert!(check("src/backend/z.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u1_requires_adjacent_safety_comment() {
+        let bad = "pub fn t() { unsafe { libc::getpid(); } }\n";
+        let fs = check("src/util/x.rs", bad);
+        assert_eq!(fs.iter().filter(|f| f.rule == "U1").count(), 1);
+        let good = "pub fn t() {\n    // SAFETY: libc::getpid has no preconditions\n    unsafe { libc::getpid(); }\n}\n";
+        assert!(check("src/util/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn w0_flags_unknown_slug() {
+        let src = "// audit:allow(made-up-rule): because\npub fn f() {}\n";
+        let fs = check("src/util/x.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "W0");
+        assert!(fs[0].message.contains("made-up-rule"));
+    }
+
+    #[test]
+    fn panic_counts_exclude_tests_and_count_indexing() {
+        let src = "pub fn f(v: &[f32], m: &B) -> f32 {\n\
+                   let a = v[0];\n\
+                   let b = m.get().unwrap();\n\
+                   let c = m.get().expect(\"x\");\n\
+                   if v.is_empty() { panic!(\"boom\"); }\n\
+                   a + b + c\n}\n\
+                   #[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { let v = vec![1]; let _ = v[0] + Some(1).unwrap(); }\n}\n";
+        let c = panic_counts(&AnalyzedFile::parse("src/solver/x.rs", src));
+        assert_eq!((c.unwrap, c.expect, c.panics, c.index), (1, 1, 1, 1));
+    }
+
+    #[test]
+    fn panic_counter_ignores_fields_named_unwrap() {
+        let src = "pub struct C { pub unwrap: usize, pub expect: usize }\n\
+                   pub fn f(c: &mut C) { c.unwrap += 1; let _ = c.expect; }\n";
+        let c = panic_counts(&AnalyzedFile::parse("src/solver/x.rs", src));
+        assert_eq!((c.unwrap, c.expect), (0, 0));
+    }
+
+    #[test]
+    fn index_counting_skips_attributes_types_and_slice_patterns() {
+        let src = "#[derive(Clone)]\npub struct S { v: [f32; 4] }\n\
+                   pub fn f(s: &S, i: usize) -> f32 { s.v[i] }\n";
+        let c = panic_counts(&AnalyzedFile::parse("src/solver/x.rs", src));
+        assert_eq!(c.index, 1);
+    }
+
+    #[test]
+    fn registry_coverage_cross_references_tiers() {
+        let reg = AnalyzedFile::parse(
+            "src/projection/registry.rs",
+            "fn b(r: &mut R) { r.add_family(\"simplex\", S, p); r.add_family(\"ghost\", G, p); }\n",
+        );
+        let conf = AnalyzedFile::parse(
+            "tests/conformance.rs",
+            "fn t() { for f in [\"simplex\"] { check(f); } }\n",
+        );
+        let par = AnalyzedFile::parse(
+            "tests/backend_parity.rs",
+            "fn t() { let _ = parse(\"simplex\"); }\n",
+        );
+        let (fs, notes) = check_registry(&[reg], &[conf, par]);
+        assert!(notes.is_empty());
+        assert_eq!(fs.len(), 2, "{fs:?}"); // ghost missing from both tiers
+        assert!(fs.iter().all(|f| f.rule == "R1" && f.message.contains("ghost")));
+        // missing tier file → note, not finding
+        let reg2 = AnalyzedFile::parse(
+            "src/projection/registry.rs",
+            "fn b(r: &mut R) { r.add_family(\"simplex\", S, p); }\n",
+        );
+        let (fs2, notes2) = check_registry(&[reg2], &[]);
+        assert!(fs2.is_empty());
+        assert_eq!(notes2.len(), 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Fixture self-check: the auditor audits itself (DESIGN.md §10).
+//!
+//! `analysis/fixtures/` holds one known-bad snippet per rule. Each
+//! fixture declares, in comments the rules never read as code:
+//!
+//! * `// audit:path(src/solver/fixture.rs)` — the *virtual* path the
+//!   snippet is analyzed under (rule scoping is path-sensitive);
+//! * `// audit:expect(D1)` — one line per expected finding (repeat for
+//!   multiple; a fixture with no expect lines asserts zero findings).
+//!
+//! The self-check fails when the fired rule codes differ from the
+//! expected multiset in either direction — so a rule that silently stops
+//! firing (the classic way a hand-rolled analyzer rots) breaks CI just
+//! as loudly as a rule that over-fires.
+
+use std::path::Path;
+
+use super::rules::{check_file, check_registry, AnalyzedFile};
+use super::walk::{read_to_string, rs_files};
+
+/// Outcome of one fixture.
+#[derive(Debug)]
+pub struct FixtureResult {
+    pub fixture: String,
+    pub expected: Vec<String>,
+    pub fired: Vec<String>,
+}
+
+impl FixtureResult {
+    pub fn pass(&self) -> bool {
+        self.expected == self.fired
+    }
+}
+
+/// Parse directives and run the rules over one fixture source.
+/// `test_files` provides the R1 tier files (pass the real `tests/` set).
+pub fn run_fixture(
+    name: &str,
+    src: &str,
+    test_files: &[AnalyzedFile],
+) -> Result<FixtureResult, String> {
+    let mut vpath: Option<String> = None;
+    let mut expected: Vec<String> = Vec::new();
+    for line in src.lines() {
+        let line = line.trim();
+        if let Some(rest) = line.strip_prefix("// audit:path(") {
+            vpath = Some(
+                rest.strip_suffix(')')
+                    .ok_or_else(|| format!("{name}: unterminated audit:path"))?
+                    .to_string(),
+            );
+        }
+        if let Some(rest) = line.strip_prefix("// audit:expect(") {
+            expected.push(
+                rest.strip_suffix(')')
+                    .ok_or_else(|| format!("{name}: unterminated audit:expect"))?
+                    .to_string(),
+            );
+        }
+    }
+    let vpath = vpath.ok_or_else(|| format!("{name}: missing audit:path directive"))?;
+    let f = AnalyzedFile::parse(&vpath, src);
+    let mut fired: Vec<String> =
+        check_file(&f).into_iter().map(|fi| fi.rule.to_string()).collect();
+    let (r1, _notes) = check_registry(std::slice::from_ref(&f), test_files);
+    fired.extend(r1.into_iter().map(|fi| fi.rule.to_string()));
+    fired.sort();
+    expected.sort();
+    Ok(FixtureResult { fixture: name.to_string(), expected, fired })
+}
+
+/// Run every fixture under `fixtures_dir`; `tests_dir` supplies the R1
+/// tier files. Returns per-fixture results; errors are malformed
+/// fixtures or an empty/missing fixtures directory (the self-check
+/// existing but checking nothing must itself be a failure).
+pub fn run_fixtures(
+    fixtures_dir: &Path,
+    tests_dir: &Path,
+) -> Result<Vec<FixtureResult>, String> {
+    let files = rs_files(fixtures_dir)?;
+    if files.is_empty() {
+        return Err(format!(
+            "no fixtures found under {} — the self-check would assert nothing",
+            fixtures_dir.display()
+        ));
+    }
+    let test_files: Vec<AnalyzedFile> = rs_files(tests_dir)
+        .unwrap_or_default()
+        .into_iter()
+        .map(|p| {
+            let rel = format!(
+                "tests/{}",
+                p.file_name().map(|s| s.to_string_lossy().to_string()).unwrap_or_default()
+            );
+            read_to_string(&p).map(|src| AnalyzedFile::parse(&rel, &src))
+        })
+        .collect::<Result<_, _>>()?;
+    let mut out = Vec::new();
+    for p in files {
+        let name = p
+            .file_name()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| p.display().to_string());
+        let src = read_to_string(&p)?;
+        out.push(run_fixture(&name, &src, &test_files)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_fires_expected_rule() {
+        let src = "// audit:path(src/solver/fixture.rs)\n\
+                   // audit:expect(D1)\n\
+                   pub struct S { m: std::collections::HashMap<u32, u32> }\n";
+        let r = run_fixture("d1.rs", src, &[]).unwrap();
+        assert!(r.pass(), "{r:?}");
+        assert_eq!(r.fired, vec!["D1"]);
+    }
+
+    #[test]
+    fn over_and_under_firing_both_fail() {
+        // expects D1 but the snippet is clean → under-fire
+        let clean = "// audit:path(src/solver/fixture.rs)\n\
+                     // audit:expect(D1)\n\
+                     pub fn ok() {}\n";
+        assert!(!run_fixture("c.rs", clean, &[]).unwrap().pass());
+        // expects nothing but the snippet is dirty → over-fire
+        let dirty = "// audit:path(src/solver/fixture.rs)\n\
+                     pub struct S { m: std::collections::HashMap<u32, u32> }\n";
+        assert!(!run_fixture("d.rs", dirty, &[]).unwrap().pass());
+    }
+
+    #[test]
+    fn missing_path_directive_is_malformed() {
+        assert!(run_fixture("x.rs", "// audit:expect(D1)\n", &[]).is_err());
+    }
+}

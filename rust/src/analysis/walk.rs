@@ -1,0 +1,77 @@
+//! Deterministic source-tree walking for the audit pass.
+//!
+//! `read_dir` order is filesystem-dependent; the auditor sorts every
+//! directory listing so findings, counts, and JSON output are byte-stable
+//! across machines — the same requirement the rest of the repo puts on
+//! its own outputs.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// All `.rs` files under `dir`, recursively, sorted by path. A missing
+/// directory is an empty list (partial trees are legal audit roots); an
+/// unreadable one is an error.
+pub fn rs_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    if !dir.exists() {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::new();
+    collect(dir, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Read a file to string with a path-carrying error.
+pub fn read_to_string(path: &Path) -> Result<String, String> {
+    fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+/// Render `path` relative to `root` with `/` separators (finding paths
+/// must be platform-stable).
+pub fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_empty_not_error() {
+        assert!(rs_files(Path::new("/no/such/dir/exists")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn walk_is_sorted_and_recursive() {
+        let dir = std::env::temp_dir().join("dualip_audit_walk_test");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("b")).unwrap();
+        fs::write(dir.join("z.rs"), "").unwrap();
+        fs::write(dir.join("a.rs"), "").unwrap();
+        fs::write(dir.join("b/m.rs"), "").unwrap();
+        fs::write(dir.join("b/skip.txt"), "").unwrap();
+        let files = rs_files(&dir).unwrap();
+        let rels: Vec<String> = files.iter().map(|p| rel_path(&dir, p)).collect();
+        assert_eq!(rels, vec!["a.rs", "b/m.rs", "z.rs"]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,110 @@
+//! `dualip-audit` CLI — run the static invariants pass (DESIGN.md §10).
+//!
+//! ```text
+//! cargo run --release --bin audit                   # audit the crate, exit 0/1
+//! cargo run --release --bin audit -- --format json  # machine-readable findings
+//! cargo run --release --bin audit -- --update-ratchet
+//! cargo run --release --bin audit -- --self-check   # fixtures fire exactly their rules
+//! cargo run --release --bin audit -- --root <dir>   # audit another crate root
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings (or self-check mismatch), 2 usage/IO
+//! error — so CI can distinguish "invariant broken" from "auditor broken".
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dualip::analysis;
+
+struct Args {
+    root: PathBuf,
+    json: bool,
+    update_ratchet: bool,
+    self_check: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    // default root: the crate this binary was built from, so plain
+    // `cargo run --bin audit` audits the repo no matter the cwd.
+    let mut args = Args {
+        root: PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+        json: false,
+        update_ratchet: false,
+        self_check: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                args.root =
+                    PathBuf::from(it.next().ok_or("--root requires a directory argument")?);
+            }
+            "--format" => {
+                let fmt = it.next().ok_or("--format requires `text` or `json`")?;
+                match fmt.as_str() {
+                    "json" => args.json = true,
+                    "text" => args.json = false,
+                    other => return Err(format!("unknown format {other}")),
+                }
+            }
+            "--update-ratchet" => args.update_ratchet = true,
+            "--self-check" => args.self_check = true,
+            "--help" | "-h" => {
+                return Err(
+                    "usage: audit [--root DIR] [--format text|json] \
+                     [--update-ratchet] [--self-check]"
+                        .to_string(),
+                );
+            }
+            other => return Err(format!("unknown argument {other} (try --help)")),
+        }
+    }
+    Ok(args)
+}
+
+fn run() -> Result<ExitCode, String> {
+    let args = parse_args()?;
+
+    if args.self_check {
+        let results = analysis::self_check(&args.root)?;
+        let mut failed = 0usize;
+        for r in &results {
+            if r.pass() {
+                println!("self-check: {} ok ({:?})", r.fixture, r.fired);
+            } else {
+                failed += 1;
+                println!(
+                    "self-check: {} FAILED — expected {:?}, fired {:?}",
+                    r.fixture, r.expected, r.fired
+                );
+            }
+        }
+        println!("self-check: {} fixture(s), {} failure(s)", results.len(), failed);
+        return Ok(if failed == 0 { ExitCode::SUCCESS } else { ExitCode::from(1) });
+    }
+
+    let report = analysis::audit_tree(&args.root)?;
+    if args.update_ratchet {
+        analysis::update_ratchet(&args.root, &report)?;
+        println!(
+            "wrote analysis/ratchet.toml ({} module.metric count(s))",
+            report.counts.values().filter(|&&v| v > 0).count()
+        );
+    }
+    if args.json {
+        print!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    Ok(if report.clean() { ExitCode::SUCCESS } else { ExitCode::from(1) })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("audit: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -10,7 +10,7 @@
 //! near-optimal dual for the floor-γ problem and only needs a brief
 //! re-smoothing window to absorb the `c`/`b` perturbation.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use super::fingerprint::Fingerprint;
 use crate::solver::{GammaSchedule, SolveOptions};
@@ -34,7 +34,11 @@ pub struct WarmStart {
 
 /// Fingerprint → warm-start map with LRU eviction and hit accounting.
 pub struct WarmStartCache {
-    entries: HashMap<Fingerprint, (WarmStart, u64)>,
+    // BTreeMap, not HashMap: `insert`'s eviction scan and
+    // `export_entries` iterate this map, and LRU-tick ties (impossible
+    // today, but one refactor away) would otherwise break on hash order —
+    // snapshots and eviction sequences must be byte-stable across runs.
+    entries: BTreeMap<Fingerprint, (WarmStart, u64)>,
     capacity: usize,
     tick: u64,
     pub hits: u64,
@@ -51,7 +55,7 @@ impl WarmStartCache {
     /// engine's cold-baseline mode.
     pub fn new(capacity: usize) -> WarmStartCache {
         WarmStartCache {
-            entries: HashMap::new(),
+            entries: BTreeMap::new(),
             capacity,
             tick: 0,
             hits: 0,

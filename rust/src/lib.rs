@@ -28,6 +28,11 @@
 //! (`projection::registry`) and the declarative `problem::LpSpec` builder
 //! — see DESIGN.md "Adding a constraint family".
 
+// The audit pass (U1, `analysis/`) requires every unsafe block to carry a
+// SAFETY comment; the compiler half of that contract is a crate-wide deny
+// so new unsafe code needs a scoped, reviewable opt-in. The single current
+// exception is the libc CPU-clock read in `util::timer`.
+#![deny(unsafe_code)]
 // CI denies all warnings (`cargo clippy -- -D warnings`). These
 // crate-wide allowances cover long-standing internal idioms — multi-plane
 // index loops over parallel slices, wide kernel-call signatures, resolved
@@ -45,6 +50,7 @@
     clippy::comparison_chain
 )]
 
+pub mod analysis;
 pub mod backend;
 pub mod cli;
 pub mod distributed;

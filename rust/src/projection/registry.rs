@@ -24,7 +24,7 @@
 //! "Adding a constraint family").
 
 use std::any::Any;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
 use super::boxcut::CappedSimplexOp;
@@ -124,7 +124,10 @@ struct Family {
 struct Registry {
     families: BTreeMap<String, Family>,
     ops: Vec<Arc<dyn BlockProjection>>,
-    by_spec: HashMap<String, OpId>,
+    // BTreeMap, not HashMap: interned ids are assigned in call order, but
+    // any future iteration over this map (spec dumps, manifest exports)
+    // must already be order-stable — D1 in the audit pass keeps it that way.
+    by_spec: BTreeMap<String, OpId>,
 }
 
 impl Registry {
@@ -132,7 +135,7 @@ impl Registry {
         let mut r = Registry {
             families: BTreeMap::new(),
             ops: Vec::new(),
-            by_spec: HashMap::new(),
+            by_spec: BTreeMap::new(),
         };
         // Builtins claim the reserved ids (interning order fixes them).
         let simplex: Box<dyn BlockProjection> = Box::new(SimplexOp);

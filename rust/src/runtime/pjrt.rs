@@ -6,7 +6,7 @@
 //! per (kind, rows, width). Interchange is HLO *text* — see DESIGN.md §2
 //! and /opt/xla-example/README.md for why serialized protos are rejected.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
@@ -16,8 +16,9 @@ use crate::projection::ProjectionKind;
 /// Slab artifact geometry parsed from `artifacts/manifest.txt`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
-    /// (kind, rows, width) → file name.
-    pub entries: HashMap<(ProjectionKind, usize, usize), String>,
+    /// (kind, rows, width) → file name. BTreeMap so any future iteration
+    /// (artifact listings, compile-order prefetch) is order-stable (D1).
+    pub entries: BTreeMap<(ProjectionKind, usize, usize), String>,
     /// Fixed row count per slab execution (all current artifacts share it).
     pub tile_rows: usize,
     /// Available widths, ascending.
@@ -29,7 +30,7 @@ impl Manifest {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let mut entries = HashMap::new();
+        let mut entries = BTreeMap::new();
         let mut tile_rows = 0usize;
         let mut widths = std::collections::BTreeSet::new();
         for line in text.lines() {
@@ -67,7 +68,7 @@ pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     dir: PathBuf,
-    exes: HashMap<(ProjectionKind, usize, usize), xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<(ProjectionKind, usize, usize), xla::PjRtLoadedExecutable>,
     /// executions performed (diagnostics)
     pub launches: u64,
 }
@@ -79,7 +80,7 @@ impl Engine {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, manifest, dir, exes: HashMap::new(), launches: 0 })
+        Ok(Engine { client, manifest, dir, exes: BTreeMap::new(), launches: 0 })
     }
 
     pub fn tile_rows(&self) -> usize {

@@ -148,12 +148,45 @@ pub enum ShedReason {
     SloExpired,
 }
 
+/// Why a request failed. The request path never panics (P1, DESIGN.md
+/// §10): every failure mode is a typed outcome the caller can match on,
+/// and the daemon stays up to serve the next request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Solve or delta request arrived before any instance was loaded.
+    NoResidentInstance,
+    /// A parked solve's checkpoint fingerprint no longer matches the
+    /// resident instance (it changed across a snapshot/restore cycle).
+    FingerprintChanged,
+    /// The stepper could not produce a checkpoint at park time, so the
+    /// in-flight solve state was dropped (re-submit to start over).
+    CheckpointUnavailable,
+    /// Instance construction, plane absorb, delta application, or parity
+    /// audit failed; the message is the underlying error.
+    Instance(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::NoResidentInstance => write!(f, "no resident instance"),
+            ServeError::FingerprintChanged => {
+                write!(f, "resident instance changed since checkpoint")
+            }
+            ServeError::CheckpointUnavailable => {
+                write!(f, "stepper yielded no checkpoint at park; solve state dropped")
+            }
+            ServeError::Instance(e) => write!(f, "{e}"),
+        }
+    }
+}
+
 /// Terminal outcome of one request.
 #[derive(Debug)]
 pub enum Outcome {
     Solved(Box<JobResult>),
     Shed(ShedReason),
-    Failed(String),
+    Failed(ServeError),
 }
 
 #[derive(Debug)]
@@ -281,8 +314,7 @@ impl ServeDaemon {
     /// Make `lp` resident without queuing a solve (operator path, e.g.
     /// right after `restore`). Matching fingerprint → plane absorb.
     pub fn load_instance(&mut self, lp: MatchingLp) -> Result<Fingerprint, String> {
-        self.install_instance(lp)?;
-        Ok(self.resident.as_ref().unwrap().fingerprint())
+        self.install_instance(lp)
     }
 
     pub fn resident(&self) -> Option<&ResidentInstance> {
@@ -416,7 +448,7 @@ impl ServeDaemon {
         )
     }
 
-    fn install_instance(&mut self, lp: MatchingLp) -> Result<(), String> {
+    fn install_instance(&mut self, lp: MatchingLp) -> Result<Fingerprint, String> {
         let fp = Fingerprint::of(&lp);
         match &mut self.resident {
             Some(r) if r.fingerprint() == fp => {
@@ -428,26 +460,28 @@ impl ServeDaemon {
                 self.stats.instance_loads += 1;
             }
         }
-        Ok(())
+        Ok(fp)
     }
 
     /// Apply a mutating request's payload; returns the entry downgraded to
     /// a plain solve of the (now updated) resident instance.
-    fn apply_mutation(&mut self, mut entry: QueuedEntry) -> Result<QueuedEntry, String> {
+    fn apply_mutation(&mut self, mut entry: QueuedEntry) -> Result<QueuedEntry, ServeError> {
         let payload = std::mem::replace(&mut entry.payload, Payload::Solve);
         match payload {
-            Payload::Spec(spec) => self.install_instance(spec.build()?)?,
-            Payload::Instance(lp) => self.install_instance(*lp)?,
+            Payload::Spec(spec) => {
+                let lp = spec.build().map_err(ServeError::Instance)?;
+                self.install_instance(lp).map_err(ServeError::Instance)?;
+            }
+            Payload::Instance(lp) => {
+                self.install_instance(*lp).map_err(ServeError::Instance)?;
+            }
             Payload::Delta(d) => {
-                let resident = self
-                    .resident
-                    .as_mut()
-                    .ok_or_else(|| "delta request with no resident instance".to_string())?;
-                resident.apply(&d)?;
-                self.stats.deltas += 1;
+                let resident = self.resident.as_mut().ok_or(ServeError::NoResidentInstance)?;
+                resident.apply(&d).map_err(ServeError::Instance)?;
                 if self.cfg.audit_parity {
-                    self.resident.as_ref().unwrap().parity_check()?;
+                    resident.parity_check().map_err(ServeError::Instance)?;
                 }
+                self.stats.deltas += 1;
             }
             Payload::Solve => {}
         }
@@ -468,7 +502,7 @@ impl ServeDaemon {
                 self.stats.failed += 1;
                 outcomes.push(ServeOutcome {
                     id: e.id,
-                    outcome: Outcome::Failed("no resident instance".to_string()),
+                    outcome: Outcome::Failed(ServeError::NoResidentInstance),
                 });
             }
             return;
@@ -513,9 +547,7 @@ impl ServeDaemon {
                         self.stats.failed += 1;
                         outcomes.push(ServeOutcome {
                             id: e.id,
-                            outcome: Outcome::Failed(
-                                "resident instance changed since checkpoint".to_string(),
-                            ),
+                            outcome: Outcome::Failed(ServeError::FingerprintChanged),
                         });
                         continue;
                     }
@@ -588,7 +620,17 @@ impl ServeDaemon {
         let mut publish: Vec<(Vec<f32>, f32)> = Vec::new();
         for (mut task, meta) in tasks.into_iter().zip(metas) {
             if task.parked {
-                let ck = task.driver.checkpoint().expect("AGD steppers always checkpoint");
+                // every shipped stepper checkpoints, but a panic here
+                // would take the daemon down mid-drain — fail the one
+                // request instead and keep serving (P1)
+                let Some(ck) = task.driver.checkpoint() else {
+                    self.stats.failed += 1;
+                    outcomes.push(ServeOutcome {
+                        id: meta.id,
+                        outcome: Outcome::Failed(ServeError::CheckpointUnavailable),
+                    });
+                    continue;
+                };
                 self.stats.parked += 1;
                 parked_out.push(QueuedEntry {
                     id: meta.id,
@@ -729,11 +771,15 @@ mod tests {
         let mut d = ServeDaemon::new(test_cfg());
         d.submit(ServeRequest::solve(9)).unwrap();
         let out = d.drain();
-        assert!(matches!(&out[0].outcome, Outcome::Failed(e) if e.contains("resident")));
+        assert!(matches!(&out[0].outcome, Outcome::Failed(ServeError::NoResidentInstance)));
         // delta without a resident instance likewise
         d.submit(ServeRequest::delta(10, InstanceDelta::Budgets(vec![0.5]))).unwrap();
         let out = d.drain();
-        assert!(matches!(&out[0].outcome, Outcome::Failed(e) if e.contains("resident")));
+        assert!(matches!(&out[0].outcome, Outcome::Failed(ServeError::NoResidentInstance)));
+        // failures are typed outcomes, not panics, and render for operators
+        let Outcome::Failed(e) = &out[0].outcome else { panic!("expected failure") };
+        assert!(e.to_string().contains("resident"));
+        assert_eq!(d.stats().failed, 2);
     }
 
     #[test]
@@ -826,7 +872,7 @@ mod tests {
         c.load_instance(base_lp(7)).unwrap(); // different instance
         let out = c.drain();
         assert!(
-            matches!(&out[0].outcome, Outcome::Failed(e) if e.contains("changed")),
+            matches!(&out[0].outcome, Outcome::Failed(ServeError::FingerprintChanged)),
             "{:?}",
             out
         );

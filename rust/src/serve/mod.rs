@@ -20,8 +20,8 @@ pub mod delta;
 pub mod snapshot;
 
 pub use daemon::{
-    Outcome, Payload, ServeConfig, ServeDaemon, ServeOutcome, ServeRequest, ServeStats,
-    ShedReason,
+    Outcome, Payload, ServeConfig, ServeDaemon, ServeError, ServeOutcome, ServeRequest,
+    ServeStats, ShedReason,
 };
 pub use delta::{InstanceDelta, ResidentInstance};
 pub use snapshot::{CheckpointEntry, ServeSnapshot};

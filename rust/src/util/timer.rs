@@ -66,8 +66,12 @@ impl PhaseTimers {
 /// immune to time-slicing with sibling threads on a contended core, so
 /// shard evaluation costs measured with it model what dedicated devices
 /// would take (DESIGN.md §5 Substitutions).
+#[allow(unsafe_code)] // crate-wide #![deny(unsafe_code)]; this is the sole exception
 pub fn thread_cpu_time_ms() -> f64 {
     let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: clock_gettime only writes through the valid `&mut ts` for
+    // the duration of the call; CLOCK_THREAD_CPUTIME_ID is a constant
+    // clock id, and on failure ts stays zeroed (we return 0.0, not junk).
     unsafe {
         libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
     }

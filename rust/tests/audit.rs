@@ -1,0 +1,84 @@
+//! Auditor integration gate (DESIGN.md §10): the checked-in tree must
+//! audit clean, the fixture self-check must fire exactly the expected
+//! rules, and the two rejection paths (unjustified waiver, ratchet
+//! increase) must stay closed.
+
+use std::path::Path;
+
+use dualip::analysis::{self, AnalyzedFile, Ratchet};
+
+fn root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn fixtures_fire_exactly_their_rules() {
+    let results = analysis::self_check(root()).expect("fixtures present and well-formed");
+    assert!(results.len() >= 8, "fixture set shrank to {}", results.len());
+    for r in &results {
+        assert!(
+            r.pass(),
+            "fixture {} expected {:?} but fired {:?}",
+            r.fixture,
+            r.expected,
+            r.fired
+        );
+    }
+    // every rule in the catalog has at least one covering fixture
+    let all: Vec<&str> =
+        results.iter().flat_map(|r| r.fired.iter().map(|s| s.as_str())).collect();
+    for rule in ["D1", "D2", "D3", "U1", "W0", "R1"] {
+        assert!(all.contains(&rule), "no fixture covers {rule}");
+    }
+}
+
+#[test]
+fn checked_in_tree_audits_clean() {
+    let report = analysis::audit_tree(root()).expect("audit runs");
+    assert!(
+        report.clean(),
+        "audit findings on the checked-in tree:\n{}",
+        report.render_text()
+    );
+    assert!(report.files > 40, "walk looks truncated: {} files", report.files);
+    // the registry tiers were actually found and cross-checked
+    assert!(
+        !report.notes.iter().any(|n| n.contains("not found")),
+        "R1 tier files missing: {:?}",
+        report.notes
+    );
+}
+
+#[test]
+fn waiver_without_justification_is_rejected() {
+    let f = AnalyzedFile::parse(
+        "src/solver/x.rs",
+        "// audit:allow(unordered-iter):\n\
+         pub struct S { m: std::collections::HashMap<u32, u32> }\n",
+    );
+    let findings = analysis::check_file(&f);
+    assert!(
+        findings.iter().any(|fi| fi.rule == "D1"),
+        "unjustified waiver must not suppress: {findings:?}"
+    );
+    assert!(findings.iter().any(|fi| fi.rule == "W0"), "{findings:?}");
+}
+
+#[test]
+fn ratchet_increase_is_rejected() {
+    let report = analysis::audit_tree(root()).expect("audit runs");
+    // take any nonzero counted metric and pretend its checked-in budget
+    // was one lower — the recount must fail the ratchet
+    let (key, &count) = report
+        .counts
+        .iter()
+        .find(|(_, &v)| v > 0)
+        .expect("some module has a panic site");
+    let tightened = format!("[panic_budget]\n{key} = {}\n", count - 1);
+    let r = Ratchet::parse(&tightened).expect("tightened ratchet parses");
+    let (findings, _notes) = r.compare(&report.counts);
+    assert!(
+        findings.iter().any(|f| f.rule == "P1" && f.message.contains(key.as_str())),
+        "{findings:?}"
+    );
+}
