@@ -1,0 +1,251 @@
+//! Experiment E18 — slab build & repack pipeline throughput: the
+//! counting-sort layout build (serial vs chunk-parallel fill at 2/4/8
+//! threads, bit-identity enforced), pow2 vs quarter-step width policies
+//! (padding factor on uniform and power-law degree workloads), and the
+//! serve-path repack engine (width-crossing `patch_edge_indexed` cycles,
+//! `patch_costs` refresh, `SlabIndex` construction).
+//!
+//! Emits machine-readable `results/BENCH_slab_build.json` (build ms per
+//! workload/policy/thread-count with speedup-vs-serial, padding factors,
+//! µs per repack op) so the build-path perf trajectory is tracked across
+//! PRs.
+//!
+//! Run: cargo bench --bench bench_slab_build
+//!      [DUALIP_BENCH_FAST=1 for CI size — also asserts 4-thread build
+//!       speedup ≥ 1.0 on the default pow2 policy]
+
+use dualip::gen::{generate, power_law_instance, PowerLawConfig, SyntheticConfig};
+use dualip::metrics::{BenchJson, JsonValue};
+use dualip::problem::MatchingLp;
+use dualip::sparse::slabs::EdgePatch;
+use dualip::sparse::{BuildOptions, SlabIndex, SlabLayout, WidthPolicy};
+use dualip::util::timer::Stopwatch;
+
+fn build_once(lp: &MatchingLp, opts: BuildOptions) -> anyhow::Result<SlabLayout> {
+    let kind_of = |i: usize| lp.projection.kind_of(i);
+    SlabLayout::build_opts(&lp.a, &lp.cost, 0, lp.num_sources(), &kind_of, opts)
+        .map_err(anyhow::Error::msg)
+}
+
+/// Best-of-`reps` build wall-clock in ms (min is robust to CI noise),
+/// plus the layout from the final rep for downstream gates.
+fn time_build(
+    lp: &MatchingLp,
+    opts: BuildOptions,
+    reps: usize,
+) -> anyhow::Result<(SlabLayout, f64)> {
+    let mut best = f64::INFINITY;
+    let mut layout = build_once(lp, opts)?; // warm allocator and caches
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        layout = build_once(lp, opts)?;
+        best = best.min(sw.elapsed_ms());
+    }
+    Ok((layout, best))
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DUALIP_BENCH_FAST").is_ok();
+    let (sources, dests, reps, cycles) =
+        if fast { (30_000, 1_000, 5, 200) } else { (1_000_000, 20_000, 3, 500) };
+
+    let uniform = generate(&SyntheticConfig {
+        num_requests: sources,
+        num_resources: dests,
+        avg_nnz_per_row: 12.0,
+        seed: 0,
+        ..Default::default()
+    });
+    let powerlaw = power_law_instance(&PowerLawConfig {
+        num_sources: sources,
+        num_dests: dests,
+        seed: 0,
+        ..Default::default()
+    });
+
+    println!(
+        "E18 — slab build & repack: I={sources} J={dests} uniform nnz={} \
+         powerlaw nnz={} reps={reps}{}",
+        uniform.nnz(),
+        powerlaw.nnz(),
+        if fast { " (fast)" } else { "" }
+    );
+    println!(
+        "{:>10} {:>9} {:>8} {:>12} {:>10} {:>9}",
+        "workload", "policy", "threads", "build ms", "speedup", "padding"
+    );
+
+    let mut bench = BenchJson::new("slab_build");
+    bench
+        .meta("sources", JsonValue::UInt(sources as u64))
+        .meta("dests", JsonValue::UInt(dests as u64))
+        .meta("uniform_nnz", JsonValue::UInt(uniform.nnz() as u64))
+        .meta("powerlaw_nnz", JsonValue::UInt(powerlaw.nnz() as u64))
+        .meta("reps", JsonValue::UInt(reps as u64))
+        .meta("repack_cycles", JsonValue::UInt(cycles as u64))
+        .meta("fast", JsonValue::Bool(fast));
+
+    let mut padding_by = [[0.0f64; 2]; 2]; // [workload][policy]
+    for (wi, (wname, lp)) in [("uniform", &uniform), ("powerlaw", &powerlaw)].iter().enumerate() {
+        for (pi, policy) in [WidthPolicy::Pow2, WidthPolicy::QuarterStep].into_iter().enumerate() {
+            let serial_opts = BuildOptions { policy, threads: 0 };
+            let (serial, serial_ms) = time_build(lp, serial_opts, reps)?;
+            let padding = serial.padding_factor();
+            padding_by[wi][pi] = padding;
+            println!(
+                "{:>10} {:>9} {:>8} {:>12.2} {:>10.2}x {:>9.3}",
+                wname,
+                policy.name(),
+                "serial",
+                serial_ms,
+                1.0,
+                padding
+            );
+            bench.row(&[
+                ("workload", JsonValue::Str(wname.to_string())),
+                ("policy", JsonValue::Str(policy.name().into())),
+                ("threads", JsonValue::UInt(1)),
+                ("build_ms", JsonValue::Num(serial_ms)),
+                ("speedup_vs_serial", JsonValue::Num(1.0)),
+                ("padding_factor", JsonValue::Num(padding)),
+                ("rows", JsonValue::UInt(serial.total_rows() as u64)),
+            ]);
+            for threads in [2usize, 4, 8] {
+                let opts = BuildOptions { policy, threads };
+                let (parallel, ms) = time_build(lp, opts, reps)?;
+                // determinism contract: any fill-pool width is bit-identical
+                parallel.bit_eq(&serial).map_err(|e| {
+                    anyhow::anyhow!("{wname}/{} {threads}-thread build: {e}", policy.name())
+                })?;
+                let speedup = serial_ms / ms;
+                println!(
+                    "{:>10} {:>9} {:>8} {:>12.2} {:>10.2}x {:>9.3}",
+                    wname,
+                    policy.name(),
+                    threads,
+                    ms,
+                    speedup,
+                    padding
+                );
+                bench.row(&[
+                    ("workload", JsonValue::Str(wname.to_string())),
+                    ("policy", JsonValue::Str(policy.name().into())),
+                    ("threads", JsonValue::UInt(threads as u64)),
+                    ("build_ms", JsonValue::Num(ms)),
+                    ("speedup_vs_serial", JsonValue::Num(speedup)),
+                    ("padding_factor", JsonValue::Num(padding)),
+                    ("rows", JsonValue::UInt(parallel.total_rows() as u64)),
+                ]);
+                // CI smoke gate (default policy): the parallel fill must not
+                // lose to the serial build it replaces
+                if fast && threads == 4 && policy == WidthPolicy::Pow2 {
+                    anyhow::ensure!(
+                        speedup >= 1.0,
+                        "{wname}: 4-thread build slower than serial ({speedup:.2}x)"
+                    );
+                }
+            }
+        }
+    }
+
+    // quarter-step exists to tame skewed-degree padding; gate the claim on
+    // the adversarial workload and report the uniform delta alongside
+    anyhow::ensure!(
+        padding_by[1][1] < padding_by[1][0],
+        "quarter-step padding {:.3} !< pow2 {:.3} on power-law degrees",
+        padding_by[1][1],
+        padding_by[1][0]
+    );
+    bench
+        .meta("powerlaw_padding_pow2", JsonValue::Num(padding_by[1][0]))
+        .meta("powerlaw_padding_quarter", JsonValue::Num(padding_by[1][1]))
+        .meta("uniform_padding_pow2", JsonValue::Num(padding_by[0][0]))
+        .meta("uniform_padding_quarter", JsonValue::Num(padding_by[0][1]));
+
+    // ---- repack engine: width-crossing edge deltas through the resident
+    // index, on the skewed workload's default-policy layout -------------
+    let mut lp = powerlaw.clone();
+    let mut layout = build_once(&lp, BuildOptions::default())?;
+    let pristine = build_once(&lp, BuildOptions::default())?;
+
+    let sw = Stopwatch::start();
+    let mut index = SlabIndex::build(&layout, 0, lp.num_sources());
+    let index_ms = sw.elapsed_ms();
+    index.parity_check(&layout).map_err(anyhow::Error::msg)?;
+
+    // sources one past a pow2 width boundary: deleting the last edge drops
+    // the row a width class (repack), re-inserting raises it back (repack)
+    let cands: Vec<usize> = (0..lp.num_sources())
+        .filter(|&s| {
+            let deg = lp.a.src_ptr[s + 1] - lp.a.src_ptr[s];
+            matches!(deg, 5 | 9 | 17 | 33)
+        })
+        .take(64)
+        .collect();
+    anyhow::ensure!(!cands.is_empty(), "power-law workload has no width-boundary sources");
+
+    let mut patch_ms = 0.0f64;
+    let mut repacked = 0usize;
+    for c in 0..cycles {
+        let s = cands[c % cands.len()];
+        let kind = lp.projection.kind_of(s);
+        let e1 = lp.a.src_ptr[s + 1];
+        let dest = lp.a.dest_idx[e1 - 1];
+        let avals: Vec<f32> = lp.a.a.iter().map(|plane| plane[e1 - 1]).collect();
+        let cval = lp.cost[e1 - 1];
+
+        let p = lp.remove_edge(s, dest).map_err(anyhow::Error::msg)?;
+        let sw = Stopwatch::start();
+        let del = layout
+            .patch_edge_indexed(&lp.a, &lp.cost, s, p, false, kind, &mut index)
+            .map_err(anyhow::Error::msg)?;
+        patch_ms += sw.elapsed_ms();
+
+        let p = lp.insert_edge(s, dest, &avals, cval).map_err(anyhow::Error::msg)?;
+        let sw = Stopwatch::start();
+        let ins = layout
+            .patch_edge_indexed(&lp.a, &lp.cost, s, p, true, kind, &mut index)
+            .map_err(anyhow::Error::msg)?;
+        patch_ms += sw.elapsed_ms();
+        repacked += usize::from(del == EdgePatch::Repacked);
+        repacked += usize::from(ins == EdgePatch::Repacked);
+    }
+    // every cycle restores the CSR, so the patched layout must be
+    // bit-identical to the untouched build — the repack-engine parity gate
+    layout.bit_eq(&pristine).map_err(|e| anyhow::anyhow!("repack parity: {e}"))?;
+    index.parity_check(&layout).map_err(anyhow::Error::msg)?;
+    let patch_us = patch_ms * 1e3 / (2 * cycles) as f64;
+
+    let mut cost_ms = f64::INFINITY;
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        layout.patch_costs(&lp.cost);
+        cost_ms = cost_ms.min(sw.elapsed_ms());
+    }
+
+    println!(
+        "repack: {patch_us:.1} µs/patch ({repacked}/{} width-crossing), \
+         patch_costs {cost_ms:.2} ms, index build {index_ms:.2} ms",
+        2 * cycles
+    );
+    bench.row(&[
+        ("workload", JsonValue::Str("powerlaw".into())),
+        ("op", JsonValue::Str("patch_edge_indexed".into())),
+        ("us_per_op", JsonValue::Num(patch_us)),
+        ("repacked_ops", JsonValue::UInt(repacked as u64)),
+    ]);
+    bench.row(&[
+        ("workload", JsonValue::Str("powerlaw".into())),
+        ("op", JsonValue::Str("patch_costs".into())),
+        ("us_per_op", JsonValue::Num(cost_ms * 1e3)),
+    ]);
+    bench.row(&[
+        ("workload", JsonValue::Str("powerlaw".into())),
+        ("op", JsonValue::Str("index_build".into())),
+        ("us_per_op", JsonValue::Num(index_ms * 1e3)),
+    ]);
+
+    let path = bench.write("results")?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -31,7 +31,7 @@ use super::slab_cpu::{ChunkPartial, SlabCpuObjective};
 use crate::distributed::collective::{reduce_chunk_partials, CommSnapshot, CommStats};
 use crate::distributed::partition::{balanced_partition, imbalance};
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
-use crate::sparse::slabs::{SlabChunk, SlabLayout};
+use crate::sparse::slabs::{BuildOptions, SlabChunk, SlabLayout};
 use crate::util::timer::thread_cpu_time_ms;
 
 /// Leader-side shard plan shared by BOTH sharded execution paths (this
@@ -54,12 +54,29 @@ pub struct SlabShardPlan {
 
 impl SlabShardPlan {
     /// Build the layout, grid, and a `num_shards`-way balanced partition
-    /// for `lp`. Errors when the layout is unbuildable (same condition as
-    /// [`SlabCpuObjective::new`]).
+    /// for `lp` under default [`BuildOptions`]. Errors when the layout is
+    /// unbuildable (same condition as [`SlabCpuObjective::new`]).
     pub fn build(lp: &MatchingLp, num_shards: usize) -> Result<SlabShardPlan, String> {
-        let layout = Arc::new(SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
-            lp.projection.kind_of(i)
-        })?);
+        Self::build_opts(lp, num_shards, BuildOptions::default())
+    }
+
+    /// [`Self::build`] with explicit [`BuildOptions`] — the leader can
+    /// fill planes with a thread pool (`opts.threads`) before scattering;
+    /// the layout, grid, and partition are bit-identical at any pool
+    /// width, so sharded solves stay bit-equal to single-shard ones.
+    pub fn build_opts(
+        lp: &MatchingLp,
+        num_shards: usize,
+        opts: BuildOptions,
+    ) -> Result<SlabShardPlan, String> {
+        let layout = Arc::new(SlabLayout::build_opts(
+            &lp.a,
+            &lp.cost,
+            0,
+            lp.num_sources(),
+            &|i| lp.projection.kind_of(i),
+            opts,
+        )?);
         let grid = Arc::new(layout.fixed_chunk_grid());
         let ptr = layout.chunk_edge_ptr(&grid);
         let ranges = balanced_partition(&ptr, num_shards.max(1));

@@ -41,7 +41,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
 use crate::projection::BlockProjection;
-use crate::sparse::slabs::{SlabChunk, SlabLayout};
+use crate::sparse::slabs::{BuildOptions, SlabChunk, SlabLayout};
 
 /// One chunk's partial reduction — the unit payload of the deterministic
 /// chunk-index-ordered allreduce (`distributed::collective`). Sized by
@@ -96,12 +96,20 @@ pub struct SlabCpuObjective<'a> {
 impl<'a> SlabCpuObjective<'a> {
     /// Build the slab layout and the fixed chunk grid for `lp`. `threads`
     /// is the evaluation pool width (1 = fully sequential; results are
-    /// bit-identical either way). Errors when the layout is unbuildable
-    /// (non-separable block wider than the maximum slab width).
+    /// bit-identical either way) and is reused as the build's plane-fill
+    /// pool width — the parallel build is bit-identical to serial at any
+    /// thread count, so this is purely a setup-latency knob. Errors when
+    /// the layout is unbuildable (non-separable block wider than the
+    /// maximum slab width).
     pub fn new(lp: &'a MatchingLp, threads: usize) -> Result<SlabCpuObjective<'a>, String> {
-        let layout = Arc::new(SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
-            lp.projection.kind_of(i)
-        })?);
+        let layout = Arc::new(SlabLayout::build_opts(
+            &lp.a,
+            &lp.cost,
+            0,
+            lp.num_sources(),
+            &|i| lp.projection.kind_of(i),
+            BuildOptions { threads, ..BuildOptions::default() },
+        )?);
         let grid = layout.fixed_chunk_grid();
         let n = grid.len();
         Ok(Self::from_parts(lp, layout, &grid, 0, n, threads))

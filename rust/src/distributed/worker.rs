@@ -35,7 +35,7 @@ use crate::backend::sharded::SlabShardPlan;
 use crate::backend::slab_cpu::{ChunkPartial, SlabCpuObjective};
 use crate::problem::MatchingLp;
 use crate::runtime::HloObjective;
-use crate::sparse::slabs::{SlabChunk, SlabLayout};
+use crate::sparse::slabs::{BuildOptions, SlabChunk, SlabLayout};
 use crate::util::timer::thread_cpu_time_ms;
 
 /// How workers execute their shard (see module docs).
@@ -255,9 +255,15 @@ impl WorkerPool {
                 // contiguous chunk ranges balanced by real edge count —
                 // the SAME plan construction the in-process sharded
                 // objective uses, so the two paths stay bit-equal by
-                // construction.
-                let plan =
-                    SlabShardPlan::build(&lp, num_workers).map_err(anyhow::Error::msg)?;
+                // construction. The leader fills planes with one thread
+                // per worker: the parallel build is bit-identical to
+                // serial, so this only shortens scatter setup.
+                let plan = SlabShardPlan::build_opts(
+                    &lp,
+                    num_workers,
+                    BuildOptions { threads: num_workers, ..BuildOptions::default() },
+                )
+                .map_err(anyhow::Error::msg)?;
                 let threads = *threads;
                 for (rank, &range) in plan.ranges.iter().enumerate() {
                     let (tx, rx) = channel::<Cmd>();

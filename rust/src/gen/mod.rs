@@ -5,3 +5,4 @@ pub mod synthetic;
 pub mod workloads;
 
 pub use synthetic::{generate, SyntheticConfig};
+pub use workloads::{power_law_instance, PowerLawConfig};

@@ -8,8 +8,10 @@
 //! representative (DESIGN.md §5 Substitutions).
 
 use super::synthetic::SyntheticConfig;
-use crate::problem::MatchingLp;
+use crate::problem::{LpSpec, MatchingLp};
 use crate::projection::ProjectionKind;
+use crate::sparse::slabs::MAX_WIDTH;
+use crate::sparse::BlockedMatrix;
 use crate::util::rng::Rng;
 
 /// Source-count divisor vs. the paper's instances.
@@ -226,6 +228,105 @@ pub fn perturbation_sequence(
         .collect()
 }
 
+
+/// Power-law (bounded-Pareto) degree workload — the workload-zoo member
+/// whose skewed degrees are the adversarial case for width bucketing:
+/// most sources sit at the minimum degree while a heavy tail pins the
+/// wide buckets, so pow2 padding overshoots and `bench_slab_build` uses
+/// it to measure what the quarter-step [`WidthPolicy`] buys back.
+///
+/// [`WidthPolicy`]: crate::sparse::WidthPolicy
+#[derive(Clone, Debug)]
+pub struct PowerLawConfig {
+    pub num_sources: usize,
+    pub num_dests: usize,
+    /// Pareto tail exponent (`deg ∝ u^{-1/(alpha-1)}`); smaller = heavier
+    /// tail. Typical web-graph range: 1.8–2.5.
+    pub alpha: f64,
+    pub min_degree: usize,
+    /// Degree ceiling before the structural caps (destination count; the
+    /// slab width for non-separable kinds, which cannot split rows).
+    pub max_degree: usize,
+    pub num_families: usize,
+    pub kind: ProjectionKind,
+    pub seed: u64,
+}
+
+impl Default for PowerLawConfig {
+    fn default() -> PowerLawConfig {
+        PowerLawConfig {
+            num_sources: 10_000,
+            num_dests: 2_000,
+            alpha: 2.2,
+            min_degree: 2,
+            max_degree: MAX_WIDTH,
+            num_families: 1,
+            kind: ProjectionKind::Simplex,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a matching LP with bounded-Pareto source degrees (see
+/// [`PowerLawConfig`]). Deterministic per seed. Costs are negated
+/// lognormal utilities; budgets follow the Appendix-B greedy-load recipe
+/// so the duals bind without starving destinations.
+pub fn power_law_instance(cfg: &PowerLawConfig) -> MatchingLp {
+    let mut rng = Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut cap = cfg.max_degree.min(cfg.num_dests);
+    if !cfg.kind.separable() {
+        cap = cap.min(MAX_WIDTH);
+    }
+    let min_deg = cfg.min_degree.clamp(1, cap);
+    let tail = -1.0 / (cfg.alpha - 1.0);
+    let mut src_ptr = vec![0usize];
+    let mut dest_idx: Vec<u32> = Vec::new();
+    for _ in 0..cfg.num_sources {
+        let u = rng.uniform().max(1e-12);
+        let deg = ((min_deg as f64) * u.powf(tail)) as usize;
+        let deg = deg.clamp(min_deg, cap);
+        let mut dests = rng.sample_distinct(cfg.num_dests, deg);
+        dests.sort_unstable();
+        dest_idx.extend_from_slice(&dests);
+        src_ptr.push(dest_idx.len());
+    }
+    let nnz = dest_idx.len();
+    let mut a = Vec::with_capacity(cfg.num_families);
+    for k in 0..cfg.num_families {
+        let mut fr = rng.fork(k as u64 + 1);
+        let plane: Vec<f32> = (0..nnz).map(|_| (0.2 + fr.uniform() * 1.8) as f32).collect();
+        a.push(plane);
+    }
+    let cost: Vec<f32> = (0..nnz)
+        .map(|_| -(rng.lognormal(0.0, 0.6).min(10.0) as f32))
+        .collect();
+    let matrix = BlockedMatrix {
+        num_sources: cfg.num_sources,
+        num_dests: cfg.num_dests,
+        num_families: cfg.num_families,
+        src_ptr,
+        dest_idx,
+        a,
+    };
+    let mut load = vec![0.0f64; cfg.num_families * cfg.num_dests];
+    for k in 0..cfg.num_families {
+        for (e, &j) in matrix.dest_idx.iter().enumerate() {
+            load[k * cfg.num_dests + j as usize] += matrix.a[k][e] as f64;
+        }
+    }
+    let b: Vec<f32> = load
+        .iter()
+        .map(|&lj| {
+            let rho = rng.uniform_range(0.5, 1.0);
+            (rho * (lj * 0.5 + 1e-3)) as f32
+        })
+        .collect();
+    LpSpec::new(matrix, cost, b)
+        .projection_kind(cfg.kind)
+        .build()
+        .expect("power-law generator produced an invalid LP")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -337,5 +438,71 @@ mod tests {
         for lp in &seq {
             assert_eq!(lp.a.dest_idx, base.a.dest_idx);
         }
+    }
+
+    #[test]
+    fn power_law_degrees_are_heavy_tailed_and_valid() {
+        let cfg = PowerLawConfig { num_sources: 4000, num_dests: 1000, ..Default::default() };
+        let lp = power_law_instance(&cfg);
+        lp.validate().unwrap();
+        let degs: Vec<usize> = (0..lp.num_sources()).map(|s| lp.a.degree(s)).collect();
+        assert!(degs.iter().all(|&d| d >= cfg.min_degree && d <= MAX_WIDTH));
+        let thin = degs.iter().filter(|&&d| d <= 2 * cfg.min_degree).count();
+        let wide = degs.iter().filter(|&&d| d >= 16 * cfg.min_degree).count();
+        // bounded Pareto: most mass at the minimum, a real tail far above
+        assert!(thin > lp.num_sources() / 3, "thin sources: {thin}");
+        assert!(wide > 0, "no tail reached {} edges", 16 * cfg.min_degree);
+        // budgets are positive and sized per (family, dest)
+        assert_eq!(lp.b.len(), cfg.num_families * cfg.num_dests);
+        assert!(lp.b.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn power_law_is_deterministic_per_seed() {
+        let cfg = PowerLawConfig { num_sources: 500, num_dests: 200, ..Default::default() };
+        let a = power_law_instance(&cfg);
+        let b = power_law_instance(&cfg);
+        assert_eq!(a.a.dest_idx, b.a.dest_idx);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.b, b.b);
+        let c = power_law_instance(&PowerLawConfig { seed: 1, ..cfg });
+        assert_ne!(a.a.dest_idx, c.a.dest_idx);
+    }
+
+    #[test]
+    fn quarter_step_tames_power_law_padding() {
+        use crate::sparse::slabs::{BuildOptions, SlabLayout, WidthPolicy};
+        let lp = power_law_instance(&PowerLawConfig {
+            num_sources: 3000,
+            num_dests: 800,
+            seed: 9,
+            ..Default::default()
+        });
+        let kind_of = |i: usize| lp.projection.kind_of(i);
+        let pow2 = SlabLayout::build_opts(
+            &lp.a,
+            &lp.cost,
+            0,
+            lp.num_sources(),
+            &kind_of,
+            BuildOptions::default(),
+        )
+        .unwrap();
+        let quarter = SlabLayout::build_opts(
+            &lp.a,
+            &lp.cost,
+            0,
+            lp.num_sources(),
+            &kind_of,
+            BuildOptions { policy: WidthPolicy::QuarterStep, threads: 0 },
+        )
+        .unwrap();
+        assert_eq!(quarter.total_real_edges(), pow2.total_real_edges());
+        assert!(
+            quarter.padding_factor() < pow2.padding_factor(),
+            "quarter {} !< pow2 {}",
+            quarter.padding_factor(),
+            pow2.padding_factor()
+        );
     }
 }

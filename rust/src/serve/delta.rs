@@ -8,7 +8,9 @@
 //!   and global RHS live only on the LP (the objective reads them at
 //!   construction). Zero structural work.
 //! * **Edge deltas** (bounded insert/delete): spliced into the LP and then
-//!   patched into the slab via [`SlabLayout::patch_edge`] — absorbed by
+//!   patched into the slab via [`SlabLayout::patch_edge_indexed`] — the
+//!   resident [`SlabIndex`] locates the edited source's rows in O(1) —
+//!   absorbed by
 //!   padding headroom when the source stays in its bucket row
 //!   ([`EdgePatch::InPlace`]), else a single-bucket repack
 //!   ([`EdgePatch::Repacked`], grid refreshed). Never a full rebuild.
@@ -23,8 +25,8 @@ use std::sync::Arc;
 use crate::backend::slab_cpu::SlabCpuObjective;
 use crate::engine::Fingerprint;
 use crate::problem::MatchingLp;
-use crate::sparse::slabs::{EdgePatch, PatchReport, MAX_WIDTH};
-use crate::sparse::{SlabChunk, SlabLayout};
+use crate::sparse::slabs::{BuildOptions, EdgePatch, PatchReport, MAX_WIDTH};
+use crate::sparse::{SlabChunk, SlabIndex, SlabLayout};
 
 /// One edit against the resident instance.
 #[derive(Clone, Debug)]
@@ -50,6 +52,10 @@ pub enum InstanceDelta {
 pub struct ResidentInstance {
     lp: MatchingLp,
     layout: Arc<SlabLayout>,
+    /// Inverted source→row index over `layout`, maintained incrementally
+    /// by the edge-delta path so patches never rescan bucket source
+    /// lists.
+    index: SlabIndex,
     grid: Vec<SlabChunk>,
     fingerprint: Fingerprint,
     /// Running tally of how edits were absorbed (in-place vs repack) —
@@ -66,9 +72,17 @@ impl ResidentInstance {
         let layout = Arc::new(SlabLayout::build(&lp.a, &lp.cost, 0, lp.num_sources(), &|i| {
             lp.projection.kind_of(i)
         })?);
+        let index = SlabIndex::build(&layout, 0, lp.num_sources());
         let grid = layout.fixed_chunk_grid();
         let fingerprint = Fingerprint::of(&lp);
-        Ok(ResidentInstance { lp, layout, grid, fingerprint, report: PatchReport::default() })
+        Ok(ResidentInstance {
+            lp,
+            layout,
+            index,
+            grid,
+            fingerprint,
+            report: PatchReport::default(),
+        })
     }
 
     pub fn lp(&self) -> &MatchingLp {
@@ -85,6 +99,12 @@ impl ResidentInstance {
 
     pub fn grid(&self) -> &[SlabChunk] {
         &self.grid
+    }
+
+    /// The resident inverted source→row index (kept in lockstep with
+    /// [`Self::layout`] by the edge-delta path).
+    pub fn index(&self) -> &SlabIndex {
+        &self.index
     }
 
     /// A full-range objective over the resident slab. Construction is
@@ -207,7 +227,15 @@ impl ResidentInstance {
         }
         let edge = splice(&mut self.lp)?;
         let patch = Arc::make_mut(&mut self.layout)
-            .patch_edge(&self.lp.a, &self.lp.cost, source, edge, insert, kind)
+            .patch_edge_indexed(
+                &self.lp.a,
+                &self.lp.cost,
+                source,
+                edge,
+                insert,
+                kind,
+                &mut self.index,
+            )
             .expect("patch_edge failure modes are pre-checked");
         if matches!(patch, EdgePatch::Repacked) {
             self.grid = self.layout.fixed_chunk_grid();
@@ -222,10 +250,17 @@ impl ResidentInstance {
     /// meant for tests and the daemon's opt-in audit mode, not the hot
     /// path.
     pub fn parity_check(&self) -> Result<(), String> {
-        let fresh = SlabLayout::build(&self.lp.a, &self.lp.cost, 0, self.lp.num_sources(), &|i| {
-            self.lp.projection.kind_of(i)
-        })?;
-        layouts_identical(&self.layout, &fresh)?;
+        let opts = BuildOptions { policy: self.layout.policy, threads: 0 };
+        let fresh = SlabLayout::build_opts(
+            &self.lp.a,
+            &self.lp.cost,
+            0,
+            self.lp.num_sources(),
+            &|i| self.lp.projection.kind_of(i),
+            opts,
+        )?;
+        self.layout.bit_eq(&fresh)?;
+        self.index.parity_check(&self.layout)?;
         let fresh_grid = fresh.fixed_chunk_grid();
         if self.grid.len() != fresh_grid.len() {
             return Err(format!(
@@ -241,44 +276,6 @@ impl ResidentInstance {
         }
         Ok(())
     }
-}
-
-/// Bit-exact layout comparison (f32 planes compared as raw bits).
-fn layouts_identical(a: &SlabLayout, b: &SlabLayout) -> Result<(), String> {
-    if a.num_families != b.num_families || a.num_dests != b.num_dests {
-        return Err("layout dims differ from rebuild".to_string());
-    }
-    if a.buckets.len() != b.buckets.len() {
-        return Err(format!(
-            "patched layout has {} buckets, rebuild has {}",
-            a.buckets.len(),
-            b.buckets.len()
-        ));
-    }
-    for (i, (x, y)) in a.buckets.iter().zip(&b.buckets).enumerate() {
-        if x.kind != y.kind || x.width != y.width {
-            return Err(format!("bucket {i}: shape differs from rebuild"));
-        }
-        if x.sources != y.sources {
-            return Err(format!("bucket {i}: source rows differ from rebuild"));
-        }
-        if x.dest_idx != y.dest_idx || x.edge_id != y.edge_id {
-            return Err(format!("bucket {i}: index planes differ from rebuild"));
-        }
-        if x.real_edge_count != y.real_edge_count {
-            return Err(format!("bucket {i}: real edge count differs from rebuild"));
-        }
-        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
-        if bits(&x.cost) != bits(&y.cost) || bits(&x.mask) != bits(&y.mask) {
-            return Err(format!("bucket {i}: cost/mask planes differ from rebuild"));
-        }
-        if x.a.len() != y.a.len()
-            || x.a.iter().zip(&y.a).any(|(p, q)| bits(p) != bits(q))
-        {
-            return Err(format!("bucket {i}: coefficient planes differ from rebuild"));
-        }
-    }
-    Ok(())
 }
 
 #[cfg(test)]

@@ -10,4 +10,4 @@ pub mod slabs;
 pub use blocked::BlockedMatrix;
 pub use coo::Coo;
 pub use csc::Csc;
-pub use slabs::{Bucket, SlabChunk, SlabLayout};
+pub use slabs::{Bucket, BuildOptions, SlabChunk, SlabIndex, SlabLayout, WidthPolicy};

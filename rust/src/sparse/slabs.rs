@@ -1,15 +1,28 @@
 //! Log₂-bucketed padded slab layout (paper §6 "Batched projection
 //! operator").
 //!
-//! Sources are grouped by slice length (degree) into geometric buckets
-//! `[2^{t-1}, 2^t)`; each bucket's slices are gathered into a dense slab
-//! padded to the bucket's upper bound. One batched kernel launch per bucket
-//! replaces one launch per source, while geometric bucketing bounds padding
-//! waste below 2× — the number of launches is `1 + ⌊log₂ s_max⌋`.
+//! Sources are grouped by slice length (degree) into geometric buckets;
+//! each bucket's slices are gathered into a dense slab padded to the
+//! bucket's upper bound. One batched kernel launch per bucket replaces one
+//! launch per source, while geometric bucketing bounds padding waste —
+//! below 2× under the default pow2 [`WidthPolicy`], below 1.5× under the
+//! quarter-step table.
 //!
 //! The slab row order remembers its source ids so the coordinator can
 //! gather λ into per-edge `u` and scatter-add `a ⊙ x` back into the dual
 //! gradient.
+//!
+//! **Build pipeline** ([`SlabLayout::build_opts`], DESIGN.md §11): a
+//! deterministically parallel counting sort. Pass 1 classifies each source
+//! once, counts rows per (kind, width-slot) cell in a dense counter array,
+//! prefix-sums the nonzero cells into bucket row offsets, and scatters
+//! sources into their rows — the inverted source→row map that
+//! [`SlabIndex`] retains for the serve path. Pass 2 fills the SoA planes
+//! chunk-by-chunk over the fixed grid with `std::thread::scope`; every
+//! task owns a disjoint row range, so the planes are bit-identical to a
+//! serial fill at any thread count. The same row primitive backs the
+//! repack path: [`SlabLayout::patch_edge`] splices and refills only the
+//! edited source's rows.
 //!
 //! On top of the buckets sits the **fixed chunk grid**
 //! ([`SlabLayout::fixed_chunk_grid`]): every bucket's rows cut into
@@ -24,6 +37,8 @@
 
 use super::blocked::BlockedMatrix;
 use crate::projection::ProjectionKind;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Minimum slab width (tiny rows are padded up to this).
 pub const MIN_WIDTH: usize = 4;
@@ -39,6 +54,80 @@ pub const MAX_CHUNKS: usize = 32;
 /// Minimum rows per chunk — below this the per-chunk bookkeeping
 /// dominates the math.
 pub const MIN_CHUNK_ROWS: usize = 64;
+
+const POW2_WIDTHS: [usize; 8] = [4, 8, 16, 32, 64, 128, 256, 512];
+const QUARTER_WIDTHS: [usize; 14] =
+    [4, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512];
+
+/// Degree→width rounding table for the slab buckets.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WidthPolicy {
+    /// Powers of two in [MIN_WIDTH, MAX_WIDTH] — the paper's §6 scheme and
+    /// the bit-compatible default (identical buckets to [`bucket_width`]).
+    #[default]
+    Pow2,
+    /// Quarter steps: powers of two plus their midpoints
+    /// (4, 8, 12, 16, 24, 32, …) — bounds per-row padding waste below 1.5×
+    /// instead of 2×, at the price of up to 2× more launches.
+    QuarterStep,
+}
+
+impl WidthPolicy {
+    /// The ascending width table: every bucket width under this policy is
+    /// an entry of this table, and a degree's width slot is its position.
+    pub fn widths(self) -> &'static [usize] {
+        match self {
+            WidthPolicy::Pow2 => &POW2_WIDTHS,
+            WidthPolicy::QuarterStep => &QUARTER_WIDTHS,
+        }
+    }
+
+    /// Width-table slot of `degree`; degrees past MAX_WIDTH clamp to the
+    /// last slot (the split path for separable kinds).
+    fn slot_for(self, degree: usize) -> usize {
+        let ws = self.widths();
+        ws.partition_point(|&w| w < degree).min(ws.len() - 1)
+    }
+
+    /// Round `degree` up to its bucket width under this policy.
+    pub fn width_for(self, degree: usize) -> usize {
+        self.widths()[self.slot_for(degree)]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WidthPolicy::Pow2 => "pow2",
+            WidthPolicy::QuarterStep => "quarter",
+        }
+    }
+
+    pub fn parse(spec: &str) -> Option<WidthPolicy> {
+        match spec {
+            "pow2" => Some(WidthPolicy::Pow2),
+            "quarter" | "quarter-step" => Some(WidthPolicy::QuarterStep),
+            _ => None,
+        }
+    }
+}
+
+/// Round degree up to the default bucket width: next power of two,
+/// clamped to [MIN_WIDTH, MAX_WIDTH] (shorthand for
+/// `WidthPolicy::Pow2.width_for`).
+pub fn bucket_width(degree: usize) -> usize {
+    WidthPolicy::Pow2.width_for(degree)
+}
+
+/// Knobs for [`SlabLayout::build_opts`]. `Default` (pow2 widths, serial
+/// fill) reproduces [`SlabLayout::build`] bit-for-bit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildOptions {
+    /// Degree→width rounding table.
+    pub policy: WidthPolicy,
+    /// Plane-fill threads for pass 2; 0 or 1 fills serially. Any value
+    /// yields bit-identical planes — threads race only to *claim* disjoint
+    /// chunks, never to write.
+    pub threads: usize,
+}
 
 /// One unit of the fixed parallel/shard grid: a row range within one
 /// bucket. Chunks never span buckets, so each chunk projects with one
@@ -59,15 +148,20 @@ impl SlabChunk {
     }
 }
 
-/// One log₂ bucket: a dense `[rows × width]` slab of edges.
+/// One bucket: a dense `[rows × width]` slab of edges.
 #[derive(Clone, Debug)]
 pub struct Bucket {
     /// Projection kind for every row in this bucket.
     pub kind: ProjectionKind,
-    /// Padded width (power of two in [MIN_WIDTH, MAX_WIDTH]).
+    /// Padded width (a [`WidthPolicy`] table entry in
+    /// [MIN_WIDTH, MAX_WIDTH]).
     pub width: usize,
     /// Source id of each row.
     pub sources: Vec<u32>,
+    /// Real (non-padding) entries per row (`row_len[r] <= width`), fixed
+    /// at build time so partition-time consumers prefix-sum real edges in
+    /// O(rows) instead of rescanning masks.
+    pub row_len: Vec<u16>,
     /// Flattened [rows × width] destination index (0 on padding).
     pub dest_idx: Vec<u32>,
     /// Flattened [rows × width] global edge index (u32::MAX on padding) —
@@ -105,12 +199,23 @@ pub struct SlabLayout {
     pub buckets: Vec<Bucket>,
     pub num_families: usize,
     pub num_dests: usize,
+    /// Width table the buckets were built with (patches must round new
+    /// degrees with the same table to preserve rebuild parity).
+    pub policy: WidthPolicy,
 }
 
-/// Round degree up to the bucket width: next power of two, clamped to
-/// [MIN_WIDTH, MAX_WIDTH].
-pub fn bucket_width(degree: usize) -> usize {
-    degree.next_power_of_two().clamp(MIN_WIDTH, MAX_WIDTH)
+/// Per-bucket padding achieved under the active [`WidthPolicy`] — the
+/// observability half of the width-bucketing knob
+/// ([`SlabLayout::padding_report`]).
+#[derive(Clone, Debug)]
+pub struct BucketPadding {
+    pub kind: String,
+    pub width: usize,
+    pub rows: usize,
+    pub real_edges: usize,
+    pub padded_edges: usize,
+    /// padded / real for this bucket (>= 1).
+    pub factor: f64,
 }
 
 /// How an edge insert/delete was absorbed by [`SlabLayout::patch_edge`].
@@ -147,66 +252,177 @@ impl PatchReport {
     }
 }
 
-/// Fill one bucket's slabs from the matrix — pass 2 of [`SlabLayout::build`],
-/// shared with the patch path so a repacked bucket is bit-identical to the
-/// same bucket in a from-scratch build. `sources` must be ascending, with a
-/// split (> width · 1) source's copies contiguous.
-fn fill_bucket(
+/// What a patch did to bucket structure — drives the incremental index
+/// maintenance in [`SlabLayout::patch_edge_indexed`].
+enum PatchTouch {
+    /// Row contents changed but no rows moved.
+    None,
+    /// These buckets' row assignments changed; bucket indices are stable.
+    Buckets(Vec<usize>),
+    /// Buckets were created or removed — bucket indices shifted.
+    Reshaped,
+}
+
+/// Position of `kind` in the sorted distinct-kind table. The kind is
+/// always present (the table was collected from the same tags), so the
+/// not-found arm is unreachable; `unwrap_or_else` keeps it panic-free.
+fn kind_index(kinds: &[ProjectionKind], kind: ProjectionKind) -> usize {
+    kinds.binary_search(&kind).unwrap_or_else(|at| at)
+}
+
+/// Rows per chunk of the canonical grid for a layout with `total_rows`.
+fn chunk_target(total_rows: usize) -> usize {
+    total_rows.div_ceil(MAX_CHUNKS).max(MIN_CHUNK_ROWS)
+}
+
+/// Cut `rows` into `(lo, hi)` ranges of at most `target` rows — the
+/// per-bucket piece of the fixed chunk grid, shared between
+/// [`SlabLayout::fixed_chunk_grid`] and the parallel fill so fill tasks
+/// coincide exactly with grid chunks.
+fn bucket_chunks(rows: usize, target: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + target).min(rows);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Split `n` elements off the front of `*rest`, shrinking it — the borrow
+/// split that hands pass 2 its disjoint `&mut` plane windows without
+/// unsafe.
+fn carve<'a, T>(rest: &mut &'a mut [T], n: usize) -> &'a mut [T] {
+    let (head, tail) = std::mem::take(rest).split_at_mut(n);
+    *rest = tail;
+    head
+}
+
+/// How many immediately-preceding rows of `sources` hold the same source
+/// as row `at` — the split-copy offset a fill task starts from (copies of
+/// an over-wide separable source are contiguous).
+fn split_run(sources: &[u32], at: usize) -> usize {
+    if at == 0 || at >= sources.len() {
+        return 0;
+    }
+    let src = sources[at];
+    let mut run = 0usize;
+    while at - run > 0 && sources[at - run - 1] == src {
+        run += 1;
+    }
+    run
+}
+
+/// One chunk-sized unit of pass-2 fill work: disjoint `&mut` windows over
+/// one bucket's planes, covering rows `[row_lo, row_lo + sources.len())`
+/// of that bucket.
+struct FillTask<'a> {
+    width: usize,
+    /// Split-copy offset of the first row (how many earlier rows of the
+    /// same source precede this window).
+    run0: usize,
+    sources: &'a [u32],
+    dest_idx: &'a mut [u32],
+    edge_id: &'a mut [u32],
+    cost: &'a mut [f32],
+    a: Vec<&'a mut [f32]>,
+    mask: &'a mut [f32],
+}
+
+/// Fill one task's rows from the matrix — the row primitive shared by the
+/// from-scratch build, the range-targeted repack, and (transitively)
+/// `patch_edge`, so a repacked bucket is bit-identical to the same bucket
+/// in a fresh build. Planes must arrive in shell state (padding
+/// defaults); only the real prefix of each row is written.
+fn fill_task(t: &mut FillTask<'_>, m: &BlockedMatrix, cost: &[f32]) {
+    let w = t.width;
+    let mut run = t.run0;
+    for (rr, &src) in t.sources.iter().enumerate() {
+        if rr > 0 {
+            run = if t.sources[rr - 1] == src { run + 1 } else { 0 };
+        }
+        let i = src as usize;
+        let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
+        let start = e0 + run * w;
+        let take = (e1 - start).min(w);
+        let base = rr * w;
+        for (col, e) in (start..start + take).enumerate() {
+            t.dest_idx[base + col] = m.dest_idx[e];
+            t.edge_id[base + col] = e as u32;
+            t.cost[base + col] = cost[e];
+            for (k, plane) in t.a.iter_mut().enumerate() {
+                plane[base + col] = m.a[k][e];
+            }
+            t.mask[base + col] = 1.0;
+        }
+    }
+}
+
+/// Allocate a bucket with every plane in padding state and `row_len` /
+/// `real_edge_count` computed from the matrix — pass 1's output, filled
+/// by pass 2. `sources` must be ascending with split copies contiguous.
+fn bucket_shell(
     kind: ProjectionKind,
     width: usize,
     sources: Vec<u32>,
     m: &BlockedMatrix,
-    cost: &[f32],
 ) -> Bucket {
     let rows = sources.len();
     let n = rows * width;
-    let mut bk = Bucket {
+    let mut row_len = Vec::with_capacity(rows);
+    let mut run = 0usize;
+    for (r, &src) in sources.iter().enumerate() {
+        if r > 0 {
+            run = if sources[r - 1] == src { run + 1 } else { 0 };
+        }
+        let deg = m.degree(src as usize);
+        row_len.push((deg - run * width).min(width) as u16);
+    }
+    let real = row_len.iter().map(|&l| l as usize).sum::<usize>();
+    Bucket {
         kind,
         width,
-        sources: Vec::with_capacity(rows),
+        sources,
+        row_len,
         dest_idx: vec![0u32; n],
         edge_id: vec![u32::MAX; n],
         cost: vec![0.0f32; n],
         a: vec![vec![0.0f32; n]; m.num_families],
         mask: vec![0.0f32; n],
-        real_edge_count: 0,
-    };
-    let mut row = 0usize;
-    let mut cursor: Option<(u32, usize)> = None; // (source, next edge offset) for splits
-    for &src in &sources {
-        let i = src as usize;
-        let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
-        let start = match cursor {
-            Some((s, off)) if s == src => e0 + off,
-            _ => e0,
-        };
-        let take = (e1 - start).min(width);
-        let base = row * width;
-        for (col, e) in (start..start + take).enumerate() {
-            bk.dest_idx[base + col] = m.dest_idx[e];
-            bk.edge_id[base + col] = e as u32;
-            bk.cost[base + col] = cost[e];
-            for k in 0..m.num_families {
-                bk.a[k][base + col] = m.a[k][e];
-            }
-            bk.mask[base + col] = 1.0;
-        }
-        bk.sources.push(src);
-        bk.real_edge_count += take;
-        cursor = if start + take < e1 {
-            Some((src, start + take - e0))
-        } else {
-            None
-        };
-        row += 1;
+        real_edge_count: real,
     }
-    bk
+}
+
+/// Range-targeted refill: rewrite rows `[row_lo, row_hi)` of one bucket
+/// from the matrix through the same [`fill_task`] primitive as the
+/// from-scratch build. The range's planes must be in padding state.
+fn fill_bucket_rows(
+    bk: &mut Bucket,
+    row_lo: usize,
+    row_hi: usize,
+    m: &BlockedMatrix,
+    cost: &[f32],
+) {
+    let w = bk.width;
+    let mut task = FillTask {
+        width: w,
+        run0: split_run(&bk.sources, row_lo),
+        sources: &bk.sources[row_lo..row_hi],
+        dest_idx: &mut bk.dest_idx[row_lo * w..row_hi * w],
+        edge_id: &mut bk.edge_id[row_lo * w..row_hi * w],
+        cost: &mut bk.cost[row_lo * w..row_hi * w],
+        a: bk.a.iter_mut().map(|p| &mut p[row_lo * w..row_hi * w]).collect(),
+        mask: &mut bk.mask[row_lo * w..row_hi * w],
+    };
+    fill_task(&mut task, m, cost);
 }
 
 impl SlabLayout {
     /// Build the layout for sources `[src_lo, src_hi)` of `m` with costs
     /// `cost` (per edge, global indexing) and per-source projection kinds
-    /// given by `kind_of` (the ProjectionMap of paper Table 1).
+    /// given by `kind_of` (the ProjectionMap of paper Table 1), under the
+    /// default [`BuildOptions`] (pow2 widths, serial fill).
     ///
     /// Sources whose degree exceeds MAX_WIDTH are rejected for
     /// non-separable polytopes (simplex) — the row-wise projection needs
@@ -219,47 +435,180 @@ impl SlabLayout {
         src_hi: usize,
         kind_of: &dyn Fn(usize) -> ProjectionKind,
     ) -> Result<SlabLayout, String> {
+        Self::build_opts(m, cost, src_lo, src_hi, kind_of, BuildOptions::default())
+    }
+
+    /// [`Self::build`] with explicit [`BuildOptions`]: the counting-sort
+    /// pipeline (DESIGN.md §11).
+    ///
+    /// Pass 1 classifies each source once (`kind_of` is called exactly
+    /// once per non-isolated source), counts rows per (kind, width-slot)
+    /// cell in a dense counter array, prefix-sums the nonzero cells into
+    /// bucket row offsets, and counting-sort scatters sources into rows.
+    /// Pass 2 fills the SoA planes over the canonical chunk grid — serial
+    /// or under `std::thread::scope`, bit-identically either way, because
+    /// tasks own disjoint row ranges and threads race only to claim them.
+    pub fn build_opts(
+        m: &BlockedMatrix,
+        cost: &[f32],
+        src_lo: usize,
+        src_hi: usize,
+        kind_of: &dyn Fn(usize) -> ProjectionKind,
+        opts: BuildOptions,
+    ) -> Result<SlabLayout, String> {
         assert!(src_lo <= src_hi && src_hi <= m.num_sources);
         assert_eq!(cost.len(), m.nnz());
+        let policy = opts.policy;
+        let num_slots = policy.widths().len();
 
-        // Pass 1: count rows per (kind, width) bucket.
-        use std::collections::BTreeMap;
-        let mut groups: BTreeMap<(ProjectionKind, usize), Vec<u32>> = BTreeMap::new();
+        // Pass 1a: classify every source once — the only kind_of calls.
+        let mut tags: Vec<Option<(ProjectionKind, usize)>> =
+            Vec::with_capacity(src_hi - src_lo);
         for i in src_lo..src_hi {
             let deg = m.degree(i);
             if deg == 0 {
-                continue; // isolated source: no variables
+                tags.push(None); // isolated source: no variables
+                continue;
             }
             let kind = kind_of(i);
-            if deg > MAX_WIDTH {
-                if !kind.separable() {
-                    return Err(format!(
-                        "source {i} degree {deg} exceeds MAX_WIDTH {MAX_WIDTH} \
-                         for non-separable {} projection",
-                        kind.name()
-                    ));
-                }
-                // separable: split into MAX_WIDTH chunks (handled in pass 2
-                // by pushing the same source several times)
-                let chunks = deg.div_ceil(MAX_WIDTH);
-                groups
-                    .entry((kind, MAX_WIDTH))
-                    .or_default()
-                    .extend(std::iter::repeat(i as u32).take(chunks));
-            } else {
-                groups.entry((kind, bucket_width(deg))).or_default().push(i as u32);
+            if deg > MAX_WIDTH && !kind.separable() {
+                return Err(format!(
+                    "source {i} degree {deg} exceeds MAX_WIDTH {MAX_WIDTH} \
+                     for non-separable {} projection",
+                    kind.name()
+                ));
+            }
+            tags.push(Some((kind, policy.slot_for(deg))));
+        }
+
+        // Distinct kinds, ascending — the bucket-major order (`Ord` on
+        // ProjectionKind matches the serial build's historical (kind,
+        // width) grouping order, so pow2 layouts are bit-compatible).
+        let mut kinds: Vec<ProjectionKind> =
+            tags.iter().flatten().map(|&(k, _)| k).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+
+        // Pass 1b: dense (kind × width-slot) row counters. Over-wide
+        // separable sources occupy one row per MAX_WIDTH-sized piece.
+        let mut counts = vec![0usize; kinds.len() * num_slots];
+        for (o, tag) in tags.iter().enumerate() {
+            if let Some((kind, slot)) = *tag {
+                let deg = m.degree(src_lo + o);
+                let copies = if deg > MAX_WIDTH { deg.div_ceil(MAX_WIDTH) } else { 1 };
+                counts[kind_index(&kinds, kind) * num_slots + slot] += copies;
             }
         }
 
-        // Pass 2: fill slabs.
-        let mut buckets = Vec::with_capacity(groups.len());
-        for ((kind, width), sources) in groups {
-            buckets.push(fill_bucket(kind, width, sources, m, cost));
+        // Pass 1c: prefix-sum the nonzero cells, in ascending (kind,
+        // slot) code order, into bucket row offsets.
+        struct Cell {
+            kind: ProjectionKind,
+            width: usize,
+            rows: usize,
+            row_base: usize,
         }
+        let mut cells: Vec<Cell> = Vec::new();
+        let mut bucket_of = vec![usize::MAX; counts.len()];
+        let mut total_rows = 0usize;
+        for (code, &rows) in counts.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            bucket_of[code] = cells.len();
+            cells.push(Cell {
+                kind: kinds[code / num_slots],
+                width: policy.widths()[code % num_slots],
+                rows,
+                row_base: total_rows,
+            });
+            total_rows += rows;
+        }
+
+        // Pass 1d: counting-sort scatter — the inverted source→row map.
+        // Ascending source order keeps each bucket's `sources` sorted
+        // with split copies contiguous, exactly the serial fill order.
+        let mut row_src = vec![0u32; total_rows];
+        let mut cursor: Vec<usize> = cells.iter().map(|c| c.row_base).collect();
+        for (o, tag) in tags.iter().enumerate() {
+            if let Some((kind, slot)) = *tag {
+                let i = src_lo + o;
+                let deg = m.degree(i);
+                let copies = if deg > MAX_WIDTH { deg.div_ceil(MAX_WIDTH) } else { 1 };
+                let b = bucket_of[kind_index(&kinds, kind) * num_slots + slot];
+                for r in 0..copies {
+                    row_src[cursor[b] + r] = i as u32;
+                }
+                cursor[b] += copies;
+            }
+        }
+
+        // Pass 1e: bucket shells — padding-state planes plus `row_len`.
+        let mut buckets: Vec<Bucket> = cells
+            .iter()
+            .map(|c| {
+                let srcs = row_src[c.row_base..c.row_base + c.rows].to_vec();
+                bucket_shell(c.kind, c.width, srcs, m)
+            })
+            .collect();
+
+        // Pass 2: carve one fill task per canonical grid chunk. Tasks are
+        // disjoint row ranges, so any claim order yields identical bytes.
+        let target = chunk_target(total_rows);
+        let mut tasks: Vec<Mutex<FillTask<'_>>> = Vec::new();
+        for bk in buckets.iter_mut() {
+            let w = bk.width;
+            let Bucket { sources, dest_idx, edge_id, cost: bcost, a, mask, .. } = bk;
+            let sources: &[u32] = sources;
+            let mut dest_rest: &mut [u32] = dest_idx;
+            let mut edge_rest: &mut [u32] = edge_id;
+            let mut cost_rest: &mut [f32] = bcost;
+            let mut a_rest: Vec<&mut [f32]> =
+                a.iter_mut().map(|p| p.as_mut_slice()).collect();
+            let mut mask_rest: &mut [f32] = mask;
+            for (lo, hi) in bucket_chunks(sources.len(), target) {
+                let n = (hi - lo) * w;
+                tasks.push(Mutex::new(FillTask {
+                    width: w,
+                    run0: split_run(sources, lo),
+                    sources: &sources[lo..hi],
+                    dest_idx: carve(&mut dest_rest, n),
+                    edge_id: carve(&mut edge_rest, n),
+                    cost: carve(&mut cost_rest, n),
+                    a: a_rest.iter_mut().map(|p| carve(p, n)).collect(),
+                    mask: carve(&mut mask_rest, n),
+                }));
+            }
+        }
+        let threads = if opts.threads > 1 { opts.threads.min(tasks.len()) } else { 1 };
+        if threads <= 1 {
+            for t in &tasks {
+                let mut task = t.lock().unwrap_or_else(|e| e.into_inner());
+                fill_task(&mut task, m, cost);
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks.len() {
+                            break;
+                        }
+                        let mut task =
+                            tasks[i].lock().unwrap_or_else(|e| e.into_inner());
+                        fill_task(&mut task, m, cost);
+                    });
+                }
+            });
+        }
+        drop(tasks);
+
         Ok(SlabLayout {
             buckets,
             num_families: m.num_families,
             num_dests: m.num_dests,
+            policy,
         })
     }
 
@@ -275,13 +624,28 @@ impl SlabLayout {
         self.buckets.iter().map(|b| b.padded_edges()).sum()
     }
 
-    /// Padding overhead factor (paper: < 2 within each bucket).
+    /// Padding overhead factor (paper: < 2 within each pow2 bucket).
     pub fn padding_factor(&self) -> f64 {
         self.total_padded_edges() as f64 / self.total_real_edges().max(1) as f64
     }
 
+    /// Per-bucket padding breakdown under the active [`WidthPolicy`].
+    pub fn padding_report(&self) -> Vec<BucketPadding> {
+        self.buckets
+            .iter()
+            .map(|b| BucketPadding {
+                kind: b.kind.name().to_string(),
+                width: b.width,
+                rows: b.rows(),
+                real_edges: b.real_edges(),
+                padded_edges: b.padded_edges(),
+                factor: b.padded_edges() as f64 / b.real_edges().max(1) as f64,
+            })
+            .collect()
+    }
+
     /// Number of kernel launches per iteration under this layout
-    /// (paper: 1 + ⌊log₂ s_max⌋ per kind).
+    /// (paper: 1 + ⌊log₂ s_max⌋ per kind under pow2 widths).
     pub fn num_launches(&self) -> usize {
         self.buckets.len()
     }
@@ -294,26 +658,24 @@ impl SlabLayout {
     /// per-chunk partial reductions merged in ascending grid index are the
     /// definition of the layout's bit-exact evaluation order.
     pub fn fixed_chunk_grid(&self) -> Vec<SlabChunk> {
-        let target = self.total_rows().div_ceil(MAX_CHUNKS).max(MIN_CHUNK_ROWS);
+        let target = chunk_target(self.total_rows());
         let mut grid = Vec::new();
         for (b, bk) in self.buckets.iter().enumerate() {
-            let rows = bk.rows();
-            let mut lo = 0usize;
-            while lo < rows {
-                let hi = (lo + target).min(rows);
+            for (lo, hi) in bucket_chunks(bk.rows(), target) {
                 grid.push(SlabChunk { bucket: b, row_lo: lo, row_hi: hi });
-                lo = hi;
             }
         }
         grid
     }
 
-    /// Real (non-padding) edges inside one chunk — a mask scan, intended
-    /// for build/partition time, not the per-iteration path.
+    /// Real (non-padding) edges inside one chunk — an O(rows) `row_len`
+    /// prefix sum (build time stores per-row lengths precisely so
+    /// partition/repack time never rescans masks).
     pub fn chunk_real_edges(&self, c: &SlabChunk) -> usize {
-        let bk = &self.buckets[c.bucket];
-        let w = bk.width;
-        bk.mask[c.row_lo * w..c.row_hi * w].iter().filter(|&&m| m > 0.0).count()
+        self.buckets[c.bucket].row_len[c.row_lo..c.row_hi]
+            .iter()
+            .map(|&l| l as usize)
+            .sum::<usize>()
     }
 
     /// Cumulative real-edge pointer over a chunk grid — the `src_ptr`
@@ -333,15 +695,68 @@ impl SlabLayout {
     /// Rewrite the cost plane in place from a perturbed per-edge cost
     /// vector (global edge indexing) — the c-delta path. Structure (edge
     /// pattern, a-planes, masks, grid) is untouched, so this never
-    /// invalidates anything derived from the layout.
+    /// invalidates anything derived from the layout. Only real entries
+    /// are visited (`row_len` prefixes), never padding.
     pub fn patch_costs(&mut self, cost: &[f32]) {
         for bk in &mut self.buckets {
-            for (c, &eid) in bk.cost.iter_mut().zip(&bk.edge_id) {
-                if eid != u32::MAX {
-                    *c = cost[eid as usize];
+            let w = bk.width;
+            for (row, &len) in bk.row_len.iter().enumerate() {
+                let base = row * w;
+                for col in 0..len as usize {
+                    let e = bk.edge_id[base + col] as usize;
+                    bk.cost[base + col] = cost[e];
                 }
             }
         }
+    }
+
+    /// Plane-by-plane bit equality with `other` — the parity gate shared
+    /// by the serve audit, the proptests, and the build bench.
+    pub fn bit_eq(&self, other: &SlabLayout) -> Result<(), String> {
+        if self.num_families != other.num_families || self.num_dests != other.num_dests {
+            return Err("layout dimensions diverge".into());
+        }
+        if self.policy != other.policy {
+            return Err(format!(
+                "width policy diverges: {} vs {}",
+                self.policy.name(),
+                other.policy.name()
+            ));
+        }
+        if self.buckets.len() != other.buckets.len() {
+            return Err(format!(
+                "bucket count diverges: {} vs {}",
+                self.buckets.len(),
+                other.buckets.len()
+            ));
+        }
+        for (i, (x, y)) in self.buckets.iter().zip(&other.buckets).enumerate() {
+            if x.kind != y.kind || x.width != y.width {
+                return Err(format!("bucket {i} shape diverges"));
+            }
+            if x.sources != y.sources {
+                return Err(format!("bucket {i} sources diverge"));
+            }
+            if x.row_len != y.row_len {
+                return Err(format!("bucket {i} row lengths diverge"));
+            }
+            if x.dest_idx != y.dest_idx || x.edge_id != y.edge_id {
+                return Err(format!("bucket {i} index planes diverge"));
+            }
+            if x.real_edge_count != y.real_edge_count {
+                return Err(format!("bucket {i} real edge count diverges"));
+            }
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            if bits(&x.cost) != bits(&y.cost) || bits(&x.mask) != bits(&y.mask) {
+                return Err(format!("bucket {i} value planes diverge"));
+            }
+            for k in 0..x.a.len() {
+                if bits(&x.a[k]) != bits(&y.a[k]) {
+                    return Err(format!("bucket {i} family {k} plane diverges"));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Shift stored global edge ids after a CSR splice: ids `>= from` move
@@ -369,8 +784,7 @@ impl SlabLayout {
         let (e0, e1) = (m.src_ptr[i], m.src_ptr[i + 1]);
         let deg = e1 - e0;
         debug_assert!(deg <= w);
-        let old_real =
-            bk.mask[base..base + w].iter().filter(|&&v| v > 0.0).count();
+        let old_real = bk.row_len[row] as usize;
         for col in 0..w {
             if col < deg {
                 let e = e0 + col;
@@ -391,7 +805,184 @@ impl SlabLayout {
                 bk.mask[base + col] = 0.0;
             }
         }
+        bk.row_len[row] = deg as u16;
         bk.real_edge_count = bk.real_edge_count + deg - old_real;
+    }
+
+    /// Remove rows `[row_lo, row_hi)` of bucket `bi` (a drained source's
+    /// copies). The surviving rows' bytes are already correct — edge ids
+    /// were renumbered up front — so no refill is needed for parity with
+    /// a fresh build.
+    fn drain_rows(&mut self, bi: usize, row_lo: usize, row_hi: usize) {
+        let bk = &mut self.buckets[bi];
+        let w = bk.width;
+        let removed = bk.row_len[row_lo..row_hi]
+            .iter()
+            .map(|&l| l as usize)
+            .sum::<usize>();
+        bk.sources.drain(row_lo..row_hi);
+        bk.row_len.drain(row_lo..row_hi);
+        bk.dest_idx.drain(row_lo * w..row_hi * w);
+        bk.edge_id.drain(row_lo * w..row_hi * w);
+        bk.cost.drain(row_lo * w..row_hi * w);
+        for plane in &mut bk.a {
+            plane.drain(row_lo * w..row_hi * w);
+        }
+        bk.mask.drain(row_lo * w..row_hi * w);
+        bk.real_edge_count -= removed;
+    }
+
+    /// Splice `copies` fresh rows for `source` into bucket `bi` at its
+    /// sorted position and fill them from the matrix through the shared
+    /// row primitive — the bucket ends bit-identical to a fresh build.
+    fn insert_rows(
+        &mut self,
+        bi: usize,
+        source: usize,
+        copies: usize,
+        m: &BlockedMatrix,
+        cost: &[f32],
+    ) {
+        let deg = m.degree(source);
+        let bk = &mut self.buckets[bi];
+        let w = bk.width;
+        let at = bk.sources.partition_point(|&s| s < source as u32);
+        bk.sources
+            .splice(at..at, std::iter::repeat_n(source as u32, copies));
+        bk.row_len
+            .splice(at..at, (0..copies).map(|r| ((deg - r * w).min(w)) as u16));
+        bk.dest_idx
+            .splice(at * w..at * w, std::iter::repeat_n(0u32, copies * w));
+        bk.edge_id
+            .splice(at * w..at * w, std::iter::repeat_n(u32::MAX, copies * w));
+        bk.cost
+            .splice(at * w..at * w, std::iter::repeat_n(0.0f32, copies * w));
+        for plane in &mut bk.a {
+            plane.splice(at * w..at * w, std::iter::repeat_n(0.0f32, copies * w));
+        }
+        bk.mask
+            .splice(at * w..at * w, std::iter::repeat_n(0.0f32, copies * w));
+        bk.real_edge_count += deg;
+        fill_bucket_rows(bk, at, at + copies, m, cost);
+    }
+
+    /// Shared precondition gate of the patch paths — an error must leave
+    /// the resident layout exactly as it was.
+    fn patch_precheck(
+        &self,
+        m: &BlockedMatrix,
+        cost: &[f32],
+        source: usize,
+        kind: ProjectionKind,
+    ) -> Result<(), String> {
+        assert_eq!(cost.len(), m.nnz());
+        assert_eq!(m.num_families, self.num_families);
+        let new_deg = m.degree(source);
+        if new_deg > MAX_WIDTH && !kind.separable() {
+            return Err(format!(
+                "source {source} degree {new_deg} exceeds MAX_WIDTH {MAX_WIDTH} \
+                 for non-separable {} projection",
+                kind.name()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Locate `source`'s rows by scanning bucket source lists — the
+    /// index-free fallback (all rows sit in one bucket: kind is fixed per
+    /// source and width is a function of its degree). Returns
+    /// (bucket, first row, row count).
+    fn scan_source(&self, source: usize) -> Option<(usize, usize, usize)> {
+        self.buckets.iter().enumerate().find_map(|(bi, bk)| {
+            let lo = bk.sources.partition_point(|&s| s < source as u32);
+            let hi = bk.sources.partition_point(|&s| s <= source as u32);
+            (lo < hi).then_some((bi, lo, hi - lo))
+        })
+    }
+
+    /// The patch body shared by [`Self::patch_edge`] and
+    /// [`Self::patch_edge_indexed`]: `old` is the source's pre-edit
+    /// location, preconditions already checked.
+    #[allow(clippy::too_many_arguments)]
+    fn patch_edge_core(
+        &mut self,
+        m: &BlockedMatrix,
+        cost: &[f32],
+        source: usize,
+        edge: usize,
+        insert: bool,
+        kind: ProjectionKind,
+        old: Option<(usize, usize, usize)>,
+    ) -> (EdgePatch, PatchTouch) {
+        let new_deg = m.degree(source);
+        if insert {
+            self.renumber_edges(edge as u32, 1);
+        } else {
+            self.renumber_edges(edge as u32 + 1, -1);
+        }
+
+        // In-place fast path: same bucket, one row, degree still fits.
+        if let Some((bi, row, rows)) = old {
+            if rows == 1
+                && new_deg > 0
+                && new_deg <= MAX_WIDTH
+                && self.buckets[bi].kind == kind
+                && self.buckets[bi].width == self.policy.width_for(new_deg)
+            {
+                self.refill_row(bi, row, m, cost);
+                return (EdgePatch::InPlace, PatchTouch::None);
+            }
+        }
+
+        // Repack: drain the source's rows, splice fresh rows back at its
+        // new (kind, width) position. Buckets stay in build order and
+        // only the spliced row ranges are refilled, so plane parity with
+        // a fresh build is preserved.
+        let mut touched: Vec<usize> = Vec::new();
+        let mut reshaped = false;
+        let mut drained = None;
+        if let Some((bi, row, rows)) = old {
+            if self.buckets[bi].rows() == rows {
+                self.buckets.remove(bi);
+                reshaped = true;
+            } else {
+                self.drain_rows(bi, row, row + rows);
+                drained = Some(bi);
+            }
+        }
+        if new_deg > 0 {
+            // overwide + non-separable was rejected up front
+            let (width, copies) = if new_deg > MAX_WIDTH {
+                (MAX_WIDTH, new_deg.div_ceil(MAX_WIDTH))
+            } else {
+                (self.policy.width_for(new_deg), 1)
+            };
+            match self
+                .buckets
+                .binary_search_by(|b| (b.kind, b.width).cmp(&(kind, width)))
+            {
+                Ok(bi) => {
+                    self.insert_rows(bi, source, copies, m, cost);
+                    touched.push(bi);
+                }
+                Err(bi) => {
+                    let mut bk =
+                        bucket_shell(kind, width, vec![source as u32; copies], m);
+                    fill_bucket_rows(&mut bk, 0, copies, m, cost);
+                    self.buckets.insert(bi, bk);
+                    reshaped = true;
+                }
+            }
+        }
+        if let Some(bi) = drained {
+            touched.push(bi);
+        }
+        let touch = if reshaped {
+            PatchTouch::Reshaped
+        } else {
+            PatchTouch::Buckets(touched)
+        };
+        (EdgePatch::Repacked, touch)
     }
 
     /// Apply one edge insert or delete to the resident layout.
@@ -401,16 +992,18 @@ impl SlabLayout {
     /// removed edge's old index after a delete); `source` is the edited
     /// source block and `kind` its projection kind. The patched layout is
     /// bit-identical — plane by plane, bucket by bucket — to
-    /// `SlabLayout::build` of the post-edit matrix (the parity gate the
-    /// serve tests assert), without ever re-laying-out untouched sources:
+    /// [`Self::build_opts`] of the post-edit matrix under the same
+    /// [`WidthPolicy`] (the parity gate the serve tests assert), without
+    /// ever re-laying-out untouched sources:
     ///
     /// 1. a renumber sweep shifts stored edge ids past the splice point,
     /// 2. if the source keeps its (kind, width) bucket and occupies one
     ///    row, that row alone is rewritten using the padding headroom
     ///    ([`EdgePatch::InPlace`]),
-    /// 3. otherwise the source's old and new buckets are repacked
-    ///    (created/removed as needed, in the build's (kind, width) order)
-    ///    and the caller must refresh its chunk grid
+    /// 3. otherwise the source's rows are drained and fresh rows spliced
+    ///    in at the new (kind, width) position (buckets created/removed
+    ///    as needed, in build order) and refilled through the shared fill
+    ///    primitive; the caller must refresh its chunk grid
     ///    ([`EdgePatch::Repacked`]).
     pub fn patch_edge(
         &mut self,
@@ -421,92 +1014,148 @@ impl SlabLayout {
         insert: bool,
         kind: ProjectionKind,
     ) -> Result<EdgePatch, String> {
-        assert_eq!(cost.len(), m.nnz());
-        assert_eq!(m.num_families, self.num_families);
-        let new_deg = m.degree(source);
-        // Reject before touching anything: an error must leave the
-        // resident layout exactly as it was.
-        if new_deg > MAX_WIDTH && !kind.separable() {
-            return Err(format!(
-                "source {source} degree {new_deg} exceeds MAX_WIDTH {MAX_WIDTH} \
-                 for non-separable {} projection",
-                kind.name()
-            ));
-        }
-        if insert {
-            self.renumber_edges(edge as u32, 1);
-        } else {
-            self.renumber_edges(edge as u32 + 1, -1);
-        }
+        self.patch_precheck(m, cost, source, kind)?;
+        let old = self.scan_source(source);
+        let (patch, _) = self.patch_edge_core(m, cost, source, edge, insert, kind, old);
+        Ok(patch)
+    }
 
-        // Locate the source's current rows (all in one bucket: kind is
-        // fixed per source and width is a function of its degree).
-        let old = self.buckets.iter().enumerate().find_map(|(bi, bk)| {
-            let lo = bk.sources.partition_point(|&s| s < source as u32);
-            let hi = bk.sources.partition_point(|&s| s <= source as u32);
-            (lo < hi).then_some((bi, hi - lo))
-        });
-
-        // In-place fast path: same bucket, one row, degree still fits.
-        if let Some((bi, rows)) = old {
-            if rows == 1
-                && new_deg > 0
-                && new_deg <= MAX_WIDTH
-                && self.buckets[bi].kind == kind
-                && self.buckets[bi].width == bucket_width(new_deg)
-            {
-                let row = self.buckets[bi]
-                    .sources
-                    .partition_point(|&s| s < source as u32);
-                self.refill_row(bi, row, m, cost);
-                return Ok(EdgePatch::InPlace);
-            }
-        }
-
-        // Repack: pull the source out of its old bucket, re-insert it at
-        // its new (kind, width) position. Buckets stay in build order
-        // ((kind, width) ascending), so plane parity with a fresh build
-        // is preserved.
-        if let Some((bi, _)) = old {
-            let (k, w) = (self.buckets[bi].kind, self.buckets[bi].width);
-            let sources: Vec<u32> = self.buckets[bi]
-                .sources
-                .iter()
-                .copied()
-                .filter(|&s| s != source as u32)
-                .collect();
-            if sources.is_empty() {
-                self.buckets.remove(bi);
-            } else {
-                self.buckets[bi] = fill_bucket(k, w, sources, m, cost);
-            }
-        }
-        if new_deg > 0 {
-            // overwide + non-separable was rejected up front
-            let (width, copies) = if new_deg > MAX_WIDTH {
-                (MAX_WIDTH, new_deg.div_ceil(MAX_WIDTH))
-            } else {
-                (bucket_width(new_deg), 1)
-            };
-            match self
-                .buckets
-                .binary_search_by(|b| (b.kind, b.width).cmp(&(kind, width)))
-            {
-                Ok(bi) => {
-                    let mut sources = std::mem::take(&mut self.buckets[bi].sources);
-                    let at = sources.partition_point(|&s| s < source as u32);
-                    for _ in 0..copies {
-                        sources.insert(at, source as u32);
-                    }
-                    self.buckets[bi] = fill_bucket(kind, width, sources, m, cost);
-                }
-                Err(bi) => {
-                    let sources = vec![source as u32; copies];
-                    self.buckets.insert(bi, fill_bucket(kind, width, sources, m, cost));
+    /// [`Self::patch_edge`] with O(1) source location through a resident
+    /// [`SlabIndex`], kept in sync incrementally: in-place patches touch
+    /// nothing, bucket-preserving repacks reindex only the touched
+    /// buckets, and bucket creation/removal rebuilds the index.
+    #[allow(clippy::too_many_arguments)]
+    pub fn patch_edge_indexed(
+        &mut self,
+        m: &BlockedMatrix,
+        cost: &[f32],
+        source: usize,
+        edge: usize,
+        insert: bool,
+        kind: ProjectionKind,
+        index: &mut SlabIndex,
+    ) -> Result<EdgePatch, String> {
+        self.patch_precheck(m, cost, source, kind)?;
+        let old = index.locate(source);
+        debug_assert_eq!(old, self.scan_source(source), "stale slab index");
+        let (patch, touch) = self.patch_edge_core(m, cost, source, edge, insert, kind, old);
+        match touch {
+            PatchTouch::None => {}
+            PatchTouch::Buckets(bis) => {
+                index.clear(source);
+                for bi in bis {
+                    index.reindex_bucket(self, bi);
                 }
             }
+            PatchTouch::Reshaped => {
+                *index =
+                    SlabIndex::build(self, index.src_lo, index.src_lo + index.num_sources());
+            }
         }
-        Ok(EdgePatch::Repacked)
+        Ok(patch)
+    }
+}
+
+const NO_BUCKET: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct IndexEntry {
+    bucket: u32,
+    first_row: u32,
+    rows: u32,
+}
+
+/// Inverted source→row index over a [`SlabLayout`]: for each source in
+/// `[src_lo, src_hi)`, which bucket holds it and which contiguous row
+/// range (split separable sources span several rows). Retained by the
+/// serve path so edge deltas locate rows in O(1) instead of scanning
+/// every bucket's source list.
+#[derive(Clone, Debug)]
+pub struct SlabIndex {
+    src_lo: usize,
+    entries: Vec<IndexEntry>,
+}
+
+impl SlabIndex {
+    /// Index `layout` for sources `[src_lo, src_hi)` — one O(total rows)
+    /// sweep over the bucket source lists.
+    pub fn build(layout: &SlabLayout, src_lo: usize, src_hi: usize) -> SlabIndex {
+        let mut ix = SlabIndex {
+            src_lo,
+            entries: vec![
+                IndexEntry { bucket: NO_BUCKET, first_row: 0, rows: 0 };
+                src_hi - src_lo
+            ],
+        };
+        for bi in 0..layout.buckets.len() {
+            ix.reindex_bucket(layout, bi);
+        }
+        ix
+    }
+
+    /// Number of sources covered by this index.
+    pub fn num_sources(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// (bucket, first row, row count) of `source`, or None if it holds no
+    /// edges. O(1).
+    pub fn locate(&self, source: usize) -> Option<(usize, usize, usize)> {
+        let e = source.checked_sub(self.src_lo).and_then(|o| self.entries.get(o))?;
+        (e.bucket != NO_BUCKET)
+            .then_some((e.bucket as usize, e.first_row as usize, e.rows as usize))
+    }
+
+    /// Forget `source` (it left the layout).
+    fn clear(&mut self, source: usize) {
+        if let Some(e) = source
+            .checked_sub(self.src_lo)
+            .and_then(|o| self.entries.get_mut(o))
+        {
+            *e = IndexEntry { bucket: NO_BUCKET, first_row: 0, rows: 0 };
+        }
+    }
+
+    /// Re-derive every entry that points into bucket `bi` — a run sweep
+    /// over its (sorted, split-contiguous) source list.
+    fn reindex_bucket(&mut self, layout: &SlabLayout, bi: usize) {
+        let sources = &layout.buckets[bi].sources;
+        let mut r = 0usize;
+        while r < sources.len() {
+            let src = sources[r];
+            let mut hi = r + 1;
+            while hi < sources.len() && sources[hi] == src {
+                hi += 1;
+            }
+            if let Some(e) = (src as usize)
+                .checked_sub(self.src_lo)
+                .and_then(|o| self.entries.get_mut(o))
+            {
+                *e = IndexEntry {
+                    bucket: bi as u32,
+                    first_row: r as u32,
+                    rows: (hi - r) as u32,
+                };
+            }
+            r = hi;
+        }
+    }
+
+    /// Assert the resident index matches a from-scratch rebuild over
+    /// `layout` — the serve-path audit hook.
+    pub fn parity_check(&self, layout: &SlabLayout) -> Result<(), String> {
+        let fresh = SlabIndex::build(layout, self.src_lo, self.src_lo + self.entries.len());
+        for (o, (a, b)) in self.entries.iter().zip(&fresh.entries).enumerate() {
+            if a != b {
+                return Err(format!(
+                    "slab index divergence at source {}: resident {:?} vs rebuilt {:?}",
+                    self.src_lo + o,
+                    a,
+                    b
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -550,6 +1199,26 @@ mod tests {
     }
 
     #[test]
+    fn quarter_step_widths_between_pow2() {
+        let q = WidthPolicy::QuarterStep;
+        assert_eq!(q.width_for(9), 12);
+        assert_eq!(q.width_for(12), 12);
+        assert_eq!(q.width_for(13), 16);
+        assert_eq!(q.width_for(17), 24);
+        assert_eq!(q.width_for(400), 512);
+        assert_eq!(q.width_for(4000), MAX_WIDTH);
+        for d in 1..=MAX_WIDTH {
+            assert_eq!(WidthPolicy::Pow2.width_for(d), bucket_width(d), "deg {d}");
+            let w = q.width_for(d);
+            assert!(w >= d && w <= bucket_width(d), "deg {d}: quarter width {w}");
+        }
+        assert_eq!(WidthPolicy::parse("pow2"), Some(WidthPolicy::Pow2));
+        assert_eq!(WidthPolicy::parse("quarter"), Some(WidthPolicy::QuarterStep));
+        assert_eq!(WidthPolicy::parse("quarter-step"), Some(WidthPolicy::QuarterStep));
+        assert_eq!(WidthPolicy::parse("pow3"), None);
+    }
+
+    #[test]
     fn builds_buckets_by_log2_degree() {
         let (m, cost) = matrix(&[3, 4, 5, 9, 17, 2], 32);
         let l = SlabLayout::build(&m, &cost, 0, 6, &|_| ProjectionKind::Simplex).unwrap();
@@ -572,6 +1241,88 @@ mod tests {
     }
 
     #[test]
+    fn quarter_step_reduces_padding_on_skewed_degrees() {
+        // degrees just past a pow2 boundary: the adversarial case for
+        // pow2 bucketing, the motivating case for quarter steps
+        let degrees: Vec<usize> = (0..200).map(|i| 9 + i % 4).collect();
+        let (m, cost) = matrix(&degrees, 16);
+        let kind_of = |_: usize| ProjectionKind::Simplex;
+        let pow2 =
+            SlabLayout::build_opts(&m, &cost, 0, 200, &kind_of, BuildOptions::default())
+                .unwrap();
+        let quarter = SlabLayout::build_opts(
+            &m,
+            &cost,
+            0,
+            200,
+            &kind_of,
+            BuildOptions { policy: WidthPolicy::QuarterStep, threads: 0 },
+        )
+        .unwrap();
+        assert_eq!(quarter.total_real_edges(), pow2.total_real_edges());
+        assert!(
+            quarter.padding_factor() < pow2.padding_factor(),
+            "quarter {} !< pow2 {}",
+            quarter.padding_factor(),
+            pow2.padding_factor()
+        );
+        let report = quarter.padding_report();
+        assert_eq!(
+            report.iter().map(|b| b.real_edges).sum::<usize>(),
+            quarter.total_real_edges()
+        );
+        for b in &report {
+            assert!(b.factor >= 1.0);
+        }
+    }
+
+    #[test]
+    fn parallel_build_bit_identical_to_serial() {
+        let mut degrees: Vec<usize> = (0..300).map(|i| (i * 7) % 40).collect();
+        degrees.push(MAX_WIDTH + 10); // split separable source
+        degrees.push(0);
+        degrees.push(2 * MAX_WIDTH + 300);
+        let n = degrees.len();
+        let (m, cost) = matrix(&degrees, MAX_WIDTH + 16);
+        let degs = degrees.clone();
+        let kind_of = move |i: usize| {
+            if degs[i] > MAX_WIDTH || i % 3 == 0 {
+                ProjectionKind::Box
+            } else {
+                ProjectionKind::Simplex
+            }
+        };
+        for policy in [WidthPolicy::Pow2, WidthPolicy::QuarterStep] {
+            let serial = SlabLayout::build_opts(
+                &m,
+                &cost,
+                0,
+                n,
+                &kind_of,
+                BuildOptions { policy, threads: 0 },
+            )
+            .unwrap();
+            if policy == WidthPolicy::Pow2 {
+                // pow2 serial == the legacy build entry point, bit for bit
+                let legacy = SlabLayout::build(&m, &cost, 0, n, &kind_of).unwrap();
+                assert_layout_bit_eq(&serial, &legacy);
+            }
+            for threads in [1, 2, 4, 8] {
+                let par = SlabLayout::build_opts(
+                    &m,
+                    &cost,
+                    0,
+                    n,
+                    &kind_of,
+                    BuildOptions { policy, threads },
+                )
+                .unwrap();
+                assert_layout_bit_eq(&par, &serial);
+            }
+        }
+    }
+
+    #[test]
     fn slab_contents_match_matrix() {
         let (m, cost) = matrix(&[3, 4], 8);
         let l = SlabLayout::build(&m, &cost, 0, 2, &|_| ProjectionKind::Simplex).unwrap();
@@ -586,6 +1337,7 @@ mod tests {
         // padding carries zeros
         assert_eq!(b.cost[3], 0.0);
         assert_eq!(b.a[0][3], 0.0);
+        assert_eq!(b.row_len, vec![3, 4]);
     }
 
     #[test]
@@ -615,6 +1367,7 @@ mod tests {
         assert_eq!(l.total_real_edges(), deg);
         assert_eq!(l.total_rows(), 2); // split into two rows
         assert_eq!(l.buckets[0].sources, vec![0, 0]);
+        assert_eq!(l.buckets[0].row_len, vec![MAX_WIDTH as u16, 10]);
     }
 
     #[test]
@@ -637,6 +1390,16 @@ mod tests {
         for bk in &l.buckets {
             let scanned = bk.mask.iter().filter(|&&v| v > 0.0).count();
             assert_eq!(bk.real_edges(), scanned);
+            let from_rows = bk.row_len.iter().map(|&n| n as usize).sum::<usize>();
+            assert_eq!(from_rows, scanned, "row_len inconsistent with mask");
+            for (row, &len) in bk.row_len.iter().enumerate() {
+                let base = row * bk.width;
+                let row_scan = bk.mask[base..base + bk.width]
+                    .iter()
+                    .filter(|&&v| v > 0.0)
+                    .count();
+                assert_eq!(len as usize, row_scan, "row {row}");
+            }
         }
         assert_eq!(l.total_real_edges(), 3 + 4 + 5 + 9 + 17 + 2 + MAX_WIDTH + 10);
     }
@@ -686,6 +1449,29 @@ mod tests {
         assert_eq!(l.buckets[0].sources, vec![1]);
     }
 
+    #[test]
+    fn slab_index_locates_every_source() {
+        let degrees = [3, 0, 9, MAX_WIDTH + 10, 4, 0, 17];
+        let (m, cost) = matrix(&degrees, MAX_WIDTH + 16);
+        let l = SlabLayout::build(&m, &cost, 0, degrees.len(), &|_| ProjectionKind::Box).unwrap();
+        let ix = SlabIndex::build(&l, 0, degrees.len());
+        assert_eq!(ix.num_sources(), degrees.len());
+        for (i, &d) in degrees.iter().enumerate() {
+            let hit = ix.locate(i);
+            assert_eq!(hit, l.scan_source(i), "source {i}");
+            if d == 0 {
+                assert!(hit.is_none());
+            } else {
+                let (bi, row, rows) = hit.unwrap();
+                let copies = if d > MAX_WIDTH { d.div_ceil(MAX_WIDTH) } else { 1 };
+                assert_eq!(rows, copies);
+                assert_eq!(l.buckets[bi].sources[row], i as u32);
+            }
+        }
+        assert!(ix.locate(degrees.len() + 5).is_none());
+        ix.parity_check(&l).unwrap();
+    }
+
     /// Splice one edge into the CSR at the end of `source`'s range,
     /// returning its global position — the test mirror of the serve host's
     /// delta application.
@@ -731,22 +1517,8 @@ mod tests {
 
     /// Plane-by-plane bit equality — the delta-path parity gate.
     fn assert_layout_bit_eq(a: &SlabLayout, b: &SlabLayout) {
-        assert_eq!(a.num_families, b.num_families);
-        assert_eq!(a.num_dests, b.num_dests);
-        assert_eq!(a.buckets.len(), b.buckets.len(), "bucket count");
-        for (i, (x, y)) in a.buckets.iter().zip(&b.buckets).enumerate() {
-            assert_eq!(x.kind, y.kind, "bucket {i} kind");
-            assert_eq!(x.width, y.width, "bucket {i} width");
-            assert_eq!(x.sources, y.sources, "bucket {i} sources");
-            assert_eq!(x.dest_idx, y.dest_idx, "bucket {i} dest_idx");
-            assert_eq!(x.edge_id, y.edge_id, "bucket {i} edge_id");
-            assert_eq!(x.real_edge_count, y.real_edge_count, "bucket {i} real edges");
-            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
-            assert_eq!(bits(&x.cost), bits(&y.cost), "bucket {i} cost");
-            assert_eq!(bits(&x.mask), bits(&y.mask), "bucket {i} mask");
-            for k in 0..x.a.len() {
-                assert_eq!(bits(&x.a[k]), bits(&y.a[k]), "bucket {i} family {k}");
-            }
+        if let Err(e) = a.bit_eq(b) {
+            panic!("layout bit parity: {e}");
         }
     }
 
@@ -857,6 +1629,57 @@ mod tests {
             &SlabLayout::build(&m, &cost, 0, 2, &|_| ProjectionKind::Box).unwrap(),
         );
         assert_eq!(l.total_real_edges(), 3 + deg + 1);
+    }
+
+    #[test]
+    fn indexed_patch_keeps_index_and_layout_parity() {
+        for policy in [WidthPolicy::Pow2, WidthPolicy::QuarterStep] {
+            let (mut m, mut cost) =
+                matrix(&[3, 4, 0, 9, MAX_WIDTH + 10, 5], MAX_WIDTH + 16);
+            let opts = BuildOptions { policy, threads: 0 };
+            let kind_of = |_: usize| ProjectionKind::Box;
+            let mut l = SlabLayout::build_opts(&m, &cost, 0, 6, &kind_of, opts).unwrap();
+            let mut ix = SlabIndex::build(&l, 0, 6);
+            let check = |l: &SlabLayout, ix: &SlabIndex, m: &BlockedMatrix, cost: &[f32]| {
+                let fresh = SlabLayout::build_opts(m, cost, 0, 6, &kind_of, opts).unwrap();
+                assert_layout_bit_eq(l, &fresh);
+                ix.parity_check(l).unwrap();
+            };
+            // headroom insert: in-place, index untouched
+            let p = insert_edge(&mut m, &mut cost, 0, 30, 2.5, -0.9);
+            let patch = l
+                .patch_edge_indexed(&m, &cost, 0, p, true, ProjectionKind::Box, &mut ix)
+                .unwrap();
+            assert_eq!(patch, EdgePatch::InPlace);
+            check(&l, &ix, &m, &cost);
+            // width-crossing insert: bucket-preserving or reshaping repack
+            let p = insert_edge(&mut m, &mut cost, 1, 31, 1.25, -0.45);
+            let patch = l
+                .patch_edge_indexed(&m, &cost, 1, p, true, ProjectionKind::Box, &mut ix)
+                .unwrap();
+            assert_eq!(patch, EdgePatch::Repacked);
+            check(&l, &ix, &m, &cost);
+            // isolated source enters a bucket
+            let p = insert_edge(&mut m, &mut cost, 2, 7, 0.5, -0.2);
+            l.patch_edge_indexed(&m, &cost, 2, p, true, ProjectionKind::Box, &mut ix)
+                .unwrap();
+            check(&l, &ix, &m, &cost);
+            // split source grows by one edge
+            let p = insert_edge(&mut m, &mut cost, 4, (MAX_WIDTH + 12) as u32, 1.0, -0.3);
+            let patch = l
+                .patch_edge_indexed(&m, &cost, 4, p, true, ProjectionKind::Box, &mut ix)
+                .unwrap();
+            assert_eq!(patch, EdgePatch::Repacked);
+            check(&l, &ix, &m, &cost);
+            // a source drains to zero edges and leaves the index
+            for _ in 0..m.degree(3) {
+                let p = remove_edge(&mut m, &mut cost, 3, 0);
+                l.patch_edge_indexed(&m, &cost, 3, p, false, ProjectionKind::Box, &mut ix)
+                    .unwrap();
+                check(&l, &ix, &m, &cost);
+            }
+            assert!(ix.locate(3).is_none());
+        }
     }
 
     #[test]

@@ -415,3 +415,185 @@ fn prop_rng_distribution_sanity() {
         assert!((b as f64 - 10_000.0).abs() < 500.0, "{buckets:?}");
     }
 }
+
+#[test]
+fn prop_parallel_build_bit_identical_across_families() {
+    // Tentpole determinism gate (DESIGN.md §11): the chunk-parallel
+    // counting-sort build must be bit-identical to the serial build at
+    // every fill-pool width, for every registered projection family and
+    // both width policies — including split over-wide separable sources —
+    // and the pow2 serial build must reproduce the legacy `build` exactly.
+    use dualip::projection::registry;
+    use dualip::sparse::slabs::{BuildOptions, WidthPolicy, MAX_WIDTH};
+    use dualip::sparse::BlockedMatrix;
+
+    let families = registry::families();
+    assert!(!families.is_empty());
+    let mut rng = Rng::new(1212);
+    for family in &families {
+        let kind = ProjectionKind::parse(family)
+            .or_else(|| {
+                registry::family_samples(family)
+                    .first()
+                    .and_then(|s| ProjectionKind::parse(s))
+            })
+            .unwrap_or_else(|| panic!("family {family} has no parseable spec"));
+        for case in 0..4 {
+            let n = 40 + rng.below(120);
+            let num_dests = 4 * MAX_WIDTH;
+            let mut src_ptr = vec![0usize];
+            for _ in 0..n {
+                let roll = rng.below(12);
+                let deg = if roll == 0 {
+                    0 // empty sources must be skipped without a kind lookup
+                } else if roll == 1 && kind.separable() {
+                    MAX_WIDTH + 1 + rng.below(2 * MAX_WIDTH) // row-split path
+                } else if roll < 6 {
+                    1 + rng.below(9)
+                } else {
+                    1 + rng.below(80)
+                };
+                src_ptr.push(src_ptr.last().unwrap() + deg);
+            }
+            let nnz = *src_ptr.last().unwrap();
+            let dest_idx: Vec<u32> = (0..nnz).map(|_| rng.below(num_dests) as u32).collect();
+            let m = 1 + rng.below(2);
+            let a: Vec<Vec<f32>> = (0..m).map(|_| rand_vec(&mut rng, nnz, 1.0)).collect();
+            let cost = rand_vec(&mut rng, nnz, 1.0);
+            let mat = BlockedMatrix {
+                num_sources: n,
+                num_dests,
+                num_families: m,
+                src_ptr,
+                dest_idx,
+                a,
+            };
+            let kind_of = |_: usize| kind;
+
+            let legacy = SlabLayout::build(&mat, &cost, 0, n, &kind_of).unwrap();
+            for policy in [WidthPolicy::Pow2, WidthPolicy::QuarterStep] {
+                let serial = SlabLayout::build_opts(
+                    &mat,
+                    &cost,
+                    0,
+                    n,
+                    &kind_of,
+                    BuildOptions { policy, threads: 0 },
+                )
+                .unwrap();
+                if policy == WidthPolicy::Pow2 {
+                    if let Err(e) = legacy.bit_eq(&serial) {
+                        panic!("family {family} case {case}: legacy vs serial: {e}");
+                    }
+                }
+                for threads in [1usize, 2, 4, 8] {
+                    let par = SlabLayout::build_opts(
+                        &mat,
+                        &cost,
+                        0,
+                        n,
+                        &kind_of,
+                        BuildOptions { policy, threads },
+                    )
+                    .unwrap();
+                    if let Err(e) = par.bit_eq(&serial) {
+                        panic!(
+                            "family {family} case {case} {} {threads} threads: {e}",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_repacked_layout_matches_from_scratch_rebuild() {
+    // The repack engine shares the fill pipeline with the full build, so a
+    // layout mutated through `patch_edge_indexed` must stay bit-identical
+    // to a from-scratch rebuild of the mutated instance after EVERY edit
+    // (insert into headroom, width-crossing repack, source entry/removal),
+    // with the resident inverted index in exact sync throughout.
+    use dualip::projection::registry;
+    use dualip::sparse::slabs::BuildOptions;
+    use dualip::sparse::{SlabIndex, WidthPolicy};
+
+    let families = registry::families();
+    let mut rng = Rng::new(1313);
+    for family in &families {
+        let kind = ProjectionKind::parse(family)
+            .or_else(|| {
+                registry::family_samples(family)
+                    .first()
+                    .and_then(|s| ProjectionKind::parse(s))
+            })
+            .unwrap_or_else(|| panic!("family {family} has no parseable spec"));
+        for case in 0u64..3 {
+            let mut lp = generate(&SyntheticConfig {
+                num_requests: 60 + rng.below(100),
+                num_resources: 10 + rng.below(20),
+                avg_nnz_per_row: 2.0 + rng.uniform() * 6.0,
+                kind,
+                seed: 5000 + case,
+                ..Default::default()
+            });
+            let policy =
+                if rng.below(2) == 0 { WidthPolicy::Pow2 } else { WidthPolicy::QuarterStep };
+            let opts = BuildOptions { policy, threads: 0 };
+            let mut layout = SlabLayout::build_opts(
+                &lp.a,
+                &lp.cost,
+                0,
+                lp.num_sources(),
+                &|i| lp.projection.kind_of(i),
+                opts,
+            )
+            .unwrap();
+            let mut index = SlabIndex::build(&layout, 0, lp.num_sources());
+
+            for edit in 0..12 {
+                let s = rng.below(lp.num_sources());
+                let deg = lp.a.src_ptr[s + 1] - lp.a.src_ptr[s];
+                let k = lp.projection.kind_of(s);
+                let insert = deg == 0 || (deg < lp.num_dests() && rng.below(2) == 0);
+                if insert {
+                    let avals = rand_vec(&mut rng, lp.num_families(), 1.0);
+                    let cval = rng.normal() as f32;
+                    let mut dest = rng.below(lp.num_dests()) as u32;
+                    let p = loop {
+                        match lp.insert_edge(s, dest, &avals, cval) {
+                            Ok(p) => break p,
+                            Err(_) => dest = (dest + 1) % lp.num_dests() as u32,
+                        }
+                    };
+                    layout
+                        .patch_edge_indexed(&lp.a, &lp.cost, s, p, true, k, &mut index)
+                        .unwrap();
+                } else {
+                    let col = rng.below(deg);
+                    let dest = lp.a.dest_idx[lp.a.src_ptr[s] + col];
+                    let p = lp.remove_edge(s, dest).unwrap();
+                    layout
+                        .patch_edge_indexed(&lp.a, &lp.cost, s, p, false, k, &mut index)
+                        .unwrap();
+                }
+                let fresh = SlabLayout::build_opts(
+                    &lp.a,
+                    &lp.cost,
+                    0,
+                    lp.num_sources(),
+                    &|i| lp.projection.kind_of(i),
+                    opts,
+                )
+                .unwrap();
+                if let Err(e) = layout.bit_eq(&fresh) {
+                    panic!("family {family} case {case} edit {edit}: {e}");
+                }
+                if let Err(e) = index.parity_check(&layout) {
+                    panic!("family {family} case {case} edit {edit}: index: {e}");
+                }
+            }
+        }
+    }
+}
