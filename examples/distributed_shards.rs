@@ -16,7 +16,7 @@
 
 use std::sync::Arc;
 
-use dualip::backend::SlabCpuObjective;
+use dualip::backend::{KernelTiers, SlabCpuObjective};
 use dualip::distributed::{solve_distributed_with, ExecStrategy, LinkModel};
 use dualip::gen::{generate, SyntheticConfig};
 use dualip::metrics::{comm_report, shard_report, solve_report};
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     let iters = out.result.iterations as u64;
     println!("{}", solve_report(&format!("sharded-slab-{shards}"), &out.result));
     println!("{}", comm_report(&out.comm, iters));
-    println!("{}", shard_report(&out.shard_eval_ms, &out.comm, iters));
+    println!("{}", shard_report(&out.shard_eval_ms, &out.comm, iters, &KernelTiers::of_lp(&lp)));
     println!(
         "estimated NCCL wire time/iter: nvlink {:.1}µs, ethernet {:.1}µs",
         LinkModel::nvlink().iter_time(lp.dual_dim()) * 1e6,

@@ -1,7 +1,9 @@
 // Known-bad snippet for R1: a projection family registered in src/ that
-// neither test tier references — one finding per missing tier
-// (tests/conformance.rs and tests/backend_parity.rs).
+// no test tier references — one finding per missing tier
+// (tests/conformance.rs, tests/backend_parity.rs, and
+// tests/kernel_matrix.rs).
 // audit:path(src/projection/fixture.rs)
+// audit:expect(R1)
 // audit:expect(R1)
 // audit:expect(R1)
 pub fn install(r: &mut Registry) {

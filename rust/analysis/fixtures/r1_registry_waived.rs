@@ -1,0 +1,11 @@
+// Known-good counterpart to r1_registry.rs: the same uncovered family
+// registration, but carrying a justified `registry-coverage` waiver — so
+// the waiver path through `check_registry` (apply_waivers runs inside it,
+// not just in check_file) is pinned. Zero expect lines: all three
+// per-tier findings must be swallowed by the one waiver on the
+// registration line.
+// audit:path(src/projection/fixture_waived.rs)
+pub fn install(r: &mut Registry) {
+    // audit:allow(registry-coverage): prototype family behind a feature gate; tiers wired before the gate ships
+    r.add_family("ghost_family", &["ghost_family:1"], parse_ghost);
+}

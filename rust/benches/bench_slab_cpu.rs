@@ -5,16 +5,20 @@
 //! evaluation.
 //!
 //! Emits machine-readable `results/BENCH_slab_cpu.json` (per-iteration µs
-//! per backend/thread-count, speedup vs reference, padding factor) so the
-//! perf trajectory is tracked across PRs.
+//! per backend/thread-count, speedup vs reference, padding factor, plus
+//! per-family rows for the batched kernel tiers of `capped_simplex`,
+//! `weighted_simplex`, and `box_vec`) so the perf trajectory is tracked
+//! across PRs.
 //!
 //! Run: cargo bench --bench bench_slab_cpu
-//!      [DUALIP_BENCH_FAST=1 for CI size — also asserts speedup ≥ 1.0]
+//!      [DUALIP_BENCH_FAST=1 for CI size — also asserts speedup ≥ 1.0,
+//!       overall and per batched family]
 
 use dualip::backend::SlabCpuObjective;
 use dualip::gen::{generate, SyntheticConfig};
 use dualip::metrics::{BenchJson, JsonValue};
 use dualip::problem::ObjectiveFunction;
+use dualip::projection::{ProjectionKind, ProjectionMap};
 use dualip::reference::CpuObjective;
 use dualip::util::rng::Rng;
 use dualip::util::timer::Stopwatch;
@@ -122,6 +126,60 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
 
+    // Per-family kernel tiers: the three families kernelized by the
+    // registry's batched `project_rows` overrides (DESIGN.md §12), each
+    // timed on the same matrix with a uniform projection map. The fast
+    // run gates each at ≥ 1.0x — a batched override slower than looping
+    // the scalar projection through the reference path means the kernel
+    // regressed outright.
+    let family_specs = [
+        ("capped_simplex", "capped_simplex:0.5:1"),
+        ("weighted_simplex", "weighted_simplex:2:1,2"),
+        ("box_vec", "box_vec:0.5,1.5"),
+    ];
+    let mut family_speedups: Vec<(&str, f64)> = Vec::new();
+    for (family, spec) in family_specs {
+        let kind = ProjectionKind::parse(spec)
+            .ok_or_else(|| anyhow::anyhow!("bench spec {spec} must parse"))?;
+        let mut lp_fam = lp.clone();
+        lp_fam.projection = ProjectionMap::Uniform(kind);
+        let mut fam_ref = CpuObjective::new(&lp_fam);
+        let fam_ref_us = time_iters(&mut fam_ref);
+        let mut fam_slab = SlabCpuObjective::new(&lp_fam, 1).map_err(anyhow::Error::msg)?;
+        let tiers = fam_slab.kernel_tiers();
+        anyhow::ensure!(
+            tiers.scalar.is_empty() && tiers.batched.contains(family),
+            "{family}: expected every bucket on the batched tier, got {}",
+            tiers.summary()
+        );
+        let fam_slab_us = time_iters(&mut fam_slab);
+        let fam_ref_obj = fam_ref.calculate(&lam, gamma);
+        let fam_slab_obj = fam_slab.calculate(&lam, gamma);
+        let rel = (fam_slab_obj.dual_obj - fam_ref_obj.dual_obj).abs()
+            / fam_ref_obj.dual_obj.abs().max(1.0);
+        anyhow::ensure!(rel < 1e-3, "{family}: slab dual_obj diverges: rel {rel:.3e}");
+        let fam_speedup = fam_ref_us / fam_slab_us;
+        println!(
+            "{:>12} {:>8} {:>14.1} {:>10.2}x  [{family}]",
+            "slab",
+            1,
+            fam_slab_us,
+            fam_speedup
+        );
+        for (backend, us, sp) in
+            [("reference", fam_ref_us, 1.0), ("slab", fam_slab_us, fam_speedup)]
+        {
+            bench.row(&[
+                ("backend", JsonValue::Str(backend.into())),
+                ("family", JsonValue::Str(family.into())),
+                ("threads", JsonValue::UInt(1)),
+                ("iter_us", JsonValue::Num(us)),
+                ("speedup_vs_reference", JsonValue::Num(sp)),
+            ]);
+        }
+        family_speedups.push((family, fam_speedup));
+    }
+
     let path = bench.write("results")?;
     println!(
         "padding factor {padding:.2}, {launches} launches, {chunks} chunks; \
@@ -132,12 +190,19 @@ fn main() -> anyhow::Result<()> {
     // CI smoke gate: the slab layout must never be slower than the
     // comparator it exists to beat (the full-size run reports, the fast
     // run enforces — CI machines are noisy but a <1.0x would mean the hot
-    // path regressed outright)
+    // path regressed outright), and the same bar holds per batched
+    // kernel family
     if fast {
         anyhow::ensure!(
             speedup >= 1.0,
             "slab backend slower than reference on CI workload: {speedup:.2}x"
         );
+        for (family, sp) in &family_speedups {
+            anyhow::ensure!(
+                *sp >= 1.0,
+                "batched {family} kernel slower than reference on CI workload: {sp:.2}x"
+            );
+        }
     }
     Ok(())
 }

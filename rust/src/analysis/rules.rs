@@ -515,11 +515,13 @@ fn rule_u1_safety(f: &AnalyzedFile, findings: &mut Vec<Finding>) {
 ///
 /// Statically cross-references every projection family registered in
 /// `src/` (`add_family("name", ...)` / `register_family("name", ...)`)
-/// against the two test tiers the ROADMAP's registry-conformance item
+/// against the three test tiers the ROADMAP's registry-conformance item
 /// demands: the generic conformance suite (`tests/conformance.rs`, which
-/// pins the required-family list) and the slab `project_rows` parity
-/// tests (`tests/backend_parity.rs`). Registering a family without wiring
-/// both becomes a build-time finding instead of a silent coverage gap.
+/// pins the required-family list), the slab `project_rows` parity tests
+/// (`tests/backend_parity.rs`), and the cross-backend kernel conformance
+/// matrix (`tests/kernel_matrix.rs`, DESIGN.md §12). Registering a
+/// family without wiring all three becomes a build-time finding instead
+/// of a silent coverage gap.
 ///
 /// `test_files` maps rel path → analyzed contents; if a tier file is
 /// absent the check is skipped and a note is returned instead (partial
@@ -528,7 +530,8 @@ pub fn check_registry(
     src_files: &[AnalyzedFile],
     test_files: &[AnalyzedFile],
 ) -> (Vec<Finding>, Vec<String>) {
-    const TIERS: [&str; 2] = ["tests/conformance.rs", "tests/backend_parity.rs"];
+    const TIERS: [&str; 3] =
+        ["tests/conformance.rs", "tests/backend_parity.rs", "tests/kernel_matrix.rs"];
     let mut notes = Vec::new();
     let mut tiers: Vec<&AnalyzedFile> = Vec::new();
     for t in TIERS {
@@ -564,8 +567,8 @@ pub fn check_registry(
                         "registry-coverage",
                         format!(
                             "family `{family}` registered here is not referenced by \
-                             {} — wire all three tiers (reference / slab / conformance), \
-                             see DESIGN.md \"Adding a constraint family\"",
+                             {} — wire every tier file (conformance / slab parity / \
+                             kernel matrix), see DESIGN.md \"Adding a constraint family\"",
                             tier.rel
                         ),
                     ));
@@ -747,9 +750,13 @@ mod tests {
             "tests/backend_parity.rs",
             "fn t() { let _ = parse(\"simplex\"); }\n",
         );
-        let (fs, notes) = check_registry(&[reg], &[conf, par]);
+        let matrix = AnalyzedFile::parse(
+            "tests/kernel_matrix.rs",
+            "fn t() { for (s, k) in kinds(\"simplex\") { tier(s, k); } }\n",
+        );
+        let (fs, notes) = check_registry(&[reg], &[conf, par, matrix]);
         assert!(notes.is_empty());
-        assert_eq!(fs.len(), 2, "{fs:?}"); // ghost missing from both tiers
+        assert_eq!(fs.len(), 3, "{fs:?}"); // ghost missing from all three tiers
         assert!(fs.iter().all(|f| f.rule == "R1" && f.message.contains("ghost")));
         // missing tier file → note, not finding
         let reg2 = AnalyzedFile::parse(
@@ -758,6 +765,6 @@ mod tests {
         );
         let (fs2, notes2) = check_registry(&[reg2], &[]);
         assert!(fs2.is_empty());
-        assert_eq!(notes2.len(), 2);
+        assert_eq!(notes2.len(), 3);
     }
 }

@@ -26,9 +26,58 @@ pub mod slab_cpu;
 pub use sharded::ShardedSlabObjective;
 pub use slab_cpu::{ChunkPartial, SlabCpuObjective};
 
+use std::collections::BTreeSet;
+
 use crate::problem::{MatchingLp, ObjectiveFunction, ObjectiveResult};
+use crate::projection::BlockProjection;
 use crate::reference::CpuObjective;
 use crate::util::timer::Stopwatch;
+
+/// Which slab-kernel tier each projection family actually ran: families
+/// whose buckets dispatched a batched `project_rows` override vs families
+/// that fell back to the scalar row-by-row default. Surfaced through
+/// `engine_report` / `shard_report` (DESIGN.md §12) so a registered
+/// family quietly running the slow path is visible, not silent.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KernelTiers {
+    /// Families running the hand-vectorized batched kernel.
+    pub batched: BTreeSet<String>,
+    /// Families on the scalar `project`-per-row fallback.
+    pub scalar: BTreeSet<String>,
+}
+
+impl KernelTiers {
+    /// Classify one resolved bucket operator into its tier set.
+    pub fn record(&mut self, op: &dyn BlockProjection) {
+        let set = if op.batched_project_rows() { &mut self.batched } else { &mut self.scalar };
+        set.insert(op.family().to_string());
+    }
+
+    /// Tier map over every distinct projection kind an instance uses —
+    /// what a slab backend built for `lp` would report, computable
+    /// without the backend (used by the distributed CLI report path).
+    pub fn of_lp(lp: &MatchingLp) -> KernelTiers {
+        let mut kinds = BTreeSet::new();
+        for i in 0..lp.num_sources() {
+            kinds.insert(lp.projection.kind_of(i));
+        }
+        let mut tiers = KernelTiers::default();
+        for k in kinds {
+            tiers.record(k.op().as_ref());
+        }
+        tiers
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batched.is_empty() && self.scalar.is_empty()
+    }
+
+    /// Compact report fragment: `batched[a b] scalar[c]`.
+    pub fn summary(&self) -> String {
+        let join = |s: &BTreeSet<String>| s.iter().cloned().collect::<Vec<_>>().join(" ");
+        format!("batched[{}] scalar[{}]", join(&self.batched), join(&self.scalar))
+    }
+}
 
 /// Named CPU backend choice (CLI `--backend`, `EngineConfig::backend`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -117,6 +166,27 @@ impl AnyObjective<'_> {
         match self {
             AnyObjective::Sharded(o) => o.num_shards(),
             AnyObjective::Slab(_) | AnyObjective::Reference(_) => 1,
+        }
+    }
+
+    /// Per-bucket kernel-tier counts `(batched, scalar)` of the slab
+    /// layout this objective runs (both zero for the reference backend,
+    /// which has no slab buckets).
+    pub fn kernel_tier_counts(&self) -> (u64, u64) {
+        match self {
+            AnyObjective::Slab(o) => o.kernel_tier_counts(),
+            AnyObjective::Sharded(o) => o.kernel_tier_counts(),
+            AnyObjective::Reference(_) => (0, 0),
+        }
+    }
+
+    /// Family-level tier map of this objective's buckets (empty for the
+    /// reference backend).
+    pub fn kernel_tiers(&self) -> KernelTiers {
+        match self {
+            AnyObjective::Slab(o) => o.kernel_tiers(),
+            AnyObjective::Sharded(o) => o.kernel_tiers(),
+            AnyObjective::Reference(_) => KernelTiers::default(),
         }
     }
 }
@@ -299,6 +369,85 @@ mod tests {
         );
         let obj = CpuBackend::Slab.objective(&lp, 1);
         assert_eq!(obj.name(), "cpu-reference");
+    }
+
+    #[test]
+    fn builtin_families_report_batched_tier() {
+        let lp = generate(&SyntheticConfig {
+            num_requests: 60,
+            num_resources: 8,
+            seed: 3,
+            ..Default::default()
+        });
+        let slab = CpuBackend::Slab.objective(&lp, 1);
+        let sharded = CpuBackend::ShardedSlab.objective_with(&lp, 1, 2);
+        let reference = CpuBackend::Reference.objective(&lp, 1);
+        let (batched, scalar) = slab.kernel_tier_counts();
+        assert!(batched > 0, "builtin buckets must run batched kernels");
+        assert_eq!(scalar, 0, "no builtin family may fall back to the scalar default");
+        assert_eq!(sharded.kernel_tier_counts(), (batched, scalar));
+        assert_eq!(reference.kernel_tier_counts(), (0, 0));
+        let tiers = slab.kernel_tiers();
+        assert!(tiers.scalar.is_empty(), "{tiers:?}");
+        assert_eq!(sharded.kernel_tiers(), tiers);
+        assert!(reference.kernel_tiers().is_empty());
+        assert_eq!(KernelTiers::of_lp(&lp), tiers);
+        assert!(tiers.summary().starts_with("batched["), "{}", tiers.summary());
+    }
+
+    #[test]
+    fn kernel_tiers_expose_scalar_fallback_families() {
+        use crate::projection::registry;
+        use crate::projection::BlockProjection;
+        // A runtime-registered family WITHOUT a project_rows override: the
+        // slab backend still runs it (through the scalar default), and the
+        // tier report must say so instead of hiding the slow path.
+        struct TierProbe;
+        impl BlockProjection for TierProbe {
+            fn family(&self) -> &str {
+                "tier_probe_scalar"
+            }
+            fn spec(&self) -> String {
+                "tier_probe_scalar".to_string()
+            }
+            fn project(&self, v: &mut [f32]) {
+                for x in v.iter_mut() {
+                    *x = x.clamp(0.0, 0.25);
+                }
+            }
+            fn violation(&self, v: &[f32]) -> f64 {
+                v.iter()
+                    .map(|&x| ((x - 0.25) as f64).max((-x) as f64).max(0.0))
+                    .fold(0.0, f64::max)
+            }
+            fn separable(&self) -> bool {
+                true
+            }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        registry::register_family("tier_probe_scalar", &["tier_probe_scalar"], |args: &str| {
+            args.is_empty().then(|| Box::new(TierProbe) as Box<dyn BlockProjection>)
+        });
+        let kind = crate::projection::ProjectionKind::parse("tier_probe_scalar").unwrap();
+        let a = BlockedMatrix {
+            num_sources: 3,
+            num_dests: 2,
+            num_families: 1,
+            src_ptr: vec![0, 2, 4, 6],
+            dest_idx: vec![0, 1, 0, 1, 0, 1],
+            a: vec![vec![1.0; 6]],
+        };
+        let lp = MatchingLp::new_uniform(a, vec![-1.0; 6], vec![0.5, 0.5], kind);
+        let obj = CpuBackend::Slab.objective(&lp, 1);
+        let (batched, scalar) = obj.kernel_tier_counts();
+        assert_eq!(batched, 0);
+        assert!(scalar > 0, "scalar-default buckets must be counted");
+        let tiers = obj.kernel_tiers();
+        assert!(tiers.scalar.contains("tier_probe_scalar"), "{tiers:?}");
+        assert_eq!(KernelTiers::of_lp(&lp), tiers);
+        assert!(tiers.summary().contains("scalar[tier_probe_scalar]"), "{}", tiers.summary());
     }
 
     #[test]

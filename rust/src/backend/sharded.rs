@@ -185,6 +185,29 @@ impl<'a> ShardedSlabObjective<'a> {
     pub fn comm(&self) -> CommSnapshot {
         self.stats.snapshot()
     }
+
+    /// Per-bucket kernel-tier counts `(batched, scalar)` of the shared
+    /// layout — every shard views the same buckets, so this is counted
+    /// once over the plan, not per shard.
+    pub fn kernel_tier_counts(&self) -> (u64, u64) {
+        let batched = self
+            .plan
+            .layout
+            .buckets
+            .iter()
+            .filter(|b| b.kind.op().batched_project_rows())
+            .count() as u64;
+        (batched, self.plan.layout.buckets.len() as u64 - batched)
+    }
+
+    /// Family-level tier map of the shared layout's buckets.
+    pub fn kernel_tiers(&self) -> super::KernelTiers {
+        let mut tiers = super::KernelTiers::default();
+        for b in &self.plan.layout.buckets {
+            tiers.record(b.kind.op().as_ref());
+        }
+        tiers
+    }
 }
 
 impl ObjectiveFunction for ShardedSlabObjective<'_> {

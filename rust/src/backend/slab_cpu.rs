@@ -198,6 +198,24 @@ impl<'a> SlabCpuObjective<'a> {
         self.threads
     }
 
+    /// Per-bucket kernel-tier counts: `(buckets running a batched
+    /// `project_rows` override, buckets on the scalar default)`. A
+    /// nonzero scalar count means some family silently pays a per-row
+    /// dynamic dispatch in the hot loop (DESIGN.md §12).
+    pub fn kernel_tier_counts(&self) -> (u64, u64) {
+        let batched = self.ops.iter().filter(|op| op.batched_project_rows()).count() as u64;
+        (batched, self.ops.len() as u64 - batched)
+    }
+
+    /// Family-level tier map of this objective's buckets.
+    pub fn kernel_tiers(&self) -> super::KernelTiers {
+        let mut tiers = super::KernelTiers::default();
+        for op in &self.ops {
+            tiers.record(op.as_ref());
+        }
+        tiers
+    }
+
     /// Run `f` over every chunk index, across the pool when it pays.
     /// Which thread runs which chunk is irrelevant to values: each chunk
     /// writes only its own scratch slot.

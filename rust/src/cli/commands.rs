@@ -7,7 +7,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use super::args::Args;
-use crate::backend::{CpuBackend, ShardedSlabObjective, SlabCpuObjective};
+use crate::backend::{CpuBackend, KernelTiers, ShardedSlabObjective, SlabCpuObjective};
 use crate::distributed::{
     solve_distributed, solve_distributed_driver, DistributedSolve, ExecStrategy, LinkModel,
 };
@@ -179,10 +179,10 @@ fn exec_strategy(args: &Args, obj_threads: usize) -> Result<ExecStrategy> {
 
 /// Communication + per-shard + wire-time reports for a distributed solve
 /// (shared by `solve --backend dist` and the `distributed` subcommand).
-fn print_distributed_reports(out: &DistributedSolve, dual_dim: usize) {
+fn print_distributed_reports(out: &DistributedSolve, dual_dim: usize, tiers: &KernelTiers) {
     let iters = out.result.iterations as u64;
     println!("{}", comm_report(&out.comm, iters));
-    println!("{}", shard_report(&out.shard_eval_ms, &out.comm, iters));
+    println!("{}", shard_report(&out.shard_eval_ms, &out.comm, iters, tiers));
     println!(
         "estimated NCCL wire time/iter: nvlink {:.1}µs, ethernet {:.1}µs",
         LinkModel::nvlink().iter_time(dual_dim) * 1e6,
@@ -279,7 +279,12 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
                 println!("{}", comm_report(&obj.comm(), r.iterations as u64));
                 println!(
                     "{}",
-                    shard_report(obj.shard_eval_ms(), &obj.comm(), r.iterations as u64)
+                    shard_report(
+                        obj.shard_eval_ms(),
+                        &obj.comm(),
+                        r.iterations as u64,
+                        &obj.kernel_tiers()
+                    )
                 );
                 ("sharded-slab", r)
             } else {
@@ -314,7 +319,7 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
             let lp_arc = Arc::new(lp);
             let out =
                 solve_distributed_driver(lp_arc.clone(), strategy, workers, &opts, dopts.clone())?;
-            print_distributed_reports(&out, lp_arc.dual_dim());
+            print_distributed_reports(&out, lp_arc.dual_dim(), &KernelTiers::of_lp(&lp_arc));
             println!("{}", solve_report("dist", &out.result));
             if let Some(csv) = args.get("csv") {
                 write_trajectory(csv, "dist", &out.result)?;
@@ -368,7 +373,7 @@ pub fn cmd_distributed(args: &Args) -> Result<()> {
     let dopts = driver_options(args)?;
     let out = solve_distributed_driver(lp.clone(), strategy, shards, &opts, dopts.clone())?;
     println!("{}", solve_report(&format!("dist-{exec}-{shards}shard"), &out.result));
-    print_distributed_reports(&out, lp.dual_dim());
+    print_distributed_reports(&out, lp.dual_dim(), &KernelTiers::of_lp(&lp));
 
     if args.flag("verify") {
         if exec != "slab" {

@@ -112,6 +112,13 @@ pub struct JobResult {
     /// Wall-clock spent inside objective evaluation (the per-iteration
     /// hot path), a subset of `wall_ms`.
     pub objective_eval_ms: f64,
+    /// Slab buckets that ran a batched `project_rows` kernel (0 on the
+    /// reference backend, which has no buckets).
+    pub batched_kernel_buckets: u64,
+    /// Slab buckets that fell back to the scalar per-row default — a
+    /// nonzero count flags a family without its batched override
+    /// (DESIGN.md §12).
+    pub scalar_kernel_buckets: u64,
     /// Final dual iterate (feeds the cache and downstream primal recovery).
     pub lam: Vec<f32>,
 }
@@ -198,6 +205,11 @@ pub struct EngineStats {
     /// undersized for the fingerprint working set and re-solves that
     /// should run warm are running cold.
     pub cache_evictions: u64,
+    /// Slab buckets across all solves that ran a batched kernel.
+    pub batched_kernel_buckets: u64,
+    /// Slab buckets across all solves that ran the scalar fallback —
+    /// nonzero means some family is quietly on the slow path.
+    pub scalar_kernel_buckets: u64,
 }
 
 impl EngineStats {
@@ -308,6 +320,7 @@ impl SolveEngine {
         // actual, not requested: a layout-ineligible instance falls back
         // to the (unsharded) reference objective
         let ran_shards = obj.inner.shards();
+        let (batched_kernel_buckets, scalar_kernel_buckets) = obj.inner.kernel_tier_counts();
         let mut driver = SolveDriver::new(Box::new(Agd::default().stepper()), &init, opts, dopts);
         let r = driver.run(&mut obj);
         JobResult {
@@ -324,6 +337,8 @@ impl SolveEngine {
             backend: obj.name(),
             shards: ran_shards,
             objective_eval_ms: obj.eval_ms,
+            batched_kernel_buckets,
+            scalar_kernel_buckets,
             lam: r.lam,
         }
     }
@@ -333,6 +348,8 @@ impl SolveEngine {
         s.submitted += 1;
         s.total_wall_ms += r.wall_ms;
         s.objective_eval_ms += r.objective_eval_ms;
+        s.batched_kernel_buckets += r.batched_kernel_buckets;
+        s.scalar_kernel_buckets += r.scalar_kernel_buckets;
         if r.warm {
             s.warm_solves += 1;
             s.warm_iters += r.iterations as u64;
@@ -468,6 +485,7 @@ impl SolveEngine {
             driver: SolveDriver<'static>,
             obj: TimedObjective<AnyObjective<'a>>,
             ran_shards: usize,
+            kernel_tiers: (u64, u64),
         }
 
         let quantum = self.cfg.quantum.max(1);
@@ -482,9 +500,10 @@ impl SolveEngine {
                     self.cfg.shards,
                 ));
                 let ran_shards = obj.inner.shards();
+                let kernel_tiers = obj.inner.kernel_tier_counts();
                 let driver =
                     SolveDriver::new(Box::new(Agd::default().stepper()), &init, opts, dopts);
-                CoopTask { driver, obj, ran_shards }
+                CoopTask { driver, obj, ran_shards, kernel_tiers }
             })
             .collect();
 
@@ -536,6 +555,8 @@ impl SolveEngine {
                 backend: task.obj.name(),
                 shards: task.ran_shards,
                 objective_eval_ms: task.obj.eval_ms,
+                batched_kernel_buckets: task.kernel_tiers.0,
+                scalar_kernel_buckets: task.kernel_tiers.1,
                 lam: r.lam,
             });
         }

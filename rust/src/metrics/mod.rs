@@ -7,6 +7,7 @@ pub mod bench_json;
 
 pub use bench_json::{BenchJson, JsonValue, SCHEMA_VERSION};
 
+use crate::backend::KernelTiers;
 use crate::distributed::CommSnapshot;
 use crate::engine::{BatchReport, CoopReport, EngineStats};
 use crate::solver::SolveResult;
@@ -66,9 +67,12 @@ pub fn solve_report(label: &str, r: &SolveResult) -> String {
 }
 
 /// One-paragraph engine report: warm/cold solve mix, mean iterations per
-/// class, objective-eval share of wall-clock, batch concurrency, and
+/// class, objective-eval share of wall-clock, batch concurrency,
 /// warm-start cache behavior (hit rate + evictions — a nonzero eviction
-/// rate flags an undersized cache).
+/// rate flags an undersized cache), and the projection kernel-tier mix
+/// (how many slab buckets ran the batched override vs the scalar
+/// fallback — a nonzero scalar count flags a family missing its
+/// `project_rows` kernel, see DESIGN.md §12).
 pub fn engine_report(s: &EngineStats) -> String {
     let eval_share = if s.total_wall_ms > 0.0 {
         100.0 * s.objective_eval_ms / s.total_wall_ms
@@ -84,7 +88,8 @@ pub fn engine_report(s: &EngineStats) -> String {
         "engine: {} solves ({} cold / {} warm), mean iters cold={:.1} warm={:.1}, \
          {:.1}ms total ({:.1}ms / {eval_share:.0}% in objective eval), \
          {} batches (peak {} in flight), {} deadline-stopped, {} cancelled, \
-         cache {hit_pct:.0}% hit ({}/{} lookups, {} evictions)",
+         cache {hit_pct:.0}% hit ({}/{} lookups, {} evictions), \
+         kernels {}/{} buckets batched",
         s.submitted,
         s.cold_solves,
         s.warm_solves,
@@ -99,6 +104,8 @@ pub fn engine_report(s: &EngineStats) -> String {
         s.cache_hits,
         s.cache_hits + s.cache_misses,
         s.cache_evictions,
+        s.batched_kernel_buckets,
+        s.batched_kernel_buckets + s.scalar_kernel_buckets,
     )
 }
 
@@ -131,10 +138,16 @@ pub fn batch_report(r: &BatchReport) -> String {
 }
 
 /// Per-shard execution report for sharded solves: each shard's cumulative
-/// evaluation CPU time (what its device would have spent computing) plus
-/// the λ-only wire traffic per iteration — the §6 accounting pair the E15
-/// bench tracks.
-pub fn shard_report(shard_eval_ms: &[f64], c: &CommSnapshot, iters: u64) -> String {
+/// evaluation CPU time (what its device would have spent computing), the
+/// λ-only wire traffic per iteration — the §6 accounting pair the E15
+/// bench tracks — and the per-family kernel-tier split (batched slab
+/// override vs scalar fallback, DESIGN.md §12).
+pub fn shard_report(
+    shard_eval_ms: &[f64],
+    c: &CommSnapshot,
+    iters: u64,
+    tiers: &KernelTiers,
+) -> String {
     let per: Vec<String> = shard_eval_ms
         .iter()
         .enumerate()
@@ -142,10 +155,11 @@ pub fn shard_report(shard_eval_ms: &[f64], c: &CommSnapshot, iters: u64) -> Stri
         .collect();
     let max = shard_eval_ms.iter().cloned().fold(0.0f64, f64::max);
     format!(
-        "shards: {} workers, eval [{}] (max {max:.1}ms) | λ-traffic {:.1} B/iter",
+        "shards: {} workers, eval [{}] (max {max:.1}ms) | λ-traffic {:.1} B/iter | kernels {}",
         shard_eval_ms.len(),
         per.join(" "),
         c.bytes_per_iter(iters),
+        tiers.summary(),
     )
 }
 
@@ -208,6 +222,8 @@ mod tests {
             cache_hits: 3,
             cache_misses: 1,
             cache_evictions: 2,
+            batched_kernel_buckets: 5,
+            scalar_kernel_buckets: 1,
             ..Default::default()
         };
         let rep = engine_report(&s);
@@ -216,6 +232,7 @@ mod tests {
             rep.contains("cache 75% hit (3/4 lookups, 2 evictions)"),
             "{rep}"
         );
+        assert!(rep.contains("kernels 5/6 buckets batched"), "{rep}");
         let c = CoopReport {
             jobs: 4,
             threads: 2,
@@ -236,9 +253,16 @@ mod tests {
         let s = crate::distributed::CommStats::new();
         s.record_broadcast(10);
         s.record_segmented_reduce(3, 10, 2);
-        let rep = shard_report(&[1.0, 2.5], &s.snapshot(), 1);
+        let mut tiers = KernelTiers::default();
+        tiers.batched.insert("simplex".to_string());
+        tiers.scalar.insert("half_line".to_string());
+        let rep = shard_report(&[1.0, 2.5], &s.snapshot(), 1, &tiers);
         assert!(rep.contains("2 workers"), "{rep}");
         assert!(rep.contains("r0=1.0ms") && rep.contains("r1=2.5ms"), "{rep}");
         assert!(rep.contains("B/iter"), "{rep}");
+        assert!(
+            rep.contains("kernels batched[simplex] scalar[half_line]"),
+            "{rep}"
+        );
     }
 }

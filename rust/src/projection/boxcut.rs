@@ -9,10 +9,12 @@
 
 use std::any::Any;
 
+use super::hlo::{emit_for, HloProjection};
 use super::registry::BlockProjection;
 
-/// Registry operator for {0 ≤ x ≤ cap, Σx ≤ total}. CPU-reference-only
-/// until its slab kernel lands in L1/L2.
+/// Registry operator for {0 ≤ x ≤ cap, Σx ≤ total}, kernelized on every
+/// tier: batched `project_rows` on the slab backends and a bisection HLO
+/// emission for the PJRT path (DESIGN.md §12).
 pub struct CappedSimplexOp {
     pub cap: f32,
     pub total: f32,
@@ -50,6 +52,78 @@ impl BlockProjection for CappedSimplexOp {
 
     fn project(&self, v: &mut [f32]) {
         project_capped_simplex(v, self.cap, self.total)
+    }
+
+    /// Width-strided batched bisection, bit-identical to looping the
+    /// scalar `project` over each row's real prefix: gathered padding is
+    /// exactly ±0.0, μ ≥ 0 throughout, and `clamp(±0.0 - μ, 0, cap)`
+    /// contributes an exact zero to every f64 accumulation, so sweeping
+    /// the full padded width reproduces the prefix sums term for term.
+    /// The hoisted f64 `cap`/`total` and the branch-free full-width sweeps
+    /// (no per-element mask reads inside the 64 bisection iterations) are
+    /// the batching win; a final tail fill pins padding to +0.0.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
+        debug_assert_eq!(slab.len(), rows * width);
+        debug_assert_eq!(mask.len(), rows * width);
+        let cap = self.cap as f64;
+        let total = self.total as f64;
+        for r in 0..rows {
+            let row = &mut slab[r * width..(r + 1) * width];
+            let real =
+                mask[r * width..(r + 1) * width].iter().take_while(|&&m| m > 0.0).count();
+            let mut clamped_sum = 0.0f64;
+            for &x in row.iter() {
+                clamped_sum += (x as f64).clamp(0.0, cap);
+            }
+            if clamped_sum <= total {
+                for x in row.iter_mut() {
+                    *x = (*x as f64).clamp(0.0, cap) as f32;
+                }
+                row[real..].fill(0.0);
+                continue;
+            }
+            let mut max = f32::NEG_INFINITY;
+            for &x in row.iter() {
+                max = max.max(x);
+            }
+            let mut hi = max as f64;
+            if hi <= 0.0 {
+                // mirror the scalar dead-end: everything clamps to 0
+                row.fill(0.0);
+                continue;
+            }
+            let mut lo = 0.0f64;
+            for _ in 0..64 {
+                let mu = 0.5 * (lo + hi);
+                let mut s = 0.0f64;
+                for &x in row.iter() {
+                    s += ((x as f64) - mu).clamp(0.0, cap);
+                }
+                if s > total {
+                    lo = mu;
+                } else {
+                    hi = mu;
+                }
+            }
+            let mu = 0.5 * (lo + hi);
+            for x in row.iter_mut() {
+                *x = ((*x as f64) - mu).clamp(0.0, cap) as f32;
+            }
+            row[real..].fill(0.0);
+        }
+    }
+
+    fn batched_project_rows(&self) -> bool {
+        true
+    }
+
+    fn emit_hlo(&self, rows: usize, width: usize) -> Option<String> {
+        emit_for(
+            self.family(),
+            &HloProjection::Capped { cap: self.cap, total: self.total },
+            rows,
+            width,
+        )
     }
 
     fn violation(&self, v: &[f32]) -> f64 {

@@ -2,6 +2,7 @@
 
 use std::any::Any;
 
+use super::hlo::{emit_for, HloProjection};
 use super::registry::BlockProjection;
 
 /// Registry operator for [0, 1]^n.
@@ -21,14 +22,30 @@ impl BlockProjection for UnitBoxOp {
     }
 
     /// Width-strided batched projection (the CPU mirror of the L1 box slab
-    /// kernel): the clamp is separable and maps zero padding to zero, so
-    /// one branch-free sweep over the whole slab is exact — no per-row
-    /// dispatch at all.
-    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, _mask: &[f32]) {
+    /// kernel): the clamp is separable, so one branch-free sweep over the
+    /// whole slab does the math; a cheap tail pass then pins padding to
+    /// exactly +0.0 (gathered padding can carry -0.0, which `clamp`
+    /// preserves), keeping the override bit-identical to the scalar
+    /// default on padded rows.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
         debug_assert_eq!(slab.len(), rows * width);
+        debug_assert_eq!(mask.len(), rows * width);
         for x in slab.iter_mut() {
             *x = x.clamp(0.0, 1.0);
         }
+        for r in 0..rows {
+            let base = r * width;
+            let real = mask[base..base + width].iter().take_while(|&&m| m > 0.0).count();
+            slab[base + real..base + width].fill(0.0);
+        }
+    }
+
+    fn batched_project_rows(&self) -> bool {
+        true
+    }
+
+    fn emit_hlo(&self, rows: usize, width: usize) -> Option<String> {
+        emit_for(self.family(), &HloProjection::UnitBox, rows, width)
     }
 
     fn violation(&self, v: &[f32]) -> f64 {
@@ -89,6 +106,20 @@ mod tests {
         let mask = vec![1.0f32, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0];
         op.project_rows(&mut slab, 2, 4, &mask);
         assert_eq!(slab, vec![0.0, 0.5, 1.0, 0.0, 0.25, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn project_rows_pins_negative_zero_padding() {
+        use crate::projection::BlockProjection;
+        let op = UnitBoxOp;
+        // gather_project can hand the kernel -0.0 in padded lanes; the
+        // batched override must still match the scalar default's +0.0 tail
+        let mut slab = vec![0.5f32, -0.0, -0.0, -0.0];
+        let mask = vec![1.0f32, 0.0, 0.0, 0.0];
+        op.project_rows(&mut slab, 1, 4, &mask);
+        for &x in &slab[1..] {
+            assert_eq!(x.to_bits(), 0.0f32.to_bits());
+        }
     }
 
     #[test]

@@ -7,11 +7,14 @@
 //! `projection/` — no solver, sparse-layout, or runtime edits (paper §4
 //! locality). The bound vector cycles over block coordinates
 //! (`u[i % len]`), so `box_vec:0.5` is a uniform [0, 0.5] box and a
-//! full-width vector is per-edge. CPU-reference-only until a slab kernel
-//! lands in L1/L2.
+//! full-width vector is per-edge. Kernelized on every tier: a batched
+//! `project_rows` override with a hoisted per-column bound table on the
+//! slab backends, and a clamp HLO emission with a constant bound plane
+//! for the PJRT path (DESIGN.md §12).
 
 use std::any::Any;
 
+use super::hlo::{emit_for, HloProjection};
 use super::registry::BlockProjection;
 use super::ProjectionKind;
 
@@ -69,6 +72,35 @@ impl BlockProjection for BoxVecOp {
         for (i, x) in v.iter_mut().enumerate() {
             *x = x.clamp(0.0, self.bound(i));
         }
+    }
+
+    /// Width-strided batched clamp with a hoisted per-column bound table
+    /// (the scalar path re-derives `upper[i % len]` per element). Real
+    /// entries occupy the row head, so column bounds line up with scalar
+    /// indices; the clamp itself is identical per element, and a tail
+    /// fill pins padding to +0.0 (gathered padding can carry -0.0), so
+    /// the override is bit-identical to the scalar default.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
+        debug_assert_eq!(slab.len(), rows * width);
+        debug_assert_eq!(mask.len(), rows * width);
+        let u_col: Vec<f32> = (0..width).map(|c| self.bound(c)).collect();
+        for r in 0..rows {
+            let row = &mut slab[r * width..(r + 1) * width];
+            for (x, &u) in row.iter_mut().zip(&u_col) {
+                *x = x.clamp(0.0, u);
+            }
+            let real =
+                mask[r * width..(r + 1) * width].iter().take_while(|&&m| m > 0.0).count();
+            row[real..].fill(0.0);
+        }
+    }
+
+    fn batched_project_rows(&self) -> bool {
+        true
+    }
+
+    fn emit_hlo(&self, rows: usize, width: usize) -> Option<String> {
+        emit_for(self.family(), &HloProjection::BoxVec { upper: &self.upper }, rows, width)
     }
 
     fn violation(&self, v: &[f32]) -> f64 {

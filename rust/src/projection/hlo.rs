@@ -1,0 +1,393 @@
+//! Shared HLO-text emitter behind
+//! [`emit_hlo`](super::registry::BlockProjection::emit_hlo) (DESIGN.md §12).
+//!
+//! Every slab kernel follows the same contract as the AOT artifacts under
+//! `python/compile/`: parameters `u: f32[T,w]`, `c: f32[T,w]`,
+//! `mask: f32[T,w]`, `g: f32[1]`, root tuple `(x, cx, xsq)` where
+//! `v = -(u + c) / g * mask`, `x = proj(v) * mask`, `cx = sum(c * x)` and
+//! `xsq = sum(x * x)`. The family-specific piece is only the projection
+//! section mapping `v` to `x`; everything around it is shared here so a
+//! new family gets the whole module for the price of a
+//! [`HloProjection`] variant.
+//!
+//! Simplex-like families use a row-wise 64-step bisection on the
+//! Lagrange multiplier, expressed as an HLO `while` loop over the state
+//! tuple `(v, lo, hi, i)` — the same fixed trip count as the scalar CPU
+//! paths, so the emitted kernels match the CPU tier to f32 accuracy.
+//! The text is deterministic (fixed instruction names, no counters):
+//! golden snapshots under `tests/snapshots/` pin it byte for byte.
+
+use std::fmt::Write as _;
+
+/// Family-specific projection section of a slab kernel.
+pub(crate) enum HloProjection<'a> {
+    /// `x = clamp(v, 0, 1)`.
+    UnitBox,
+    /// `x = clamp(v, 0, upper[c % upper.len()])` per column `c`.
+    BoxVec { upper: &'a [f32] },
+    /// Bisection: `x = max(v - mu, 0)` with `sum(x) <= total`.
+    Simplex { total: f32 },
+    /// Bisection: `x = clamp(v - mu, 0, cap)` with `sum(x) <= total`.
+    Capped { cap: f32, total: f32 },
+    /// Bisection: `x = max(v - mu*w, 0)` with `sum(w*x) <= total`,
+    /// weights cycled per column like the scalar operator.
+    Weighted { total: f32, weights: &'a [f32] },
+}
+
+impl HloProjection<'_> {
+    fn bisects(&self) -> bool {
+        matches!(
+            self,
+            HloProjection::Simplex { .. }
+                | HloProjection::Capped { .. }
+                | HloProjection::Weighted { .. }
+        )
+    }
+}
+
+/// HLO text constants must parse back to the same f32; Rust's shortest
+/// round-trip `Display` is exactly that. Kernel parameters are validated
+/// positive and finite at registration, so `nan`/`inf` never reach here.
+fn fmt_f32(v: f32) -> String {
+    debug_assert!(v.is_finite() || v == f32::NEG_INFINITY);
+    format!("{v}")
+}
+
+/// `{a, b, a, b, ...}` — a per-column table cycling `vals` out to `width`,
+/// mirroring the `params[i % params.len()]` convention of the scalar ops.
+fn const_list(vals: &[f32], width: usize) -> String {
+    let mut out = String::new();
+    for c in 0..width {
+        if c > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&fmt_f32(vals[c % vals.len()]));
+    }
+    out
+}
+
+fn state_ty(t: usize, w: usize) -> String {
+    format!("(f32[{t},{w}], f32[{t}], f32[{t}], s32[])")
+}
+
+fn push_add_f32(s: &mut String) {
+    let _ = writeln!(s, "%add_f32 (a: f32[], b: f32[]) -> f32[] {{");
+    let _ = writeln!(s, "  %a = f32[] parameter(0)");
+    let _ = writeln!(s, "  %b = f32[] parameter(1)");
+    let _ = writeln!(s, "  ROOT %add = f32[] add(%a, %b)");
+    let _ = writeln!(s, "}}");
+}
+
+fn push_max_f32(s: &mut String) {
+    let _ = writeln!(s, "%max_f32 (a: f32[], b: f32[]) -> f32[] {{");
+    let _ = writeln!(s, "  %a = f32[] parameter(0)");
+    let _ = writeln!(s, "  %b = f32[] parameter(1)");
+    let _ = writeln!(s, "  ROOT %max = f32[] maximum(%a, %b)");
+    let _ = writeln!(s, "}}");
+}
+
+fn push_bisect_cond(s: &mut String, t: usize, w: usize) {
+    let st = state_ty(t, w);
+    let _ = writeln!(s, "%bisect_cond (state: {st}) -> pred[] {{");
+    let _ = writeln!(s, "  %state = {st} parameter(0)");
+    let _ = writeln!(s, "  %i = s32[] get-tuple-element(%state), index=3");
+    let _ = writeln!(s, "  %iters = s32[] constant(64)");
+    let _ = writeln!(s, "  ROOT %continue = pred[] compare(%i, %iters), direction=LT");
+    let _ = writeln!(s, "}}");
+}
+
+fn push_bisect_body(s: &mut String, t: usize, w: usize, proj: &HloProjection) {
+    let st = state_ty(t, w);
+    let _ = writeln!(s, "%bisect_body (state: {st}) -> {st} {{");
+    let _ = writeln!(s, "  %state = {st} parameter(0)");
+    let _ = writeln!(s, "  %v = f32[{t},{w}] get-tuple-element(%state), index=0");
+    let _ = writeln!(s, "  %lo = f32[{t}] get-tuple-element(%state), index=1");
+    let _ = writeln!(s, "  %hi = f32[{t}] get-tuple-element(%state), index=2");
+    let _ = writeln!(s, "  %i = s32[] get-tuple-element(%state), index=3");
+    let _ = writeln!(s, "  %half = f32[] constant(0.5)");
+    let _ = writeln!(s, "  %halfb = f32[{t}] broadcast(%half), dimensions={{}}");
+    let _ = writeln!(s, "  %losum = f32[{t}] add(%lo, %hi)");
+    let _ = writeln!(s, "  %mu = f32[{t}] multiply(%losum, %halfb)");
+    let _ = writeln!(s, "  %mub = f32[{t},{w}] broadcast(%mu), dimensions={{0}}");
+    let _ = writeln!(s, "  %zero = f32[] constant(0)");
+    let _ = writeln!(s, "  %zerob = f32[{t},{w}] broadcast(%zero), dimensions={{}}");
+    let total = match proj {
+        HloProjection::Weighted { total, weights } => {
+            let _ = writeln!(s, "  %wcol = f32[{w}] constant({{{}}})", const_list(weights, w));
+            let _ = writeln!(s, "  %wb = f32[{t},{w}] broadcast(%wcol), dimensions={{1}}");
+            let _ = writeln!(s, "  %muw = f32[{t},{w}] multiply(%mub, %wb)");
+            let _ = writeln!(s, "  %shift = f32[{t},{w}] subtract(%v, %muw)");
+            let _ = writeln!(s, "  %xmu = f32[{t},{w}] maximum(%shift, %zerob)");
+            let _ = writeln!(s, "  %wx = f32[{t},{w}] multiply(%wb, %xmu)");
+            let _ = writeln!(
+                s,
+                "  %mass = f32[{t}] reduce(%wx, %zero), dimensions={{1}}, to_apply=%add_f32"
+            );
+            *total
+        }
+        HloProjection::Capped { cap, total } => {
+            let _ = writeln!(s, "  %shift = f32[{t},{w}] subtract(%v, %mub)");
+            let _ = writeln!(s, "  %cap = f32[] constant({})", fmt_f32(*cap));
+            let _ = writeln!(s, "  %capb = f32[{t},{w}] broadcast(%cap), dimensions={{}}");
+            let _ = writeln!(s, "  %xmu = f32[{t},{w}] clamp(%zerob, %shift, %capb)");
+            let _ = writeln!(
+                s,
+                "  %mass = f32[{t}] reduce(%xmu, %zero), dimensions={{1}}, to_apply=%add_f32"
+            );
+            *total
+        }
+        HloProjection::Simplex { total } => {
+            let _ = writeln!(s, "  %shift = f32[{t},{w}] subtract(%v, %mub)");
+            let _ = writeln!(s, "  %xmu = f32[{t},{w}] maximum(%shift, %zerob)");
+            let _ = writeln!(
+                s,
+                "  %mass = f32[{t}] reduce(%xmu, %zero), dimensions={{1}}, to_apply=%add_f32"
+            );
+            *total
+        }
+        // Callers only build a bisection body for bisecting variants.
+        HloProjection::UnitBox | HloProjection::BoxVec { .. } => return,
+    };
+    let _ = writeln!(s, "  %total = f32[] constant({})", fmt_f32(total));
+    let _ = writeln!(s, "  %totalb = f32[{t}] broadcast(%total), dimensions={{}}");
+    let _ = writeln!(s, "  %over = pred[{t}] compare(%mass, %totalb), direction=GT");
+    let _ = writeln!(s, "  %lo2 = f32[{t}] select(%over, %mu, %lo)");
+    let _ = writeln!(s, "  %hi2 = f32[{t}] select(%over, %hi, %mu)");
+    let _ = writeln!(s, "  %one = s32[] constant(1)");
+    let _ = writeln!(s, "  %i2 = s32[] add(%i, %one)");
+    let _ = writeln!(s, "  ROOT %next = {st} tuple(%v, %lo2, %hi2, %i2)");
+    let _ = writeln!(s, "}}");
+}
+
+fn push_entry_prefix(s: &mut String, t: usize, w: usize) {
+    let _ = writeln!(
+        s,
+        "ENTRY %main (u: f32[{t},{w}], c: f32[{t},{w}], mask: f32[{t},{w}], g: f32[1]) -> (f32[{t},{w}], f32[1], f32[1]) {{"
+    );
+    let _ = writeln!(s, "  %u = f32[{t},{w}] parameter(0)");
+    let _ = writeln!(s, "  %c = f32[{t},{w}] parameter(1)");
+    let _ = writeln!(s, "  %mask = f32[{t},{w}] parameter(2)");
+    let _ = writeln!(s, "  %g = f32[1] parameter(3)");
+    let _ = writeln!(s, "  %gs = f32[] reshape(%g)");
+    let _ = writeln!(s, "  %gb = f32[{t},{w}] broadcast(%gs), dimensions={{}}");
+    let _ = writeln!(s, "  %uc = f32[{t},{w}] add(%u, %c)");
+    let _ = writeln!(s, "  %nuc = f32[{t},{w}] negate(%uc)");
+    let _ = writeln!(s, "  %vraw = f32[{t},{w}] divide(%nuc, %gb)");
+    let _ = writeln!(s, "  %v = f32[{t},{w}] multiply(%vraw, %mask)");
+    let _ = writeln!(s, "  %zero = f32[] constant(0)");
+    let _ = writeln!(s, "  %zerob = f32[{t},{w}] broadcast(%zero), dimensions={{}}");
+}
+
+fn push_entry_suffix(s: &mut String, t: usize, w: usize) {
+    let _ = writeln!(s, "  %x = f32[{t},{w}] multiply(%xproj, %mask)");
+    let _ = writeln!(s, "  %cxe = f32[{t},{w}] multiply(%c, %x)");
+    let _ = writeln!(
+        s,
+        "  %cxs = f32[] reduce(%cxe, %zero), dimensions={{0,1}}, to_apply=%add_f32"
+    );
+    let _ = writeln!(s, "  %cx = f32[1] reshape(%cxs)");
+    let _ = writeln!(s, "  %xx = f32[{t},{w}] multiply(%x, %x)");
+    let _ = writeln!(
+        s,
+        "  %xsqs = f32[] reduce(%xx, %zero), dimensions={{0,1}}, to_apply=%add_f32"
+    );
+    let _ = writeln!(s, "  %xsq = f32[1] reshape(%xsqs)");
+    let _ = writeln!(s, "  ROOT %out = (f32[{t},{w}], f32[1], f32[1]) tuple(%x, %cx, %xsq)");
+    let _ = writeln!(s, "}}");
+}
+
+fn push_bisect_entry_section(s: &mut String, t: usize, w: usize, proj: &HloProjection) {
+    let total = match proj {
+        HloProjection::Weighted { total, weights } => {
+            let _ = writeln!(s, "  %wcol = f32[{w}] constant({{{}}})", const_list(weights, w));
+            let _ = writeln!(s, "  %wb = f32[{t},{w}] broadcast(%wcol), dimensions={{1}}");
+            let _ = writeln!(s, "  %clamped = f32[{t},{w}] maximum(%v, %zerob)");
+            let _ = writeln!(s, "  %wx0 = f32[{t},{w}] multiply(%wb, %clamped)");
+            let _ = writeln!(
+                s,
+                "  %mass0 = f32[{t}] reduce(%wx0, %zero), dimensions={{1}}, to_apply=%add_f32"
+            );
+            *total
+        }
+        HloProjection::Capped { cap, total } => {
+            let _ = writeln!(s, "  %cap = f32[] constant({})", fmt_f32(*cap));
+            let _ = writeln!(s, "  %capb = f32[{t},{w}] broadcast(%cap), dimensions={{}}");
+            let _ = writeln!(s, "  %clamped = f32[{t},{w}] clamp(%zerob, %v, %capb)");
+            let _ = writeln!(
+                s,
+                "  %mass0 = f32[{t}] reduce(%clamped, %zero), dimensions={{1}}, to_apply=%add_f32"
+            );
+            *total
+        }
+        HloProjection::Simplex { total } => {
+            let _ = writeln!(s, "  %clamped = f32[{t},{w}] maximum(%v, %zerob)");
+            let _ = writeln!(
+                s,
+                "  %mass0 = f32[{t}] reduce(%clamped, %zero), dimensions={{1}}, to_apply=%add_f32"
+            );
+            *total
+        }
+        // Callers only build a bisection section for bisecting variants.
+        HloProjection::UnitBox | HloProjection::BoxVec { .. } => return,
+    };
+    let _ = writeln!(s, "  %total = f32[] constant({})", fmt_f32(total));
+    let _ = writeln!(s, "  %totalb = f32[{t}] broadcast(%total), dimensions={{}}");
+    let _ = writeln!(s, "  %feas = pred[{t}] compare(%mass0, %totalb), direction=LE");
+    let _ = writeln!(s, "  %ninf = f32[] constant(-inf)");
+    if matches!(proj, HloProjection::Weighted { .. }) {
+        let _ = writeln!(s, "  %ratio = f32[{t},{w}] divide(%clamped, %wb)");
+        let _ = writeln!(
+            s,
+            "  %hiraw = f32[{t}] reduce(%ratio, %ninf), dimensions={{1}}, to_apply=%max_f32"
+        );
+    } else {
+        let _ = writeln!(
+            s,
+            "  %hiraw = f32[{t}] reduce(%v, %ninf), dimensions={{1}}, to_apply=%max_f32"
+        );
+    }
+    let st = state_ty(t, w);
+    let _ = writeln!(s, "  %lo0 = f32[{t}] broadcast(%zero), dimensions={{}}");
+    let _ = writeln!(s, "  %hi0 = f32[{t}] maximum(%hiraw, %lo0)");
+    let _ = writeln!(s, "  %izero = s32[] constant(0)");
+    let _ = writeln!(s, "  %init = {st} tuple(%v, %lo0, %hi0, %izero)");
+    let _ = writeln!(s, "  %bisect = {st} while(%init), condition=%bisect_cond, body=%bisect_body");
+    let _ = writeln!(s, "  %lof = f32[{t}] get-tuple-element(%bisect), index=1");
+    let _ = writeln!(s, "  %hif = f32[{t}] get-tuple-element(%bisect), index=2");
+    let _ = writeln!(s, "  %half = f32[] constant(0.5)");
+    let _ = writeln!(s, "  %halfb = f32[{t}] broadcast(%half), dimensions={{}}");
+    let _ = writeln!(s, "  %losum = f32[{t}] add(%lof, %hif)");
+    let _ = writeln!(s, "  %mu = f32[{t}] multiply(%losum, %halfb)");
+    let _ = writeln!(s, "  %mub = f32[{t},{w}] broadcast(%mu), dimensions={{0}}");
+    match proj {
+        HloProjection::Weighted { .. } => {
+            let _ = writeln!(s, "  %muw = f32[{t},{w}] multiply(%mub, %wb)");
+            let _ = writeln!(s, "  %shift = f32[{t},{w}] subtract(%v, %muw)");
+            let _ = writeln!(s, "  %xbis = f32[{t},{w}] maximum(%shift, %zerob)");
+        }
+        HloProjection::Capped { .. } => {
+            let _ = writeln!(s, "  %shift = f32[{t},{w}] subtract(%v, %mub)");
+            let _ = writeln!(s, "  %xbis = f32[{t},{w}] clamp(%zerob, %shift, %capb)");
+        }
+        _ => {
+            let _ = writeln!(s, "  %shift = f32[{t},{w}] subtract(%v, %mub)");
+            let _ = writeln!(s, "  %xbis = f32[{t},{w}] maximum(%shift, %zerob)");
+        }
+    }
+    let _ = writeln!(s, "  %feasb = pred[{t},{w}] broadcast(%feas), dimensions={{0}}");
+    let _ = writeln!(s, "  %xproj = f32[{t},{w}] select(%feasb, %clamped, %xbis)");
+}
+
+/// Emit a complete slab-kernel module for one `(family, rows, width)`
+/// tile. `tag` becomes part of the module name (`slab_{tag}_t{T}_w{w}`)
+/// and must be a valid HLO identifier fragment — family names are.
+pub(crate) fn emit_slab_module(
+    tag: &str,
+    rows: usize,
+    width: usize,
+    proj: &HloProjection,
+) -> String {
+    debug_assert!(rows > 0 && width > 0);
+    let (t, w) = (rows, width);
+    let mut s = String::new();
+    let _ = writeln!(s, "HloModule slab_{tag}_t{t}_w{w}");
+    let _ = writeln!(s);
+    push_add_f32(&mut s);
+    if proj.bisects() {
+        let _ = writeln!(s);
+        push_max_f32(&mut s);
+        let _ = writeln!(s);
+        push_bisect_cond(&mut s, t, w);
+        let _ = writeln!(s);
+        push_bisect_body(&mut s, t, w, proj);
+    }
+    let _ = writeln!(s);
+    push_entry_prefix(&mut s, t, w);
+    match proj {
+        HloProjection::UnitBox => {
+            let _ = writeln!(s, "  %one = f32[] constant(1)");
+            let _ = writeln!(s, "  %oneb = f32[{t},{w}] broadcast(%one), dimensions={{}}");
+            let _ = writeln!(s, "  %xproj = f32[{t},{w}] clamp(%zerob, %v, %oneb)");
+        }
+        HloProjection::BoxVec { upper } => {
+            let _ = writeln!(s, "  %ucol = f32[{w}] constant({{{}}})", const_list(upper, w));
+            let _ = writeln!(s, "  %ub = f32[{t},{w}] broadcast(%ucol), dimensions={{1}}");
+            let _ = writeln!(s, "  %xproj = f32[{t},{w}] clamp(%zerob, %v, %ub)");
+        }
+        _ => push_bisect_entry_section(&mut s, t, w, proj),
+    }
+    push_entry_suffix(&mut s, t, w);
+    s
+}
+
+/// Structural sanity of an emission, shared by the conformance matrix and
+/// the runtime fallback: the module must carry the slab contract shapes.
+/// Cheap string checks only — the real gate is compiling the text.
+pub fn emission_is_well_formed(text: &str, rows: usize, width: usize) -> bool {
+    let tile = format!("f32[{rows},{width}]");
+    text.starts_with("HloModule slab_")
+        && text.contains("ENTRY %main")
+        && text.contains(&format!("ROOT %out = ({tile}, f32[1], f32[1]) tuple(%x, %cx, %xsq)"))
+        && text.contains(&format!("%mask = {tile} parameter(2)"))
+}
+
+/// Convenience used by operator `emit_hlo` impls: emit for a family that
+/// maps 1:1 onto an [`HloProjection`] variant, declining degenerate tiles.
+pub(crate) fn emit_for(
+    family: &str,
+    proj: &HloProjection,
+    rows: usize,
+    width: usize,
+) -> Option<String> {
+    if rows == 0 || width == 0 {
+        return None;
+    }
+    Some(emit_slab_module(family, rows, width, proj))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_box_module_is_well_formed_and_loop_free() {
+        let txt = emit_slab_module("box", 4, 8, &HloProjection::UnitBox);
+        assert!(emission_is_well_formed(&txt, 4, 8), "{txt}");
+        assert!(!txt.contains("while"), "box must not emit a bisection loop");
+        assert!(txt.starts_with("HloModule slab_box_t4_w8\n"));
+    }
+
+    #[test]
+    fn bisection_families_carry_while_loop_and_guards() {
+        for proj in [
+            HloProjection::Simplex { total: 1.0 },
+            HloProjection::Capped { cap: 0.5, total: 1.0 },
+            HloProjection::Weighted { total: 2.0, weights: &[1.0, 2.0] },
+        ] {
+            let txt = emit_slab_module("fam", 4, 4, &proj);
+            assert!(emission_is_well_formed(&txt, 4, 4), "{txt}");
+            assert!(txt.contains("condition=%bisect_cond, body=%bisect_body"));
+            assert!(txt.contains("%iters = s32[] constant(64)"));
+            assert!(txt.contains("direction=LE"), "feasible-row guard missing");
+        }
+    }
+
+    #[test]
+    fn cyclic_parameter_tables_expand_to_width() {
+        let txt = emit_slab_module(
+            "box_vec",
+            2,
+            5,
+            &HloProjection::BoxVec { upper: &[0.5, 1.5] },
+        );
+        assert!(txt.contains("%ucol = f32[5] constant({0.5, 1.5, 0.5, 1.5, 0.5})"), "{txt}");
+    }
+
+    #[test]
+    fn float_constants_render_shortest_roundtrip() {
+        assert_eq!(fmt_f32(1.0), "1");
+        assert_eq!(fmt_f32(0.5), "0.5");
+        assert_eq!(fmt_f32(1.5), "1.5");
+        assert_eq!(fmt_f32(0.25), "0.25");
+    }
+}

@@ -7,21 +7,26 @@
 //! Every operator projects one source's variable block in place. These CPU
 //! implementations back the reference ("Scala-equivalent") objective, the
 //! primal rounding/validation path, and the oracles the property tests
-//! compare the Pallas kernels against. The accelerated path runs the same
-//! math inside the AOT slab kernels (python/compile/kernels/slab.py) for
-//! the kinds with artifacts (`simplex`, `box`); the others are
-//! CPU-reference-only until their slab kernels land.
+//! compare the Pallas kernels against. The registry is the source of
+//! truth for all three execution tiers (DESIGN.md §12): the scalar
+//! `project`, the batched `project_rows` slab kernels (every builtin
+//! family carries a hand-vectorized override), and the `emit_hlo` hook
+//! the PJRT runtime falls back to when an AOT artifact
+//! (python/compile/kernels/slab.py) is absent for a kind — shared
+//! emission lives in [`hlo`].
 //!
 //! New constraint families are added *locally*: implement the trait,
 //! register a parser + conformance samples (one line in
 //! `registry::with_builtins`, or `registry::register_family` at runtime
 //! from any crate), and every consumer picks the family up through the
 //! spec-string surface — see `weighted` and `boxvec` for the template and
-//! DESIGN.md "Adding a constraint family" for the recipe.
+//! DESIGN.md "Adding a constraint family" for the recipe covering all
+//! three tiers.
 
 mod boxcut;
 mod boxp;
 mod boxvec;
+pub mod hlo;
 pub mod registry;
 mod simplex;
 mod weighted;

@@ -21,7 +21,12 @@
 //! every consumer — CPU objective, slab bucketing, primal validation, the
 //! `LpSpec` builder, the CLI `--projection` flag, and the generic
 //! conformance proptests — picks it up with zero further edits (DESIGN.md
-//! "Adding a constraint family").
+//! "Adding a constraint family"). The registry is also the source of
+//! truth for the *accelerated* tiers: `project_rows` is the batched slab
+//! entry point and `emit_hlo` the PJRT kernel emission, and the
+//! cross-backend conformance matrix (`tests/kernel_matrix.rs`) holds
+//! every registered family to the same bit-consistency bar across all of
+//! them (DESIGN.md §12).
 
 use std::any::Any;
 use std::collections::BTreeMap;
@@ -72,6 +77,31 @@ pub trait BlockProjection: Send + Sync + 'static {
             self.project(&mut slab[base..base + real]);
             slab[base + real..base + width].fill(0.0);
         }
+    }
+
+    /// Whether [`BlockProjection::project_rows`] is a hand-vectorized
+    /// batched override rather than the scalar-loop default. Informational
+    /// only — the slab backend records per-bucket which tier ran so a
+    /// family quietly falling back to the scalar path shows up in
+    /// `engine_report`/`shard_report` instead of just running slow
+    /// (DESIGN.md §12). An override MUST flip this to `true`.
+    fn batched_project_rows(&self) -> bool {
+        false
+    }
+
+    /// Emit the HLO slab-kernel text for a `rows`×`width` tile, or `None`
+    /// when the family has no accelerated emission. The module must follow
+    /// the slab contract (DESIGN.md §12): parameters `u`/`c`/`mask` of
+    /// shape `f32[rows,width]` plus `g: f32[1]`, root tuple
+    /// `(x, cx, xsq)` with `v = -(u + c) / g * mask`, `x = Π_C(v) * mask`.
+    /// The PJRT runtime resolves kernels manifest-first and falls back to
+    /// this hook, so a family that emits is accelerated on every tier
+    /// without touching `runtime/`. Builtins delegate to
+    /// `projection::hlo::emit_slab_module`; text must be deterministic —
+    /// golden snapshots under `tests/snapshots/` pin it byte for byte.
+    fn emit_hlo(&self, rows: usize, width: usize) -> Option<String> {
+        let _ = (rows, width);
+        None
     }
 
     /// Maximum constraint violation of `v` (0 when feasible) — the oracle

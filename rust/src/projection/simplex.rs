@@ -11,6 +11,7 @@
 
 use std::any::Any;
 
+use super::hlo::{emit_for, HloProjection};
 use super::registry::BlockProjection;
 
 /// Registry operator for {x ≥ 0, Σx ≤ 1} (paper Eq. 4–5).
@@ -41,6 +42,8 @@ impl BlockProjection for SimplexOp {
         let mut sorted: Vec<f32> = Vec::with_capacity(width);
         for r in 0..rows {
             let row = &mut slab[r * width..(r + 1) * width];
+            let mrow = &mask[r * width..(r + 1) * width];
+            let real = mrow.iter().take_while(|&&m| m > 0.0).count();
             let mut s = 0.0f64;
             for x in row.iter_mut() {
                 if *x < 0.0 {
@@ -49,10 +52,11 @@ impl BlockProjection for SimplexOp {
                 s += *x as f64;
             }
             if s <= 1.0 {
+                // the clamp is the projection; pin the tail to +0.0 like
+                // the scalar default (gathered padding can carry -0.0)
+                row[real..].fill(0.0);
                 continue;
             }
-            let mrow = &mask[r * width..(r + 1) * width];
-            let real = mrow.iter().take_while(|&&m| m > 0.0).count();
             if real == 1 {
                 // mirror `project_simplex_eq`'s single-coordinate case
                 row[0] = 1.0;
@@ -78,6 +82,14 @@ impl BlockProjection for SimplexOp {
             // rounds to ≤ 0
             row[real..].fill(0.0);
         }
+    }
+
+    fn batched_project_rows(&self) -> bool {
+        true
+    }
+
+    fn emit_hlo(&self, rows: usize, width: usize) -> Option<String> {
+        emit_for(self.family(), &HloProjection::Simplex { total: 1.0 }, rows, width)
     }
 
     fn violation(&self, v: &[f32]) -> f64 {

@@ -12,10 +12,13 @@
 //! The weight vector cycles over block coordinates (`w[i % len]`), so one
 //! operator serves blocks of any width: a single weight is a uniform
 //! weighting, a pair alternates, a full-width vector is per-edge.
-//! CPU-reference-only until a slab kernel lands in L1/L2.
+//! Kernelized on every tier: a batched `project_rows` override with a
+//! hoisted per-column weight table on the slab backends, and a bisection
+//! HLO emission for the PJRT path (DESIGN.md §12).
 
 use std::any::Any;
 
+use super::hlo::{emit_for, HloProjection};
 use super::registry::BlockProjection;
 use super::ProjectionKind;
 
@@ -137,6 +140,74 @@ impl BlockProjection for WeightedSimplexOp {
         for (i, x) in v.iter_mut().enumerate() {
             *x = ((*x as f64) - mu * self.weight(i)).max(0.0) as f32;
         }
+    }
+
+    /// Width-strided batched bisection. The scalar path re-derives
+    /// `weights[i % len] as f64` for every element inside every one of
+    /// the 64 bisection sweeps; hoisting one per-column f64 table per
+    /// call amortizes the modulo and the convert across all rows — that
+    /// table is the batching win. Bit-identical to looping the scalar
+    /// `project` over real prefixes: real entries occupy the row head, so
+    /// column weights line up with scalar indices, gathered padding is
+    /// exactly ±0.0 and contributes exact zeros to every f64
+    /// accumulation (μ > 0 in the binding branch), and a final tail fill
+    /// pins padding to +0.0.
+    fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
+        debug_assert_eq!(slab.len(), rows * width);
+        debug_assert_eq!(mask.len(), rows * width);
+        let total = self.total as f64;
+        let w_col: Vec<f64> = (0..width).map(|c| self.weight(c)).collect();
+        for r in 0..rows {
+            let row = &mut slab[r * width..(r + 1) * width];
+            let real =
+                mask[r * width..(r + 1) * width].iter().take_while(|&&m| m > 0.0).count();
+            let mut wsum = 0.0f64;
+            for (x, &w) in row.iter_mut().zip(&w_col) {
+                if *x < 0.0 {
+                    *x = 0.0;
+                }
+                wsum += w * *x as f64;
+            }
+            if wsum > total {
+                let mut hi = 0.0f64;
+                for (&x, &w) in row.iter().zip(&w_col) {
+                    if x > 0.0 {
+                        hi = hi.max(x as f64 / w);
+                    }
+                }
+                let mut lo = 0.0f64;
+                for _ in 0..64 {
+                    let mu = 0.5 * (lo + hi);
+                    let mut s = 0.0f64;
+                    for (&x, &w) in row.iter().zip(&w_col) {
+                        s += w * ((x as f64) - mu * w).max(0.0);
+                    }
+                    if s > total {
+                        lo = mu;
+                    } else {
+                        hi = mu;
+                    }
+                }
+                let mu = 0.5 * (lo + hi);
+                for (x, &w) in row.iter_mut().zip(&w_col) {
+                    *x = ((*x as f64) - mu * w).max(0.0) as f32;
+                }
+            }
+            row[real..].fill(0.0);
+        }
+    }
+
+    fn batched_project_rows(&self) -> bool {
+        true
+    }
+
+    fn emit_hlo(&self, rows: usize, width: usize) -> Option<String> {
+        emit_for(
+            self.family(),
+            &HloProjection::Weighted { total: self.total, weights: &self.weights },
+            rows,
+            width,
+        )
     }
 
     fn violation(&self, v: &[f32]) -> f64 {

@@ -124,15 +124,20 @@ impl<'a> HloObjective<'a> {
         &mut self.engine
     }
 
-    /// Pre-compile every executable this layout needs.
+    /// Pre-compile every executable this layout needs: one kernel per
+    /// deduplicated (kind, bucket width) pair, resolved through the
+    /// registry (manifest artifact when present, `emit_hlo` text
+    /// otherwise) — any registered family warms up here, not just the
+    /// seed artifact set (DESIGN.md §12).
     pub fn warmup(&mut self) -> Result<()> {
-        let kinds: Vec<_> = {
-            let mut ks: Vec<_> = self.layout.buckets.iter().map(|b| b.kind).collect();
-            ks.sort();
-            ks.dedup();
-            ks
+        let pairs: Vec<_> = {
+            let mut ps: Vec<_> =
+                self.layout.buckets.iter().map(|b| (b.kind, b.width)).collect();
+            ps.sort();
+            ps.dedup();
+            ps
         };
-        self.engine.warmup(&kinds)
+        self.engine.warmup_pairs(&pairs)
     }
 
     /// Evaluate the shard's contribution: grad += A_shard x − 0 (b is NOT

@@ -5,6 +5,14 @@
 //! One `Engine` per logical device (worker thread); executables are cached
 //! per (kind, rows, width). Interchange is HLO *text* — see DESIGN.md §2
 //! and /opt/xla-example/README.md for why serialized protos are rejected.
+//!
+//! Kernel resolution is *manifest-first, registry-fallback* (DESIGN.md
+//! §12): a (kind, rows, width) with an AOT artifact compiles from the
+//! artifact file; any other registered kind compiles from the text its
+//! operator's `BlockProjection::emit_hlo` hook emits. The manifest is
+//! therefore an optimization (pre-generated, shared across processes),
+//! not a gate — registering a family with an emission makes it fast on
+//! this tier with zero edits here.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -104,34 +112,75 @@ impl Engine {
         width: usize,
     ) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.exes.contains_key(&(kind, rows, width)) {
-            let name = self
-                .manifest
-                .entries
-                .get(&(kind, rows, width))
-                .ok_or_else(|| anyhow!("no artifact for kind={} rows={rows} w={width}", kind.name()))?;
-            let path = self.dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            // Manifest-first: AOT artifacts win. Otherwise fall back to the
+            // registry's emission hook, so any family implementing
+            // `BlockProjection::emit_hlo` reaches this tier without an
+            // artifact rebuild (DESIGN.md §12).
+            let proto = match self.manifest.entries.get(&(kind, rows, width)) {
+                Some(name) => {
+                    let path = self.dir.join(name);
+                    xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )
+                    .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?
+                }
+                None => {
+                    let text = kind.op().emit_hlo(rows, width).ok_or_else(|| {
+                        anyhow!(
+                            "no artifact and no registry emission for kind={} rows={rows} w={width}",
+                            kind.name()
+                        )
+                    })?;
+                    debug_assert!(
+                        crate::projection::hlo::emission_is_well_formed(&text, rows, width),
+                        "malformed emission for {}",
+                        kind.spec()
+                    );
+                    xla::HloModuleProto::from_text(&text)
+                        .map_err(|e| anyhow!("parsing emitted kernel for {}: {e:?}", kind.spec()))?
+                }
+            };
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+                .map_err(|e| {
+                    anyhow!("compiling kind={} rows={rows} w={width}: {e:?}", kind.name())
+                })?;
             self.exes.insert((kind, rows, width), exe);
         }
         Ok(&self.exes[&(kind, rows, width)])
     }
 
+    /// Pre-compile one (kind, width) kernel at the standard tile height,
+    /// resolving manifest-first with registry-emission fallback.
+    pub fn ensure_kernel(&mut self, kind: ProjectionKind, width: usize) -> Result<()> {
+        let rows = self.manifest.tile_rows;
+        self.executable_rows(kind, rows, width).map(|_| ())
+    }
+
     /// Pre-compile all artifacts of the given kinds (avoids first-iteration
-    /// compile latency skewing benchmarks).
+    /// compile latency skewing benchmarks). Only touches manifest widths;
+    /// use [`Engine::warmup_pairs`] for the registry-driven layout warmup.
     pub fn warmup(&mut self, kinds: &[ProjectionKind]) -> Result<()> {
         let rows = self.manifest.tile_rows;
         for &kind in kinds {
             for w in self.manifest.widths.clone() {
-                self.executable_rows(kind, rows, w)?;
+                if self.manifest.entries.contains_key(&(kind, rows, w)) {
+                    self.executable_rows(kind, rows, w)?;
+                }
             }
+        }
+        Ok(())
+    }
+
+    /// Pre-compile exactly the (kind, width) pairs a slab layout needs —
+    /// the registry-driven warmup: pairs without artifacts compile from
+    /// `emit_hlo` text, so a newly registered family pays its compile
+    /// cost here instead of on the first dual step.
+    pub fn warmup_pairs(&mut self, pairs: &[(ProjectionKind, usize)]) -> Result<()> {
+        for &(kind, w) in pairs {
+            self.ensure_kernel(kind, w)?;
         }
         Ok(())
     }

@@ -641,6 +641,8 @@ impl ServeDaemon {
                 });
                 continue;
             }
+            let (batched_kernel_buckets, scalar_kernel_buckets) =
+                task.obj.inner.kernel_tier_counts();
             let r = task.driver.result(&mut task.obj);
             self.stats.completed += 1;
             if meta.resumed {
@@ -671,6 +673,8 @@ impl ServeDaemon {
                     backend: "slab",
                     shards: 1,
                     objective_eval_ms: task.obj.eval_ms,
+                    batched_kernel_buckets,
+                    scalar_kernel_buckets,
                     lam: r.lam,
                 })),
             });

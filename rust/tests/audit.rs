@@ -14,7 +14,7 @@ fn root() -> &'static Path {
 #[test]
 fn fixtures_fire_exactly_their_rules() {
     let results = analysis::self_check(root()).expect("fixtures present and well-formed");
-    assert!(results.len() >= 8, "fixture set shrank to {}", results.len());
+    assert!(results.len() >= 9, "fixture set shrank to {}", results.len());
     for r in &results {
         assert!(
             r.pass(),

@@ -1,0 +1,483 @@
+//! Cross-backend kernel conformance matrix (DESIGN.md §12): every
+//! registered projection family round-trips through every execution tier
+//! and the tiers must agree.
+//!
+//! Tiers and their bars:
+//! - **projection**: the family's `project_rows` slab kernel (batched
+//!   override or scalar-loop default) must be *bit-identical* to the
+//!   scalar `project` applied per row, with an exactly `+0.0` padding
+//!   tail — randomized over widths 1..=64, masked tails, and degenerate
+//!   (huge/tiny/empty) inputs.
+//! - **objective**: slab, sharded-slab, and reference evaluations of the
+//!   same LP must agree — slab bit-identical across thread counts,
+//!   sharded bit-identical to single-shard slab at any shard count,
+//!   reference within tight tolerance.
+//! - **hlo**: `emit_hlo` must produce deterministic, well-formed slab
+//!   modules; the builtin families' text is pinned byte-for-byte by the
+//!   golden snapshots under `tests/snapshots/` (no XLA runtime is
+//!   assumed here — execution equivalence is validated out-of-band).
+//!
+//! The matrix is registry-driven: it iterates `registry::families()`, so
+//! a newly registered family is held to the same bar with zero edits
+//! here (the audit rule R1 requires this file to stay cross-referenced
+//! with the registry).
+
+use std::any::Any;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dualip::backend::{ShardedSlabObjective, SlabCpuObjective};
+use dualip::problem::{MatchingLp, ObjectiveFunction};
+use dualip::projection::hlo::emission_is_well_formed;
+use dualip::projection::{registry, BlockProjection, ProjectionKind, ProjectionMap};
+use dualip::reference::CpuObjective;
+use dualip::sparse::slabs::MAX_WIDTH;
+use dualip::sparse::BlockedMatrix;
+use dualip::util::rng::Rng;
+
+/// Families the seed registry must always carry — the matrix refuses to
+/// pass if one goes missing (a registry-driven loop over zero families
+/// would vacuously succeed).
+const REQUIRED_FAMILIES: [&str; 5] =
+    ["box", "box_vec", "capped_simplex", "simplex", "weighted_simplex"];
+
+/// Wrapper that erases a family's accelerated tiers: `project_rows`
+/// falls through to the trait's scalar-loop default and `emit_hlo` to
+/// `None`, while the scalar `project` and the oracles still delegate.
+/// Comparing an op against its `ScalarOnly` shadow is exactly the
+/// "batched override ≡ scalar default" contract.
+struct ScalarOnly(Arc<dyn BlockProjection>);
+
+impl BlockProjection for ScalarOnly {
+    fn family(&self) -> &str {
+        self.0.family()
+    }
+    fn spec(&self) -> String {
+        self.0.spec()
+    }
+    fn project(&self, v: &mut [f32]) {
+        self.0.project(v)
+    }
+    fn violation(&self, v: &[f32]) -> f64 {
+        self.0.violation(v)
+    }
+    fn separable(&self) -> bool {
+        self.0.separable()
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Every registered (family, sample) pair, parsed. The unit of iteration
+/// for the whole matrix.
+fn all_registered_kinds() -> Vec<(String, ProjectionKind)> {
+    let mut out = Vec::new();
+    for fam in registry::families() {
+        let samples = registry::family_samples(&fam);
+        assert!(!samples.is_empty(), "family {fam} has no conformance samples");
+        for sample in samples {
+            let kind = ProjectionKind::parse(&sample)
+                .unwrap_or_else(|| panic!("sample {sample} of family {fam} must parse"));
+            out.push((sample, kind));
+        }
+    }
+    out
+}
+
+#[test]
+fn registry_still_carries_every_required_family() {
+    let fams = registry::families();
+    for req in REQUIRED_FAMILIES {
+        assert!(fams.iter().any(|f| f == req), "family {req} missing from registry: {fams:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// projection tier
+// ---------------------------------------------------------------------------
+
+/// Fill a rows×width slab the way `gather_project` would: real prefixes
+/// carry arbitrary values, padding tails carry the mask-multiplied ±0.0
+/// (the sign bit is preserved by the gather, so exercise both signs).
+fn random_masked_slab(
+    rng: &mut Rng,
+    rows: usize,
+    width: usize,
+    value: &mut dyn FnMut(&mut Rng) -> f32,
+) -> (Vec<f32>, Vec<f32>, Vec<usize>) {
+    let mut slab = vec![0.0f32; rows * width];
+    let mut mask = vec![0.0f32; rows * width];
+    let mut reals = Vec::with_capacity(rows);
+    for r in 0..rows {
+        // include the empty row (all padding) and the full row
+        let real = rng.below(width + 1);
+        reals.push(real);
+        for c in 0..width {
+            let i = r * width + c;
+            if c < real {
+                slab[i] = value(rng);
+                mask[i] = 1.0;
+            } else {
+                slab[i] = if rng.below(2) == 0 { -0.0 } else { 0.0 };
+            }
+        }
+    }
+    (slab, mask, reals)
+}
+
+fn assert_rows_match_scalar(
+    kind: ProjectionKind,
+    slab: &[f32],
+    mask: &[f32],
+    reals: &[usize],
+    rows: usize,
+    width: usize,
+    ctx: &str,
+) {
+    let op = kind.op();
+    let scalar = ScalarOnly(op.clone());
+    let mut got = slab.to_vec();
+    op.project_rows(&mut got, rows, width, mask);
+    let mut want = slab.to_vec();
+    scalar.project_rows(&mut want, rows, width, mask);
+    for r in 0..rows {
+        for c in 0..width {
+            let (a, b) = (got[r * width + c], want[r * width + c]);
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{ctx}: row {r} col {c} (real {}): batched {a:?} ({:#010x}) vs scalar {b:?} ({:#010x})",
+                reals[r],
+                a.to_bits(),
+                b.to_bits()
+            );
+            assert!(a.is_finite(), "{ctx}: row {r} col {c}: non-finite output {a}");
+            if c >= reals[r] {
+                // padding must be exactly +0.0 — a -0.0 tail would leak
+                // through `primal_into` into user-visible output
+                assert_eq!(a.to_bits(), 0, "{ctx}: padding row {r} col {c} is {a:?}, not +0.0");
+            }
+        }
+    }
+}
+
+/// The headline projection-tier property: for every registered family
+/// and sample, the batched `project_rows` is bit-identical to the
+/// scalar-loop default over randomized widths, masked padding tails
+/// (both zero signs), and row counts — including empty and full rows.
+#[test]
+fn prop_project_rows_matches_scalar_default_for_every_family() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for (sample, kind) in all_registered_kinds() {
+        // fixed awkward widths plus a randomized sweep of 1..=64
+        let mut widths = vec![1usize, 2, 5, 8];
+        for _ in 0..6 {
+            widths.push(1 + rng.below(64));
+        }
+        for width in widths {
+            for case in 0..3 {
+                let rows = 1 + rng.below(12);
+                let (slab, mask, reals) = random_masked_slab(&mut rng, rows, width, &mut |g| {
+                    (g.normal() * 2.0) as f32
+                });
+                let ctx = format!("{sample} w={width} case {case}");
+                assert_rows_match_scalar(kind, &slab, &mask, &reals, rows, width, &ctx);
+            }
+        }
+    }
+}
+
+/// Degenerate inputs stay NaN-free and bit-consistent: all-zero rows,
+/// huge magnitudes, denormal-scale values, negative-only rows.
+#[test]
+fn prop_degenerate_inputs_stay_nan_free_and_consistent() {
+    let mut rng = Rng::new(0xDE6E);
+    let mut regimes: Vec<(&str, Box<dyn FnMut(&mut Rng) -> f32>)> = vec![
+        ("zeros", Box::new(|_| 0.0)),
+        ("huge", Box::new(|g| (g.normal() * 1e30) as f32)),
+        ("tiny", Box::new(|g| (g.normal() * 1e-30) as f32)),
+        ("negative", Box::new(|g| -(g.uniform() as f32) - 1e-3)),
+    ];
+    for (sample, kind) in all_registered_kinds() {
+        for (regime, value) in regimes.iter_mut() {
+            for width in [1usize, 3, 8, 17] {
+                let rows = 1 + rng.below(6);
+                let (slab, mask, reals) = random_masked_slab(&mut rng, rows, width, value);
+                let ctx = format!("{sample} regime {regime} w={width}");
+                assert_rows_match_scalar(kind, &slab, &mask, &reals, rows, width, &ctx);
+            }
+        }
+    }
+}
+
+/// Every builtin family must carry a hand-vectorized batched override —
+/// the scalar default is a compatibility fallback for runtime-registered
+/// families, not a tier builtins are allowed to quietly drop to.
+#[test]
+fn builtin_families_carry_batched_overrides() {
+    for fam in REQUIRED_FAMILIES {
+        for sample in registry::family_samples(fam) {
+            let kind = ProjectionKind::parse(&sample).unwrap();
+            assert!(
+                kind.op().batched_project_rows(),
+                "builtin {sample} reports the scalar tier — its project_rows override \
+                 must flip batched_project_rows() to true"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// objective tier
+// ---------------------------------------------------------------------------
+
+/// Random matching LP with the given per-source degrees (distinct dests),
+/// uniform over `kind`.
+fn lp_for_kind(
+    rng: &mut Rng,
+    kind: ProjectionKind,
+    num_sources: usize,
+    num_dests: usize,
+) -> MatchingLp {
+    let mut src_ptr = vec![0usize];
+    let mut dest_idx: Vec<u32> = Vec::new();
+    for _ in 0..num_sources {
+        let deg = rng.below(10.min(num_dests) + 1);
+        dest_idx.extend(rng.sample_distinct(num_dests, deg));
+        src_ptr.push(dest_idx.len());
+    }
+    let nnz = dest_idx.len();
+    let a = vec![(0..nnz).map(|_| (rng.uniform() * 2.0 + 0.05) as f32).collect::<Vec<f32>>()];
+    let cost: Vec<f32> = (0..nnz).map(|_| -(rng.uniform() as f32) - 0.01).collect();
+    let b: Vec<f32> = (0..num_dests).map(|_| (rng.uniform() * 2.0 + 0.01) as f32).collect();
+    let m = BlockedMatrix {
+        num_sources,
+        num_dests,
+        num_families: 1,
+        src_ptr,
+        dest_idx,
+        a,
+    };
+    let lp = MatchingLp::new_uniform(m, cost, b, kind);
+    lp.validate().unwrap();
+    lp
+}
+
+/// One (family-sample, LP) cell of the objective matrix: slab threads
+/// 1/2/4 bitwise-identical, sharded 2/3 bitwise-identical to slab-1,
+/// reference within tight tolerance.
+fn assert_objective_tiers_agree(lp: &MatchingLp, lam: &[f32], gamma: f32, ctx: &str) {
+    let mut slab1 = SlabCpuObjective::new(lp, 1)
+        .unwrap_or_else(|e| panic!("{ctx}: slab layout must build: {e}"));
+    let r1 = slab1.calculate(lam, gamma);
+    let x1 = slab1.primal(lam, gamma);
+
+    for threads in [2usize, 4] {
+        let mut slab = SlabCpuObjective::new(lp, threads).unwrap();
+        let rt = slab.calculate(lam, gamma);
+        assert_eq!(r1.dual_obj.to_bits(), rt.dual_obj.to_bits(), "{ctx}: dual_obj at {threads}t");
+        assert_eq!(r1.cx.to_bits(), rt.cx.to_bits(), "{ctx}: cx at {threads}t");
+        for (row, (a, b)) in r1.grad.iter().zip(&rt.grad).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: grad row {row} at {threads}t");
+        }
+        let xt = slab.primal(lam, gamma);
+        for (e, (a, b)) in x1.iter().zip(&xt).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: primal edge {e} at {threads}t");
+        }
+    }
+
+    for shards in [2usize, 3] {
+        let mut sh = ShardedSlabObjective::new(lp, shards, 1)
+            .unwrap_or_else(|e| panic!("{ctx}: sharded plan must build: {e}"));
+        let rs = sh.calculate(lam, gamma);
+        assert_eq!(
+            r1.dual_obj.to_bits(),
+            rs.dual_obj.to_bits(),
+            "{ctx}: sharded dual_obj at {shards} shards"
+        );
+        for (row, (a, b)) in r1.grad.iter().zip(&rs.grad).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{ctx}: sharded grad row {row} at {shards} shards"
+            );
+        }
+    }
+
+    let mut reference = CpuObjective::new(lp);
+    let rr = reference.calculate(lam, gamma);
+    let close = |a: f64, b: f64, what: &str| {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "{ctx}: {what}: slab {a} vs reference {b}"
+        );
+    };
+    close(r1.dual_obj, rr.dual_obj, "dual_obj");
+    close(r1.cx, rr.cx, "cx");
+    close(r1.xsq_weighted, rr.xsq_weighted, "xsq_weighted");
+    for (row, (a, b)) in r1.grad.iter().zip(&rr.grad).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "{ctx}: grad row {row}: slab {a} vs reference {b}"
+        );
+    }
+}
+
+#[test]
+fn prop_objective_matrix_over_every_registered_family() {
+    let mut rng = Rng::new(0x5AB5);
+    for (sample, kind) in all_registered_kinds() {
+        for case in 0..2 {
+            let (ns, nd) = (50 + rng.below(100), 8 + rng.below(16));
+            let lp = lp_for_kind(&mut rng, kind, ns, nd);
+            let lam: Vec<f32> = (0..lp.dual_dim()).map(|_| (rng.uniform() * 0.3) as f32).collect();
+            let gamma = if case == 0 { 0.05 } else { 0.3 };
+            assert_objective_tiers_agree(&lp, &lam, gamma, &format!("{sample} case {case}"));
+        }
+    }
+}
+
+#[test]
+fn objective_matrix_covers_overwide_split_rows() {
+    // separable blocks wider than MAX_WIDTH split across slab rows; the
+    // tiers must still agree through the split
+    let mut rng = Rng::new(0x0BE5);
+    let num_dests = MAX_WIDTH + 48;
+    let kind = ProjectionKind::Box;
+    let mut src_ptr = vec![0usize];
+    let mut dest_idx: Vec<u32> = Vec::new();
+    for deg in [MAX_WIDTH + 17, 4, MAX_WIDTH + 40, 1] {
+        dest_idx.extend(rng.sample_distinct(num_dests, deg));
+        src_ptr.push(dest_idx.len());
+    }
+    let nnz = dest_idx.len();
+    let a = vec![(0..nnz).map(|_| (rng.uniform() * 2.0 + 0.05) as f32).collect::<Vec<f32>>()];
+    let cost: Vec<f32> = (0..nnz).map(|_| -(rng.uniform() as f32) - 0.01).collect();
+    let b: Vec<f32> = (0..num_dests).map(|_| (rng.uniform() * 2.0 + 0.01) as f32).collect();
+    let m = BlockedMatrix { num_sources: 4, num_dests, num_families: 1, src_ptr, dest_idx, a };
+    let lp = MatchingLp::new_uniform(m, cost, b, kind);
+    lp.validate().unwrap();
+    let lam: Vec<f32> = (0..lp.dual_dim()).map(|_| (rng.uniform() * 0.3) as f32).collect();
+    assert_objective_tiers_agree(&lp, &lam, 0.1, "overwide box");
+}
+
+/// The matrix is genuinely registry-driven: a family registered at
+/// runtime — with no batched override and no HLO emission — is picked up
+/// by the same loops and passes the projection + objective tiers through
+/// the scalar default.
+#[test]
+fn runtime_registered_family_passes_the_matrix() {
+    struct HalfCap;
+    impl BlockProjection for HalfCap {
+        fn family(&self) -> &str {
+            "matrix_half_cap"
+        }
+        fn spec(&self) -> String {
+            "matrix_half_cap".to_string()
+        }
+        fn project(&self, v: &mut [f32]) {
+            for x in v.iter_mut() {
+                *x = x.clamp(0.0, 0.5);
+            }
+        }
+        fn violation(&self, v: &[f32]) -> f64 {
+            v.iter().map(|&x| (x - 0.5).max(-x).max(0.0) as f64).fold(0.0, f64::max)
+        }
+        fn separable(&self) -> bool {
+            true
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+    registry::register_family("matrix_half_cap", &["matrix_half_cap"], |args| {
+        args.is_empty().then(|| Box::new(HalfCap) as Box<dyn BlockProjection>)
+    });
+    let kind = ProjectionKind::parse("matrix_half_cap").unwrap();
+    assert!(!kind.op().batched_project_rows(), "runtime family runs the scalar tier");
+    assert!(kind.op().emit_hlo(4, 8).is_none(), "runtime family has no HLO emission");
+
+    let mut rng = Rng::new(0xFA7);
+    let (slab, mask, reals) =
+        random_masked_slab(&mut rng, 6, 9, &mut |g| (g.normal() * 2.0) as f32);
+    assert_rows_match_scalar(kind, &slab, &mask, &reals, 6, 9, "matrix_half_cap rows");
+
+    let lp = lp_for_kind(&mut rng, kind, 60, 12);
+    let lam: Vec<f32> = (0..lp.dual_dim()).map(|_| (rng.uniform() * 0.3) as f32).collect();
+    assert_objective_tiers_agree(&lp, &lam, 0.1, "matrix_half_cap objective");
+}
+
+// ---------------------------------------------------------------------------
+// hlo tier
+// ---------------------------------------------------------------------------
+
+/// Every registered family sample either emits a well-formed slab module
+/// or declines (`None`) — and the builtins must all emit. Emission must
+/// be deterministic: two calls produce identical text.
+#[test]
+fn hlo_emission_is_well_formed_and_deterministic_for_every_family() {
+    for (sample, kind) in all_registered_kinds() {
+        let op = kind.op();
+        match op.emit_hlo(4, 8) {
+            Some(text) => {
+                assert!(
+                    emission_is_well_formed(&text, 4, 8),
+                    "{sample}: emission is malformed:\n{text}"
+                );
+                assert_eq!(op.emit_hlo(4, 8), Some(text), "{sample}: emission not deterministic");
+            }
+            None => {
+                assert!(
+                    !REQUIRED_FAMILIES.contains(&op.family()),
+                    "builtin {sample} must emit HLO"
+                );
+            }
+        }
+        // degenerate tiles decline rather than emit garbage
+        assert!(op.emit_hlo(0, 8).is_none(), "{sample}: rows=0 must decline");
+        assert!(op.emit_hlo(4, 0).is_none(), "{sample}: width=0 must decline");
+    }
+}
+
+/// Golden snapshots: the builtin emissions are pinned byte-for-byte under
+/// `tests/snapshots/` (these exact texts were validated against XLA
+/// compile-and-execute out-of-band). Set `DUALIP_REGEN_SNAPSHOTS=1` to
+/// rewrite them after an intentional emitter change.
+#[test]
+fn hlo_golden_snapshots_pin_builtin_emission() {
+    let specs = [
+        ("simplex", "simplex"),
+        ("box", "box"),
+        ("capped_simplex:0.5:1", "capped_simplex"),
+        ("weighted_simplex:2:1,2", "weighted_simplex"),
+        ("box_vec:0.5,1.5", "box_vec"),
+    ];
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("snapshots");
+    let regen = std::env::var("DUALIP_REGEN_SNAPSHOTS").is_ok_and(|v| v == "1");
+    for (spec, tag) in specs {
+        let kind = ProjectionKind::parse(spec).unwrap_or_else(|| panic!("{spec} must parse"));
+        for width in [4usize, 8] {
+            let text = kind
+                .op()
+                .emit_hlo(4, width)
+                .unwrap_or_else(|| panic!("{spec} must emit at w={width}"));
+            let path = dir.join(format!("{tag}_t4_w{width}.hlo"));
+            if regen {
+                std::fs::write(&path, &text)
+                    .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+                continue;
+            }
+            let pinned = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+            assert!(
+                pinned == text,
+                "stale HLO snapshot {}: the emitted module text changed.\n\
+                 If the emitter change is intentional, regenerate with\n\
+                 \n    DUALIP_REGEN_SNAPSHOTS=1 cargo test --test kernel_matrix\n\
+                 \nand re-validate the new text against XLA before committing.\n\
+                 --- pinned ---\n{pinned}\n--- emitted ---\n{text}",
+                path.display()
+            );
+        }
+    }
+}

@@ -108,6 +108,13 @@ impl HloModuleProto {
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         Err(XlaError::unavailable(&format!("parsing HLO text {path:?}")))
     }
+
+    /// Parse HLO text held in memory — the registry-emission path
+    /// (`BlockProjection::emit_hlo`) hands its module text here.
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        let head = text.lines().next().unwrap_or("").to_string();
+        Err(XlaError::unavailable(&format!("parsing in-memory HLO text ({head:?})")))
+    }
 }
 
 /// Computation wrapper (constructible; compilation is what fails).
@@ -187,6 +194,7 @@ mod tests {
     #[test]
     fn runtime_paths_error_cleanly() {
         assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(HloModuleProto::from_text("HloModule slab_box_t4_w4\n").is_err());
         let client = PjRtClient::cpu().unwrap();
         assert!(client.device_count() >= 1);
         assert!(client.platform_name().contains("stub"));
