@@ -1,0 +1,19 @@
+// Known-bad snippet for A1: a `vec!` allocation in a helper reachable
+// from the `eval_chunk_partials` hot path. Counted under
+// `backend.alloc`; with no checked-in budget the count fires A1.
+// `Vec::with_capacity` in the root itself is deliberately legal —
+// sized one-shot buffers are how scratch gets hoisted. Not compiled —
+// consumed by the audit self-check.
+// audit:path(src/backend/fixture.rs)
+// audit:expect(A1)
+pub fn eval_chunk_partials(lam: &[f32]) -> f32 {
+    let mut acc = Vec::with_capacity(lam.len());
+    acc.extend_from_slice(lam);
+    per_chunk(&acc)
+}
+
+fn per_chunk(lam: &[f32]) -> f32 {
+    // hot-loop allocation: fires A1 via the reachability cone
+    let scaled = vec![0.0f32; lam.len()];
+    scaled.len() as f32 + lam.len() as f32
+}

@@ -1,0 +1,28 @@
+// Known-bad snippet for D4: values produced by unordered-container
+// iteration flow across a fn boundary into f32 accumulation in a
+// determinism-critical module. The HashMap declaration and iteration
+// also fire D1 (tier 1 on the type tokens, tier 2 on the iteration) —
+// the expectations pin both rules so neither can silently swallow the
+// other. Not compiled — consumed by the audit self-check.
+// audit:path(src/backend/fixture.rs)
+// audit:expect(D1)
+// audit:expect(D1)
+// audit:expect(D1)
+// audit:expect(D4)
+use std::collections::HashMap;
+
+fn edge_weights(by_edge: &HashMap<u32, f32>) -> Vec<f32> {
+    let mut out = Vec::with_capacity(by_edge.len());
+    for (_, w) in by_edge.iter() {
+        out.push(*w);
+    }
+    out
+}
+
+pub fn merge_total(by_edge: &HashMap<u32, f32>) -> f32 {
+    let mut acc = 0.0f32;
+    for w in edge_weights(by_edge) {
+        acc += w;
+    }
+    acc
+}

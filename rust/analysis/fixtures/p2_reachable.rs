@@ -1,0 +1,25 @@
+// Known-bad snippet for P2: an `.unwrap()` two call hops below a
+// ServeDaemon request entry point. The finding must print the full
+// chain `ServeDaemon::submit -> enqueue -> admit`. Not compiled —
+// consumed by the audit self-check.
+// audit:path(src/serve/fixture.rs)
+// audit:expect(P2)
+pub struct ServeDaemon {
+    pub depth: usize,
+}
+
+impl ServeDaemon {
+    pub fn submit(&self, req: u32) -> u32 {
+        enqueue(req, self.depth)
+    }
+}
+
+fn enqueue(req: u32, depth: usize) -> u32 {
+    admit(req, depth)
+}
+
+fn admit(req: u32, depth: usize) -> u32 {
+    // reachable panic: entry -> enqueue -> admit
+    let slot = depth.checked_sub(1).unwrap();
+    req + slot as u32
+}

@@ -1,0 +1,299 @@
+//! Differential mode: `audit --baseline <json>` fails only on *new*
+//! findings (DESIGN.md §10).
+//!
+//! The baseline is a previous `--format json` report. A finding's
+//! identity is `(file, rule, slug, message)` — deliberately ignoring the
+//! line so unrelated edits that shift code downward don't churn the
+//! diff. This generalizes the ratchet to every rule: grandfathered
+//! findings stay visible in the full report but no longer gate.
+//!
+//! The parser below is a minimal recursive-descent JSON reader —
+//! dependency-free, like the rest of `analysis/` — sufficient for our
+//! own emitter's output plus reasonable hand edits (arbitrary
+//! whitespace, escapes, nested values).
+
+use std::collections::BTreeSet;
+
+use super::report::{AuditReport, Finding};
+
+/// A parsed baseline: the identity set of its findings.
+pub struct Baseline {
+    ids: BTreeSet<(String, String, String, String)>,
+}
+
+impl Baseline {
+    /// Parse a `--format json` report.
+    pub fn parse(src: &str) -> Result<Baseline, String> {
+        let value = parse_json(src)?;
+        let findings = value
+            .get("findings")
+            .ok_or_else(|| "baseline has no `findings` array".to_string())?;
+        let Json::Array(items) = findings else {
+            return Err("baseline `findings` is not an array".to_string());
+        };
+        let mut ids = BTreeSet::new();
+        for item in items {
+            let field = |k: &str| -> Result<String, String> {
+                match item.get(k) {
+                    Some(Json::Str(s)) => Ok(s.clone()),
+                    _ => Err(format!("baseline finding lacks string field `{k}`")),
+                }
+            };
+            ids.insert((field("file")?, field("rule")?, field("slug")?, field("message")?));
+        }
+        Ok(Baseline { ids })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Findings of `report` absent from the baseline, in report order.
+    pub fn new_findings<'r>(&self, report: &'r AuditReport) -> Vec<&'r Finding> {
+        report
+            .findings
+            .iter()
+            .filter(|f| {
+                !self.ids.contains(&(
+                    f.file.clone(),
+                    f.rule.to_string(),
+                    f.slug.to_string(),
+                    f.message.clone(),
+                ))
+            })
+            .collect()
+    }
+}
+
+/// Minimal JSON value.
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Json>),
+    Object(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Object(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+fn parse_json(src: &str) -> Result<Json, String> {
+    let bytes = src.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing bytes at offset {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected `{}` at offset {}", c as char, *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err("unexpected end of input".to_string());
+    };
+    match c {
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Object(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                let val = parse_value(b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Object(fields));
+                    }
+                    _ => return Err(format!("expected `,` or `}}` at offset {pos}", pos = *pos)),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Array(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Array(items));
+                    }
+                    _ => return Err(format!("expected `,` or `]` at offset {pos}", pos = *pos)),
+                }
+            }
+        }
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        b'f' if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        b'n' if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        b'-' | b'0'..=b'9' => {
+            let start = *pos;
+            *pos += 1;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+            {
+                *pos += 1;
+            }
+            let text = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+            text.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number `{text}`: {e}"))
+        }
+        c => Err(format!("unexpected byte `{}` at offset {}", c as char, *pos)),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at offset {}", *pos));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                let Some(&esc) = b.get(*pos) else {
+                    return Err("dangling escape".to_string());
+                };
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| "truncated \\u escape".to_string())?;
+                        let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
+                        let cp =
+                            u32::from_str_radix(hex, 16).map_err(|e| format!("bad \\u: {e}"))?;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => return Err(format!("unknown escape `\\{}`", c as char)),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // multi-byte UTF-8 passes through byte-wise
+                let start = *pos;
+                while *pos < b.len() && b[*pos] != b'"' && b[*pos] != b'\\' {
+                    *pos += 1;
+                }
+                out.push_str(std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?);
+            }
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(findings: &[(&str, u32, &'static str, &'static str, &str)]) -> AuditReport {
+        let mut r = AuditReport::default();
+        r.files = 1;
+        for &(file, line, rule, slug, msg) in findings {
+            r.findings.push(Finding::new(file, line, rule, slug, msg.to_string()));
+        }
+        r
+    }
+
+    #[test]
+    fn round_trips_our_own_json_output() {
+        let r = report_with(&[
+            ("src/a.rs", 3, "D1", "unordered-iter", "has \"quotes\" and \\slashes\\"),
+            ("src/b.rs", 0, "P1", "panic-budget", "tab\there"),
+        ]);
+        let base = Baseline::parse(&r.render_json()).expect("parse own output");
+        assert_eq!(base.len(), 2);
+        assert!(base.new_findings(&r).is_empty(), "identical report has no new findings");
+    }
+
+    #[test]
+    fn line_shifts_are_not_new_but_new_messages_are() {
+        let old = report_with(&[("src/a.rs", 3, "D1", "unordered-iter", "same msg")]);
+        let base = Baseline::parse(&old.render_json()).unwrap();
+        let shifted = report_with(&[("src/a.rs", 40, "D1", "unordered-iter", "same msg")]);
+        assert!(base.new_findings(&shifted).is_empty());
+        let changed = report_with(&[
+            ("src/a.rs", 3, "D1", "unordered-iter", "same msg"),
+            ("src/a.rs", 9, "P2", "panic-reachable", "fresh"),
+        ]);
+        let new = base.new_findings(&changed);
+        assert_eq!(new.len(), 1);
+        assert_eq!(new[0].rule, "P2");
+    }
+
+    #[test]
+    fn malformed_baselines_error_instead_of_passing() {
+        assert!(Baseline::parse("").is_err());
+        assert!(Baseline::parse("{\"counts\": {}}").is_err(), "missing findings");
+        assert!(Baseline::parse("{\"findings\": [{\"file\": \"x\"}]}").is_err());
+        assert!(Baseline::parse("{\"findings\": []} trailing").is_err());
+        let ok = Baseline::parse("{\"findings\": []}").unwrap();
+        assert!(ok.is_empty());
+    }
+}

@@ -1,0 +1,505 @@
+//! Conservative crate-wide call graph (DESIGN.md §10).
+//!
+//! Nodes are the [`FnItem`]s of every `src/` file; edges come from three
+//! token-level call shapes scanned inside each fn body:
+//!
+//! * **method calls** `recv.name(..)` — resolved by *method-name
+//!   fallback*: every fn named `name` defined with a receiver, falling
+//!   back to free fns of that name. Without type information this
+//!   over-approximates dispatch (including trait objects), which is the
+//!   safe direction for reachability rules;
+//! * **qualified calls** `Path::name(..)` — scoped: `Self` maps to the
+//!   enclosing receiver; otherwise fns whose receiver equals the final
+//!   path segment, then free fns defined in the module of that name. A
+//!   qualified call that matches nothing (e.g. `Vec::new`, `f32::max`)
+//!   is *external* and lands in the `unresolved` bucket rather than
+//!   being name-matched against unrelated constructors;
+//! * **plain calls** `name(..)` — free fns of that name, else
+//!   `unresolved`. UFCS `<T as Tr>::name(..)` uses method-name fallback.
+//!
+//! Turbofish (`name::<..>(`) is recognized in all three shapes. Calls
+//! written inside macro invocation arguments are scanned like ordinary
+//! tokens (over-approximation again). The `unresolved` bucket is part of
+//! the public result so the conservatism is auditable, not silent.
+//!
+//! Construction is **total** (any token stream produces a graph) and
+//! **deterministic**: nodes are sorted by `(file, line, name)` before
+//! edges are resolved, so shuffled input file order yields a
+//! byte-identical graph.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::items::{extract_fns, FnItem};
+use super::lexer::{Tok, TokKind};
+use super::rules::{is_keyword, AnalyzedFile};
+
+/// The crate-wide call graph.
+pub struct CallGraph {
+    /// All fn items, sorted by `(file, line, name)`.
+    pub fns: Vec<FnItem>,
+    /// `edges[i]` — callee ids of `fns[i]`, ascending and deduplicated.
+    pub edges: Vec<Vec<usize>>,
+    /// Call names that matched no known fn item, with occurrence counts.
+    pub unresolved: BTreeMap<String, usize>,
+}
+
+/// One syntactic call site inside a fn body.
+enum CallShape {
+    /// `expr.name(` — method-name fallback resolution.
+    Method(String),
+    /// `Q::name(` — path-scoped resolution (`Q` is the final segment).
+    Qualified(String, String),
+    /// `>::name(` — UFCS; resolved like a method call.
+    Ufcs(String),
+    /// `name(` — free fns only.
+    Plain(String),
+}
+
+impl CallGraph {
+    /// Build the graph over every file in `files` (order-insensitive).
+    pub fn build(files: &[AnalyzedFile]) -> CallGraph {
+        let mut fns: Vec<FnItem> = files.iter().flat_map(extract_fns).collect();
+        fns.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.name.as_str())
+                .cmp(&(b.file.as_str(), b.line, b.name.as_str()))
+        });
+
+        // resolution indexes
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut by_name_recv: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut by_name_free: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        let mut by_recv_name: BTreeMap<(&str, &str), Vec<usize>> = BTreeMap::new();
+        for (id, f) in fns.iter().enumerate() {
+            by_name.entry(&f.name).or_default().push(id);
+            match &f.recv {
+                Some(r) => {
+                    by_name_recv.entry(&f.name).or_default().push(id);
+                    by_recv_name.entry((r, &f.name)).or_default().push(id);
+                }
+                None => {
+                    by_name_free.entry(&f.name).or_default().push(id);
+                }
+            }
+        }
+
+        let by_rel: BTreeMap<&str, &AnalyzedFile> =
+            files.iter().map(|f| (f.rel.as_str(), f)).collect();
+
+        let mut edges: Vec<Vec<usize>> = vec![Vec::new(); fns.len()];
+        let mut unresolved: BTreeMap<String, usize> = BTreeMap::new();
+
+        for id in 0..fns.len() {
+            let item = &fns[id];
+            let Some(file) = by_rel.get(item.file.as_str()) else { continue };
+            // token spans of *other* fns nested inside this body — their
+            // calls belong to the nested item, not to us
+            let nested: Vec<(usize, usize)> = fns
+                .iter()
+                .filter(|o| {
+                    o.file == item.file
+                        && o.sig.0 > item.body.0
+                        && o.body.1 <= item.body.1
+                })
+                .map(|o| (o.sig.0, o.body.1 + 1))
+                .collect();
+
+            let mut targets: BTreeSet<usize> = BTreeSet::new();
+            for shape in scan_calls(&file.toks, item.body.0, item.body.1, &nested) {
+                let resolved: &[usize] = match &shape {
+                    CallShape::Method(name) | CallShape::Ufcs(name) => by_name_recv
+                        .get(name.as_str())
+                        .or_else(|| by_name_free.get(name.as_str()))
+                        .map_or(&[], |v| v.as_slice()),
+                    CallShape::Qualified(q, name) => {
+                        let q = if q == "Self" {
+                            item.recv.as_deref().unwrap_or("Self")
+                        } else {
+                            q.as_str()
+                        };
+                        if let Some(v) = by_recv_name.get(&(q, name.as_str())) {
+                            v.as_slice()
+                        } else {
+                            // free fns in a module named like the path
+                            // segment (`collective::reduce(..)`)
+                            let ql = q.to_ascii_lowercase();
+                            let in_module: Vec<usize> = by_name_free
+                                .get(name.as_str())
+                                .map_or(&[][..], |v| v.as_slice())
+                                .iter()
+                                .copied()
+                                .filter(|&t| {
+                                    let file = fns[t].file.as_str();
+                                    file.ends_with(&format!("/{ql}.rs"))
+                                        || file.ends_with(&format!("/{ql}/mod.rs"))
+                                        || fns[t].module == ql
+                                })
+                                .collect();
+                            if in_module.is_empty() {
+                                let key = format!("{q}::{name}");
+                                *unresolved.entry(key).or_insert(0) += 1;
+                            }
+                            targets.extend(in_module);
+                            continue;
+                        }
+                    }
+                    CallShape::Plain(name) => {
+                        by_name_free.get(name.as_str()).map_or(&[], |v| v.as_slice())
+                    }
+                };
+                if resolved.is_empty() {
+                    let key = match shape {
+                        CallShape::Method(n) | CallShape::Ufcs(n) => format!(".{n}"),
+                        CallShape::Qualified(q, n) => format!("{q}::{n}"),
+                        CallShape::Plain(n) => n,
+                    };
+                    *unresolved.entry(key).or_insert(0) += 1;
+                } else {
+                    targets.extend(resolved.iter().copied());
+                }
+            }
+            targets.remove(&id); // self-recursion adds nothing to reachability
+            edges[id] = targets.into_iter().collect();
+        }
+
+        let _ = by_name; // kept for symmetry; fallback uses recv/free splits
+        CallGraph { fns, edges, unresolved }
+    }
+
+    /// Ids of non-test fns with `name`, optionally constrained to `recv`.
+    pub fn find(&self, recv: Option<&str>, name: &str) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                !f.in_test
+                    && f.name == name
+                    && match recv {
+                        Some(r) => f.recv.as_deref() == Some(r),
+                        None => true,
+                    }
+            })
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Forward BFS from `roots`: reached id → parent id (`None` at a
+    /// root). Deterministic: roots and neighbors visit in ascending id
+    /// order; test-only fns are never traversed.
+    pub fn reach_forward(&self, roots: &[usize]) -> BTreeMap<usize, Option<usize>> {
+        self.bfs(roots, |id| self.edges[id].iter().copied())
+    }
+
+    /// Reverse BFS from `roots` (callers of, transitively). Same
+    /// determinism and test-exclusion guarantees as [`Self::reach_forward`].
+    pub fn reach_reverse(&self, roots: &[usize]) -> BTreeMap<usize, Option<usize>> {
+        let mut rev: Vec<Vec<usize>> = vec![Vec::new(); self.fns.len()];
+        for (src, outs) in self.edges.iter().enumerate() {
+            for &dst in outs {
+                rev[dst].push(src);
+            }
+        }
+        self.bfs(roots, move |id| rev[id].clone().into_iter())
+    }
+
+    fn bfs<I, F>(&self, roots: &[usize], mut next: F) -> BTreeMap<usize, Option<usize>>
+    where
+        I: Iterator<Item = usize>,
+        F: FnMut(usize) -> I,
+    {
+        let mut parents: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut sorted_roots: Vec<usize> = roots.to_vec();
+        sorted_roots.sort_unstable();
+        for r in sorted_roots {
+            if !self.fns[r].in_test && !parents.contains_key(&r) {
+                parents.insert(r, None);
+                queue.push_back(r);
+            }
+        }
+        while let Some(id) = queue.pop_front() {
+            for t in next(id) {
+                if !self.fns[t].in_test && !parents.contains_key(&t) {
+                    parents.insert(t, Some(id));
+                    queue.push_back(t);
+                }
+            }
+        }
+        parents
+    }
+
+    /// `entry -> ... -> target` display chain from a BFS parent map.
+    pub fn chain(&self, target: usize, parents: &BTreeMap<usize, Option<usize>>) -> String {
+        let mut path = vec![target];
+        let mut cur = target;
+        while let Some(Some(p)) = parents.get(&cur) {
+            path.push(*p);
+            cur = *p;
+        }
+        path.reverse();
+        let names: Vec<String> = path.iter().map(|&id| self.fns[id].display()).collect();
+        names.join(" -> ")
+    }
+}
+
+/// Scan `toks[lo..hi]` for call sites, skipping `skip` token ranges.
+fn scan_calls(
+    toks: &[Tok],
+    lo: usize,
+    hi: usize,
+    skip: &[(usize, usize)],
+) -> Vec<CallShape> {
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i < hi && i < toks.len() {
+        if let Some(&(_, end)) = skip.iter().find(|&&(a, b)| a <= i && i < b) {
+            i = end;
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || is_keyword(&t.text) {
+            i += 1;
+            continue;
+        }
+        if !callable_at(toks, i) {
+            i += 1;
+            continue;
+        }
+        let name = t.text.clone();
+        let prev = if i > 0 { toks[i - 1].text.as_str() } else { "" };
+        match prev {
+            "." => out.push(CallShape::Method(name)),
+            "::" => {
+                let pp = toks.get(i.wrapping_sub(2));
+                match pp {
+                    Some(p) if p.kind == TokKind::Ident && !is_keyword(&p.text) => {
+                        out.push(CallShape::Qualified(p.text.clone(), name));
+                    }
+                    Some(p) if p.text == ">" => out.push(CallShape::Ufcs(name)),
+                    // `::name(` crate-root path or macro-expanded — treat
+                    // as plain so free fns still resolve
+                    _ => out.push(CallShape::Plain(name)),
+                }
+            }
+            "fn" => {} // a definition, not a call (nested-fn guard)
+            _ => out.push(CallShape::Plain(name)),
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Is the ident at `i` followed by `(`, directly or via turbofish
+/// `::<..>(`? (`.collect::<Vec<_>>(` lexes as `. collect :: < .. > (`.)
+pub(crate) fn callable_at(toks: &[Tok], i: usize) -> bool {
+    match toks.get(i + 1).map(|t| t.text.as_str()) {
+        Some("(") => true,
+        Some("::") if toks.get(i + 2).map(|t| t.text.as_str()) == Some("<") => {
+            let mut depth = 0isize;
+            let mut j = i + 2;
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "<" => depth += 1,
+                    ">" if j > 0 && toks[j - 1].text == "-" => {}
+                    ">" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return toks.get(j + 1).map(|t| t.text.as_str()) == Some("(");
+                        }
+                    }
+                    "{" | ";" => return false,
+                    _ => {}
+                }
+                j += 1;
+            }
+            false
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(files: &[(&str, &str)]) -> CallGraph {
+        let parsed: Vec<AnalyzedFile> =
+            files.iter().map(|(rel, src)| AnalyzedFile::parse(rel, src)).collect();
+        CallGraph::build(&parsed)
+    }
+
+    fn edge_names(g: &CallGraph, from: &str) -> Vec<String> {
+        let id = g.fns.iter().position(|f| f.display() == from).unwrap();
+        g.edges[id].iter().map(|&t| g.fns[t].display()).collect()
+    }
+
+    #[test]
+    fn method_call_vs_field_access() {
+        let g = graph(&[(
+            "src/serve/x.rs",
+            "struct S { handler: u32 }\n\
+             impl S {\n\
+                 fn handler(&self) -> u32 { 1 }\n\
+                 fn go(&self) -> u32 { let _v = self.handler; self.handler() }\n\
+             }\n",
+        )]);
+        assert_eq!(edge_names(&g, "S::go"), vec!["S::handler"]);
+    }
+
+    #[test]
+    fn qualified_self_and_cross_file_resolution() {
+        let g = graph(&[
+            (
+                "src/solver/a.rs",
+                "pub struct Driver;\n\
+                 impl Driver {\n\
+                     pub fn step(&self) { Self::tick(); crate::solver::helper(); }\n\
+                     fn tick() {}\n\
+                 }\n",
+            ),
+            ("src/solver/b.rs", "pub fn helper() {}\n"),
+        ]);
+        let got = edge_names(&g, "Driver::step");
+        assert_eq!(got, vec!["Driver::tick", "helper"]);
+    }
+
+    #[test]
+    fn external_qualified_calls_go_to_unresolved_not_name_fallback() {
+        let g = graph(&[(
+            "src/backend/x.rs",
+            "pub struct Obj;\n\
+             impl Obj { pub fn new() -> Obj { Obj } }\n\
+             pub fn build() -> Vec<u32> { let _o = Obj::new(); Vec::new() }\n",
+        )]);
+        // `Vec::new` must NOT resolve to Obj::new by bare-name fallback
+        assert_eq!(edge_names(&g, "build"), vec!["Obj::new"]);
+        assert_eq!(g.unresolved.get("Vec::new"), Some(&1));
+    }
+
+    #[test]
+    fn ufcs_and_trait_object_dispatch_use_method_fallback() {
+        let g = graph(&[(
+            "src/projection/x.rs",
+            "pub trait Op { fn apply(&self) -> u32 { 0 } }\n\
+             pub struct A;\n\
+             impl Op for A { fn apply(&self) -> u32 { 1 } }\n\
+             pub fn via_obj(o: &dyn Op) -> u32 { o.apply() }\n\
+             pub fn via_ufcs(a: &A) -> u32 { <A as Op>::apply(a) }\n",
+        )]);
+        // both dispatch forms over-approximate to every `apply` with a recv
+        assert_eq!(edge_names(&g, "via_obj"), vec!["Op::apply", "A::apply"].into_iter().map(String::from).collect::<Vec<_>>());
+        assert_eq!(edge_names(&g, "via_ufcs"), vec!["Op::apply", "A::apply"].into_iter().map(String::from).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn generics_turbofish_and_macro_bodies() {
+        let g = graph(&[(
+            "src/sparse/x.rs",
+            "pub fn target(v: u32) -> u32 { v }\n\
+             pub fn caller(xs: &[u32]) -> Vec<u32> {\n\
+                 let v: Vec<u32> = xs.iter().copied().collect::<Vec<u32>>();\n\
+                 assert!(target(1) > 0, \"{}\", target(2));\n\
+                 v\n\
+             }\n",
+        )]);
+        // turbofish `.collect::<..>(` is a (std, unresolved) method call;
+        // calls inside macro args are still attributed to the caller
+        assert_eq!(edge_names(&g, "caller"), vec!["target"]);
+        assert_eq!(g.unresolved.get(".collect"), Some(&1));
+        assert!(g.unresolved.contains_key(".iter"));
+    }
+
+    #[test]
+    fn closure_calls_attribute_to_the_defining_fn() {
+        let g = graph(&[(
+            "src/engine/x.rs",
+            "pub fn leaf() -> u32 { 3 }\n\
+             pub fn spawns() -> u32 { let f = || leaf(); f() }\n",
+        )]);
+        assert_eq!(edge_names(&g, "spawns"), vec!["leaf"]);
+    }
+
+    #[test]
+    fn nested_fn_calls_do_not_leak_to_the_outer_fn() {
+        let g = graph(&[(
+            "src/util/x.rs",
+            "pub fn leaf() {}\n\
+             pub fn outer() {\n\
+                 fn inner() { leaf(); }\n\
+                 inner();\n\
+             }\n",
+        )]);
+        assert_eq!(edge_names(&g, "outer"), vec!["inner"]);
+        assert_eq!(edge_names(&g, "inner"), vec!["leaf"]);
+    }
+
+    #[test]
+    fn reachability_chains_and_test_fn_exclusion() {
+        let g = graph(&[(
+            "src/serve/x.rs",
+            "pub struct D;\n\
+             impl D { pub fn submit(&self) { route(); } }\n\
+             fn route() { admit(); }\n\
+             fn admit() {}\n\
+             fn orphan() {}\n\
+             #[cfg(test)]\n\
+             mod tests { fn t() { super::admit(); } }\n",
+        )]);
+        let entries = g.find(Some("D"), "submit");
+        assert_eq!(entries.len(), 1);
+        let parents = g.reach_forward(&entries);
+        let admit = g.find(None, "admit")[0];
+        assert!(parents.contains_key(&admit));
+        assert_eq!(g.chain(admit, &parents), "D::submit -> route -> admit");
+        let orphan = g.find(None, "orphan")[0];
+        assert!(!parents.contains_key(&orphan));
+        assert!(!g.fns.iter().any(|f| f.name == "t" && !f.in_test));
+    }
+
+    /// Property: construction is total and deterministic over shuffled
+    /// file order (hand-rolled — no proptest dependency).
+    #[test]
+    fn graph_is_deterministic_over_shuffled_file_order() {
+        let files: Vec<(String, String)> = (0..8)
+            .map(|i| {
+                (
+                    format!("src/solver/f{i}.rs"),
+                    format!(
+                        "pub struct T{i};\n\
+                         impl T{i} {{ pub fn m{i}(&self) -> u32 {{ shared() }} }}\n\
+                         pub fn free{i}() {{ T{i}.m{i}(); }}\n\
+                         pub fn shared() -> u32 {{ {i} }}\n"
+                    ),
+                )
+            })
+            .collect();
+        let render = |order: &[usize]| -> String {
+            let parsed: Vec<AnalyzedFile> = order
+                .iter()
+                .map(|&i| AnalyzedFile::parse(&files[i].0, &files[i].1))
+                .collect();
+            let g = CallGraph::build(&parsed);
+            let mut s = String::new();
+            for (id, f) in g.fns.iter().enumerate() {
+                s.push_str(&format!(
+                    "{} {} -> {:?}\n",
+                    f.file,
+                    f.display(),
+                    g.edges[id].iter().map(|&t| g.fns[t].display()).collect::<Vec<_>>()
+                ));
+            }
+            s.push_str(&format!("{:?}", g.unresolved));
+            s
+        };
+        let baseline = render(&(0..files.len()).collect::<Vec<_>>());
+        let mut rng = crate::util::rng::Rng::new(0xD11A);
+        let mut order: Vec<usize> = (0..files.len()).collect();
+        for _ in 0..16 {
+            // Fisher–Yates on the file order
+            for i in (1..order.len()).rev() {
+                let j = (rng.next_u64() as usize) % (i + 1);
+                order.swap(i, j);
+            }
+            assert_eq!(render(&order), baseline, "order {order:?}");
+        }
+    }
+}

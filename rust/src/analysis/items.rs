@@ -1,0 +1,344 @@
+//! Item extraction for the crate-wide call graph (DESIGN.md §10).
+//!
+//! Sits directly on the [`super::lexer`] token stream: finds every `fn`
+//! item in a file together with the receiver type of its enclosing
+//! `impl`/`trait` block and its brace-matched body token span. This is
+//! deliberately *not* a Rust parser — it recognizes exactly the shapes
+//! the graph rules need (free fns, inherent/trait methods, trait default
+//! methods, nested fns) and stays total on any token stream: malformed
+//! input degrades to fewer recognized items, never a panic.
+//!
+//! Conservatism notes (the graph rules inherit these):
+//!
+//! * closures have no item identity — calls inside a closure are
+//!   attributed to the defining `fn` (sound for reachability: the
+//!   closure only runs if the definer or something it handed the
+//!   closure to runs);
+//! * nested `fn` items are their own nodes; their token spans are
+//!   subtracted from the enclosing fn's scan range;
+//! * `impl Trait` in return position is skipped by a `->` look-behind,
+//!   so it never opens a phantom receiver context.
+
+use super::lexer::{Tok, TokKind};
+use super::rules::AnalyzedFile;
+
+/// One `fn` item: identity, receiver, and token spans.
+#[derive(Clone, Debug)]
+pub struct FnItem {
+    /// Crate-root-relative path of the defining file.
+    pub file: String,
+    /// Top-level module key, ratchet-style (`src/backend/x.rs` →
+    /// `backend`, `src/lib.rs` → `root`, non-src roots → first segment).
+    pub module: String,
+    pub name: String,
+    /// Receiver type of the innermost enclosing `impl`/`trait` block
+    /// (`impl ObjectiveFunction for SlabCpuObjective` → `SlabCpuObjective`;
+    /// trait default methods carry the trait name). `None` for free fns.
+    pub recv: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token range `[fn_idx, body_open)` — the signature.
+    pub sig: (usize, usize),
+    /// Token range `(body_open, body_close)` — the body content,
+    /// exclusive of the outer braces.
+    pub body: (usize, usize),
+    /// Whether the item sits inside `#[cfg(test)]`.
+    pub in_test: bool,
+}
+
+impl FnItem {
+    /// Short display name for chains: `Recv::name` or `name`.
+    pub fn display(&self) -> String {
+        match &self.recv {
+            Some(r) => format!("{r}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+
+    /// Fully qualified display: `module::Recv::name`.
+    pub fn qual(&self) -> String {
+        match &self.recv {
+            Some(r) => format!("{}::{r}::{}", self.module, self.name),
+            None => format!("{}::{}", self.module, self.name),
+        }
+    }
+}
+
+/// A receiver context: the body token span of one `impl`/`trait` block.
+struct TypeCtx {
+    recv: String,
+    lo: usize,
+    hi: usize,
+}
+
+/// Module key for graph grouping — `src/` files use the ratchet module
+/// (`backend`, `root`, ...); other roots use their first path segment.
+pub fn module_key(rel: &str) -> String {
+    if let Some(rest) = rel.strip_prefix("src/") {
+        return match rest.split_once('/') {
+            Some((dir, _)) => dir.to_string(),
+            None => "root".to_string(),
+        };
+    }
+    match rel.split_once('/') {
+        Some((dir, _)) => dir.to_string(),
+        None => "ext".to_string(),
+    }
+}
+
+/// Skip a balanced `<...>` run starting at the `<` in `toks[i]`; returns
+/// the index just past the matching `>`. `->` arrows inside (closure
+/// bounds like `Fn(usize) -> f32`) are ignored by a `-` look-behind.
+fn skip_angles(toks: &[Tok], mut i: usize) -> usize {
+    debug_assert_eq!(toks[i].text, "<");
+    let mut depth = 0isize;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "<" => depth += 1,
+            ">" if i > 0 && toks[i - 1].text == "-" => {}
+            ">" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            // a `{`/`;` at angle depth means the stream is not the
+            // generics we assumed — bail rather than overrun
+            "{" | ";" => return i,
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Index just past the `}` matching the `{` at `toks[open]` (or the end
+/// of the stream for unbalanced input).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    debug_assert_eq!(toks[open].text, "{");
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Collect `impl`/`trait` receiver contexts.
+fn type_contexts(toks: &[Tok]) -> Vec<TypeCtx> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || (t.text != "impl" && t.text != "trait") {
+            i += 1;
+            continue;
+        }
+        // return-position `-> impl Trait` opens no receiver context
+        if t.text == "impl"
+            && i >= 2
+            && toks[i - 1].text == ">"
+            && toks[i - 2].text == "-"
+        {
+            i += 1;
+            continue;
+        }
+        // `impl Fn(..)`-style bounds in argument position: the next `{`
+        // we would find belongs to a fn body; the `for`-reset walk below
+        // still lands on *some* ident, which is harmless — nested fns are
+        // rare and the attribution stays conservative.
+        let mut j = i + 1;
+        if j < toks.len() && toks[j].text == "<" {
+            j = skip_angles(toks, j);
+        }
+        let mut recv: Option<String> = None;
+        while j < toks.len() {
+            let tj = &toks[j];
+            match tj.text.as_str() {
+                "{" => break,
+                ";" => break, // `trait X: Y;`-like degenerate input
+                "<" => {
+                    j = skip_angles(toks, j);
+                    continue;
+                }
+                "for" if tj.kind == TokKind::Ident => recv = None,
+                "where" if tj.kind == TokKind::Ident => {
+                    // scan on to the `{`; where-clauses carry no braces
+                }
+                _ if tj.kind == TokKind::Ident => recv = Some(tj.text.clone()),
+                _ => {}
+            }
+            j += 1;
+        }
+        if j < toks.len() && toks[j].text == "{" {
+            let end = match_brace(toks, j);
+            if let Some(recv) = recv {
+                out.push(TypeCtx { recv, lo: j, hi: end });
+            }
+            // contexts can nest (impl blocks inside mod blocks are
+            // transparent; impls never nest in real Rust) — keep walking
+            // from just inside so nested trait/impl text is still seen
+            i = j + 1;
+        } else {
+            i = j + 1;
+        }
+    }
+    out
+}
+
+/// Extract every `fn` item of one analyzed file.
+pub fn extract_fns(f: &AnalyzedFile) -> Vec<FnItem> {
+    let toks = &f.toks;
+    let ctxs = type_contexts(toks);
+    let module = module_key(&f.rel);
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind != TokKind::Ident || toks[i].text != "fn" {
+            i += 1;
+            continue;
+        }
+        // `fn(..)` pointer types and `Fn(..)` bounds: no name ident next
+        let Some(name_tok) = toks.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        // scan the signature for the body `{` (or `;` for bodyless
+        // trait-required methods / extern decls)
+        let mut j = i + 2;
+        let mut paren = 0isize;
+        let mut body_open: Option<usize> = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => paren += 1,
+                ")" | "]" => paren -= 1,
+                "<" if paren == 0 => {
+                    j = skip_angles(toks, j);
+                    continue;
+                }
+                "{" if paren == 0 => {
+                    body_open = Some(j);
+                    break;
+                }
+                ";" if paren == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = body_open else {
+            i = j + 1;
+            continue;
+        };
+        let close = match_brace(toks, open);
+        // innermost enclosing receiver context
+        let recv = ctxs
+            .iter()
+            .filter(|c| c.lo < i && i < c.hi)
+            .max_by_key(|c| c.lo)
+            .map(|c| c.recv.clone());
+        out.push(FnItem {
+            file: f.rel.clone(),
+            module: module.clone(),
+            name: name_tok.text.clone(),
+            recv,
+            line: toks[i].line,
+            sig: (i, open),
+            body: (open + 1, close.saturating_sub(1)),
+            in_test: f.in_test(toks[i].line),
+        });
+        i = open + 1; // nested fns inside the body are found by the walk
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(rel: &str, src: &str) -> Vec<FnItem> {
+        extract_fns(&AnalyzedFile::parse(rel, src))
+    }
+
+    #[test]
+    fn free_and_method_fns_with_receivers() {
+        let src = "pub fn free(x: u32) -> u32 { x }\n\
+                   pub struct S;\n\
+                   impl S { pub fn m(&self) -> u32 { 1 } }\n\
+                   impl std::fmt::Display for S {\n\
+                       fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result { Ok(()) }\n\
+                   }\n";
+        let fs = items("src/backend/x.rs", src);
+        assert_eq!(fs.len(), 3, "{fs:?}");
+        assert_eq!((fs[0].name.as_str(), fs[0].recv.as_deref()), ("free", None));
+        assert_eq!((fs[1].name.as_str(), fs[1].recv.as_deref()), ("m", Some("S")));
+        assert_eq!((fs[2].name.as_str(), fs[2].recv.as_deref()), ("fmt", Some("S")));
+        assert_eq!(fs[0].module, "backend");
+        assert_eq!(fs[1].qual(), "backend::S::m");
+    }
+
+    #[test]
+    fn generic_impls_and_trait_defaults() {
+        let src = "impl<'a, T: Clone> Wrap<'a, T> { fn get(&self) -> &T { &self.0 } }\n\
+                   pub trait Proj { fn rows(&self) -> usize { 1 } fn must(&self) -> usize; }\n";
+        let fs = items("src/projection/x.rs", src);
+        let names: Vec<(String, Option<String>)> =
+            fs.iter().map(|f| (f.name.clone(), f.recv.clone())).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("get".into(), Some("Wrap".into())),
+                ("rows".into(), Some("Proj".into())),
+            ],
+            "bodyless required method must not appear"
+        );
+    }
+
+    #[test]
+    fn return_position_impl_trait_is_not_a_receiver() {
+        let src = "fn mk() -> impl Iterator<Item = u32> { (0..3).map(|x| x) }\n\
+                   fn after() {}\n";
+        let fs = items("src/solver/x.rs", src);
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs[0].recv, None);
+        assert_eq!(fs[1].recv, None, "phantom impl ctx must not leak");
+    }
+
+    #[test]
+    fn nested_fns_are_separate_items_inside_the_outer_span() {
+        let src = "fn outer() -> u32 {\n    fn inner(v: u32) -> u32 { v + 1 }\n    inner(2)\n}\n";
+        let fs = items("src/util/x.rs", src);
+        assert_eq!(fs.len(), 2);
+        let (outer, inner) = (&fs[0], &fs[1]);
+        assert!(outer.body.0 < inner.sig.0 && inner.body.1 <= outer.body.1);
+    }
+
+    #[test]
+    fn cfg_test_fns_are_marked() {
+        let src = "pub fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n";
+        let fs = items("src/serve/x.rs", src);
+        assert_eq!(fs.len(), 2);
+        assert!(!fs[0].in_test);
+        assert!(fs[1].in_test);
+    }
+
+    #[test]
+    fn where_clauses_and_fn_pointer_types_do_not_confuse_the_scan() {
+        let src = "fn apply<F>(f: F) -> u32 where F: Fn(u32) -> u32 { f(1) }\n\
+                   type Cb = fn(usize) -> f32;\n\
+                   fn uses(c: Cb) -> f32 { c(0) }\n";
+        let fs = items("src/engine/x.rs", src);
+        let names: Vec<&str> = fs.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["apply", "uses"]);
+    }
+}

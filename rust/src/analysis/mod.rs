@@ -13,25 +13,44 @@
 //! panic-budget ratchet ([`ratchet`]) that CI only lets go down, and a
 //! fixture self-check ([`selfcheck`]) so the auditor cannot rot.
 //!
-//! Run it as `cargo run --bin audit` (`--format json` for machines,
-//! `--update-ratchet` after removing panic sites, `--self-check` for the
-//! fixtures). Exit code 0 means every invariant holds or carries a
-//! justified `// audit:allow(rule): why` waiver.
+//! On top of the file-local pass sits a crate-wide layer: [`items`]
+//! extracts every `fn` with its receiver type, [`graph`] builds a
+//! conservative call graph (method-name fallback, explicit `unresolved`
+//! bucket), and [`taint`] runs the cross-file reachability rules — P2
+//! `panic-reachable` (path-sensitive: findings print the call chain
+//! from the serve/solve entry point), D4 `determinism-taint` (unordered
+//! iteration feeding float accumulation across fn boundaries), and A1
+//! `hot-loop-alloc` (allocation sites in the `eval_chunk_partials` /
+//! `project_rows` cone, ratcheted like P1).
+//!
+//! Run it as `cargo run --bin audit` (`--format json|sarif` for
+//! machines, `--baseline <json>` to fail only on new findings,
+//! `--update-ratchet` after removing panic/alloc sites, `--self-check`
+//! for the fixtures). Exit code 0 means every invariant holds or
+//! carries a justified `// audit:allow(rule): why` waiver.
 
+pub mod baseline;
+pub mod graph;
+pub mod items;
 pub mod lexer;
 pub mod ratchet;
 pub mod report;
 pub mod rules;
 pub mod selfcheck;
+pub mod taint;
 pub mod walk;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+pub use baseline::Baseline;
+pub use graph::CallGraph;
+pub use items::FnItem;
 pub use ratchet::Ratchet;
 pub use report::{AuditReport, Finding};
 pub use rules::{check_file, check_registry, panic_counts, AnalyzedFile};
 pub use selfcheck::{run_fixtures, FixtureResult};
+pub use taint::{check_graph, GraphRules};
 
 /// Resolve the directories of one audit root. `root` is the crate root
 /// (the directory holding `src/`); `examples/` may live beside it or one
@@ -98,6 +117,11 @@ pub fn audit_tree(root: &Path) -> Result<AuditReport, String> {
     report.findings.extend(r1);
     report.notes.extend(notes);
 
+    // P2/D4/A1: crate-wide call-graph rules over src/
+    let gr = check_graph(&src);
+    report.findings.extend(gr.findings);
+    report.notes.extend(gr.notes);
+
     // P1: per-module counts vs the ratchet
     let mut totals: BTreeMap<String, rules::PanicCounts> = BTreeMap::new();
     for f in &src {
@@ -115,6 +139,10 @@ pub fn audit_tree(root: &Path) -> Result<AuditReport, String> {
             report.counts.insert(format!("{module}.{metric}"), count);
         }
     }
+    // A1 counts join the same ratchet under `module.alloc` keys
+    for (key, count) in &gr.alloc_counts {
+        report.counts.insert(key.clone(), *count);
+    }
     let ratchet = if layout.ratchet.exists() {
         Ratchet::parse(&walk::read_to_string(&layout.ratchet)?)?
     } else {
@@ -126,6 +154,21 @@ pub fn audit_tree(root: &Path) -> Result<AuditReport, String> {
     let (p1, notes) = ratchet.compare(&report.counts);
     report.findings.extend(p1);
     report.notes.extend(notes);
+    // A1 ratchet findings name the module only — attach the actual sites
+    for f in &mut report.findings {
+        if f.rule == "A1" {
+            if let Some((key, _)) = f.message.split_once(" = ") {
+                if let Some(sites) = gr.alloc_sites.get(key) {
+                    let shown = sites.iter().take(6).cloned().collect::<Vec<_>>().join("; ");
+                    let more = sites.len().saturating_sub(6);
+                    f.message.push_str(&format!("; sites: {shown}"));
+                    if more > 0 {
+                        f.message.push_str(&format!(" (+{more} more)"));
+                    }
+                }
+            }
+        }
+    }
 
     report.findings.sort_by(|a, b| {
         (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
@@ -209,6 +252,59 @@ mod tests {
         assert!(r.findings.iter().any(|f| f.rule == "P1"), "{:?}", r.findings);
         assert_eq!(r.counts.get("serve.unwrap"), Some(&1));
         // checking in the budget makes it clean; update_ratchet writes it
+        update_ratchet(&root, &r).unwrap();
+        let r2 = audit_tree(&root).unwrap();
+        assert!(r2.clean(), "{:?}", r2.findings);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn reachable_panic_prints_the_call_chain() {
+        let root = scaffold(
+            "p2chain",
+            &[
+                (
+                    "src/serve/daemon.rs",
+                    "pub struct ServeDaemon;\n\
+                     impl ServeDaemon { pub fn submit(&self) { route(); } }\n\
+                     fn route() { admit(); }\n\
+                     fn admit() { Some(1).unwrap(); }\n",
+                ),
+                ("analysis/ratchet.toml", "[panic_budget]\nserve.unwrap = 1\n"),
+            ],
+        );
+        let r = audit_tree(&root).unwrap();
+        let p2: Vec<_> = r.findings.iter().filter(|f| f.rule == "P2").collect();
+        assert_eq!(p2.len(), 1, "{:?}", r.findings);
+        assert_eq!((p2[0].file.as_str(), p2[0].line), ("src/serve/daemon.rs", 4));
+        assert!(
+            p2[0].message.contains("ServeDaemon::submit -> route -> admit"),
+            "chain missing: {}",
+            p2[0].message
+        );
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn hot_loop_allocs_ratchet_as_a1_with_sites() {
+        let root = scaffold(
+            "a1cone",
+            &[(
+                "src/backend/hot.rs",
+                "pub fn eval_chunk_partials(n: usize) -> f32 { helper(n) }\n\
+                 fn helper(n: usize) -> f32 { let v = vec![0.0f32; n]; v.len() as f32 }\n",
+            )],
+        );
+        let r = audit_tree(&root).unwrap();
+        assert_eq!(r.counts.get("backend.alloc"), Some(&1), "{:?}", r.counts);
+        let a1: Vec<_> = r.findings.iter().filter(|f| f.rule == "A1").collect();
+        assert_eq!(a1.len(), 1, "{:?}", r.findings);
+        assert!(
+            a1[0].message.contains("src/backend/hot.rs:2 `vec!` in `helper`"),
+            "sites missing: {}",
+            a1[0].message
+        );
+        // budgeting the count makes the tree clean, exactly like P1
         update_ratchet(&root, &r).unwrap();
         let r2 = audit_tree(&root).unwrap();
         assert!(r2.clean(), "{:?}", r2.findings);

@@ -13,9 +13,17 @@
 //! * module absent from the file → budget 0, so brand-new modules start
 //!   panic-free by default and must check in an explicit budget.
 //!
-//! The file is a deliberately tiny TOML subset — comments, one optional
-//! `[panic_budget]` section header, and `module.metric = count` lines —
-//! parsed here so the offline vendored-shim build needs no TOML crate.
+//! Since PR 10 the same mechanism also ratchets **A1 `hot-loop-alloc`**
+//! counts (forbidden allocation sites in the `eval_chunk_partials` /
+//! `project_rows` reachability cone, see `taint.rs`): keys ending in
+//! `.alloc` live in a `[hot_loop_alloc]` section and compare as A1
+//! findings; everything else stays P1. Both are unwaivable — budgets
+//! only go down.
+//!
+//! The file is a deliberately tiny TOML subset — comments, optional
+//! `[panic_budget]` / `[hot_loop_alloc]` section headers, and
+//! `module.metric = count` lines — parsed here so the offline
+//! vendored-shim build needs no TOML crate.
 
 use std::collections::BTreeMap;
 
@@ -41,7 +49,7 @@ impl Ratchet {
                 continue;
             }
             if line.starts_with('[') && line.ends_with(']') {
-                if line != "[panic_budget]" {
+                if line != "[panic_budget]" && line != "[hot_loop_alloc]" {
                     return Err(format!(
                         "ratchet.toml:{lineno}: unknown section {line}"
                     ));
@@ -72,8 +80,18 @@ impl Ratchet {
         self.budgets.get(key).map(|&(v, _)| v).unwrap_or(0)
     }
 
-    /// Compare actual counts against budgets. Returns P1 findings for
-    /// exceedances plus slack notes.
+    /// Rule identity for a count key: `.alloc` keys are A1 (hot-loop
+    /// allocations), everything else P1 (panic budget).
+    fn rule_for(key: &str) -> (&'static str, &'static str, &'static str) {
+        if key.ends_with(".alloc") {
+            ("A1", "hot-loop-alloc", "hoist the new allocation(s) out of the hot loop")
+        } else {
+            ("P1", "panic-budget", "convert the new panic site(s) to Result/shed outcomes")
+        }
+    }
+
+    /// Compare actual counts against budgets. Returns P1/A1 findings
+    /// for exceedances plus slack notes.
     pub fn compare(
         &self,
         counts: &BTreeMap<String, usize>,
@@ -81,23 +99,23 @@ impl Ratchet {
         let mut findings = Vec::new();
         let mut notes = Vec::new();
         for (key, &count) in counts {
+            let (rule, slug, action) = Self::rule_for(key);
             match self.budgets.get(key) {
                 Some(&(budget, lineno)) if count > budget => {
                     findings.push(Finding::new(
                         "analysis/ratchet.toml",
                         lineno,
-                        "P1",
-                        "panic-budget",
+                        rule,
+                        slug,
                         format!(
                             "{key} = {count} exceeds ratcheted budget {budget} — \
-                             convert the new panic site(s) to Result/shed outcomes; \
-                             budgets only go down"
+                             {action}; budgets only go down"
                         ),
                     ));
                 }
                 Some(&(budget, _)) if count < budget => {
                     notes.push(format!(
-                        "P1 slack: {key} = {count}, budget {budget} — run \
+                        "{rule} slack: {key} = {count}, budget {budget} — run \
                          --update-ratchet to lower it"
                     ));
                 }
@@ -106,12 +124,12 @@ impl Ratchet {
                     findings.push(Finding::new(
                         "analysis/ratchet.toml",
                         0,
-                        "P1",
-                        "panic-budget",
+                        rule,
+                        slug,
                         format!(
                             "{key} = {count} but module has no checked-in budget — \
-                             new modules start panic-free; add an explicit budget \
-                             line if the sites are justified"
+                             new modules start clean by default; add an explicit \
+                             budget line if the sites are justified"
                         ),
                     ));
                 }
@@ -122,8 +140,9 @@ impl Ratchet {
         // renamed) rot silently — surface them
         for (key, &(budget, _)) in &self.budgets {
             if budget > 0 && !counts.contains_key(key) {
+                let (rule, _, _) = Self::rule_for(key);
                 notes.push(format!(
-                    "P1 stale: {key} budgeted {budget} but no such module.metric \
+                    "{rule} stale: {key} budgeted {budget} but no such module.metric \
                      was counted — delete the line"
                 ));
             }
@@ -132,6 +151,8 @@ impl Ratchet {
     }
 
     /// Render a fresh ratchet file from actual counts (`--update-ratchet`).
+    /// Byte-stable: sections in fixed order, keys sorted, zero counts
+    /// omitted.
     pub fn render(counts: &BTreeMap<String, usize>) -> String {
         let mut out = String::from(
             "# dualip-audit P1 panic budget — panic-capable sites per src/ module\n\
@@ -142,7 +163,17 @@ impl Ratchet {
              \n[panic_budget]\n",
         );
         for (k, v) in counts {
-            if *v > 0 {
+            if *v > 0 && !k.ends_with(".alloc") {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out.push_str(
+            "\n# A1 hot-loop allocation budget — Vec::new / vec! / collect / Box::new\n\
+             # sites in functions reachable from eval_chunk_partials / project_rows.\n\
+             \n[hot_loop_alloc]\n",
+        );
+        for (k, v) in counts {
+            if *v > 0 && k.ends_with(".alloc") {
                 out.push_str(&format!("{k} = {v}\n"));
             }
         }
@@ -198,6 +229,29 @@ mod tests {
         let (f, notes) = r.compare(&counts(&[]));
         assert!(f.is_empty());
         assert!(notes.iter().any(|n| n.contains("stale")));
+    }
+
+    #[test]
+    fn alloc_keys_ratchet_as_a1_in_their_own_section() {
+        let c = counts(&[("backend.alloc", 2), ("backend.unwrap", 4)]);
+        let text = Ratchet::render(&c);
+        // sectioned rendering: the alloc key must come after its header
+        let panic_at = text.find("[panic_budget]").unwrap();
+        let alloc_at = text.find("[hot_loop_alloc]").unwrap();
+        let key_at = text.find("backend.alloc = 2").unwrap();
+        assert!(panic_at < alloc_at && alloc_at < key_at);
+        assert!(text.find("backend.unwrap = 4").unwrap() < alloc_at);
+        // byte-stable round trip
+        let r = Ratchet::parse(&text).unwrap();
+        assert_eq!(r.budget("backend.alloc"), 2);
+        assert_eq!(Ratchet::render(&c), text);
+        // exceedance fires A1, not P1; unbudgeted alloc counts fire too
+        let (f, _) = r.compare(&counts(&[("backend.alloc", 3), ("backend.unwrap", 4)]));
+        assert_eq!(f.len(), 1);
+        assert_eq!((f[0].rule, f[0].slug), ("A1", "hot-loop-alloc"));
+        assert!(f[0].message.contains("hoist the new allocation"));
+        let (f2, _) = r.compare(&counts(&[("fresh.alloc", 1)]));
+        assert!(f2.iter().any(|x| x.rule == "A1" && x.message.contains("no checked-in budget")));
     }
 
     #[test]

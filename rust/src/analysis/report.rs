@@ -1,4 +1,4 @@
-//! Finding model and rendering (text + machine-readable JSON).
+//! Finding model and rendering (text, machine-readable JSON, SARIF 2.1.0).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -115,6 +115,57 @@ impl AuditReport {
         out.push_str(&tail);
         out
     }
+
+    /// SARIF 2.1.0 rendering (`--format sarif`) for GitHub code scanning.
+    ///
+    /// Minimal valid shape: one run, driver `dualip-audit`, a rule entry
+    /// per distinct rule id present, one `result` per finding with a
+    /// physical location. SARIF requires `startLine >= 1`, so file- and
+    /// tree-level findings (line 0) clamp to 1.
+    pub fn render_sarif(&self) -> String {
+        let mut rules: Vec<(&str, &str)> = Vec::new();
+        for f in &self.findings {
+            if !rules.iter().any(|&(r, _)| r == f.rule) {
+                rules.push((f.rule, f.slug));
+            }
+        }
+        rules.sort_unstable();
+        let mut out = String::from(
+            "{\n  \"$schema\": \"https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json\",\n  \"version\": \"2.1.0\",\n  \"runs\": [\n    {\n      \"tool\": {\n        \"driver\": {\n          \"name\": \"dualip-audit\",\n          \"informationUri\": \"https://example.invalid/dualip-gpu/DESIGN.md\",\n          \"rules\": [",
+        );
+        for (i, (rule, slug)) in rules.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n            {{\"id\": {}, \"name\": {}, \"shortDescription\": {{\"text\": {}}}}}",
+                json_str(rule),
+                json_str(slug),
+                json_str(slug),
+            ));
+        }
+        if !rules.is_empty() {
+            out.push_str("\n          ");
+        }
+        out.push_str("]\n        }\n      },\n      \"results\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n        {{\"ruleId\": {}, \"level\": \"error\", \"message\": {{\"text\": {}}}, \"locations\": [{{\"physicalLocation\": {{\"artifactLocation\": {{\"uri\": {}}}, \"region\": {{\"startLine\": {}}}}}}}]}}",
+                json_str(f.rule),
+                json_str(&f.message),
+                json_str(&f.file),
+                f.line.max(1),
+            ));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n      ");
+        }
+        out.push_str("]\n    }\n  ]\n}\n");
+        out
+    }
 }
 
 /// JSON string escaping (quotes, backslashes, control chars).
@@ -170,6 +221,24 @@ mod tests {
             let o = j.matches(open).count();
             let c = j.matches(close).count();
             assert_eq!(o, c, "unbalanced {open}{close}");
+        }
+    }
+
+    #[test]
+    fn sarif_clamps_line_zero_and_dedupes_rules() {
+        let mut r = AuditReport::default();
+        r.findings.push(Finding::new("analysis/ratchet.toml", 0, "P1", "panic-budget", "a".into()));
+        r.findings.push(Finding::new("src/a.rs", 3, "P2", "panic-reachable", "b".into()));
+        r.findings.push(Finding::new("src/b.rs", 9, "P2", "panic-reachable", "c".into()));
+        let s = r.render_sarif();
+        assert!(s.contains("\"version\": \"2.1.0\""));
+        assert!(s.contains("sarif-schema-2.1.0.json"));
+        assert!(s.contains("\"name\": \"dualip-audit\""));
+        assert_eq!(s.matches("{\"id\": ").count(), 2, "one rule entry per distinct rule");
+        assert_eq!(s.matches("\"ruleId\": ").count(), 3);
+        assert!(s.contains("\"startLine\": 1"), "line 0 must clamp to 1");
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(s.matches(open).count(), s.matches(close).count());
         }
     }
 

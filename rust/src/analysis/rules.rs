@@ -46,6 +46,8 @@ pub const WAIVABLE_SLUGS: &[&str] = &[
     "unordered-float-merge",
     "missing-safety-comment",
     "registry-coverage",
+    "panic-reachable",
+    "determinism-taint",
 ];
 
 /// One source file, lexed and classified.
@@ -234,7 +236,7 @@ pub fn panic_counts(f: &AnalyzedFile) -> PanicCounts {
     c
 }
 
-fn is_keyword(s: &str) -> bool {
+pub(crate) fn is_keyword(s: &str) -> bool {
     matches!(
         s,
         "let" | "mut" | "ref" | "in" | "if" | "else" | "match" | "return" | "fn" | "impl"
@@ -258,6 +260,8 @@ pub fn check_file(f: &AnalyzedFile) -> Vec<Finding> {
 
 /// Drop findings covered by a same-line or line-above waiver with a
 /// matching slug, then append W0 findings for malformed waivers.
+/// (The graph rules in `taint.rs` apply the same drop half per site
+/// file but never re-emit W0 — that would duplicate this pass.)
 fn apply_waivers(f: &AnalyzedFile, findings: Vec<Finding>) -> Vec<Finding> {
     let waivers = f.waivers();
     let mut out: Vec<Finding> = findings

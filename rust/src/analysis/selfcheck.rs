@@ -16,6 +16,7 @@
 use std::path::Path;
 
 use super::rules::{check_file, check_registry, AnalyzedFile};
+use super::taint::check_graph;
 use super::walk::{read_to_string, rs_files};
 
 /// Outcome of one fixture.
@@ -64,6 +65,12 @@ pub fn run_fixture(
         check_file(&f).into_iter().map(|fi| fi.rule.to_string()).collect();
     let (r1, _notes) = check_registry(std::slice::from_ref(&f), test_files);
     fired.extend(r1.into_iter().map(|fi| fi.rule.to_string()));
+    // graph rules over the single-file "crate": P2/D4 fire as findings;
+    // A1 fires once per module.alloc count (fixtures carry no ratchet,
+    // so any count > 0 is the "no checked-in budget" case)
+    let gr = check_graph(std::slice::from_ref(&f));
+    fired.extend(gr.findings.into_iter().map(|fi| fi.rule.to_string()));
+    fired.extend(gr.alloc_counts.values().filter(|&&c| c > 0).map(|_| "A1".to_string()));
     fired.sort();
     expected.sort();
     Ok(FixtureResult { fixture: name.to_string(), expected, fired })
@@ -137,5 +144,17 @@ mod tests {
     #[test]
     fn missing_path_directive_is_malformed() {
         assert!(run_fixture("x.rs", "// audit:expect(D1)\n", &[]).is_err());
+    }
+
+    #[test]
+    fn graph_rules_fire_in_fixtures() {
+        let src = "// audit:path(src/serve/fixture.rs)\n\
+                   // audit:expect(P2)\n\
+                   pub struct ServeDaemon;\n\
+                   impl ServeDaemon { pub fn submit(&self) { helper(); } }\n\
+                   fn helper() { Some(1).unwrap(); }\n";
+        let r = run_fixture("p2.rs", src, &[]).unwrap();
+        assert!(r.pass(), "{r:?}");
+        assert_eq!(r.fired, vec!["P2"]);
     }
 }

@@ -1,0 +1,581 @@
+//! Cross-file reachability rules on the call graph (DESIGN.md §10):
+//!
+//! * **P2 `panic-reachable`** — no `unwrap`/`expect`/panic-family macro
+//!   (and, inside `src/serve/`, no unchecked index) in any fn
+//!   transitively reachable from a `ServeDaemon` request entry point or
+//!   `SolveDriver::step`. Findings are path-sensitive: each prints the
+//!   full call chain `entry -> ... -> panicking fn`. Panic classes are
+//!   scoped to the modules the entry points own (`serve`, `solver`,
+//!   `backend`) — the graph's name-fallback resolution reaches utility
+//!   modules whose panic budget P1 already ratchets, and double-charging
+//!   them path-sensitively would drown the serve-path signal.
+//! * **D4 `determinism-taint`** — a fn in `solver`/`backend`/`sparse`/
+//!   `distributed` that accumulates f32/f64 values may not (transitively)
+//!   call a fn that iterates an unordered hash container: the iteration
+//!   order would leak into the float sum. Intra-fn cases are D1's job;
+//!   D4 exists for the cross-fn flows D1 cannot see.
+//! * **A1 `hot-loop-alloc`** — `Vec::new`/`vec![..]`/`.collect(..)`/
+//!   `Box::new` are forbidden in fns reachable from the per-iteration
+//!   hot paths `eval_chunk_partials`/`project_rows`. Ratcheted like P1
+//!   (per-module `module.alloc` budgets in `analysis/ratchet.toml`)
+//!   rather than zero-tolerance, so deliberate one-time setup that the
+//!   cone over-approximates into can be budgeted without waivers.
+//!   `Vec::with_capacity`/`to_vec` are deliberately *not* forbidden:
+//!   sized one-shot buffers are how scratch gets hoisted.
+//!
+//! P2/D4 findings honor `audit:allow(panic-reachable)` /
+//! `audit:allow(determinism-taint)` waivers at the *site* file; A1 is
+//! count-ratcheted and unwaivable, like P1.
+
+use std::collections::BTreeMap;
+
+use super::graph::{callable_at, CallGraph};
+use super::lexer::TokKind;
+use super::report::Finding;
+use super::rules::{is_keyword, AnalyzedFile};
+
+/// Request entry points: `(receiver, method)` pairs.
+pub const P2_ENTRIES: &[(&str, &str)] = &[
+    ("ServeDaemon", "submit"),
+    ("ServeDaemon", "drain"),
+    ("ServeDaemon", "drain_budget"),
+    ("ServeDaemon", "run_stream"),
+    ("SolveDriver", "step"),
+];
+
+/// Modules whose panic sites P2 charges path-sensitively.
+pub const P2_MODULES: &[&str] = &["serve", "solver", "backend"];
+
+/// Hot-path roots: every fn of this *name* seeds the A1 cone.
+pub const A1_ROOTS: &[&str] = &["eval_chunk_partials", "project_rows"];
+
+/// Modules where float accumulation makes a fn a D4 sink.
+pub const D4_SINK_MODULES: &[&str] = &["solver", "backend", "sparse", "distributed"];
+
+/// Result of the graph pass: path-sensitive findings plus the A1
+/// ratchet inputs.
+pub struct GraphRules {
+    pub findings: Vec<Finding>,
+    /// `module.alloc` → count of forbidden allocation sites in the cone.
+    pub alloc_counts: BTreeMap<String, usize>,
+    /// `module.alloc` → human-readable site list (for ratchet-failure
+    /// messages).
+    pub alloc_sites: BTreeMap<String, Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+/// Run P2/D4/A1 over `files` (the `src/` tree).
+pub fn check_graph(files: &[AnalyzedFile]) -> GraphRules {
+    let graph = CallGraph::build(files);
+    let by_rel: BTreeMap<&str, &AnalyzedFile> =
+        files.iter().map(|f| (f.rel.as_str(), f)).collect();
+
+    let mut findings = Vec::new();
+    rule_p2_panic_reachable(&graph, &by_rel, &mut findings);
+    rule_d4_determinism_taint(&graph, &by_rel, &mut findings);
+    let (alloc_counts, alloc_sites) = rule_a1_hot_loop_alloc(&graph, &by_rel);
+
+    let findings = waive(&by_rel, findings);
+    let edge_count: usize = graph.edges.iter().map(Vec::len).sum();
+    let notes = vec![format!(
+        "call graph: {} fns, {} edges, {} unresolved call name(s)",
+        graph.fns.len(),
+        edge_count,
+        graph.unresolved.len()
+    )];
+    GraphRules { findings, alloc_counts, alloc_sites, notes }
+}
+
+/// Token spans of fns nested inside `fns[id]`'s body (their sites and
+/// calls belong to the nested item, which is its own graph node).
+fn nested_spans(graph: &CallGraph, id: usize) -> Vec<(usize, usize)> {
+    let item = &graph.fns[id];
+    graph
+        .fns
+        .iter()
+        .filter(|o| o.file == item.file && o.sig.0 > item.body.0 && o.body.1 <= item.body.1)
+        .map(|o| (o.sig.0, o.body.1 + 1))
+        .collect()
+}
+
+/// P2 — panic sites reachable from serve/solve entry points.
+fn rule_p2_panic_reachable(
+    graph: &CallGraph,
+    by_rel: &BTreeMap<&str, &AnalyzedFile>,
+    findings: &mut Vec<Finding>,
+) {
+    let mut entries: Vec<usize> = Vec::new();
+    for (recv, name) in P2_ENTRIES {
+        entries.extend(graph.find(Some(recv), name));
+    }
+    if entries.is_empty() {
+        return;
+    }
+    let parents = graph.reach_forward(&entries);
+    for (&id, _) in &parents {
+        let item = &graph.fns[id];
+        let allow_panics = P2_MODULES.contains(&item.module.as_str());
+        let allow_index = item.file.starts_with("src/serve/");
+        if !allow_panics && !allow_index {
+            continue;
+        }
+        let Some(file) = by_rel.get(item.file.as_str()) else { continue };
+        let skip = nested_spans(graph, id);
+        let chain = graph.chain(id, &parents);
+        for (line, what) in
+            panic_sites(file, item.body.0, item.body.1, &skip, allow_panics, allow_index)
+        {
+            findings.push(Finding::new(
+                &item.file,
+                line,
+                "P2",
+                "panic-reachable",
+                format!(
+                    "`{what}` is reachable from a request entry point: {chain} — \
+                     convert to a typed error or shed the outcome"
+                ),
+            ));
+        }
+    }
+}
+
+/// Panic-capable sites in `toks[lo..hi]`, as `(line, description)`.
+fn panic_sites(
+    f: &AnalyzedFile,
+    lo: usize,
+    hi: usize,
+    skip: &[(usize, usize)],
+    panics: bool,
+    index: bool,
+) -> Vec<(u32, String)> {
+    let toks = &f.toks;
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i < hi && i < toks.len() {
+        if let Some(&(_, end)) = skip.iter().find(|&&(a, b)| a <= i && i < b) {
+            i = end;
+            continue;
+        }
+        let t = &toks[i];
+        match t.text.as_str() {
+            "unwrap" | "expect"
+                if panics
+                    && i > 0
+                    && toks[i - 1].text == "."
+                    && i + 1 < toks.len()
+                    && toks[i + 1].text == "(" =>
+            {
+                out.push((t.line, format!(".{}()", t.text)));
+            }
+            "panic" | "unreachable" | "todo" | "unimplemented"
+                if panics
+                    && t.kind == TokKind::Ident
+                    && i + 1 < toks.len()
+                    && toks[i + 1].text == "!" =>
+            {
+                out.push((t.line, format!("{}!", t.text)));
+            }
+            "[" if index && i > lo => {
+                let p = &toks[i - 1];
+                let indexes = p.kind == TokKind::Ident && !is_keyword(&p.text)
+                    || p.text == ")"
+                    || p.text == "]";
+                if indexes {
+                    out.push((t.line, "unchecked index".to_string()));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// D4 — float accumulation downstream of hash-container iteration.
+fn rule_d4_determinism_taint(
+    graph: &CallGraph,
+    by_rel: &BTreeMap<&str, &AnalyzedFile>,
+    findings: &mut Vec<Finding>,
+) {
+    let sources: Vec<usize> = (0..graph.fns.len())
+        .filter(|&id| {
+            let item = &graph.fns[id];
+            if item.in_test {
+                return false;
+            }
+            by_rel
+                .get(item.file.as_str())
+                .is_some_and(|f| iterates_hash_container(f, item.body.0, item.body.1))
+        })
+        .collect();
+    if sources.is_empty() {
+        return;
+    }
+    // reverse reachability: which fns (transitively) call a source?
+    let parents = graph.reach_reverse(&sources);
+    for (&id, parent) in &parents {
+        if parent.is_none() {
+            continue; // the source itself — intra-fn flows are D1's job
+        }
+        let item = &graph.fns[id];
+        if !D4_SINK_MODULES.contains(&item.module.as_str()) {
+            continue;
+        }
+        let Some(file) = by_rel.get(item.file.as_str()) else { continue };
+        if !accumulates_floats(file, item) {
+            continue;
+        }
+        // walk toward the source: parents point one call deeper
+        let mut path = vec![id];
+        let mut cur = id;
+        while let Some(Some(p)) = parents.get(&cur) {
+            path.push(*p);
+            cur = *p;
+        }
+        let chain: Vec<String> = path.iter().map(|&n| graph.fns[n].display()).collect();
+        findings.push(Finding::new(
+            &item.file,
+            item.line,
+            "D4",
+            "determinism-taint",
+            format!(
+                "float accumulation in `{}` consumes values from unordered-container \
+                 iteration: {} — sort the keys at the source or accumulate in a \
+                 fixed order",
+                item.display(),
+                chain.join(" -> ")
+            ),
+        ));
+    }
+}
+
+/// Does `toks[lo..hi]` iterate a hash container? Mirrors D1's binding
+/// logic (seeing through path prefixes plus `&`/`mut`/lifetimes): an
+/// iteration method on an identifier bound to a `HashMap`/`HashSet`
+/// anywhere in the file, or a `for .. in` loop over one.
+fn iterates_hash_container(f: &AnalyzedFile, lo: usize, hi: usize) -> bool {
+    let hash_names = ["HashMap", "HashSet"];
+    let iter_methods =
+        ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain"];
+    let toks = &f.toks;
+    // file-wide bound set: `name: HashMap<..>`, `name: &HashMap<..>`,
+    // `name = HashMap::new()`, with path prefixes seen through
+    let mut bound: Vec<&str> = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != TokKind::Ident || !hash_names.contains(&toks[i].text.as_str()) {
+            continue;
+        }
+        let mut p = i;
+        while p >= 2 && toks[p - 1].text == "::" && toks[p - 2].kind == TokKind::Ident {
+            p -= 2;
+        }
+        while p >= 1
+            && (toks[p - 1].text == "&"
+                || toks[p - 1].text == "mut"
+                || toks[p - 1].kind == TokKind::Lifetime)
+        {
+            p -= 1;
+        }
+        if p >= 2
+            && (toks[p - 1].text == ":" || toks[p - 1].text == "=")
+            && toks[p - 2].kind == TokKind::Ident
+            && !is_keyword(&toks[p - 2].text)
+        {
+            bound.push(toks[p - 2].text.as_str());
+        }
+    }
+    if bound.is_empty() {
+        return false;
+    }
+    for i in lo..hi.min(toks.len()) {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || !bound.contains(&t.text.as_str()) {
+            continue;
+        }
+        // `m.iter()` / `m.keys()` / ...
+        if i + 2 < toks.len()
+            && toks[i + 1].text == "."
+            && iter_methods.contains(&toks[i + 2].text.as_str())
+        {
+            return true;
+        }
+        // `for (k, v) in &mut m { .. }`
+        let mut p = i;
+        while p >= 1 && (toks[p - 1].text == "&" || toks[p - 1].text == "mut") {
+            p -= 1;
+        }
+        if p >= 1 && toks[p - 1].text == "in" {
+            return true;
+        }
+    }
+    false
+}
+
+/// Does the fn accumulate f32/f64? Requires both a float type mention in
+/// the item's tokens and an accumulation shape (`.sum(`/`.fold(` or a
+/// `+=` compound assignment).
+fn accumulates_floats(f: &AnalyzedFile, item: &super::items::FnItem) -> bool {
+    let toks = &f.toks;
+    let (lo, hi) = (item.sig.0, item.body.1.min(toks.len()));
+    let mut float = false;
+    let mut accum = false;
+    for i in lo..hi {
+        let t = &toks[i];
+        match t.kind {
+            TokKind::Ident if t.text == "f32" || t.text == "f64" => float = true,
+            TokKind::Num if t.text.ends_with("f32") || t.text.ends_with("f64") => float = true,
+            _ => {}
+        }
+        match t.text.as_str() {
+            "sum" | "fold" | "product"
+                if i > 0 && toks[i - 1].text == "." && callable_at(toks, i) =>
+            {
+                accum = true;
+            }
+            "+" if i + 1 < hi && toks[i + 1].text == "=" => accum = true,
+            _ => {}
+        }
+    }
+    float && accum
+}
+
+/// A1 — allocation sites in the hot-path cone, counted per module.
+fn rule_a1_hot_loop_alloc(
+    graph: &CallGraph,
+    by_rel: &BTreeMap<&str, &AnalyzedFile>,
+) -> (BTreeMap<String, usize>, BTreeMap<String, Vec<String>>) {
+    let mut roots: Vec<usize> = Vec::new();
+    for name in A1_ROOTS {
+        roots.extend(graph.find(None, name));
+    }
+    let parents = graph.reach_forward(&roots);
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut sites: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    for (&id, _) in &parents {
+        let item = &graph.fns[id];
+        let Some(file) = by_rel.get(item.file.as_str()) else { continue };
+        let skip = nested_spans(graph, id);
+        // attribute to the root this BFS reached the fn from
+        let mut cur = id;
+        while let Some(Some(p)) = parents.get(&cur) {
+            cur = *p;
+        }
+        let root = graph.fns[cur].name.clone();
+        let key = format!("{}.alloc", item.module);
+        for (line, what) in alloc_sites_in(file, item.body.0, item.body.1, &skip) {
+            *counts.entry(key.clone()).or_insert(0) += 1;
+            sites.entry(key.clone()).or_default().push(format!(
+                "{}:{} `{what}` in `{}` (reachable from {root})",
+                item.file,
+                line,
+                item.display()
+            ));
+        }
+    }
+    (counts, sites)
+}
+
+/// Forbidden allocation sites in `toks[lo..hi]`, as `(line, description)`.
+fn alloc_sites_in(
+    f: &AnalyzedFile,
+    lo: usize,
+    hi: usize,
+    skip: &[(usize, usize)],
+) -> Vec<(u32, String)> {
+    let toks = &f.toks;
+    let mut out = Vec::new();
+    let mut i = lo;
+    while i < hi && i < toks.len() {
+        if let Some(&(_, end)) = skip.iter().find(|&&(a, b)| a <= i && i < b) {
+            i = end;
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        match t.text.as_str() {
+            "new" if i >= 2
+                && toks[i - 1].text == "::"
+                && (toks[i - 2].text == "Vec" || toks[i - 2].text == "Box")
+                && callable_at(toks, i) =>
+            {
+                out.push((t.line, format!("{}::new", toks[i - 2].text)));
+            }
+            "vec" if i + 1 < toks.len() && toks[i + 1].text == "!" => {
+                out.push((t.line, "vec!".to_string()));
+            }
+            "collect" if i > 0 && toks[i - 1].text == "." && callable_at(toks, i) => {
+                out.push((t.line, ".collect(..)".to_string()));
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Drop P2/D4 findings covered by a valid waiver in the site file (same
+/// line or line above, matching slug, non-empty justification). W0 for
+/// malformed waivers is `check_file`'s job — not duplicated here.
+fn waive(
+    by_rel: &BTreeMap<&str, &AnalyzedFile>,
+    findings: Vec<Finding>,
+) -> Vec<Finding> {
+    findings
+        .into_iter()
+        .filter(|fi| {
+            let Some(f) = by_rel.get(fi.file.as_str()) else { return true };
+            !f.waivers().iter().any(|w| {
+                w.slug == fi.slug
+                    && !w.justification.is_empty()
+                    && (w.line == fi.line || w.line + 1 == fi.line)
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(files: &[(&str, &str)]) -> GraphRules {
+        let parsed: Vec<AnalyzedFile> =
+            files.iter().map(|(rel, src)| AnalyzedFile::parse(rel, src)).collect();
+        check_graph(&parsed)
+    }
+
+    #[test]
+    fn p2_fires_through_two_hops_with_the_full_chain() {
+        let g = run(&[(
+            "src/serve/daemon.rs",
+            "pub struct ServeDaemon;\n\
+             impl ServeDaemon { pub fn submit(&self) { route(); } }\n\
+             fn route() { admit(); }\n\
+             fn admit() { let v: Option<u32> = None; v.unwrap(); }\n",
+        )]);
+        let p2: Vec<_> = g.findings.iter().filter(|f| f.rule == "P2").collect();
+        assert_eq!(p2.len(), 1, "{:?}", g.findings);
+        assert_eq!(p2[0].line, 4);
+        assert!(
+            p2[0].message.contains("ServeDaemon::submit -> route -> admit"),
+            "chain missing: {}",
+            p2[0].message
+        );
+    }
+
+    #[test]
+    fn p2_ignores_unreached_fns_and_out_of_scope_modules() {
+        let g = run(&[
+            (
+                "src/serve/daemon.rs",
+                "pub struct ServeDaemon;\n\
+                 impl ServeDaemon { pub fn submit(&self) { crate::util::helper(); } }\n\
+                 fn orphan() { panic!(\"never reached\"); }\n",
+            ),
+            // util is outside P2_MODULES: its panics stay P1's business
+            ("src/util/x.rs", "pub fn helper() { Some(1).unwrap(); }\n"),
+        ]);
+        assert!(
+            g.findings.iter().all(|f| f.rule != "P2"),
+            "{:?}",
+            g.findings
+        );
+    }
+
+    #[test]
+    fn p2_unchecked_index_only_counts_inside_serve() {
+        let g = run(&[
+            (
+                "src/serve/daemon.rs",
+                "pub struct ServeDaemon;\n\
+                 impl ServeDaemon { pub fn drain(&self, xs: &[u32]) -> u32 { pick(xs) } }\n\
+                 fn pick(xs: &[u32]) -> u32 { xs[0] }\n",
+            ),
+            (
+                "src/solver/d.rs",
+                "pub struct SolveDriver;\n\
+                 impl SolveDriver { pub fn step(&self, xs: &[u32]) -> u32 { xs[0] } }\n",
+            ),
+        ]);
+        let p2: Vec<_> = g.findings.iter().filter(|f| f.rule == "P2").collect();
+        assert_eq!(p2.len(), 1, "{:?}", g.findings);
+        assert_eq!(p2[0].file, "src/serve/daemon.rs");
+        assert!(p2[0].message.contains("unchecked index"));
+    }
+
+    #[test]
+    fn p2_waivable_at_the_site() {
+        let g = run(&[(
+            "src/serve/daemon.rs",
+            "pub struct ServeDaemon;\n\
+             impl ServeDaemon { pub fn submit(&self) {\n\
+                 // audit:allow(panic-reachable): queue invariant, len checked above\n\
+                 Some(1).unwrap();\n\
+             } }\n",
+        )]);
+        assert!(g.findings.iter().all(|f| f.rule != "P2"), "{:?}", g.findings);
+    }
+
+    #[test]
+    fn d4_fires_across_fn_boundaries_but_not_within_one_fn() {
+        let g = run(&[(
+            "src/backend/x.rs",
+            "use std::collections::HashMap;\n\
+             pub fn weights(m: &HashMap<u32, f32>) -> Vec<f32> {\n\
+                 m.values().copied().collect()\n\
+             }\n\
+             pub fn total(m: &HashMap<u32, f32>) -> f32 {\n\
+                 let mut s = 0.0f32;\n\
+                 for w in weights(m) { s += w; }\n\
+                 s\n\
+             }\n",
+        )]);
+        let d4: Vec<_> = g.findings.iter().filter(|f| f.rule == "D4").collect();
+        assert_eq!(d4.len(), 1, "{:?}", g.findings);
+        assert!(d4[0].message.contains("total -> weights"), "{}", d4[0].message);
+        // the source itself must NOT get a D4 (intra-fn is D1's job)
+        assert!(!d4.iter().any(|f| f.message.starts_with("float accumulation in `weights`")));
+    }
+
+    #[test]
+    fn d4_requires_a_sink_module() {
+        let g = run(&[(
+            "src/cli/x.rs",
+            "use std::collections::HashMap;\n\
+             fn keys(m: &HashMap<u32, u32>) -> Vec<u32> { m.keys().copied().collect() }\n\
+             pub fn show(m: &HashMap<u32, u32>) -> f64 {\n\
+                 let mut s = 0.0f64; for k in keys(m) { s += k as f64; } s\n\
+             }\n",
+        )]);
+        assert!(g.findings.iter().all(|f| f.rule != "D4"), "{:?}", g.findings);
+    }
+
+    #[test]
+    fn a1_counts_allocations_in_the_cone_only() {
+        let g = run(&[(
+            "src/backend/x.rs",
+            "pub fn eval_chunk_partials(n: usize) -> f32 { helper(n) }\n\
+             fn helper(n: usize) -> f32 { let v = vec![0.0f32; n]; v.iter().sum() }\n\
+             pub fn cold(n: usize) -> Vec<f32> { Vec::new() }\n",
+        )]);
+        assert_eq!(g.alloc_counts.get("backend.alloc"), Some(&1), "{:?}", g.alloc_counts);
+        let sites = &g.alloc_sites["backend.alloc"];
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].contains("`vec!` in `helper` (reachable from eval_chunk_partials)"));
+    }
+
+    #[test]
+    fn a1_spares_with_capacity_and_to_vec() {
+        let g = run(&[(
+            "src/projection/x.rs",
+            "pub fn project_rows(n: usize) -> Vec<f32> {\n\
+                 let mut v = Vec::with_capacity(n);\n\
+                 v.extend([0.0f32; 4].to_vec());\n\
+                 v\n\
+             }\n",
+        )]);
+        assert!(g.alloc_counts.is_empty(), "{:?}", g.alloc_counts);
+    }
+}

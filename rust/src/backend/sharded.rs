@@ -224,26 +224,31 @@ impl ObjectiveFunction for ShardedSlabObjective<'_> {
         self.stats.record_broadcast(lam.len());
 
         let n = self.shards.len();
-        let mut parts: Vec<Option<(Vec<ChunkPartial>, f64)>> = (0..n).map(|_| None).collect();
+        // Slots are pre-initialized to empty slices, so a rank is never
+        // "missing": scoped threads write every slot before the scope
+        // closes, and the borrow checker pins each slice to its shard's
+        // persistent partials buffer — the merge below reads the shard
+        // results in place, no per-iteration clone of the payloads.
+        let mut parts: Vec<(&[ChunkPartial], f64)> = Vec::with_capacity(n);
+        parts.resize(n, (&[][..], 0.0));
         if n == 1 {
             // no cross-shard concurrency to exploit; skip the spawn cost
             let t0 = thread_cpu_time_ms();
             let p = self.shards[0].eval_chunk_partials(lam, gamma);
-            parts[0] = Some((p, thread_cpu_time_ms() - t0));
+            parts[0] = (p, thread_cpu_time_ms() - t0);
         } else {
             std::thread::scope(|scope| {
                 for (slot, shard) in parts.iter_mut().zip(self.shards.iter_mut()) {
                     scope.spawn(move || {
                         let t0 = thread_cpu_time_ms();
                         let p = shard.eval_chunk_partials(lam, gamma);
-                        *slot = Some((p, thread_cpu_time_ms() - t0));
+                        *slot = (p, thread_cpu_time_ms() - t0);
                     });
                 }
             });
         }
-        let mut by_rank: Vec<Vec<ChunkPartial>> = Vec::with_capacity(n);
-        for (rank, slot) in parts.into_iter().enumerate() {
-            let (p, ms) = slot.expect("shard evaluation missing");
+        let mut by_rank: Vec<&[ChunkPartial]> = Vec::with_capacity(n);
+        for (rank, &(p, ms)) in parts.iter().enumerate() {
             self.shard_eval_ms[rank] += ms;
             by_rank.push(p);
         }
@@ -355,6 +360,26 @@ mod tests {
         // per-shard eval time recorded for every shard
         assert_eq!(sh.shard_eval_ms().len(), 4);
         assert_eq!(sh.evals(), iters);
+    }
+
+    #[test]
+    fn repeated_calculates_reuse_buffers_bit_identically() {
+        // the shard partials live in persistent buffers now — a warm
+        // objective (buffers carrying a previous iteration's values) must
+        // produce the same bits as a fresh one
+        let lp = instance(41);
+        let lam_a = vec![0.03f32; lp.dual_dim()];
+        let lam_b = vec![0.07f32; lp.dual_dim()];
+        let mut fresh = ShardedSlabObjective::new(&lp, 3, 1).unwrap();
+        let mut reused = ShardedSlabObjective::new(&lp, 3, 1).unwrap();
+        let _ = reused.calculate(&lam_b, 0.1);
+        let a = fresh.calculate(&lam_a, 0.1);
+        let b = reused.calculate(&lam_a, 0.1);
+        assert_eq!(a.dual_obj.to_bits(), b.dual_obj.to_bits());
+        assert_eq!(a.cx.to_bits(), b.cx.to_bits());
+        for (x, y) in a.grad.iter().zip(&b.grad) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -89,8 +89,20 @@ pub struct SlabCpuObjective<'a> {
     /// a complete dual evaluation).
     full_range: bool,
     scratch: Vec<Mutex<ChunkScratch>>,
+    /// Persistent per-chunk partials buffer `eval_chunk_partials` copies
+    /// the scratch slots into — sized once at construction so the per-
+    /// iteration shard path allocates nothing.
+    partials: Vec<ChunkPartial>,
     /// Precomputed rhs over all dual rows.
     full_b: Vec<f32>,
+}
+
+/// Lock a scratch slot, recovering from poison. Sound because every
+/// reader runs a fill first (or reads what the last complete fill wrote)
+/// and a fill overwrites the slot completely — a writer that panicked
+/// mid-fill cannot leave state a later fill would not replace.
+fn lock_scratch(slot: &Mutex<ChunkScratch>) -> std::sync::MutexGuard<'_, ChunkScratch> {
+    slot.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 impl<'a> SlabCpuObjective<'a> {
@@ -162,6 +174,10 @@ impl<'a> SlabCpuObjective<'a> {
                 })
             })
             .collect();
+        let partials = tasks
+            .iter()
+            .map(|_| ChunkPartial { ax: vec![0.0f32; dual], cx: 0.0, xsq: 0.0 })
+            .collect();
         SlabCpuObjective {
             lp,
             layout,
@@ -172,6 +188,7 @@ impl<'a> SlabCpuObjective<'a> {
             chunk_lo,
             full_range: chunk_lo == 0 && chunk_hi == grid.len(),
             scratch,
+            partials,
             full_b: lp.full_b(),
         }
     }
@@ -345,7 +362,7 @@ impl<'a> SlabCpuObjective<'a> {
         let this: &Self = self;
         this.for_each_chunk(|i| {
             let t = &this.tasks[i];
-            let mut guard = this.scratch[i].lock().unwrap();
+            let mut guard = lock_scratch(&this.scratch[i]);
             let s = &mut *guard;
             this.gather_project(t, lam, gamma, &mut s.x);
             s.ax.fill(0.0);
@@ -365,15 +382,19 @@ impl<'a> SlabCpuObjective<'a> {
     /// reproduces the exact f32 summation sequence of a single-shard
     /// `calculate`. Payload is `num_chunks × (|λ| + 2)` values —
     /// λ-proportional, independent of the shard's edge count.
-    pub fn eval_chunk_partials(&mut self, lam: &[f32], gamma: f32) -> Vec<ChunkPartial> {
+    ///
+    /// The returned slice borrows this objective's persistent partials
+    /// buffer — the per-iteration shard path allocates nothing; callers
+    /// that need owned payloads (channel sends) copy at the boundary.
+    pub fn eval_chunk_partials(&mut self, lam: &[f32], gamma: f32) -> &[ChunkPartial] {
         self.fill_scratch(lam, gamma);
-        self.scratch
-            .iter()
-            .map(|slot| {
-                let s = slot.lock().unwrap();
-                ChunkPartial { ax: s.ax.clone(), cx: s.cx, xsq: s.xsq }
-            })
-            .collect()
+        for (p, slot) in self.partials.iter_mut().zip(&self.scratch) {
+            let s = lock_scratch(slot);
+            p.ax.copy_from_slice(&s.ax);
+            p.cx = s.cx;
+            p.xsq = s.xsq;
+        }
+        &self.partials
     }
 
     /// Write this objective's chunks' primal values into `out` (full-nnz
@@ -387,7 +408,7 @@ impl<'a> SlabCpuObjective<'a> {
         // off the iteration hot path: sequential sweep, scatter by edge id
         // (split separable rows land in their own edge ranges)
         for (i, t) in self.tasks.iter().enumerate() {
-            let mut guard = self.scratch[i].lock().unwrap();
+            let mut guard = lock_scratch(&self.scratch[i]);
             let s = &mut *guard;
             self.gather_project(t, lam, gamma, &mut s.x);
             let bk = &self.layout.buckets[t.bucket];
@@ -426,7 +447,7 @@ impl ObjectiveFunction for SlabCpuObjective<'_> {
         let mut cx = 0.0f64;
         let mut xsq = 0.0f64;
         for slot in &self.scratch {
-            let s = slot.lock().unwrap();
+            let s = lock_scratch(slot);
             for (g, p) in ax.iter_mut().zip(&s.ax) {
                 *g += *p;
             }

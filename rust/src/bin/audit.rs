@@ -3,6 +3,8 @@
 //! ```text
 //! cargo run --release --bin audit                   # audit the crate, exit 0/1
 //! cargo run --release --bin audit -- --format json  # machine-readable findings
+//! cargo run --release --bin audit -- --format sarif # GitHub code scanning
+//! cargo run --release --bin audit -- --baseline old.json  # fail on NEW findings only
 //! cargo run --release --bin audit -- --update-ratchet
 //! cargo run --release --bin audit -- --self-check   # fixtures fire exactly their rules
 //! cargo run --release --bin audit -- --root <dir>   # audit another crate root
@@ -10,17 +12,27 @@
 //!
 //! Exit codes: 0 clean, 1 findings (or self-check mismatch), 2 usage/IO
 //! error — so CI can distinguish "invariant broken" from "auditor broken".
+//! With `--baseline`, the exit code reflects *new* findings only: the
+//! full report still prints, but grandfathered findings don't gate.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
 use dualip::analysis;
 
+#[derive(Clone, Copy, PartialEq)]
+enum Format {
+    Text,
+    Json,
+    Sarif,
+}
+
 struct Args {
     root: PathBuf,
-    json: bool,
+    format: Format,
     update_ratchet: bool,
     self_check: bool,
+    baseline: Option<PathBuf>,
 }
 
 fn parse_args() -> Result<Args, String> {
@@ -28,9 +40,10 @@ fn parse_args() -> Result<Args, String> {
     // `cargo run --bin audit` audits the repo no matter the cwd.
     let mut args = Args {
         root: PathBuf::from(env!("CARGO_MANIFEST_DIR")),
-        json: false,
+        format: Format::Text,
         update_ratchet: false,
         self_check: false,
+        baseline: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -40,19 +53,24 @@ fn parse_args() -> Result<Args, String> {
                     PathBuf::from(it.next().ok_or("--root requires a directory argument")?);
             }
             "--format" => {
-                let fmt = it.next().ok_or("--format requires `text` or `json`")?;
-                match fmt.as_str() {
-                    "json" => args.json = true,
-                    "text" => args.json = false,
+                let fmt = it.next().ok_or("--format requires `text`, `json`, or `sarif`")?;
+                args.format = match fmt.as_str() {
+                    "json" => Format::Json,
+                    "text" => Format::Text,
+                    "sarif" => Format::Sarif,
                     other => return Err(format!("unknown format {other}")),
-                }
+                };
+            }
+            "--baseline" => {
+                args.baseline =
+                    Some(PathBuf::from(it.next().ok_or("--baseline requires a JSON report path")?));
             }
             "--update-ratchet" => args.update_ratchet = true,
             "--self-check" => args.self_check = true,
             "--help" | "-h" => {
                 return Err(
-                    "usage: audit [--root DIR] [--format text|json] \
-                     [--update-ratchet] [--self-check]"
+                    "usage: audit [--root DIR] [--format text|json|sarif] \
+                     [--baseline REPORT.json] [--update-ratchet] [--self-check]"
                         .to_string(),
                 );
             }
@@ -91,11 +109,30 @@ fn run() -> Result<ExitCode, String> {
             report.counts.values().filter(|&&v| v > 0).count()
         );
     }
-    if args.json {
-        print!("{}", report.render_json());
-    } else {
-        print!("{}", report.render_text());
+    match args.format {
+        Format::Json => print!("{}", report.render_json()),
+        Format::Sarif => print!("{}", report.render_sarif()),
+        Format::Text => print!("{}", report.render_text()),
     }
+
+    if let Some(path) = &args.baseline {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read baseline {}: {e}", path.display()))?;
+        let base = analysis::Baseline::parse(&text)
+            .map_err(|e| format!("parse baseline {}: {e}", path.display()))?;
+        let new = base.new_findings(&report);
+        eprintln!(
+            "differential: {} finding(s) total, {} in baseline, {} new",
+            report.findings.len(),
+            base.len(),
+            new.len()
+        );
+        for f in &new {
+            eprintln!("differential: NEW {f}");
+        }
+        return Ok(if new.is_empty() { ExitCode::SUCCESS } else { ExitCode::from(1) });
+    }
+
     Ok(if report.clean() { ExitCode::SUCCESS } else { ExitCode::from(1) })
 }
 

@@ -111,8 +111,10 @@ impl CommSnapshot {
 
 /// Deterministic chunk-index-ordered allreduce (the sharded-slab reduce).
 ///
-/// `parts_by_rank` holds each rank's per-chunk partials in ascending
-/// chunk order; ranks own contiguous ascending chunk ranges, so iterating
+/// `parts_by_rank` holds each rank's per-chunk partials (borrowed — the
+/// in-process sharded path reads them straight out of each shard's
+/// persistent buffer without cloning) in ascending chunk order; ranks
+/// own contiguous ascending chunk ranges, so iterating
 /// ranks in order and chunks within each rank visits the global chunk
 /// grid in index order. The elementwise f32 adds below are therefore the
 /// **same summation sequence** as the single-shard
@@ -121,14 +123,14 @@ impl CommSnapshot {
 /// reduction. Returns (Σ Ax, Σ cᵀx, Σ v²‖x‖²) with `b` NOT subtracted
 /// (the leader owns `b`).
 pub fn reduce_chunk_partials(
-    parts_by_rank: &[Vec<ChunkPartial>],
+    parts_by_rank: &[&[ChunkPartial]],
     dual_dim: usize,
 ) -> (Vec<f32>, f64, f64) {
     let mut ax = vec![0.0f32; dual_dim];
     let mut cx = 0.0f64;
     let mut xsq = 0.0f64;
     for parts in parts_by_rank {
-        for p in parts {
+        for p in *parts {
             debug_assert_eq!(p.ax.len(), dual_dim);
             for (g, v) in ax.iter_mut().zip(&p.ax) {
                 *g += *v;
@@ -227,7 +229,8 @@ mod tests {
             vec![],
             vec![chunk(3.0)],
         ];
-        let (ax, cx, xsq) = reduce_chunk_partials(&by_rank, 5);
+        let refs: Vec<&[ChunkPartial]> = by_rank.iter().map(|p| p.as_slice()).collect();
+        let (ax, cx, xsq) = reduce_chunk_partials(&refs, 5);
         let mut eax = vec![0.0f32; 5];
         let (mut ecx, mut exsq) = (0.0f64, 0.0f64);
         for p in by_rank.iter().flatten() {

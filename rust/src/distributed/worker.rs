@@ -198,7 +198,9 @@ fn worker_main_slab(
             Cmd::Eval { query, momentum, gamma } => {
                 let _ = &momentum; // momentum pair received (traffic parity)
                 let t0 = thread_cpu_time_ms();
-                let parts = obj.eval_chunk_partials(&query, gamma);
+                // owned copy at the channel boundary — the shard's own
+                // partials buffer is reused next iteration
+                let parts = obj.eval_chunk_partials(&query, gamma).to_vec();
                 let compute_ms = thread_cpu_time_ms() - t0;
                 let _ = msg_tx.send(WorkerMsg::GradChunks { rank, parts, compute_ms });
             }
@@ -366,9 +368,10 @@ impl WorkerPool {
                 .into_iter()
                 .map(|p| p.expect("missing rank result"))
                 .collect();
-            let segments: usize = by_rank.iter().map(|p| p.len()).sum();
+            let refs: Vec<&[ChunkPartial]> = by_rank.iter().map(|p| p.as_slice()).collect();
+            let segments: usize = refs.iter().map(|p| p.len()).sum();
             self.stats.record_segmented_reduce(segments, self.dual_dim, 2);
-            reduce_chunk_partials(&by_rank, self.dual_dim)
+            reduce_chunk_partials(&refs, self.dual_dim)
         } else {
             let mut ax = vec![0.0f32; self.dual_dim];
             let (mut cx, mut xsq) = (0.0f64, 0.0f64);

@@ -27,9 +27,18 @@ pub struct Stats {
 
 /// Compute stats over a sample (NaNs rejected by assertion).
 pub fn stats(samples: &[f64]) -> Stats {
+    stats_into(samples, &mut Vec::new())
+}
+
+/// [`stats`] with a caller-owned sort buffer — harnesses computing stats
+/// per iteration (e.g. a bench's rolling report) reuse one scratch
+/// allocation across calls. Identical results to [`stats`].
+pub fn stats_into(samples: &[f64], scratch: &mut Vec<f64>) -> Stats {
     assert!(!samples.is_empty());
     assert!(samples.iter().all(|v| v.is_finite()));
-    let mut s = samples.to_vec();
+    scratch.clear();
+    scratch.extend_from_slice(samples);
+    let s = &mut scratch[..];
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = s.len();
     let mean = s.iter().sum::<f64>() / n as f64;
@@ -148,16 +157,20 @@ pub fn shard_report(
     iters: u64,
     tiers: &KernelTiers,
 ) -> String {
-    let per: Vec<String> = shard_eval_ms
-        .iter()
-        .enumerate()
-        .map(|(r, ms)| format!("r{r}={ms:.1}ms"))
-        .collect();
+    use std::fmt::Write as _;
+    // one output string, written through — no intermediate per-rank
+    // Vec<String>; the rendered bytes are identical to the old join(" ")
+    let mut per = String::new();
+    for (r, ms) in shard_eval_ms.iter().enumerate() {
+        if r > 0 {
+            per.push(' ');
+        }
+        let _ = write!(per, "r{r}={ms:.1}ms");
+    }
     let max = shard_eval_ms.iter().cloned().fold(0.0f64, f64::max);
     format!(
-        "shards: {} workers, eval [{}] (max {max:.1}ms) | λ-traffic {:.1} B/iter | kernels {}",
+        "shards: {} workers, eval [{per}] (max {max:.1}ms) | λ-traffic {:.1} B/iter | kernels {}",
         shard_eval_ms.len(),
-        per.join(" "),
         c.bytes_per_iter(iters),
         tiers.summary(),
     )
@@ -212,6 +225,24 @@ mod tests {
     #[should_panic]
     fn stats_rejects_empty() {
         stats(&[]);
+    }
+
+    #[test]
+    fn stats_into_matches_stats_with_a_reused_scratch() {
+        let mut scratch = Vec::new();
+        // a warm (previously longer) scratch must not leak stale samples
+        for samples in [&[3.0, 1.0, 2.0, 5.0, 4.0, 9.0][..], &[7.5][..], &[2.0, 1.0][..]] {
+            let a = stats(samples);
+            let b = stats_into(samples, &mut scratch);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.median.to_bits(), b.median.to_bits());
+            assert_eq!(a.min.to_bits(), b.min.to_bits());
+            assert_eq!(a.max.to_bits(), b.max.to_bits());
+            assert_eq!(a.p95.to_bits(), b.p95.to_bits());
+            assert_eq!(a.p99.to_bits(), b.p99.to_bits());
+            assert_eq!(a.stddev.to_bits(), b.stddev.to_bits());
+        }
     }
 
     #[test]

@@ -74,19 +74,21 @@ impl BlockProjection for BoxVecOp {
         }
     }
 
-    /// Width-strided batched clamp with a hoisted per-column bound table
-    /// (the scalar path re-derives `upper[i % len]` per element). Real
-    /// entries occupy the row head, so column bounds line up with scalar
-    /// indices; the clamp itself is identical per element, and a tail
-    /// fill pins padding to +0.0 (gathered padding can carry -0.0), so
-    /// the override is bit-identical to the scalar default.
+    /// Width-strided batched clamp. Bounds are positional with period
+    /// `upper.len()`, so a per-row cycled iterator reproduces the scalar
+    /// `bound(c) = upper[c % len]` modulo-free and without a per-call
+    /// bound table — this override runs inside the solver's hot loop and
+    /// must not allocate. Real entries occupy the row head, so column
+    /// bounds line up with scalar indices; the clamp itself is identical
+    /// per element, and a tail fill pins padding to +0.0 (gathered
+    /// padding can carry -0.0), so the override is bit-identical to the
+    /// scalar default.
     fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
         debug_assert_eq!(slab.len(), rows * width);
         debug_assert_eq!(mask.len(), rows * width);
-        let u_col: Vec<f32> = (0..width).map(|c| self.bound(c)).collect();
         for r in 0..rows {
             let row = &mut slab[r * width..(r + 1) * width];
-            for (x, &u) in row.iter_mut().zip(&u_col) {
+            for (x, &u) in row.iter_mut().zip(self.upper.iter().cycle()) {
                 *x = x.clamp(0.0, u);
             }
             let real =

@@ -143,26 +143,29 @@ impl BlockProjection for WeightedSimplexOp {
     }
 
     /// Width-strided batched bisection. The scalar path re-derives
-    /// `weights[i % len] as f64` for every element inside every one of
-    /// the 64 bisection sweeps; hoisting one per-column f64 table per
-    /// call amortizes the modulo and the convert across all rows — that
-    /// table is the batching win. Bit-identical to looping the scalar
-    /// `project` over real prefixes: real entries occupy the row head, so
-    /// column weights line up with scalar indices, gathered padding is
-    /// exactly ±0.0 and contributes exact zeros to every f64
-    /// accumulation (μ > 0 in the binding branch), and a final tail fill
-    /// pins padding to +0.0.
+    /// `weights[i % len]` with a modulo per element inside every one of
+    /// the 64 bisection sweeps; weights are positional with period
+    /// `weights.len()`, so a per-sweep cycled iterator reproduces the
+    /// same column weights modulo-free without a per-call table — this
+    /// override runs inside the solver's hot loop and must not allocate
+    /// (the f32→f64 convert stays per element; it is a single
+    /// instruction). Bit-identical to looping the scalar `project` over
+    /// real prefixes: real entries occupy the row head, so column
+    /// weights line up with scalar indices, gathered padding is exactly
+    /// ±0.0 and contributes exact zeros to every f64 accumulation (μ > 0
+    /// in the binding branch), and a final tail fill pins padding to
+    /// +0.0.
     fn project_rows(&self, slab: &mut [f32], rows: usize, width: usize, mask: &[f32]) {
         debug_assert_eq!(slab.len(), rows * width);
         debug_assert_eq!(mask.len(), rows * width);
         let total = self.total as f64;
-        let w_col: Vec<f64> = (0..width).map(|c| self.weight(c)).collect();
+        let w_cycle = || self.weights.iter().cycle().map(|&w| w as f64);
         for r in 0..rows {
             let row = &mut slab[r * width..(r + 1) * width];
             let real =
                 mask[r * width..(r + 1) * width].iter().take_while(|&&m| m > 0.0).count();
             let mut wsum = 0.0f64;
-            for (x, &w) in row.iter_mut().zip(&w_col) {
+            for (x, w) in row.iter_mut().zip(w_cycle()) {
                 if *x < 0.0 {
                     *x = 0.0;
                 }
@@ -170,7 +173,7 @@ impl BlockProjection for WeightedSimplexOp {
             }
             if wsum > total {
                 let mut hi = 0.0f64;
-                for (&x, &w) in row.iter().zip(&w_col) {
+                for (&x, w) in row.iter().zip(w_cycle()) {
                     if x > 0.0 {
                         hi = hi.max(x as f64 / w);
                     }
@@ -179,7 +182,7 @@ impl BlockProjection for WeightedSimplexOp {
                 for _ in 0..64 {
                     let mu = 0.5 * (lo + hi);
                     let mut s = 0.0f64;
-                    for (&x, &w) in row.iter().zip(&w_col) {
+                    for (&x, w) in row.iter().zip(w_cycle()) {
                         s += w * ((x as f64) - mu * w).max(0.0);
                     }
                     if s > total {
@@ -189,7 +192,7 @@ impl BlockProjection for WeightedSimplexOp {
                     }
                 }
                 let mu = 0.5 * (lo + hi);
-                for (x, &w) in row.iter_mut().zip(&w_col) {
+                for (x, w) in row.iter_mut().zip(w_cycle()) {
                     *x = ((*x as f64) - mu * w).max(0.0) as f32;
                 }
             }

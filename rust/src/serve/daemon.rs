@@ -278,37 +278,31 @@ impl ServeDaemon {
         d
     }
 
+    /// Checkpoints of every parked solve currently queued. A checkpoint
+    /// whose stepper cannot be duplicated is omitted rather than
+    /// panicking the daemon — that solve simply restarts cold after a
+    /// restore, which is the documented degradation for non-cloneable
+    /// steppers.
+    fn checkpoint_entries(&self) -> Vec<CheckpointEntry> {
+        self.queue
+            .iter()
+            .filter_map(|e| {
+                let (fp, ck) = e.resume.as_ref()?;
+                let checkpoint = ck.try_clone()?;
+                Some(CheckpointEntry { request_id: e.id, fingerprint: *fp, checkpoint })
+            })
+            .collect()
+    }
+
     /// Serialize the durable state: the warm-start cache plus checkpoints
     /// of every parked solve currently queued.
     pub fn snapshot_bytes(&self) -> Result<Vec<u8>, String> {
-        let entries: Vec<CheckpointEntry> = self
-            .queue
-            .iter()
-            .filter_map(|e| {
-                e.resume.as_ref().map(|(fp, ck)| CheckpointEntry {
-                    request_id: e.id,
-                    fingerprint: *fp,
-                    checkpoint: ck.clone(),
-                })
-            })
-            .collect();
-        snapshot::encode(&self.cache, &entries)
+        snapshot::encode(&self.cache, &self.checkpoint_entries())
     }
 
     /// Write the snapshot to disk (atomic rename).
     pub fn save_snapshot(&self, path: impl AsRef<Path>) -> Result<(), String> {
-        let entries: Vec<CheckpointEntry> = self
-            .queue
-            .iter()
-            .filter_map(|e| {
-                e.resume.as_ref().map(|(fp, ck)| CheckpointEntry {
-                    request_id: e.id,
-                    fingerprint: *fp,
-                    checkpoint: ck.clone(),
-                })
-            })
-            .collect();
-        snapshot::save(path, &self.cache, &entries)
+        snapshot::save(path, &self.cache, &self.checkpoint_entries())
     }
 
     /// Make `lp` resident without queuing a solve (operator path, e.g.

@@ -236,7 +236,14 @@ impl ResidentInstance {
                 kind,
                 &mut self.index,
             )
-            .expect("patch_edge failure modes are pre-checked");
+            // pre-checked above, so this arm is believed dead — but a
+            // miss must surface as a shed request, not a daemon panic
+            .map_err(|e| {
+                format!(
+                    "patch_edge failed after LP splice (resident layout may be \
+                     stale; reload the instance): {e}"
+                )
+            })?;
         if matches!(patch, EdgePatch::Repacked) {
             self.grid = self.layout.fixed_chunk_grid();
         }

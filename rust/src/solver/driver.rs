@@ -227,21 +227,20 @@ pub struct Checkpoint {
     dopts: DriverOptions,
 }
 
-impl Clone for Checkpoint {
-    fn clone(&self) -> Self {
-        Checkpoint {
-            stepper: self
-                .stepper
-                .try_clone()
-                .expect("checkpointed steppers are always cloneable"),
+impl Checkpoint {
+    /// Duplicate the checkpoint, `None` when the stepper is not cloneable.
+    /// Not a `Clone` impl on purpose: stepper cloneability is a runtime
+    /// property, and a panicking `clone` inside the serve snapshot path
+    /// would take the daemon down for a condition the caller can shed.
+    pub fn try_clone(&self) -> Option<Checkpoint> {
+        Some(Checkpoint {
+            stepper: self.stepper.try_clone()?,
             state: self.state.clone(),
             opts: self.opts.clone(),
             dopts: self.dopts.clone(),
-        }
+        })
     }
-}
 
-impl Checkpoint {
     /// Iterations completed at snapshot time.
     pub fn iterations(&self) -> usize {
         self.state.t

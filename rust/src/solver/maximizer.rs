@@ -136,10 +136,21 @@ impl ObjectiveFunction for NullObjective {
         self.dim
     }
     fn calculate(&mut self, _lam: &[f32], _gamma: f32) -> ObjectiveResult {
-        unreachable!("legacy run_loop evaluates through its step closure")
+        // never reached (run_loop requires max_iters >= 1, so the closure
+        // stepper always evaluates); an inert zero result instead of a
+        // panic keeps this off the solver's reachable-panic surface
+        debug_assert!(false, "legacy run_loop evaluates through its step closure");
+        ObjectiveResult {
+            grad: vec![0.0; self.dim],
+            dual_obj: 0.0,
+            cx: 0.0,
+            xsq_weighted: 0.0,
+            infeas_pos_norm: 0.0,
+        }
     }
     fn primal(&mut self, _lam: &[f32], _gamma: f32) -> Vec<f32> {
-        unreachable!("legacy run_loop has no primal path")
+        debug_assert!(false, "legacy run_loop has no primal path");
+        vec![0.0; self.dim]
     }
     fn name(&self) -> &'static str {
         "null"
